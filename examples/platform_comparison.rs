@@ -1,0 +1,234 @@
+//! Table 5 reproduction: platform comparison — modeled FPGA vs measured
+//! software implementations.
+//!
+//! ```bash
+//! cargo run --release --example platform_comparison              # rust + xla rows
+//! cargo run --release --example platform_comparison -- --python  # + naive python row
+//! ```
+//!
+//! The paper compares its FPGA (138 ns/sample) against Python on three
+//! software platforms (435 ms, 39.2 ms, 23.1 ms per sample) and reports
+//! speedups of 3 000 000× / 280 000× / 167 000×. We cannot re-run Colab
+//! or a Tesla K80, so the reproduction keeps the comparison *structure*
+//! (modeled FPGA vs per-sample times measured on THIS host) and checks
+//! the paper's qualitative claim: the FPGA wins by orders of magnitude
+//! against interpreted software, and remains ahead of compiled software.
+//!
+//! Rows produced:
+//!   FPGA (timing model)        — t_c from the synthesized netlist
+//!   Rust  (software TEDA)      — measured, this host
+//!   Rust  (RTL simulator)      — measured, cycle-accurate simulation cost
+//!   XLA   (batched, PJRT CPU)  — measured, amortized per sample
+//!   Python (naive, this host)  — measured via `python3` when --python
+
+use std::time::Instant;
+
+use teda_fpga::rtl::TedaRtl;
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::synth::PipelineTiming;
+use teda_fpga::teda::TedaDetector;
+use teda_fpga::util::prng::SplitMix64;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let want_python = std::env::args().any(|a| a == "--python");
+    let mut rows: Vec<(String, f64)> = Vec::new(); // (platform, ns/sample)
+
+    // ---- FPGA (timing model of the paper's architecture) -------------
+    let rtl = TedaRtl::new(2, 3.0)?;
+    let fpga_ns = PipelineTiming::analyze(rtl.netlist()).teda_time_ns;
+    rows.push(("This work's architecture on FPGA (modeled)".into(), fpga_ns));
+
+    // ---- Rust software TEDA ------------------------------------------
+    let mut rng = SplitMix64::new(3);
+    let samples: Vec<Vec<f64>> = (0..1_000_000)
+        .map(|_| vec![rng.next_f64(), rng.next_f64()])
+        .collect();
+    let mut det = TedaDetector::new(2, 3.0);
+    // Warmup.
+    for s in samples.iter().take(10_000) {
+        std::hint::black_box(det.step(s));
+    }
+    let t0 = Instant::now();
+    for s in &samples {
+        std::hint::black_box(det.step(s));
+    }
+    let rust_ns = t0.elapsed().as_nanos() as f64 / samples.len() as f64;
+    rows.push(("Rust software TEDA (this host)".into(), rust_ns));
+
+    // ---- Rust RTL simulator (cost of *simulating* the hardware) ------
+    let mut rtl = TedaRtl::new(2, 3.0)?;
+    let s32: Vec<Vec<f32>> = samples[..100_000]
+        .iter()
+        .map(|s| s.iter().map(|&v| v as f32).collect())
+        .collect();
+    let t0 = Instant::now();
+    for s in &s32 {
+        std::hint::black_box(rtl.clock(s)?);
+    }
+    let rtlsim_ns = t0.elapsed().as_nanos() as f64 / s32.len() as f64;
+    rows.push(("Rust cycle-accurate RTL simulator (this host)".into(), rtlsim_ns));
+
+    // ---- XLA batched (PJRT CPU) --------------------------------------
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let rt = XlaRuntime::new(dir)?;
+        let spec = rt.manifest().select(2, 1024).unwrap().clone();
+        let exe = rt.load(&spec.name)?;
+        let (s, t, n) = (spec.s, spec.t, spec.n);
+        let mut rng = SplitMix64::new(5);
+        let mu = vec![0f32; s * n];
+        let var = vec![0f32; s];
+        let k = vec![1f32; s];
+        let x: Vec<f32> =
+            (0..s * t * n).map(|_| rng.next_f64() as f32).collect();
+        for _ in 0..5 {
+            exe.run_f32(&[&mu, &var, &k, &x])?; // warmup
+        }
+        let iters = 200;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(exe.run_f32(&[&mu, &var, &k, &x])?);
+        }
+        let per_sample =
+            t0.elapsed().as_nanos() as f64 / (iters * s * t) as f64;
+        rows.push((
+            format!("XLA/Pallas artifact {} (PJRT CPU, batched)", spec.name),
+            per_sample,
+        ));
+    } else {
+        eprintln!("(artifacts missing — skipping XLA row)");
+    }
+
+    // ---- Naive Python (the paper's software baseline) -----------------
+    if want_python {
+        match python_per_sample_ns() {
+            Ok(ns) => {
+                rows.push(("Python recursive TEDA (this host)".into(), ns))
+            }
+            Err(e) => eprintln!("(python row skipped: {e})"),
+        }
+        // The paper's 435 ms/sample Colab baseline is only reachable by a
+        // NON-recursive implementation that rescans history each step —
+        // the "traditional method" TEDA §3 argues against. Measure it at
+        // the paper's operating point (k ≈ 58 800, where Fig. 6 sits).
+        match python_nonrecursive_ns() {
+            Ok(ns) => rows.push((
+                "Python non-recursive (rescan history, k=58800)".into(),
+                ns,
+            )),
+            Err(e) => eprintln!("(python non-recursive row skipped: {e})"),
+        }
+    }
+
+    // ---- Render Table 5 ----------------------------------------------
+    println!("\nTable 5: Software implementations comparison (reproduced)\n");
+    println!("| {:<52} | {:>14} | {:>12} |", "Platform", "Time/sample", "Speedup");
+    println!("|{:-<54}|{:-<16}|{:-<14}|", "", "", "");
+    for (name, ns) in &rows {
+        let speedup = ns / fpga_ns;
+        let speedup_str = if (*ns - fpga_ns).abs() < 1e-9 {
+            "—".to_string()
+        } else if speedup >= 100.0 {
+            format!("{speedup:.0}×")
+        } else {
+            format!("{speedup:.2}×")
+        };
+        println!(
+            "| {:<52} | {:>14} | {:>12} |",
+            name,
+            fmt_time(*ns),
+            speedup_str
+        );
+    }
+    println!(
+        "\npaper's published row set: FPGA 138 ns; Python/Colab 435 ms \
+         (3,000,000×); Colab+K80 39.2 ms (280,000×); local 940MX 23.1 ms \
+         (167,000×)."
+    );
+    println!(
+        "validation bar: FPGA ≫ interpreted Python by ≥10⁴× and ahead of \
+         every measured software row — see EXPERIMENTS.md."
+    );
+    Ok(())
+}
+
+fn fmt_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{:.2} ms", ns / 1e6)
+    }
+}
+
+/// Time a naive (pure-interpreter, per-sample loop) Python TEDA — the
+/// equivalent of the paper's "Python (Colab without GPU)" row.
+fn python_per_sample_ns() -> Result<f64, Box<dyn std::error::Error>> {
+    let script = r#"
+import time
+def run(n):
+    mu1=mu2=0.0; var=0.0; k=0
+    import random
+    random.seed(3)
+    t0=time.perf_counter()
+    for _ in range(n):
+        x1=random.random(); x2=random.random()
+        k+=1
+        if k==1:
+            mu1,mu2,var=x1,x2,0.0; continue
+        r=(k-1)/k; ik=1.0/k
+        mu1=mu1*r+x1*ik; mu2=mu2*r+x2*ik
+        d1=x1-mu1; d2=x2-mu2; d2sum=d1*d1+d2*d2
+        var=var*r+d2sum*ik
+        ecc=ik+(d2sum/(var*k) if var>0 else 0.0)
+        zeta=ecc/2.0
+        out=zeta>5.0/k
+    return (time.perf_counter()-t0)/n*1e9
+run(20000)  # warmup
+print(run(200000))
+"#;
+    let out = std::process::Command::new("python3").arg("-c").arg(script).output()?;
+    if !out.status.success() {
+        return Err(String::from_utf8_lossy(&out.stderr).into());
+    }
+    Ok(String::from_utf8(out.stdout)?.trim().parse::<f64>()?)
+}
+
+/// The "traditional" non-recursive formulation: each step recomputes
+/// mean/variance/eccentricity by rescanning ALL history (pure-python
+/// loops). At the paper's Fig. 6 operating point (k ≈ 58 800) one step
+/// costs O(k) — this is the per-sample regime the paper's 435 ms Colab
+/// row lives in (times a Colab-vs-2026-host constant).
+fn python_nonrecursive_ns() -> Result<f64, Box<dyn std::error::Error>> {
+    let script = r#"
+import time, random
+random.seed(3)
+K = 58800
+hist = [(random.random(), random.random()) for _ in range(K)]
+def step(x1, x2):
+    k = len(hist) + 1
+    s1 = s2 = 0.0
+    for (a, b) in hist:
+        s1 += a; s2 += b
+    mu1 = (s1 + x1) / k; mu2 = (s2 + x2) / k
+    var = 0.0
+    for (a, b) in hist:
+        var += (a - mu1) ** 2 + (b - mu2) ** 2
+    var = (var + (x1 - mu1) ** 2 + (x2 - mu2) ** 2) / k
+    d2 = (x1 - mu1) ** 2 + (x2 - mu2) ** 2
+    ecc = 1.0 / k + (d2 / (var * k) if var > 0 else 0.0)
+    return ecc / 2.0 > 5.0 / k
+step(0.5, 0.5)  # warmup
+n = 20
+t0 = time.perf_counter()
+for i in range(n):
+    step(0.1 * i, 0.5)
+print((time.perf_counter() - t0) / n * 1e9)
+"#;
+    let out = std::process::Command::new("python3").arg("-c").arg(script).output()?;
+    if !out.status.success() {
+        return Err(String::from_utf8_lossy(&out.stderr).into());
+    }
+    Ok(String::from_utf8(out.stdout)?.trim().parse::<f64>()?)
+}

@@ -1,0 +1,111 @@
+"""AOT compiler: lower every model variant to HLO *text* + manifest.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The HLO text parser
+on the Rust side (HloModuleProto::from_text_file) reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+The manifest (artifacts/manifest.json) is the contract with
+rust/src/runtime/manifest.rs: for each variant it records the file name,
+the (S, N, T, m, block_s) geometry, and the input/output tensor specs in
+execution order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variant_entry(v: model.Variant, filename: str, hlo_text: str) -> dict:
+    """Manifest record for one compiled variant."""
+    f32 = "f32"
+    return {
+        "name": v.name,
+        "file": filename,
+        "s": v.s,
+        "n": v.n,
+        "t": v.t,
+        "m": v.m,
+        "block_s": v.block_s,
+        "sha256": hashlib.sha256(hlo_text.encode()).hexdigest(),
+        "inputs": [
+            {"name": "mu", "dtype": f32, "shape": [v.s, v.n]},
+            {"name": "var", "dtype": f32, "shape": [v.s]},
+            {"name": "k", "dtype": f32, "shape": [v.s]},
+            {"name": "x", "dtype": f32, "shape": [v.s, v.t, v.n]},
+        ],
+        "outputs": [
+            {"name": "ecc", "dtype": f32, "shape": [v.s, v.t]},
+            {"name": "zeta", "dtype": f32, "shape": [v.s, v.t]},
+            {"name": "outlier", "dtype": f32, "shape": [v.s, v.t]},
+            {"name": "mu_out", "dtype": f32, "shape": [v.s, v.n]},
+            {"name": "var_out", "dtype": f32, "shape": [v.s]},
+            {"name": "k_out", "dtype": f32, "shape": [v.s]},
+        ],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--ref",
+        action="store_true",
+        help="also emit pure-jnp reference artifacts (ablation)",
+    )
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for v in model.DEFAULT_VARIANTS:
+        for use_pallas in ([True, False] if args.ref else [True]):
+            name = v.name if use_pallas else v.name + "_ref"
+            filename = f"{name}.hlo.txt"
+            print(f"lowering {name} ...", flush=True)
+            lowered = model.lower_variant(v, use_pallas=use_pallas)
+            text = to_hlo_text(lowered)
+            path = os.path.join(args.out_dir, filename)
+            with open(path, "w") as f:
+                f.write(text)
+            entry = variant_entry(v, filename, text)
+            entry["name"] = name
+            entry["kernel"] = "pallas" if use_pallas else "jnp_ref"
+            entries.append(entry)
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "jax_version": jax.__version__,
+        "variants": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} variants)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

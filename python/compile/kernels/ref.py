@@ -1,0 +1,99 @@
+"""Pure-jnp TEDA oracle — the correctness reference for the Pallas kernel.
+
+Implements the paper's Algorithm 1 (Eqs. 1-6) over a batch of S independent
+streams, scanning T samples per stream. Written with plain `jax.numpy` +
+`lax.scan` only; no Pallas. Every backend (the Pallas kernel, the Rust
+software engine, the RTL simulator) must agree with this function.
+
+State layout (all float32 unless stated otherwise):
+  mu  : [S, N]  running mean per stream
+  var : [S]     running scalar variance (Eq. 3)
+  k   : [S]     samples absorbed so far (carried as f32 for arithmetic)
+
+Chunk layout:
+  x   : [S, T, N]
+
+Outputs per sample:
+  ecc     : [S, T]  eccentricity xi_k          (Eq. 1)
+  zeta    : [S, T]  normalized eccentricity    (Eq. 5)
+  outlier : [S, T]  1.0 where Eq. 6 fires else 0.0
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TedaState(NamedTuple):
+    """Carried TEDA state for S parallel streams."""
+
+    mu: jax.Array  # [S, N]
+    var: jax.Array  # [S]
+    k: jax.Array  # [S]
+
+
+def init_state(s: int, n: int, dtype=jnp.float32) -> TedaState:
+    """Fresh (k=0) state for S streams of N features."""
+    return TedaState(
+        mu=jnp.zeros((s, n), dtype),
+        var=jnp.zeros((s,), dtype),
+        k=jnp.zeros((s,), dtype),
+    )
+
+
+def teda_step(state: TedaState, x_t: jax.Array, m: float):
+    """One TEDA update for all S streams (Algorithm 1 lines 3-15).
+
+    x_t: [S, N] — the k-th sample of every stream.
+    Returns (state', (ecc, zeta, outlier)) with [S]-shaped outputs.
+
+    The operation order matches the RTL datapath (and rust teda::state):
+    MEAN -> VARIANCE (distance to the *new* mean) -> ECCENTRICITY -> OUTLIER.
+    """
+    one = jnp.asarray(1.0, x_t.dtype)
+    k = state.k + one  # [S]
+    inv_k = one / k
+    ratio = (k - one) * inv_k
+    first = (k == one)[:, None]  # [S, 1]
+
+    # MEAN module (Eq. 2) with the k=1 bypass mux (MMUXn).
+    mu = jnp.where(first, x_t, ratio[:, None] * state.mu + inv_k[:, None] * x_t)
+
+    # VARIANCE module (Eq. 3): distance to the new mean, k=1 bypass (VMUX1).
+    d = x_t - mu  # [S, N]
+    d2 = jnp.sum(d * d, axis=-1)  # [S]
+    var = jnp.where(first[:, 0], jnp.zeros_like(state.var), ratio * state.var + inv_k * d2)
+
+    # ECCENTRICITY module (Eq. 1) with the sigma^2 > 0 guard.
+    ecc = jnp.where(var > 0, inv_k + d2 / (var * k), inv_k)
+
+    # OUTLIER module (Eqs. 5-6).
+    zeta = ecc * jnp.asarray(0.5, x_t.dtype)
+    thr = jnp.asarray((m * m + 1.0) * 0.5, x_t.dtype) * inv_k
+    outlier = (zeta > thr).astype(x_t.dtype)
+
+    return TedaState(mu=mu, var=var, k=k), (ecc, zeta, outlier)
+
+
+def teda_chunk_ref(state: TedaState, x: jax.Array, m: float):
+    """Scan a [S, T, N] chunk through `teda_step`.
+
+    Returns (state', ecc[S,T], zeta[S,T], outlier[S,T]).
+    """
+    xt = jnp.swapaxes(x, 0, 1)  # [T, S, N] for scan over time
+
+    def body(st, x_t):
+        st2, outs = teda_step(st, x_t, m)
+        return st2, outs
+
+    state2, (ecc, zeta, outlier) = jax.lax.scan(body, state, xt)
+    # scan stacks along T first: [T, S] -> [S, T]
+    return state2, ecc.T, zeta.T, outlier.T
+
+
+def chebyshev_threshold(m: float, k):
+    """Eq. 6 threshold (m^2+1)/(2k); for m=3 this is the 5/k curve."""
+    return (m * m + 1.0) / (2.0 * k)

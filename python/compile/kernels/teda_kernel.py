@@ -1,0 +1,153 @@
+"""Layer-1 Pallas kernel: batched-stream TEDA chunk update.
+
+The paper's hardware parallelism is a *temporal pipeline* (MEAN ->
+VARIANCE -> {ECCENTRICITY, OUTLIER}, one sample in flight per stage). On a
+TPU-shaped machine that insight maps to (DESIGN.md §Hardware-Adaptation):
+
+  * pipeline registers (MREGn/VREG1)  ->  VMEM-resident carry of
+    (mu, var, k) across an in-kernel `fori_loop` over the T samples of a
+    chunk — the recurrence is sequential in T exactly as in hardware;
+  * "multiple TEDA modules in parallel" (paper §5.2.1)  ->  the stream
+    axis S: the grid tiles S into blocks of `block_s` streams, each grid
+    cell is an independent replica of the RTL block;
+  * the divides 1/k, (k-1)/k (EDIV1/ODIV1)  ->  computed once per time
+    step for the whole block (scalar broadcast), not per element.
+
+The kernel is lowered with ``interpret=True`` — mandatory for CPU-PJRT
+execution (real TPU lowering emits a Mosaic custom-call the CPU plugin
+cannot run). Correctness is pinned to ``ref.py`` by
+``python/tests/test_kernel.py``.
+
+VMEM footprint per grid cell (f32): x block BS*T*N + state 2*BS*N + 2*BS
++ outputs 3*BS*T words; see EXPERIMENTS.md §Perf for the numbers per
+shipped variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _teda_kernel(
+    x_ref,  # [BS, T, N] input chunk block
+    mu_ref,  # [BS, N] state in
+    var_ref,  # [BS] state in
+    k_ref,  # [BS] state in
+    ecc_ref,  # [BS, T] out
+    zeta_ref,  # [BS, T] out
+    outlier_ref,  # [BS, T] out
+    mu_out_ref,  # [BS, N] state out
+    var_out_ref,  # [BS] state out
+    k_out_ref,  # [BS] state out
+    *,
+    m: float,
+    t_steps: int,
+):
+    """One grid cell = `block_s` independent TEDA modules over T steps."""
+    dtype = x_ref.dtype
+    one = jnp.asarray(1.0, dtype)
+    half = jnp.asarray(0.5, dtype)
+    thr_num = jnp.asarray((m * m + 1.0) * 0.5, dtype)
+
+    def body(t, carry):
+        mu, var, k = carry  # [BS,N], [BS], [BS]
+        x_t = x_ref[:, t, :]  # dynamic index on the T axis
+        k1 = k + one
+        inv_k = one / k1
+        ratio = (k1 - one) * inv_k
+        first = (k1 == one)[:, None]
+
+        # MEAN (Eq. 2) + k=1 bypass (MMUXn).
+        mu1 = jnp.where(first, x_t, ratio[:, None] * mu + inv_k[:, None] * x_t)
+        # VARIANCE (Eq. 3): distance to the new mean, k=1 bypass (VMUX1).
+        d = x_t - mu1
+        d2 = jnp.sum(d * d, axis=-1)
+        var1 = jnp.where(first[:, 0], jnp.zeros_like(var), ratio * var + inv_k * d2)
+        # ECCENTRICITY (Eq. 1) with the sigma^2 > 0 guard.
+        ecc = jnp.where(var1 > 0, inv_k + d2 / (var1 * k1), inv_k)
+        # OUTLIER (Eqs. 5-6).
+        zeta = ecc * half
+        outlier = (zeta > thr_num * inv_k).astype(dtype)
+
+        ecc_ref[:, t] = ecc
+        zeta_ref[:, t] = zeta
+        outlier_ref[:, t] = outlier
+        return mu1, var1, k1
+
+    mu0 = mu_ref[...]
+    var0 = var_ref[...]
+    k0 = k_ref[...]
+    mu_f, var_f, k_f = jax.lax.fori_loop(0, t_steps, body, (mu0, var0, k0))
+    mu_out_ref[...] = mu_f
+    var_out_ref[...] = var_f
+    k_out_ref[...] = k_f
+
+
+def teda_chunk(
+    mu: jax.Array,  # [S, N]
+    var: jax.Array,  # [S]
+    k: jax.Array,  # [S]
+    x: jax.Array,  # [S, T, N]
+    *,
+    m: float,
+    block_s: int = 8,
+    interpret: bool = True,
+):
+    """Run a [S, T, N] chunk through the Pallas TEDA kernel.
+
+    Returns (ecc[S,T], zeta[S,T], outlier[S,T], mu'[S,N], var'[S], k'[S]).
+
+    S must be a multiple of `block_s` (the coordinator's dynamic batcher
+    pads the stream axis; see rust/src/coordinator/batcher.rs).
+    """
+    s, t_steps, n = x.shape
+    if s % block_s != 0:
+        raise ValueError(f"S={s} not a multiple of block_s={block_s}")
+    if mu.shape != (s, n) or var.shape != (s,) or k.shape != (s,):
+        raise ValueError(
+            f"state shapes {mu.shape}/{var.shape}/{k.shape} inconsistent "
+            f"with x {x.shape}"
+        )
+    grid = (s // block_s,)
+    dtype = x.dtype
+
+    kernel = functools.partial(_teda_kernel, m=float(m), t_steps=t_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, t_steps, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, t_steps), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, t_steps), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, t_steps), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, t_steps), dtype),
+            jax.ShapeDtypeStruct((s, t_steps), dtype),
+            jax.ShapeDtypeStruct((s, t_steps), dtype),
+            jax.ShapeDtypeStruct((s, n), dtype),
+            jax.ShapeDtypeStruct((s,), dtype),
+            jax.ShapeDtypeStruct((s,), dtype),
+        ],
+        interpret=interpret,
+    )(x, mu, var, k)
+
+
+def vmem_words_per_cell(block_s: int, t_steps: int, n: int) -> int:
+    """f32 words resident in VMEM for one grid cell (perf model input)."""
+    x_blk = block_s * t_steps * n
+    state = 2 * (block_s * n) + 2 * block_s  # mu in+out, var/k in+out
+    outs = 3 * block_s * t_steps
+    return x_blk + state + outs

@@ -1,0 +1,100 @@
+"""Layer-2 JAX model: the batched-stream TEDA compute graph.
+
+Wraps the Layer-1 Pallas kernel into the jit-able function the Rust
+coordinator calls through PJRT:
+
+    (mu[S,N], var[S], k[S], x[S,T,N])
+        -> (ecc[S,T], zeta[S,T], outlier[S,T], mu'[S,N], var'[S], k'[S])
+
+`m` (the Chebyshev multiplier) is baked into the artifact as a constant —
+exactly as the paper stores it as a constant inside the OUTLIER module
+(§4.1). One artifact is emitted per (S, N, T, m) variant; the coordinator
+picks the variant that fits its current batch (see
+rust/src/runtime/manifest.rs).
+
+Python in this package runs at *build time only* (``make artifacts``);
+nothing here is on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.teda_kernel import teda_chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled (S, N, T, m) instantiation."""
+
+    s: int  # streams per batch (multiple of block_s)
+    n: int  # features per sample
+    t: int  # time steps per chunk
+    m: float  # Chebyshev multiplier (paper uses 3.0)
+    block_s: int = 8
+
+    @property
+    def name(self) -> str:
+        mtag = str(self.m).replace(".", "p")
+        return f"teda_s{self.s}_n{self.n}_t{self.t}_m{mtag}"
+
+
+# The variants shipped in artifacts/: sized for the coordinator's batcher
+# (small = low latency, large = high throughput) on the DAMADICS workload
+# (N=2 features) plus an N=4 shape for the generic service path.
+DEFAULT_VARIANTS = (
+    Variant(s=8, n=2, t=16, m=3.0),
+    Variant(s=32, n=2, t=32, m=3.0),
+    Variant(s=64, n=4, t=32, m=3.0),
+)
+
+
+def make_fn(variant: Variant, use_pallas: bool = True):
+    """Build the jit-able chunk function for `variant`.
+
+    With use_pallas=False the pure-jnp reference graph is built instead
+    (used by tests and by the `--ref` ablation artifact).
+    """
+
+    def fn(mu, var, k, x):
+        if use_pallas:
+            ecc, zeta, outlier, mu2, var2, k2 = teda_chunk(
+                mu, var, k, x, m=variant.m, block_s=variant.block_s
+            )
+        else:
+            state2, ecc, zeta, outlier = ref.teda_chunk_ref(
+                ref.TedaState(mu=mu, var=var, k=k), x, variant.m
+            )
+            mu2, var2, k2 = state2.mu, state2.var, state2.k
+        # Single flat tuple result; rust unwraps with to_tuple().
+        return (ecc, zeta, outlier, mu2, var2, k2)
+
+    return fn
+
+
+def example_args(variant: Variant, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering `variant`."""
+    return (
+        jax.ShapeDtypeStruct((variant.s, variant.n), dtype),  # mu
+        jax.ShapeDtypeStruct((variant.s,), dtype),  # var
+        jax.ShapeDtypeStruct((variant.s,), dtype),  # k
+        jax.ShapeDtypeStruct((variant.s, variant.t, variant.n), dtype),  # x
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def jitted(variant: Variant, use_pallas: bool = True):
+    """Jitted chunk function (cached per variant)."""
+    return jax.jit(make_fn(variant, use_pallas=use_pallas))
+
+
+def lower_variant(variant: Variant, use_pallas: bool = True):
+    """Lower `variant` to a jax Lowered object (AOT entry point)."""
+    return jax.jit(make_fn(variant, use_pallas=use_pallas)).lower(
+        *example_args(variant)
+    )

@@ -1,0 +1,1 @@
+"""Anchors pytest's rootdir so `compile.*` imports resolve from python/."""

@@ -1,0 +1,70 @@
+"""AOT pipeline tests: HLO-text emission and manifest contract."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+class TestHloText:
+    def test_lowered_variant_produces_hlo_text(self):
+        v = model.Variant(s=8, n=2, t=4, m=3.0)
+        text = aot.to_hlo_text(model.lower_variant(v))
+        # The xla-crate parser needs classic HLO text.
+        assert text.startswith("HloModule"), text[:60]
+        assert "f32[8,4,2]" in text  # x input shape
+        assert "ROOT" in text
+
+    def test_ref_variant_also_lowers(self):
+        v = model.Variant(s=8, n=2, t=4, m=3.0)
+        text = aot.to_hlo_text(model.lower_variant(v, use_pallas=False))
+        assert text.startswith("HloModule")
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        assert aot.main(["--out-dir", str(out)]) == 0
+        return out
+
+    def test_manifest_lists_all_variants(self, built):
+        with open(built / "manifest.json") as f:
+            manifest = json.load(f)
+        assert manifest["format"] == 1
+        assert manifest["interchange"] == "hlo-text"
+        assert len(manifest["variants"]) == len(model.DEFAULT_VARIANTS)
+        for entry in manifest["variants"]:
+            assert os.path.exists(built / entry["file"])
+            assert entry["kernel"] == "pallas"
+            # io specs in execution order
+            assert [i["name"] for i in entry["inputs"]] == [
+                "mu", "var", "k", "x",
+            ]
+            assert [o["name"] for o in entry["outputs"]] == [
+                "ecc", "zeta", "outlier", "mu_out", "var_out", "k_out",
+            ]
+
+    def test_manifest_shapes_match_geometry(self, built):
+        with open(built / "manifest.json") as f:
+            manifest = json.load(f)
+        for entry in manifest["variants"]:
+            s, n, t = entry["s"], entry["n"], entry["t"]
+            by_name = {i["name"]: i for i in entry["inputs"]}
+            assert by_name["mu"]["shape"] == [s, n]
+            assert by_name["x"]["shape"] == [s, t, n]
+            out_by_name = {o["name"]: o for o in entry["outputs"]}
+            assert out_by_name["ecc"]["shape"] == [s, t]
+            assert out_by_name["k_out"]["shape"] == [s]
+
+    def test_sha256_matches_file(self, built):
+        import hashlib
+
+        with open(built / "manifest.json") as f:
+            manifest = json.load(f)
+        entry = manifest["variants"][0]
+        with open(built / entry["file"]) as f:
+            digest = hashlib.sha256(f.read().encode()).hexdigest()
+        assert digest == entry["sha256"]

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: hypothesis
+sweeps the kernel geometry (S, N, T, block_s, m) and input regimes, and
+every output (ecc, zeta, outlier, state') must match the reference scan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.teda_kernel import teda_chunk, vmem_words_per_cell
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_both(mu, var, k, x, m, block_s):
+    ecc, zeta, outlier, mu2, var2, k2 = teda_chunk(
+        mu, var, k, x, m=m, block_s=block_s
+    )
+    st2, ecc_r, zeta_r, out_r = ref.teda_chunk_ref(
+        ref.TedaState(mu=mu, var=var, k=k), x, m
+    )
+    return (ecc, zeta, outlier, mu2, var2, k2), (
+        ecc_r,
+        zeta_r,
+        out_r,
+        st2.mu,
+        st2.var,
+        st2.k,
+    )
+
+
+def assert_match(got, want, atol=1e-5, rtol=1e-5):
+    names = ["ecc", "zeta", "outlier", "mu", "var", "k"]
+    for name, g, w in zip(names, got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), atol=atol, rtol=rtol, err_msg=name
+        )
+
+
+def fresh_case(seed, s, n, t, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((s, t, n)) * scale).astype(np.float32)
+    mu = np.zeros((s, n), np.float32)
+    var = np.zeros((s,), np.float32)
+    k = np.zeros((s,), np.float32)
+    return jnp.asarray(mu), jnp.asarray(var), jnp.asarray(k), jnp.asarray(x)
+
+
+def warmed_case(seed, s, n, t, k0=100.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((s, t, n)).astype(np.float32)
+    mu = rng.standard_normal((s, n)).astype(np.float32) * 0.1
+    var = (rng.random((s,)) + 0.5).astype(np.float32)
+    k = np.full((s,), k0, np.float32)
+    return jnp.asarray(mu), jnp.asarray(var), jnp.asarray(k), jnp.asarray(x)
+
+
+class TestKernelVsRef:
+    def test_fresh_state_small(self):
+        case = fresh_case(0, s=8, n=2, t=16)
+        got, want = run_both(*case, m=3.0, block_s=8)
+        assert_match(got, want)
+
+    def test_warmed_state(self):
+        case = warmed_case(1, s=16, n=4, t=8)
+        got, want = run_both(*case, m=3.0, block_s=8)
+        assert_match(got, want)
+
+    def test_multi_grid_cells(self):
+        # S split across 4 grid cells must equal the reference exactly.
+        case = warmed_case(2, s=32, n=2, t=4)
+        got, want = run_both(*case, m=3.0, block_s=8)
+        assert_match(got, want)
+
+    def test_block_s_equals_s(self):
+        case = warmed_case(3, s=8, n=3, t=5)
+        got, want = run_both(*case, m=3.0, block_s=8)
+        assert_match(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        s_blocks=st.integers(1, 4),
+        n=st.integers(1, 6),
+        t=st.integers(1, 12),
+        m=st.floats(0.5, 6.0),
+        k0=st.sampled_from([0.0, 1.0, 2.0, 50.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, s_blocks, n, t, m, k0, seed):
+        block_s = 4
+        s = s_blocks * block_s
+        if k0 == 0.0:
+            mu, var, k, x = fresh_case(seed, s, n, t)
+        else:
+            mu, var, k, x = warmed_case(seed, s, n, t, k0=k0)
+        got, want = run_both(mu, var, k, x, m=float(m), block_s=block_s)
+        assert_match(got, want)
+
+    def test_constant_input_never_outlier(self):
+        # sigma^2 stays 0 -> guard path -> never an outlier.
+        s, n, t = 8, 2, 32
+        x = jnp.ones((s, t, n), jnp.float32) * 3.25
+        mu = jnp.zeros((s, n), jnp.float32)
+        var = jnp.zeros((s,), jnp.float32)
+        k = jnp.zeros((s,), jnp.float32)
+        _, _, outlier, _, var2, _ = teda_chunk(mu, var, k, x, m=3.0)
+        assert float(jnp.sum(outlier)) == 0.0
+        np.testing.assert_allclose(np.asarray(var2), 0.0, atol=1e-6)
+
+    def test_spike_detected(self):
+        # Steady stream then a gross spike at t=20: Eq. 6 must fire there.
+        s, n, t = 8, 2, 32
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((s, t, n)).astype(np.float32) * 0.1
+        x[:, 20, :] = 50.0
+        mu = jnp.zeros((s, n), jnp.float32)
+        var = jnp.zeros((s,), jnp.float32)
+        k = jnp.full((s,), 200.0, jnp.float32)
+        # warm the state as if 200 N(0, 0.1) samples came before
+        mu_w = jnp.asarray(rng.standard_normal((s, n)).astype(np.float32) * 0.01)
+        var_w = jnp.full((s,), 0.01, jnp.float32)
+        _, _, outlier, *_ = teda_chunk(mu_w, var_w, k, jnp.asarray(x), m=3.0)
+        out = np.asarray(outlier)
+        assert (out[:, 20] == 1.0).all()
+        # and the quiet prefix stays quiet
+        assert out[:, :20].sum() == 0.0
+
+    def test_chunk_split_equals_one_shot(self):
+        # Running [T] in one chunk == two chunks of T/2 with carried state.
+        mu, var, k, x = warmed_case(7, s=8, n=2, t=16)
+        full = teda_chunk(mu, var, k, x, m=3.0)
+        a = teda_chunk(mu, var, k, x[:, :8], m=3.0)
+        b = teda_chunk(a[3], a[4], a[5], x[:, 8:], m=3.0)
+        np.testing.assert_allclose(
+            np.asarray(full[1]),
+            np.concatenate([np.asarray(a[1]), np.asarray(b[1])], axis=1),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(full[3]), np.asarray(b[3]), rtol=1e-5, atol=1e-6
+        )
+
+    def test_bad_block_size_rejected(self):
+        mu, var, k, x = fresh_case(0, s=10, n=2, t=4)
+        with pytest.raises(ValueError, match="block_s"):
+            teda_chunk(mu, var, k, x, m=3.0, block_s=8)
+
+    def test_bad_state_shape_rejected(self):
+        mu, var, k, x = fresh_case(0, s=8, n=2, t=4)
+        with pytest.raises(ValueError, match="state shapes"):
+            teda_chunk(mu[:, :1], var, k, x, m=3.0, block_s=8)
+
+
+class TestVmemModel:
+    def test_vmem_words_formula(self):
+        # 8 streams, 16 steps, 2 features: x 256 + state 2*16+2*8 + out 384.
+        assert vmem_words_per_cell(8, 16, 2) == 256 + 48 + 384
+
+    def test_vmem_fits_16mb_for_shipped_variants(self):
+        from compile.model import DEFAULT_VARIANTS
+
+        for v in DEFAULT_VARIANTS:
+            words = vmem_words_per_cell(v.block_s, v.t, v.n)
+            assert words * 4 < 16 * 2**20, v.name

@@ -1,0 +1,79 @@
+"""L2 contract tests: variant geometry, jit wrapper, pallas-vs-ref graph
+equivalence at the model level."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestVariants:
+    def test_default_variants_are_consistent(self):
+        assert len(model.DEFAULT_VARIANTS) >= 3
+        names = [v.name for v in model.DEFAULT_VARIANTS]
+        assert len(set(names)) == len(names), "duplicate variant names"
+        for v in model.DEFAULT_VARIANTS:
+            assert v.s % v.block_s == 0, v.name
+            assert v.m > 0
+            assert "teda_" in v.name
+
+    def test_variant_name_encodes_geometry(self):
+        v = model.Variant(s=16, n=3, t=8, m=2.5)
+        assert v.name == "teda_s16_n3_t8_m2p5"
+
+
+class TestModelFn:
+    @pytest.mark.parametrize("use_pallas", [True, False])
+    def test_shapes_and_dtypes(self, use_pallas):
+        v = model.Variant(s=8, n=2, t=4, m=3.0)
+        fn = model.jitted(v, use_pallas=use_pallas)
+        args = [jnp.zeros(a.shape, a.dtype) for a in model.example_args(v)]
+        out = fn(*args)
+        assert len(out) == 6
+        ecc, zeta, outlier, mu2, var2, k2 = out
+        assert ecc.shape == (8, 4)
+        assert zeta.shape == (8, 4)
+        assert outlier.shape == (8, 4)
+        assert mu2.shape == (8, 2)
+        assert var2.shape == (8,)
+        assert k2.shape == (8,)
+        for o in out:
+            assert o.dtype == jnp.float32
+
+    def test_pallas_and_ref_models_agree(self):
+        v = model.Variant(s=8, n=2, t=16, m=3.0)
+        rng = np.random.default_rng(0)
+        mu = jnp.asarray(rng.standard_normal((8, 2)), jnp.float32) * 0.1
+        var = jnp.asarray(rng.random(8) + 0.5, jnp.float32)
+        k = jnp.full((8,), 10.0, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((8, 16, 2)), jnp.float32)
+        a = model.jitted(v, use_pallas=True)(mu, var, k, x)
+        b = model.jitted(v, use_pallas=False)(mu, var, k, x)
+        for ta, tb, name in zip(a, b, ["ecc", "zeta", "out", "mu", "var", "k"]):
+            np.testing.assert_allclose(
+                np.asarray(ta), np.asarray(tb), rtol=1e-5, atol=1e-6,
+                err_msg=name,
+            )
+
+    def test_threshold_matches_chebyshev(self):
+        # outlier fires iff zeta > (m^2+1)/(2k) — reconstruct from outputs.
+        v = model.Variant(s=8, n=2, t=8, m=3.0)
+        rng = np.random.default_rng(1)
+        mu = jnp.zeros((8, 2), jnp.float32)
+        var = jnp.full((8,), 0.01, jnp.float32)
+        k = jnp.full((8,), 100.0, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((8, 8, 2)) * 2, jnp.float32)
+        ecc, zeta, outlier, *_ = model.jitted(v)(mu, var, k, x)
+        ks = np.arange(101, 109, dtype=np.float64)
+        thr = ref.chebyshev_threshold(3.0, ks)[None, :]
+        z = np.asarray(zeta, np.float64)
+        got = np.asarray(outlier) > 0.5
+        want = z > thr
+        # fp tolerance right at the boundary
+        edge = np.abs(z - thr) < 1e-6
+        assert (got == want)[~edge].all()

@@ -1,0 +1,64 @@
+//! Dynamic-batching bench: XLA engine chunk cost vs batch occupancy.
+//!
+//! Sweeps `min_ready` (how many full stream-chunks the batcher waits
+//! for) and reports per-sample amortized cost — the ablation behind the
+//! coordinator's batching policy (DESIGN.md §7 L3 knobs).
+//!
+//! Run: `cargo bench --bench batcher`
+
+use teda_fpga::engine::{Engine, XlaEngine};
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return;
+    }
+    let rt = XlaRuntime::new(dir).unwrap();
+    let spec = rt.manifest().select(2, 1024).unwrap().clone();
+    println!(
+        "== batcher sweep on {} (S={}, T={}, N={}) ==",
+        spec.name, spec.s, spec.t, spec.n
+    );
+
+    let streams = spec.s as u64;
+    let per_stream = spec.t * 4;
+    let mut rng = SplitMix64::new(11);
+    // Pre-generate an interleaved workload.
+    let mut workload: Vec<Sample> = Vec::new();
+    for seq in 0..per_stream {
+        for sid in 0..streams {
+            workload.push(Sample {
+                stream_id: sid,
+                seq: seq as u64,
+                values: vec![rng.next_f64(), rng.next_f64()],
+            });
+        }
+    }
+    let total = workload.len() as u64;
+
+    for min_ready in [1usize, 4, 8, spec.s] {
+        let mut eng = XlaEngine::new(&rt, 2, spec.s * spec.t)
+            .unwrap()
+            .with_min_ready(min_ready);
+        let report = Bench::new(format!("xla_engine_min_ready_{min_ready}"))
+            .iters(8)
+            .units(total, "samples")
+            .run(|| {
+                let mut got = 0usize;
+                for s in &workload {
+                    got += eng.ingest(s).unwrap().len();
+                }
+                got += eng.flush().unwrap().len();
+                black_box(got);
+            });
+        println!(
+            "  min_ready={min_ready:<3} -> {:.0} ns/sample, {} chunks so far",
+            report.ns_per_unit, eng.chunks_executed
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! End-to-end service bench: full coordinator throughput per engine and
+//! worker count (the L3 scaling study — the paper's "multiple TEDA
+//! modules in parallel" argument, measured).
+//!
+//! Run: `cargo bench --bench e2e_service`
+
+use teda_fpga::config::{EngineKind, ServiceConfig};
+use teda_fpga::coordinator::Service;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::Bench;
+use teda_fpga::util::prng::SplitMix64;
+
+fn run_service(
+    engine: EngineKind,
+    workers: usize,
+    streams: u64,
+    per_stream: usize,
+    iters: usize,
+) -> f64 {
+    let cfg = ServiceConfig {
+        engine,
+        workers,
+        n_features: 2,
+        queue_capacity: 1024,
+        artifact_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        ..Default::default()
+    };
+    let total = streams as usize * per_stream;
+    let mut rng = SplitMix64::new(3);
+    let mut workload: Vec<Sample> = Vec::with_capacity(total);
+    for seq in 0..per_stream {
+        for sid in 0..streams {
+            workload.push(Sample {
+                stream_id: sid,
+                seq: seq as u64,
+                values: vec![rng.next_f64(), rng.next_f64()],
+            });
+        }
+    }
+    let report = Bench::new(format!(
+        "service_{engine}_w{workers}_s{streams}"
+    ))
+    .iters(iters)
+    .units(total as u64, "samples")
+    .run(|| {
+        let svc = Service::start(cfg.clone()).unwrap();
+        // Submit in bursts of one round across all streams (what a
+        // polling ingress naturally produces).
+        for round in workload.chunks(streams as usize) {
+            svc.submit_batch(round.to_vec()).unwrap();
+        }
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), total);
+    });
+    report.throughput
+}
+
+fn main() {
+    let have_artifacts = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts/manifest.json"
+    ))
+    .exists();
+
+    println!("== end-to-end service throughput (samples/s) ==\n");
+    println!("engine    | workers | throughput");
+    println!("----------|---------|------------");
+    for engine in [EngineKind::Software, EngineKind::Rtl] {
+        for workers in [1usize, 2, 4] {
+            let tp = run_service(engine, workers, 16, 4000, 5);
+            println!("{engine:<9} | {workers:>7} | {tp:>10.0}");
+        }
+    }
+    if have_artifacts {
+        // Larger workload so the per-service PJRT compile (~0.4 s per
+        // worker, overlapped with submission) amortizes to noise.
+        for workers in [1usize, 2] {
+            let tp = run_service(EngineKind::Xla, workers, 32, 16_000, 3);
+            println!("{:<9} | {workers:>7} | {tp:>10.0}", "xla");
+        }
+    } else {
+        eprintln!("(artifacts missing — xla rows skipped)");
+    }
+}

@@ -1,0 +1,48 @@
+//! Table 4 bench: the RTL pipeline — modeled FPGA timing (the paper's
+//! numbers) next to the measured cost of *simulating* it, across
+//! feature widths.
+//!
+//! Run: `cargo bench --bench table4_rtl_time`
+
+use teda_fpga::rtl::TedaRtl;
+use teda_fpga::synth::PipelineTiming;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const SAMPLES: usize = 20_000;
+
+fn main() {
+    println!("== table4: modeled FPGA vs measured simulator ==\n");
+    println!("  N | t_c (ns) | d (ns) | modeled MSPS | simulated MSPS");
+    println!("----|----------|--------|--------------|----------------");
+    for n in [1usize, 2, 4, 8] {
+        let rtl = TedaRtl::new(n, 3.0).unwrap();
+        let t = PipelineTiming::analyze(rtl.netlist());
+
+        let mut rng = SplitMix64::new(7);
+        let samples: Vec<Vec<f32>> = (0..SAMPLES)
+            .map(|_| (0..n).map(|_| rng.next_f64() as f32).collect())
+            .collect();
+        let mut pipe = TedaRtl::new(n, 3.0).unwrap();
+        let report = Bench::new(format!("rtl_sim_clock_n{n}"))
+            .iters(10)
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                pipe.reset();
+                for s in &samples {
+                    black_box(pipe.clock(s).unwrap());
+                }
+            });
+        println!(
+            " {n:>2} | {:>8.0} | {:>6.0} | {:>12.2} | {:>14.3}",
+            t.critical_ns,
+            t.delay_ns,
+            t.throughput_sps / 1e6,
+            report.throughput / 1e6
+        );
+    }
+    println!(
+        "\npaper's Table 4 (N=2): t_c=138 ns, delay=414 ns, 7.2 MSPS \
+         (modeled row must match)"
+    );
+}

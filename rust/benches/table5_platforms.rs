@@ -1,0 +1,92 @@
+//! Table 5 bench: per-sample classification time on every platform we
+//! can measure on this host, against the modeled FPGA time.
+//!
+//! Run: `cargo bench --bench table5_platforms`
+//! (the example `platform_comparison` adds the Python rows; this bench
+//! keeps to in-process platforms so `cargo bench` stays hermetic)
+
+use teda_fpga::rtl::TedaRtl;
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::synth::PipelineTiming;
+use teda_fpga::teda::TedaDetector;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const SAMPLES: usize = 200_000;
+
+fn main() {
+    let fpga_ns =
+        PipelineTiming::analyze(TedaRtl::new(2, 3.0).unwrap().netlist())
+            .teda_time_ns;
+    let mut rows: Vec<(String, f64)> =
+        vec![("FPGA (modeled)".into(), fpga_ns)];
+
+    // Rust software.
+    let mut rng = SplitMix64::new(3);
+    let samples: Vec<Vec<f64>> = (0..SAMPLES)
+        .map(|_| vec![rng.next_f64(), rng.next_f64()])
+        .collect();
+    let mut det = TedaDetector::new(2, 3.0);
+    let r = Bench::new("rust_software_teda")
+        .iters(15)
+        .units(SAMPLES as u64, "samples")
+        .run(|| {
+            det.reset();
+            for s in &samples {
+                black_box(det.step(s));
+            }
+        });
+    rows.push(("Rust software".into(), r.ns_per_unit));
+
+    // RTL simulator.
+    let s32: Vec<Vec<f32>> = samples[..50_000]
+        .iter()
+        .map(|s| s.iter().map(|&v| v as f32).collect())
+        .collect();
+    let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+    let r = Bench::new("rust_rtl_simulator")
+        .iters(10)
+        .units(s32.len() as u64, "samples")
+        .run(|| {
+            rtl.reset();
+            for s in &s32 {
+                black_box(rtl.clock(s).unwrap());
+            }
+        });
+    rows.push(("Rust RTL simulator".into(), r.ns_per_unit));
+
+    // XLA artifact (batched).
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let rt = XlaRuntime::new(dir).unwrap();
+        let spec = rt.manifest().select(2, 1024).unwrap().clone();
+        let exe = rt.load(&spec.name).unwrap();
+        let (s, t, n) = (spec.s, spec.t, spec.n);
+        let mut rng = SplitMix64::new(5);
+        let mu = vec![0f32; s * n];
+        let var = vec![0f32; s];
+        let k = vec![1f32; s];
+        let x: Vec<f32> =
+            (0..s * t * n).map(|_| rng.next_f64() as f32).collect();
+        let r = Bench::new(format!("xla_batched_{}", spec.name))
+            .iters(100)
+            .units((s * t) as u64, "samples")
+            .run(|| {
+                black_box(exe.run_f32(&[&mu, &var, &k, &x]).unwrap());
+            });
+        rows.push(("XLA/Pallas (PJRT CPU)".into(), r.ns_per_unit));
+    } else {
+        eprintln!("(artifacts missing — XLA row skipped)");
+    }
+
+    println!("\nTable 5 (in-process platforms):");
+    println!("| {:<24} | {:>12} | {:>10} |", "Platform", "ns/sample", "vs FPGA");
+    for (name, ns) in &rows {
+        println!(
+            "| {:<24} | {:>12.1} | {:>9.2}× |",
+            name,
+            ns,
+            ns / fpga_ns
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Microbenches for the TEDA core: the recurrence step across feature
+//! widths and precisions, plus the comparison baselines.
+//!
+//! Run: `cargo bench --bench teda_core`
+
+use std::time::Duration;
+
+use teda_fpga::baselines::{AnomalyDetector, MSigmaDetector, SlidingZScore};
+use teda_fpga::teda::{TedaDetector, TedaState};
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const SAMPLES: usize = 100_000;
+
+fn gen(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = SplitMix64::new(seed);
+    (0..SAMPLES)
+        .map(|_| (0..n).map(|_| rng.next_f64()).collect())
+        .collect()
+}
+
+fn main() {
+    println!("== teda_core microbenches ({SAMPLES} samples/iter) ==");
+
+    for n in [1usize, 2, 4, 8] {
+        let samples = gen(n, 42);
+        let mut st = TedaState::<f64>::new(n);
+        Bench::new(format!("teda_state_f64_n{n}"))
+            .iters(20)
+            .warmup(Duration::from_millis(200))
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                st.reset();
+                for s in &samples {
+                    black_box(st.step(s, 3.0));
+                }
+            });
+    }
+
+    // f32 (the RTL-equivalent datapath precision).
+    {
+        let samples = gen(2, 43);
+        let s32: Vec<Vec<f32>> = samples
+            .iter()
+            .map(|s| s.iter().map(|&v| v as f32).collect())
+            .collect();
+        let mut st = TedaState::<f32>::new(2);
+        Bench::new("teda_state_f32_n2")
+            .iters(20)
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                st.reset();
+                for s in &s32 {
+                    black_box(st.step(s, 3.0f32));
+                }
+            });
+    }
+
+    // Full detector (flag counters etc.).
+    {
+        let samples = gen(2, 44);
+        let mut det = TedaDetector::new(2, 3.0);
+        Bench::new("teda_detector_n2")
+            .iters(20)
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                det.reset();
+                for s in &samples {
+                    black_box(det.step(s));
+                }
+            });
+    }
+
+    // Baselines on the same stream, for the efficiency argument (§2:
+    // TEDA's recursion is O(1)/sample like m-sigma, while the windowed
+    // z-score pays ring-buffer traffic).
+    {
+        let samples = gen(2, 45);
+        Bench::new("baseline_msigma_n2")
+            .iters(20)
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                let mut det = MSigmaDetector::new(2, 3.0);
+                for s in &samples {
+                    black_box(det.step(s));
+                }
+            });
+        Bench::new("baseline_sliding_zscore_w128_n2")
+            .iters(20)
+            .units(SAMPLES as u64, "samples")
+            .run(|| {
+                let mut det = SlidingZScore::new(2, 3.0, 128);
+                for s in &samples {
+                    black_box(det.step(s));
+                }
+            });
+    }
+}

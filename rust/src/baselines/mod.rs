@@ -1,0 +1,39 @@
+//! Comparison baselines for the TEDA detector.
+//!
+//! The paper motivates TEDA against "traditional statistical methods"
+//! (§1, §3): the m·σ rule, which presumes a Gaussian distribution and a
+//! global mean, and windowed variants that regain locality at the price
+//! of memory. Both are implemented here so the examples/benches can
+//! reproduce the paper's framing (same Chebyshev-style `m`, same
+//! streams):
+//!
+//! - [`MSigmaDetector`] — classical running m·σ rule (the paper's
+//!   "traditional" strawman; recursive global mean/variance, flag when
+//!   `|x − μ| > m·σ` on any feature).
+//! - [`SlidingZScore`] — windowed z-score with an O(W) ring buffer, the
+//!   common practical compromise TEDA's recursion avoids.
+
+mod msigma;
+mod zscore;
+
+pub use msigma::MSigmaDetector;
+pub use zscore::SlidingZScore;
+
+/// Minimal trait shared by baselines so harnesses can sweep them.
+pub trait AnomalyDetector {
+    /// Absorb one sample, return `true` when flagged anomalous.
+    fn step(&mut self, x: &[f64]) -> bool;
+
+    /// Detector label for reports.
+    fn name(&self) -> &'static str;
+}
+
+impl AnomalyDetector for crate::teda::TedaDetector {
+    fn step(&mut self, x: &[f64]) -> bool {
+        crate::teda::TedaDetector::step(self, x).outlier
+    }
+
+    fn name(&self) -> &'static str {
+        "teda"
+    }
+}

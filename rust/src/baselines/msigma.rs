@@ -1,0 +1,123 @@
+//! Classical running m·σ detector (the paper's "traditional" baseline).
+
+use super::AnomalyDetector;
+
+/// Running per-feature mean/variance with the m·σ flag rule.
+///
+/// This is the textbook method the paper contrasts TEDA against (§3):
+/// it assumes the data distribution (Gaussian for the usual m=3
+/// coverage guarantee) and compares each point to the *global* mean —
+/// precisely the punctual/local information loss §1 criticises.
+#[derive(Debug, Clone)]
+pub struct MSigmaDetector {
+    m: f64,
+    k: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>, // Welford sum of squared deviations per feature
+}
+
+impl MSigmaDetector {
+    /// New detector over `n_features` dims flagging at `m` sigmas.
+    pub fn new(n_features: usize, m: f64) -> Self {
+        assert!(n_features > 0 && m > 0.0);
+        MSigmaDetector {
+            m,
+            k: 0,
+            mean: vec![0.0; n_features],
+            m2: vec![0.0; n_features],
+        }
+    }
+
+    /// Samples absorbed.
+    pub fn k(&self) -> u64 {
+        self.k
+    }
+
+    /// Per-feature standard deviation estimate.
+    pub fn sigma(&self) -> Vec<f64> {
+        if self.k < 2 {
+            return vec![0.0; self.mean.len()];
+        }
+        self.m2.iter().map(|&s| (s / self.k as f64).sqrt()).collect()
+    }
+}
+
+impl AnomalyDetector for MSigmaDetector {
+    fn step(&mut self, x: &[f64]) -> bool {
+        assert_eq!(x.len(), self.mean.len());
+        self.k += 1;
+        let kf = self.k as f64;
+        let mut flagged = false;
+        for i in 0..x.len() {
+            // Flag BEFORE absorbing (otherwise a gross outlier drags the
+            // stats toward itself first).
+            if self.k > 2 {
+                let sigma = (self.m2[i] / (kf - 1.0)).sqrt();
+                if sigma > 0.0 && (x[i] - self.mean[i]).abs() > self.m * sigma {
+                    flagged = true;
+                }
+            }
+            // Welford update.
+            let delta = x[i] - self.mean[i];
+            self.mean[i] += delta / kf;
+            self.m2[i] += delta * (x[i] - self.mean[i]);
+        }
+        flagged
+    }
+
+    fn name(&self) -> &'static str {
+        "m-sigma"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    #[test]
+    fn flags_gross_outlier() {
+        let mut det = MSigmaDetector::new(1, 3.0);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..500 {
+            assert!(!det.step(&[rng.normal()]) || true);
+        }
+        assert!(det.step(&[100.0]));
+        assert_eq!(det.k(), 501);
+    }
+
+    #[test]
+    fn gaussian_false_positive_rate_near_3sigma_expectation() {
+        // ~0.27% of N(0,1) exceeds 3σ; allow generous slack.
+        let mut det = MSigmaDetector::new(1, 3.0);
+        let mut rng = SplitMix64::new(2);
+        let n = 50_000;
+        let mut flags = 0;
+        for _ in 0..n {
+            if det.step(&[rng.normal()]) {
+                flags += 1;
+            }
+        }
+        let rate = flags as f64 / n as f64;
+        assert!(rate > 0.0005 && rate < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn sigma_estimate_converges() {
+        let mut det = MSigmaDetector::new(2, 3.0);
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..20_000 {
+            det.step(&[rng.normal() * 2.0, rng.normal() * 0.5]);
+        }
+        let s = det.sigma();
+        assert!((s[0] - 2.0).abs() < 0.1, "s0={}", s[0]);
+        assert!((s[1] - 0.5).abs() < 0.05, "s1={}", s[1]);
+    }
+
+    #[test]
+    fn early_samples_never_flag() {
+        let mut det = MSigmaDetector::new(1, 3.0);
+        assert!(!det.step(&[5.0]));
+        assert!(!det.step(&[-5.0]));
+    }
+}

@@ -1,0 +1,138 @@
+//! Sliding-window z-score baseline.
+
+use std::collections::VecDeque;
+
+use super::AnomalyDetector;
+
+/// Windowed z-score detector: flag when `|x − μ_W| > m·σ_W` over the
+/// last `W` samples (per feature, any-feature-flags semantics).
+///
+/// Regains the locality the global m·σ rule lacks, but needs O(W·N)
+/// memory and assumes a window length — the two costs TEDA's recursion
+/// avoids (paper §1/§3).
+#[derive(Debug, Clone)]
+pub struct SlidingZScore {
+    m: f64,
+    window: usize,
+    buf: VecDeque<Vec<f64>>,
+    sum: Vec<f64>,
+    sumsq: Vec<f64>,
+}
+
+impl SlidingZScore {
+    /// New detector with window length `window` (≥ 2).
+    pub fn new(n_features: usize, m: f64, window: usize) -> Self {
+        assert!(n_features > 0 && m > 0.0 && window >= 2);
+        SlidingZScore {
+            m,
+            window,
+            buf: VecDeque::with_capacity(window + 1),
+            sum: vec![0.0; n_features],
+            sumsq: vec![0.0; n_features],
+        }
+    }
+
+    /// Current fill level (≤ window).
+    pub fn fill(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+impl AnomalyDetector for SlidingZScore {
+    fn step(&mut self, x: &[f64]) -> bool {
+        assert_eq!(x.len(), self.sum.len());
+        let mut flagged = false;
+        let n = self.buf.len() as f64;
+        if self.buf.len() >= 8 {
+            for i in 0..x.len() {
+                let mean = self.sum[i] / n;
+                let var = (self.sumsq[i] / n - mean * mean).max(0.0);
+                let sigma = var.sqrt();
+                if sigma > 0.0 && (x[i] - mean).abs() > self.m * sigma {
+                    flagged = true;
+                }
+            }
+        }
+        // Absorb.
+        for i in 0..x.len() {
+            self.sum[i] += x[i];
+            self.sumsq[i] += x[i] * x[i];
+        }
+        self.buf.push_back(x.to_vec());
+        if self.buf.len() > self.window {
+            let old = self.buf.pop_front().unwrap();
+            for i in 0..old.len() {
+                self.sum[i] -= old[i];
+                self.sumsq[i] -= old[i] * old[i];
+            }
+        }
+        flagged
+    }
+
+    fn name(&self) -> &'static str {
+        "sliding-zscore"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::SplitMix64;
+
+    #[test]
+    fn window_never_exceeds_capacity() {
+        let mut det = SlidingZScore::new(1, 3.0, 16);
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..100 {
+            det.step(&[rng.normal()]);
+            assert!(det.fill() <= 16);
+        }
+        assert_eq!(det.fill(), 16);
+    }
+
+    #[test]
+    fn flags_spike_against_local_context() {
+        let mut det = SlidingZScore::new(1, 3.0, 64);
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..64 {
+            det.step(&[rng.normal_with(0.0, 0.1)]);
+        }
+        assert!(det.step(&[5.0]));
+    }
+
+    #[test]
+    fn adapts_to_level_shift_where_global_rule_would_not() {
+        // After a regime change, the sliding window re-centers; samples
+        // at the new level stop being flagged once the window refills.
+        let mut det = SlidingZScore::new(1, 3.0, 32);
+        let mut rng = SplitMix64::new(6);
+        for _ in 0..64 {
+            det.step(&[rng.normal_with(0.0, 0.1)]);
+        }
+        for _ in 0..64 {
+            det.step(&[rng.normal_with(10.0, 0.1)]);
+        }
+        // Now firmly in the new regime: no flags.
+        let mut flags = 0;
+        for _ in 0..32 {
+            if det.step(&[rng.normal_with(10.0, 0.1)]) {
+                flags += 1;
+            }
+        }
+        assert_eq!(flags, 0);
+    }
+
+    #[test]
+    fn rolling_sums_match_recompute() {
+        let mut det = SlidingZScore::new(2, 3.0, 8);
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..50 {
+            det.step(&[rng.normal(), rng.uniform(-1.0, 1.0)]);
+            // recompute from buffer
+            for i in 0..2 {
+                let s: f64 = det.buf.iter().map(|v| v[i]).sum();
+                assert!((s - det.sum[i]).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration surface: JSON + TOML-subset parsers and the typed
+//! service configuration.
+//!
+//! In-repo stand-ins for `serde_json` / `toml` (no crates.io in this
+//! build environment, DESIGN.md §3).
+
+pub mod json;
+pub mod service;
+pub mod toml;
+
+pub use json::Json;
+pub use service::{EngineKind, ServiceConfig};
+pub use toml::TomlDoc;

@@ -1,0 +1,245 @@
+//! Typed service configuration for the L3 coordinator.
+
+use std::path::PathBuf;
+
+use crate::config::TomlDoc;
+use crate::{Error, Result};
+
+/// Which detector backend the coordinator drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust `teda::TedaDetector` (f64) — the software reference.
+    Software,
+    /// Cycle-accurate RTL pipeline simulator (f32, paper's architecture).
+    Rtl,
+    /// AOT-compiled JAX/Pallas artifact via PJRT.
+    Xla,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "software" | "sw" => Ok(EngineKind::Software),
+            "rtl" | "fpga" => Ok(EngineKind::Rtl),
+            "xla" | "pjrt" => Ok(EngineKind::Xla),
+            other => Err(Error::Config(format!(
+                "unknown engine kind '{other}' (software|rtl|xla)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::Software => "software",
+            EngineKind::Rtl => "rtl",
+            EngineKind::Xla => "xla",
+        })
+    }
+}
+
+/// Full coordinator/service configuration.
+///
+/// Built from a TOML file ([`ServiceConfig::from_toml`]) or defaults +
+/// programmatic overrides; every field has a production-sane default so
+/// examples can run with zero config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceConfig {
+    /// Human name used in logs/metrics.
+    pub name: String,
+    /// Detector backend.
+    pub engine: EngineKind,
+    /// Feature dimension N of every stream.
+    pub n_features: usize,
+    /// Chebyshev multiplier m (Eq. 6; the paper uses 3).
+    pub m: f64,
+    /// Worker threads executing detector engines.
+    pub workers: usize,
+    /// Bounded capacity of each worker's input queue (backpressure knob).
+    pub queue_capacity: usize,
+    /// Dynamic batcher: max streams packed per XLA chunk.
+    pub batch_max_streams: usize,
+    /// Dynamic batcher: samples per stream per chunk (T axis).
+    pub chunk_t: usize,
+    /// Dynamic batcher: max linger before a partial batch is flushed.
+    pub batch_linger_us: u64,
+    /// Directory with AOT artifacts (XLA engine only).
+    pub artifact_dir: PathBuf,
+    /// Per-stream state checkpoint interval in samples (0 = disabled).
+    pub checkpoint_every: u64,
+    /// RNG seed for anything stochastic in the service (workload gen).
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            name: "teda-service".into(),
+            engine: EngineKind::Software,
+            n_features: 2,
+            m: 3.0,
+            workers: 4,
+            queue_capacity: 1024,
+            batch_max_streams: 32,
+            chunk_t: 32,
+            batch_linger_us: 200,
+            artifact_dir: PathBuf::from("artifacts"),
+            checkpoint_every: 0,
+            seed: 0x7EDA, // "TEDA"
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ServiceConfig::default();
+        if let Some(v) = doc.str_("name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.str_("engine.kind") {
+            cfg.engine = v.parse()?;
+        }
+        if let Some(v) = doc.usize_("engine.n_features") {
+            cfg.n_features = v;
+        }
+        if let Some(v) = doc.f64_("engine.m") {
+            cfg.m = v;
+        }
+        if let Some(v) = doc.usize_("service.workers") {
+            cfg.workers = v;
+        }
+        if let Some(v) = doc.usize_("service.queue_capacity") {
+            cfg.queue_capacity = v;
+        }
+        if let Some(v) = doc.usize_("batcher.max_streams") {
+            cfg.batch_max_streams = v;
+        }
+        if let Some(v) = doc.usize_("batcher.chunk_t") {
+            cfg.chunk_t = v;
+        }
+        if let Some(v) = doc.u64_("batcher.linger_us") {
+            cfg.batch_linger_us = v;
+        }
+        if let Some(v) = doc.str_("artifacts.dir") {
+            cfg.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.u64_("service.checkpoint_every") {
+            cfg.checkpoint_every = v;
+        }
+        if let Some(v) = doc.u64_("service.seed") {
+            cfg.seed = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::io(format!("reading {}", p.display()), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Invariant checks shared by all constructors.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_features == 0 {
+            return Err(Error::Config("n_features must be > 0".into()));
+        }
+        if self.m <= 0.0 {
+            return Err(Error::Config("m must be > 0 (Eq. 6)".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be > 0".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Config("queue_capacity must be > 0".into()));
+        }
+        if self.batch_max_streams == 0 || self.chunk_t == 0 {
+            return Err(Error::Config(
+                "batcher dimensions must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServiceConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let text = r#"
+            name = "prod-detector"
+            [engine]
+            kind = "xla"
+            n_features = 4
+            m = 2.5
+            [service]
+            workers = 8
+            queue_capacity = 4096
+            seed = 99
+            [batcher]
+            max_streams = 64
+            chunk_t = 16
+            linger_us = 50
+            [artifacts]
+            dir = "/opt/artifacts"
+        "#;
+        let cfg = ServiceConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.name, "prod-detector");
+        assert_eq!(cfg.engine, EngineKind::Xla);
+        assert_eq!(cfg.n_features, 4);
+        assert_eq!(cfg.m, 2.5);
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.queue_capacity, 4096);
+        assert_eq!(cfg.batch_max_streams, 64);
+        assert_eq!(cfg.chunk_t, 16);
+        assert_eq!(cfg.batch_linger_us, 50);
+        assert_eq!(cfg.artifact_dir, PathBuf::from("/opt/artifacts"));
+        assert_eq!(cfg.seed, 99);
+    }
+
+    #[test]
+    fn partial_toml_keeps_defaults() {
+        let cfg = ServiceConfig::from_toml("[engine]\nkind = \"rtl\"\n").unwrap();
+        assert_eq!(cfg.engine, EngineKind::Rtl);
+        assert_eq!(cfg.workers, ServiceConfig::default().workers);
+    }
+
+    #[test]
+    fn bad_engine_kind_rejected() {
+        assert!(ServiceConfig::from_toml("[engine]\nkind = \"gpu\"\n").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ServiceConfig::from_toml("[engine]\nm = -1.0\n").is_err());
+        assert!(
+            ServiceConfig::from_toml("[service]\nworkers = 0\n").is_err()
+        );
+    }
+
+    #[test]
+    fn engine_kind_parse_display() {
+        for (s, k) in [
+            ("software", EngineKind::Software),
+            ("rtl", EngineKind::Rtl),
+            ("xla", EngineKind::Xla),
+        ] {
+            assert_eq!(s.parse::<EngineKind>().unwrap(), k);
+            assert_eq!(k.to_string(), s);
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! TOML-subset parser for service config files (in-repo stand-in for the
+//! `toml` crate, DESIGN.md §3).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / flat-array values, `#`
+//! comments, bare and quoted keys. Not supported (rejected, not
+//! mis-parsed): array-of-tables, inline tables, multi-line strings,
+//! datetimes.
+
+use std::collections::BTreeMap;
+
+use crate::config::Json;
+use crate::{Error, Result};
+
+/// A parsed TOML document: dotted-path → scalar/array value (stored as
+/// [`Json`] values for uniform typed access).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, Json>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err(lineno, "array-of-tables not supported"));
+                }
+                let end = rest
+                    .find(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?;
+                if !rest[end + 1..].trim().is_empty() {
+                    return Err(err(lineno, "garbage after section header"));
+                }
+                section = rest[..end].trim().to_string();
+                if section.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let key = parse_key(line[..eq].trim())
+                .ok_or_else(|| err(lineno, "bad key"))?;
+            let value = parse_value(line[eq + 1..].trim())
+                .ok_or_else(|| err(lineno, "bad value"))?;
+            let path = if section.is_empty() {
+                key
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(path.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key '{path}'")));
+            }
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    /// Load + parse a file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<TomlDoc> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::io(format!("reading {}", p.display()), e))?;
+        Self::parse(&text)
+    }
+
+    /// Raw value at a dotted path.
+    pub fn get(&self, path: &str) -> Option<&Json> {
+        self.entries.get(path)
+    }
+
+    /// Typed accessors (None when missing or mistyped).
+    pub fn str_(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Json::as_str)
+    }
+
+    pub fn u64_(&self, path: &str) -> Option<u64> {
+        self.get(path).and_then(Json::as_u64)
+    }
+
+    pub fn usize_(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(Json::as_usize)
+    }
+
+    pub fn f64_(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Json::as_f64)
+    }
+
+    pub fn bool_(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Json::as_bool)
+    }
+
+    /// All keys under a section prefix (e.g. `"engine"` → `engine.kind`…).
+    pub fn keys_under<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&want))
+            .map(String::as_str)
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key(raw: &str) -> Option<String> {
+    if raw.is_empty() {
+        return None;
+    }
+    if let Some(stripped) =
+        raw.strip_prefix('"').and_then(|r| r.strip_suffix('"'))
+    {
+        return Some(stripped.to_string());
+    }
+    if raw
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.')
+    {
+        Some(raw.to_string())
+    } else {
+        None
+    }
+}
+
+fn parse_value(raw: &str) -> Option<Json> {
+    if raw.is_empty() {
+        return None;
+    }
+    if raw == "true" {
+        return Some(Json::Bool(true));
+    }
+    if raw == "false" {
+        return Some(Json::Bool(false));
+    }
+    if let Some(stripped) =
+        raw.strip_prefix('"').and_then(|r| r.strip_suffix('"'))
+    {
+        // Basic strings with the common escapes.
+        let mut out = String::new();
+        let mut chars = stripped.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next()? {
+                    'n' => out.push('\n'),
+                    't' => out.push('\t'),
+                    'r' => out.push('\r'),
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    _ => return None,
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Some(Json::Str(out));
+    }
+    if let Some(inner) =
+        raw.strip_prefix('[').and_then(|r| r.strip_suffix(']'))
+    {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Some(Json::Arr(vec![]));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|s| parse_value(s.trim()))
+            .collect::<Option<Vec<_>>>()?;
+        return Some(Json::Arr(items));
+    }
+    // Numbers (allow underscores as separators, TOML-style).
+    let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+    cleaned.parse::<f64>().ok().map(Json::Num)
+}
+
+/// Split an array body on commas not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Option<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.checked_sub(1)?,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str || depth != 0 {
+        return None;
+    }
+    parts.push(&s[start..]);
+    Some(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # service config
+        name = "teda-service"   # trailing comment
+        workers = 4
+        rate = 2.5
+        debug = false
+
+        [engine]
+        kind = "xla"
+        m = 3.0
+
+        [engine.batcher]
+        max_streams = 32
+        shapes = [8, 16, 32]
+        tags = ["a", "b"]
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(doc.str_("name"), Some("teda-service"));
+        assert_eq!(doc.u64_("workers"), Some(4));
+        assert_eq!(doc.f64_("rate"), Some(2.5));
+        assert_eq!(doc.bool_("debug"), Some(false));
+        assert_eq!(doc.str_("engine.kind"), Some("xla"));
+        assert_eq!(doc.usize_("engine.batcher.max_streams"), Some(32));
+        let shapes = doc.get("engine.batcher.shapes").unwrap().as_arr().unwrap();
+        assert_eq!(shapes.len(), 3);
+        assert_eq!(shapes[2].as_usize(), Some(32));
+    }
+
+    #[test]
+    fn keys_under_lists_section() {
+        let doc = TomlDoc::parse(DOC).unwrap();
+        let keys: Vec<&str> = doc.keys_under("engine").collect();
+        assert!(keys.contains(&"engine.kind"));
+        assert!(keys.contains(&"engine.batcher.max_streams"));
+        assert!(!keys.contains(&"name"));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc =
+            TomlDoc::parse("s = \"a#b\\nc\"\n").unwrap();
+        assert_eq!(doc.str_("s"), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let doc = TomlDoc::parse("big = 1_000_000\n").unwrap();
+        assert_eq!(doc.u64_("big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("[[tables]]\n").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let doc = TomlDoc::parse("\n# nothing\n\n").unwrap();
+        assert_eq!(doc, TomlDoc::default());
+    }
+}

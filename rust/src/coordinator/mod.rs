@@ -1,0 +1,32 @@
+//! L3 coordinator — the streaming anomaly-detection service.
+//!
+//! Topology (vLLM-router-shaped, adapted to detection streams):
+//!
+//! ```text
+//!                  ┌────────────┐   bounded queues    ┌──────────┐
+//!  sources ──────▶ │   Router   │ ──────────────────▶ │ Worker 0 │──┐
+//!  (submit)        │ fnv1a(sid) │ ──────────────────▶ │ Worker 1 │──┼─▶ results
+//!                  └────────────┘        ...          └──────────┘  │   channel
+//!                        │                                          │
+//!                        └─ backpressure: send blocks when full ◀───┘
+//! ```
+//!
+//! - **Router** ([`Router`]): stable hash of the stream id → worker
+//!   index, so one stream's samples always land on the same worker and
+//!   per-stream ordering is preserved end-to-end.
+//! - **Workers** ([`Service`]): each owns one [`crate::engine::Engine`]
+//!   (software / RTL / XLA per config) and processes its queue in
+//!   arrival order. The XLA engine performs dynamic batching internally
+//!   (S×T chunks); `min_ready` is the service's batching knob.
+//! - **State manager** ([`StateManager`]): periodic per-stream state
+//!   checkpoints (μ, σ², k) for recovery/migration.
+//! - **Backpressure**: all queues are bounded; a full worker queue
+//!   blocks the router (and ultimately the source), never drops.
+
+mod router;
+mod service;
+mod state_mgr;
+
+pub use router::Router;
+pub use service::{Service, ServiceHandle};
+pub use state_mgr::{StateCheckpoint, StateManager};

@@ -1,0 +1,78 @@
+//! Stream → worker routing.
+
+use crate::util::propkit::fnv1a;
+
+/// Stable stream-id → worker-index router.
+///
+/// Uses FNV-1a over the little-endian stream id so the mapping is
+/// deterministic across runs and processes (important for state
+/// recovery: a stream's checkpoints are keyed by worker).
+#[derive(Debug, Clone)]
+pub struct Router {
+    workers: usize,
+}
+
+impl Router {
+    /// # Panics
+    /// Panics when `workers == 0`.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "router needs at least one worker");
+        Router { workers }
+    }
+
+    /// Worker index for a stream.
+    #[inline]
+    pub fn route(&self, stream_id: u64) -> usize {
+        (fnv1a(&stream_id.to_le_bytes()) % self.workers as u64) as usize
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Distribution diagnostic: per-worker stream counts for a set of ids.
+    pub fn load(&self, stream_ids: impl Iterator<Item = u64>) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workers];
+        for sid in stream_ids {
+            counts[self.route(sid)] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable() {
+        let r = Router::new(4);
+        for sid in 0..100 {
+            assert_eq!(r.route(sid), r.route(sid));
+            assert!(r.route(sid) < 4);
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_uniform() {
+        let r = Router::new(8);
+        let load = r.load(0..8000);
+        // each worker should get 1000 ± 35%
+        for (w, &c) in load.iter().enumerate() {
+            assert!(c > 650 && c < 1350, "worker {w}: {c}");
+        }
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let r = Router::new(1);
+        assert_eq!(r.load(0..50), vec![50]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_rejected() {
+        Router::new(0);
+    }
+}

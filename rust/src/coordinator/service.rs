@@ -1,0 +1,464 @@
+//! The service: worker threads + router + result collection.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::{EngineKind, ServiceConfig};
+use crate::coordinator::{Router, StateCheckpoint, StateManager};
+use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine};
+use crate::metrics::ServiceMetrics;
+use crate::runtime::XlaRuntime;
+use crate::stream::{bounded, Receiver, Sample, Sender};
+use crate::{Error, Result};
+
+/// A verdict annotated with its end-to-end latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Classified {
+    pub verdict: EngineVerdict,
+    /// submit → verdict wall time in ns.
+    pub latency_ns: u64,
+}
+
+enum Job {
+    Sample(Sample, Instant),
+    /// Amortizes channel synchronization: one lock per burst instead of
+    /// one per sample (see EXPERIMENTS.md §Perf).
+    Batch(Vec<Sample>, Instant),
+    /// Force pending batches out (end of input).
+    Flush,
+}
+
+/// A running service instance.
+pub struct Service {
+    cfg: ServiceConfig,
+    router: Router,
+    senders: Vec<Sender<Job>>,
+    workers: Vec<JoinHandle<Result<()>>>,
+    /// Verdicts travel in bursts (one Vec per processed job) to keep
+    /// channel synchronization off the per-sample path.
+    results_rx: Receiver<Vec<Classified>>,
+    metrics: Arc<ServiceMetrics>,
+    state_mgr: Arc<StateManager>,
+}
+
+/// Cheap clonable submit-side handle.
+pub struct ServiceHandle {
+    router: Router,
+    senders: Vec<Sender<Job>>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        ServiceHandle {
+            router: self.router.clone(),
+            senders: self.senders.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+}
+
+impl ServiceHandle {
+    /// Submit one sample (blocks under backpressure).
+    pub fn submit(&self, sample: Sample) -> Result<()> {
+        submit_inner(&self.router, &self.senders, &self.metrics, sample)
+    }
+}
+
+/// Shared submit path: non-blocking fast path, blocking (counted)
+/// backpressure path when the worker queue is full.
+fn submit_inner(
+    router: &Router,
+    senders: &[Sender<Job>],
+    metrics: &ServiceMetrics,
+    sample: Sample,
+) -> Result<()> {
+    let w = router.route(sample.stream_id);
+    let job = Job::Sample(sample, Instant::now());
+    match senders[w].try_send(job) {
+        Ok(None) => {
+            metrics.samples_in.inc();
+            Ok(())
+        }
+        Ok(Some(job)) => {
+            metrics.backpressure_events.inc();
+            senders[w]
+                .send(job)
+                .map_err(|_| Error::Stream("worker queue closed".into()))?;
+            metrics.samples_in.inc();
+            Ok(())
+        }
+        Err(_) => Err(Error::Stream("worker queue closed".into())),
+    }
+}
+
+impl Service {
+    /// Start workers per the config.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        cfg.validate()?;
+        let metrics = ServiceMetrics::new();
+        let state_mgr = Arc::new(StateManager::new());
+        let router = Router::new(cfg.workers);
+        // Results flow on an unbounded channel: a worker must never
+        // block on its own consumer (the submitter only drains results
+        // after submission, so a bounded results path could deadlock the
+        // whole pipeline: worker→results full→worker stalls→queues
+        // fill→submit blocks).
+        let (res_tx, res_rx) = crate::stream::unbounded::<Vec<Classified>>();
+
+        // PJRT handles are not Send (the xla crate wraps an Rc), so each
+        // worker constructs its own engine — including its own PJRT
+        // runtime — inside its thread.
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for widx in 0..cfg.workers {
+            let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
+            senders.push(tx);
+            let res_tx = res_tx.clone();
+            let metrics = metrics.clone();
+            let state_mgr = state_mgr.clone();
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("teda-worker-{widx}"))
+                    .spawn(move || {
+                        let mut engine: Box<dyn Engine> = match cfg.engine {
+                            EngineKind::Software => Box::new(
+                                SoftwareEngine::new(cfg.n_features, cfg.m),
+                            ),
+                            EngineKind::Rtl => Box::new(RtlEngine::new(
+                                cfg.n_features,
+                                cfg.m,
+                            )),
+                            EngineKind::Xla => {
+                                let rt = XlaRuntime::new(&cfg.artifact_dir)?;
+                                Box::new(
+                                    XlaEngine::new(
+                                        &rt,
+                                        cfg.n_features,
+                                        cfg.batch_max_streams * cfg.chunk_t,
+                                    )?
+                                    // Wait for a full batch of stream
+                                    // chunks before dispatching: padding
+                                    // lanes cost as much as real ones
+                                    // (27× per-sample difference — see
+                                    // the `batcher` bench); stragglers
+                                    // are handled by Flush.
+                                    .with_min_ready(cfg.batch_max_streams),
+                                )
+                            }
+                        };
+                        worker_loop(
+                            rx,
+                            engine.as_mut(),
+                            res_tx,
+                            metrics,
+                            state_mgr,
+                            cfg.checkpoint_every,
+                        )
+                    })
+                    .map_err(|e| Error::io("spawn worker", e))?,
+            );
+        }
+        drop(res_tx); // collectors see closure once workers finish
+        Ok(Service {
+            cfg,
+            router,
+            senders,
+            workers,
+            results_rx: res_rx,
+            metrics,
+            state_mgr,
+        })
+    }
+
+    /// Service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Shared metrics.
+    pub fn metrics(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Shared state manager (checkpoints).
+    pub fn state_manager(&self) -> Arc<StateManager> {
+        self.state_mgr.clone()
+    }
+
+    /// Submit one sample, blocking when the worker queue is full
+    /// (backpressure; the block is counted in metrics).
+    pub fn submit(&self, sample: Sample) -> Result<()> {
+        submit_inner(&self.router, &self.senders, &self.metrics, sample)
+    }
+
+    /// Submit a burst of samples: routed per stream, but enqueued as one
+    /// job per worker — one channel synchronization per burst per worker
+    /// instead of one per sample (the L3 hot-path optimization;
+    /// EXPERIMENTS.md §Perf).
+    pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
+        let now = Instant::now();
+        let n = samples.len() as u64;
+        let mut per_worker: Vec<Vec<Sample>> =
+            (0..self.senders.len()).map(|_| Vec::new()).collect();
+        for s in samples {
+            per_worker[self.router.route(s.stream_id)].push(s);
+        }
+        for (w, batch) in per_worker.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            match self.senders[w].try_send(Job::Batch(batch, now)) {
+                Ok(None) => {}
+                Ok(Some(job)) => {
+                    self.metrics.backpressure_events.inc();
+                    self.senders[w].send(job).map_err(|_| {
+                        Error::Stream("worker queue closed".into())
+                    })?;
+                }
+                Err(_) => {
+                    return Err(Error::Stream("worker queue closed".into()))
+                }
+            }
+        }
+        self.metrics.samples_in.add(n);
+        Ok(())
+    }
+
+    /// Clonable submit-side handle for multi-threaded sources.
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            router: self.router.clone(),
+            senders: self.senders.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Drain any verdicts already available without blocking.
+    pub fn poll_results(&self) -> Vec<Classified> {
+        let mut out = Vec::new();
+        while let Ok(Some(burst)) = self.results_rx.try_recv() {
+            out.extend(burst);
+        }
+        out
+    }
+
+    /// Finish: flush engines, stop workers, and return every remaining
+    /// verdict (in addition to whatever `poll_results` already handed out).
+    pub fn finish(self) -> Result<Vec<Classified>> {
+        for tx in &self.senders {
+            tx.send(Job::Flush)
+                .map_err(|_| Error::Stream("worker gone at flush".into()))?;
+        }
+        drop(self.senders); // workers exit after draining queues
+        let mut out = Vec::new();
+        while let Ok(burst) = self.results_rx.recv() {
+            out.extend(burst);
+        }
+        for w in self.workers {
+            w.join()
+                .map_err(|_| Error::Stream("worker panicked".into()))??;
+        }
+        Ok(out)
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Job>,
+    engine: &mut dyn Engine,
+    res_tx: Sender<Vec<Classified>>,
+    metrics: Arc<ServiceMetrics>,
+    state_mgr: Arc<StateManager>,
+    checkpoint_every: u64,
+) -> Result<()> {
+    // submit-time of every in-flight sample, for latency accounting.
+    let mut inflight: HashMap<(u64, u64), Instant> = HashMap::new();
+    // One burst send per engine call: metrics are batched too (counter
+    // adds are cheap but the channel lock is not).
+    let emit = |verdicts: Vec<EngineVerdict>,
+                inflight: &mut HashMap<(u64, u64), Instant>|
+     -> Result<()> {
+        if verdicts.is_empty() {
+            return Ok(());
+        }
+        let mut burst = Vec::with_capacity(verdicts.len());
+        let mut outliers = 0u64;
+        for v in verdicts {
+            let latency_ns = inflight
+                .remove(&(v.stream_id, v.seq))
+                .map(|t| t.elapsed().as_nanos() as u64)
+                .unwrap_or(0);
+            metrics.latency.record(latency_ns);
+            if v.outlier {
+                outliers += 1;
+            }
+            burst.push(Classified { verdict: v, latency_ns });
+        }
+        metrics.verdicts_out.add(burst.len() as u64);
+        metrics.outliers.add(outliers);
+        res_tx
+            .send(burst)
+            .map_err(|_| Error::Stream("results channel closed".into()))?;
+        Ok(())
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Sample(sample, t0) => {
+                inflight.insert((sample.stream_id, sample.seq), t0);
+                let seq = sample.seq;
+                let sid = sample.stream_id;
+                let verdicts = engine.ingest(&sample)?;
+                emit(verdicts, &mut inflight)?;
+                // Periodic checkpointing (software engine exposes state).
+                if checkpoint_every > 0 && (seq + 1) % checkpoint_every == 0 {
+                    if let Some(sw) = engine.as_software() {
+                        if let Some(det) = sw.detector(sid) {
+                            state_mgr.publish(StateCheckpoint {
+                                stream_id: sid,
+                                seq,
+                                state: det.state().clone(),
+                            });
+                        }
+                    }
+                }
+            }
+            Job::Batch(samples, t0) => {
+                // Accumulate the whole burst's verdicts and emit once.
+                let mut all = Vec::with_capacity(samples.len());
+                for sample in samples {
+                    inflight.insert((sample.stream_id, sample.seq), t0);
+                    let seq = sample.seq;
+                    let sid = sample.stream_id;
+                    all.extend(engine.ingest(&sample)?);
+                    if checkpoint_every > 0
+                        && (seq + 1) % checkpoint_every == 0
+                    {
+                        if let Some(sw) = engine.as_software() {
+                            if let Some(det) = sw.detector(sid) {
+                                state_mgr.publish(StateCheckpoint {
+                                    stream_id: sid,
+                                    seq,
+                                    state: det.state().clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+                emit(all, &mut inflight)?;
+            }
+            Job::Flush => {
+                let verdicts = engine.flush()?;
+                emit(verdicts, &mut inflight)?;
+            }
+        }
+    }
+    // Input closed: final flush for whatever is still buffered.
+    let verdicts = engine.flush()?;
+    emit(verdicts, &mut inflight)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(engine: EngineKind, workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            engine,
+            workers,
+            n_features: 2,
+            queue_capacity: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn software_service_classifies_everything() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 3)).unwrap();
+        let mut rng = crate::util::prng::SplitMix64::new(1);
+        for seq in 0..200u64 {
+            for sid in 0..6u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![rng.next_f64(), rng.next_f64()],
+                })
+                .unwrap();
+            }
+        }
+        let metrics = svc.metrics();
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 1200);
+        assert_eq!(metrics.samples_in.get(), 1200);
+        assert_eq!(metrics.verdicts_out.get(), 1200);
+    }
+
+    #[test]
+    fn per_stream_order_is_preserved() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 4)).unwrap();
+        for seq in 0..300u64 {
+            for sid in 0..8u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.1, 0.2],
+                })
+                .unwrap();
+            }
+        }
+        let out = svc.finish().unwrap();
+        let mut last_seq: HashMap<u64, u64> = HashMap::new();
+        for c in &out {
+            let v = &c.verdict;
+            if let Some(&prev) = last_seq.get(&v.stream_id) {
+                assert!(v.seq > prev, "stream {} reordered", v.stream_id);
+            }
+            last_seq.insert(v.stream_id, v.seq);
+        }
+        assert_eq!(last_seq.len(), 8);
+    }
+
+    #[test]
+    fn checkpointing_publishes_states() {
+        let mut cfg = base_cfg(EngineKind::Software, 2);
+        cfg.checkpoint_every = 50;
+        let svc = Service::start(cfg).unwrap();
+        let mgr = svc.state_manager();
+        for seq in 0..120u64 {
+            for sid in 0..4u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.5, 0.5],
+                })
+                .unwrap();
+            }
+        }
+        svc.finish().unwrap();
+        assert_eq!(mgr.len(), 4);
+        let cp = mgr.latest(2).unwrap();
+        assert_eq!(cp.seq, 99); // checkpoint at seq 49 then 99
+        assert_eq!(cp.state.k, 100);
+    }
+
+    #[test]
+    fn rtl_service_matches_sample_count() {
+        let svc = Service::start(base_cfg(EngineKind::Rtl, 2)).unwrap();
+        for seq in 0..50u64 {
+            for sid in 0..3u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![seq as f64 * 0.01, 0.3],
+                })
+                .unwrap();
+            }
+        }
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 150);
+    }
+}

@@ -1,0 +1,131 @@
+//! Per-stream state checkpointing (recovery / migration support).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::teda::TedaState;
+
+/// One checkpoint of a stream's TEDA state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateCheckpoint {
+    pub stream_id: u64,
+    /// Sequence number of the last sample folded into this state.
+    pub seq: u64,
+    pub state: TedaState<f64>,
+}
+
+/// Thread-safe checkpoint store.
+///
+/// Engines publish checkpoints every `interval` samples; on failover a
+/// new worker restores the newest checkpoint and re-requests samples
+/// after `seq` from the source (at-least-once upstream, exactly-once
+/// detector state).
+#[derive(Debug, Default)]
+pub struct StateManager {
+    store: Mutex<HashMap<u64, StateCheckpoint>>,
+}
+
+impl StateManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish (overwrites an older checkpoint for the stream).
+    pub fn publish(&self, cp: StateCheckpoint) {
+        let mut store = self.store.lock().unwrap();
+        match store.get(&cp.stream_id) {
+            Some(prev) if prev.seq >= cp.seq => {} // stale, ignore
+            _ => {
+                store.insert(cp.stream_id, cp);
+            }
+        }
+    }
+
+    /// Latest checkpoint for a stream.
+    pub fn latest(&self, stream_id: u64) -> Option<StateCheckpoint> {
+        self.store.lock().unwrap().get(&stream_id).cloned()
+    }
+
+    /// Remove a finished stream's checkpoint.
+    pub fn evict(&self, stream_id: u64) -> Option<StateCheckpoint> {
+        self.store.lock().unwrap().remove(&stream_id)
+    }
+
+    /// Number of checkpointed streams.
+    pub fn len(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    /// Whether no checkpoints exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::teda::TedaDetector;
+
+    fn checkpoint(sid: u64, seq: u64) -> StateCheckpoint {
+        let mut det = TedaDetector::new(2, 3.0);
+        for i in 0..=seq {
+            det.step(&[i as f64 * 0.1, 0.5]);
+        }
+        StateCheckpoint { stream_id: sid, seq, state: det.state().clone() }
+    }
+
+    #[test]
+    fn publish_and_restore_roundtrip() {
+        let mgr = StateManager::new();
+        let cp = checkpoint(1, 9);
+        mgr.publish(cp.clone());
+        let got = mgr.latest(1).unwrap();
+        assert_eq!(got, cp);
+        assert_eq!(got.state.k, 10);
+    }
+
+    #[test]
+    fn stale_checkpoints_ignored() {
+        let mgr = StateManager::new();
+        mgr.publish(checkpoint(1, 20));
+        mgr.publish(checkpoint(1, 10)); // older — must not overwrite
+        assert_eq!(mgr.latest(1).unwrap().seq, 20);
+    }
+
+    #[test]
+    fn restored_detector_continues_identically() {
+        // A detector restored from a checkpoint must continue exactly
+        // like the uninterrupted one — the failover correctness property.
+        let samples: Vec<Vec<f64>> =
+            (0..50).map(|i| vec![(i % 9) as f64 * 0.2, 1.0]).collect();
+        let mut full = TedaDetector::new(2, 3.0);
+        for s in &samples[..30] {
+            full.step(s);
+        }
+        let mgr = StateManager::new();
+        mgr.publish(StateCheckpoint {
+            stream_id: 5,
+            seq: 29,
+            state: full.state().clone(),
+        });
+        // "Failover": new detector restores and replays the tail.
+        let mut restored = TedaDetector::new(2, 3.0);
+        restored.restore(mgr.latest(5).unwrap().state);
+        for s in &samples[30..] {
+            let a = full.step(s);
+            let b = restored.step(s);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn evict_removes() {
+        let mgr = StateManager::new();
+        mgr.publish(checkpoint(3, 1));
+        assert_eq!(mgr.len(), 1);
+        assert!(mgr.evict(3).is_some());
+        assert!(mgr.is_empty());
+        assert!(mgr.latest(3).is_none());
+    }
+}

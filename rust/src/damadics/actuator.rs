@@ -1,0 +1,301 @@
+//! Physics-flavoured actuator simulator (the DAMADICS substitution).
+//!
+//! Models the benchmark's actuator 1 — pneumatic servo-motor driving a
+//! control valve with a positioner — at 1 Hz, one day = 86 400 samples:
+//!
+//! - a plant *setpoint* trajectory (slow daily drift + operator steps),
+//! - first-order servo dynamics tracking the setpoint,
+//! - flow through the valve `F = Cv(X)·√Δp` with slowly-varying line
+//!   pressure,
+//! - measurement noise on both reported channels.
+//!
+//! The observed vector matches the paper's Figs. 6–7: `x_k = [F, X]`
+//! (flow measurement and valve position). Fault injection (Table 1
+//! semantics) perturbs the *physics*, not the labels:
+//!
+//! - **f16** positioner supply pressure drop → servo gain collapses and
+//!   the stem droops, so X sags and F follows;
+//! - **f17** unexpected pressure change across the valve → Δp steps
+//!   down, F drops with X unchanged;
+//! - **f18** partly opened bypass valve → extra flow bypasses the valve,
+//!   F steps up with X unchanged;
+//! - **f19** flow sensor fault → reported F is rescaled + noisy while
+//!   the true process is healthy.
+
+use crate::util::prng::SplitMix64;
+
+use super::faults::{FaultEvent, FaultType};
+use super::trace::Trace;
+
+/// Simulator tuning. Defaults reproduce Fig. 6/7-scale signatures.
+#[derive(Debug, Clone)]
+pub struct ActuatorConfig {
+    /// Samples per generated trace (a DAMADICS day = 86 400 @ 1 Hz).
+    pub samples: usize,
+    /// Operator setpoint steps per day. The paper's evaporator runs near
+    /// steady state, so the default is 0; raise it to stress TEDA with
+    /// regime changes (the `regime_changes` ablation bench does).
+    pub setpoint_steps: usize,
+    /// Half-range of operator setpoint moves around the base level.
+    pub step_range: f64,
+    /// Amplitude of the slow daily sinusoidal drift.
+    pub drift_amplitude: f64,
+    /// Servo time constant (samples).
+    pub servo_tau: f64,
+    /// Std-dev of process noise on the servo position.
+    pub process_noise: f64,
+    /// Std-dev of measurement noise on both channels.
+    pub measurement_noise: f64,
+    /// Nominal pressure drop across the valve.
+    pub nominal_dp: f64,
+    /// Valve flow coefficient scale.
+    pub cv_scale: f64,
+    /// f16: multiplier on servo gain during the fault.
+    pub f16_gain: f64,
+    /// f16: per-sample stem droop during the fault.
+    pub f16_droop: f64,
+    /// f17: fractional Δp drop during the fault.
+    pub f17_dp_drop: f64,
+    /// f18: bypass flow fraction (of full-open valve flow).
+    pub f18_bypass: f64,
+    /// f19: sensor scale factor during the fault.
+    pub f19_scale: f64,
+    /// f19: extra sensor noise during the fault.
+    pub f19_noise: f64,
+}
+
+impl Default for ActuatorConfig {
+    fn default() -> Self {
+        ActuatorConfig {
+            samples: 86_400,
+            setpoint_steps: 0,
+            step_range: 0.06,
+            drift_amplitude: 0.02,
+            servo_tau: 40.0,
+            process_noise: 0.002,
+            measurement_noise: 0.004,
+            nominal_dp: 1.0,
+            cv_scale: 1.0,
+            f16_gain: 0.25,
+            f16_droop: 0.0015,
+            f17_dp_drop: 0.35,
+            f18_bypass: 0.18,
+            f19_scale: 0.55,
+            f19_noise: 0.02,
+        }
+    }
+}
+
+/// Deterministic (seeded) actuator simulator.
+#[derive(Debug, Clone)]
+pub struct ActuatorSim {
+    cfg: ActuatorConfig,
+    seed: u64,
+}
+
+impl ActuatorSim {
+    /// New simulator; identical `(seed, cfg)` ⇒ identical traces.
+    pub fn new(seed: u64, cfg: ActuatorConfig) -> Self {
+        ActuatorSim { cfg, seed }
+    }
+
+    /// Convenience: default config.
+    pub fn with_seed(seed: u64) -> Self {
+        Self::new(seed, ActuatorConfig::default())
+    }
+
+    /// The config in use.
+    pub fn config(&self) -> &ActuatorConfig {
+        &self.cfg
+    }
+
+    /// Generate one day of operation, optionally with a fault injected
+    /// over `fault`'s window. Observed features per sample: `[F, X]`.
+    pub fn generate_day(&self, fault: Option<&FaultEvent>) -> Trace {
+        let cfg = &self.cfg;
+        // Derive independent noise streams so the *same* seed produces
+        // the same in-control trajectory regardless of the fault window.
+        let mut seed_src = SplitMix64::new(self.seed);
+        let mut sp_rng = seed_src.split();
+        let mut servo_rng = seed_src.split();
+        let mut dp_rng = seed_src.split();
+        let mut meas_rng = seed_src.split();
+
+        // Operator step schedule (default: none — steady-state plant).
+        let mut steps: Vec<(usize, f64)> = (0..cfg.setpoint_steps)
+            .map(|_| {
+                (
+                    sp_rng.below(cfg.samples as u64) as usize,
+                    sp_rng.uniform(0.6 - cfg.step_range, 0.6 + cfg.step_range),
+                )
+            })
+            .collect();
+        steps.sort_by_key(|s| s.0);
+
+        let mut samples = Vec::with_capacity(cfg.samples);
+        let mut labels = Vec::with_capacity(cfg.samples);
+
+        let mut x = 0.6f64; // valve position (0..1)
+        let mut sp_level = 0.6f64;
+        let mut step_idx = 0usize;
+
+        for k in 0..cfg.samples {
+            // Setpoint: held level + slow sinusoidal drift.
+            while step_idx < steps.len() && steps[step_idx].0 <= k {
+                sp_level = steps[step_idx].1;
+                step_idx += 1;
+            }
+            let drift = cfg.drift_amplitude
+                * (k as f64 * std::f64::consts::TAU / 43_200.0).sin();
+            let sp = (sp_level + drift).clamp(0.05, 0.95);
+
+            let in_fault = fault.map(|f| f.contains(k)).unwrap_or(false);
+            let ftype = fault.map(|f| f.fault);
+
+            // Servo dynamics (+ f16 degradation).
+            let mut gain = 1.0;
+            if in_fault && ftype == Some(FaultType::F16) {
+                gain = cfg.f16_gain;
+                x -= cfg.f16_droop;
+            }
+            x += gain * (sp - x) / cfg.servo_tau
+                + servo_rng.normal_with(0.0, cfg.process_noise);
+            x = x.clamp(0.0, 1.0);
+
+            // Pressure drop across the valve (+ f17 step).
+            let mut dp = cfg.nominal_dp
+                + 0.03 * (k as f64 * std::f64::consts::TAU / 21_600.0).cos()
+                + dp_rng.normal_with(0.0, 0.003);
+            if in_fault && ftype == Some(FaultType::F17) {
+                dp *= 1.0 - cfg.f17_dp_drop;
+            }
+            dp = dp.max(0.0);
+
+            // Flow through the valve (equal-percentage-ish Cv) + f18
+            // bypass contribution.
+            let cv = cfg.cv_scale * x;
+            let mut flow = cv * dp.sqrt();
+            if in_fault && ftype == Some(FaultType::F18) {
+                flow += cfg.f18_bypass * cfg.cv_scale * dp.sqrt();
+            }
+
+            // Measurement channel (+ f19 sensor fault).
+            let mut f_meas =
+                flow + meas_rng.normal_with(0.0, cfg.measurement_noise);
+            if in_fault && ftype == Some(FaultType::F19) {
+                f_meas = f_meas * cfg.f19_scale
+                    + meas_rng.normal_with(0.0, cfg.f19_noise);
+            }
+            let x_meas =
+                x + meas_rng.normal_with(0.0, cfg.measurement_noise);
+
+            samples.push(vec![f_meas, x_meas]);
+            labels.push(in_fault);
+        }
+
+        Trace { samples, labels, fault: fault.cloned() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::damadics::faults::schedule_item;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = ActuatorSim::with_seed(1).generate_day(None);
+        let b = ActuatorSim::with_seed(1).generate_day(None);
+        assert_eq!(a.samples, b.samples);
+        let c = ActuatorSim::with_seed(2).generate_day(None);
+        assert_ne!(a.samples, c.samples);
+    }
+
+    #[test]
+    fn healthy_trace_has_no_labels() {
+        let t = ActuatorSim::with_seed(3).generate_day(None);
+        assert_eq!(t.samples.len(), 86_400);
+        assert!(t.labels.iter().all(|&l| !l));
+        assert!(t.fault.is_none());
+    }
+
+    #[test]
+    fn fault_window_is_labelled_exactly() {
+        let ev = schedule_item(5).unwrap();
+        let t = ActuatorSim::with_seed(3).generate_day(Some(&ev));
+        for (k, &l) in t.labels.iter().enumerate() {
+            assert_eq!(l, ev.contains(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn signals_bounded_and_finite() {
+        let ev = schedule_item(1).unwrap();
+        let t = ActuatorSim::with_seed(4).generate_day(Some(&ev));
+        for s in &t.samples {
+            assert_eq!(s.len(), 2);
+            assert!(s.iter().all(|v| v.is_finite()));
+            assert!(s[0] > -0.5 && s[0] < 2.5, "flow {}", s[0]);
+            assert!(s[1] > -0.5 && s[1] < 1.5, "pos {}", s[1]);
+        }
+    }
+
+    #[test]
+    fn f18_raises_flow_in_window() {
+        // Same seed with/without fault: flow must be visibly higher
+        // inside the window, identical outside.
+        let ev = schedule_item(1).unwrap(); // f18
+        let sim = ActuatorSim::with_seed(7);
+        let healthy = sim.generate_day(None);
+        let faulty = sim.generate_day(Some(&ev));
+        let mid = (ev.start + ev.end) / 2;
+        let delta = faulty.samples[mid][0] - healthy.samples[mid][0];
+        assert!(delta > 0.05, "bypass flow delta {delta}");
+        // Identical before the fault (same noise streams).
+        assert_eq!(faulty.samples[ev.start - 10], healthy.samples[ev.start - 10]);
+    }
+
+    #[test]
+    fn f16_sags_position() {
+        let ev = schedule_item(2).unwrap(); // f16
+        let sim = ActuatorSim::with_seed(8);
+        let healthy = sim.generate_day(None);
+        let faulty = sim.generate_day(Some(&ev));
+        let end = ev.end;
+        assert!(
+            faulty.samples[end][1] < healthy.samples[end][1] - 0.02,
+            "position should droop: {} vs {}",
+            faulty.samples[end][1],
+            healthy.samples[end][1]
+        );
+    }
+
+    #[test]
+    fn f17_drops_flow_not_position() {
+        let ev = schedule_item(7).unwrap(); // f17
+        let sim = ActuatorSim::with_seed(9);
+        let healthy = sim.generate_day(None);
+        let faulty = sim.generate_day(Some(&ev));
+        let mid = (ev.start + ev.end) / 2;
+        assert!(
+            faulty.samples[mid][0] < healthy.samples[mid][0] - 0.05,
+            "flow should drop"
+        );
+        assert!(
+            (faulty.samples[mid][1] - healthy.samples[mid][1]).abs() < 0.02,
+            "position roughly unchanged"
+        );
+    }
+
+    #[test]
+    fn f19_rescales_measured_flow_only() {
+        let mut ev = schedule_item(1).unwrap();
+        ev.fault = FaultType::F19; // synthesize an f19 window
+        let sim = ActuatorSim::with_seed(10);
+        let healthy = sim.generate_day(None);
+        let faulty = sim.generate_day(Some(&ev));
+        let mid = (ev.start + ev.end) / 2;
+        let ratio = faulty.samples[mid][0] / healthy.samples[mid][0];
+        assert!(ratio < 0.85, "sensor reads low: ratio {ratio}");
+    }
+}

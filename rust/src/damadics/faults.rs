@@ -1,0 +1,208 @@
+//! Fault catalogue (Table 1) and the actuator-1 artificial fault
+//! schedule (Table 2) exactly as published.
+
+use std::fmt;
+
+/// DAMADICS fault types used by the paper (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultType {
+    /// f16 — positioner supply pressure drop.
+    F16,
+    /// f17 — unexpected pressure change across the valve.
+    F17,
+    /// f18 — fully or partly opened bypass valves.
+    F18,
+    /// f19 — flow rate sensor fault.
+    F19,
+}
+
+impl FaultType {
+    /// Table 1 description string.
+    pub fn description(self) -> &'static str {
+        match self {
+            FaultType::F16 => "Positioner supply pressure drop",
+            FaultType::F17 => "Unexpected pressure change across the valve",
+            FaultType::F18 => "Fully or partly opened bypass valves",
+            FaultType::F19 => "Flow rate sensor fault",
+        }
+    }
+
+    /// All Table 1 rows in order.
+    pub fn all() -> [FaultType; 4] {
+        [FaultType::F16, FaultType::F17, FaultType::F18, FaultType::F19]
+    }
+}
+
+impl fmt::Display for FaultType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultType::F16 => "f16",
+            FaultType::F17 => "f17",
+            FaultType::F18 => "f18",
+            FaultType::F19 => "f19",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One Table 2 row: an artificial fault injected into actuator 1.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Table 2 "Item" column (1-based).
+    pub item: u32,
+    /// Fault type.
+    pub fault: FaultType,
+    /// First faulty sample index within the day trace (inclusive).
+    pub start: usize,
+    /// Last faulty sample index (inclusive).
+    pub end: usize,
+    /// Table 2 "Date" column (documentation only; the sim keys off
+    /// sample indices).
+    pub date: &'static str,
+    /// Table 2 "Description" column.
+    pub description: &'static str,
+}
+
+impl FaultEvent {
+    /// Number of faulty samples.
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    /// True when the window is empty (never, for Table 2 rows).
+    pub fn is_empty(&self) -> bool {
+        self.end < self.start
+    }
+
+    /// Whether sample index `k` (0-based within the day) is in the window.
+    pub fn contains(&self, k: usize) -> bool {
+        (self.start..=self.end).contains(&k)
+    }
+}
+
+/// Table 1 — the fault catalogue.
+pub fn fault_catalog() -> Vec<(FaultType, &'static str)> {
+    FaultType::all().iter().map(|&f| (f, f.description())).collect()
+}
+
+/// Table 2 — the list of artificial failures introduced to actuator 1.
+///
+/// Sample windows are verbatim from the paper. (Item 1's figure caption
+/// places the visible excursion at 58900–59800; the table row says
+/// 58800–59800 — we keep the table row.)
+pub fn actuator1_schedule() -> Vec<FaultEvent> {
+    vec![
+        FaultEvent {
+            item: 1,
+            fault: FaultType::F18,
+            start: 58_800,
+            end: 59_800,
+            date: "Oct 30, 2001",
+            description: "Partly opened bypass valve",
+        },
+        FaultEvent {
+            item: 2,
+            fault: FaultType::F16,
+            start: 57_275,
+            end: 57_550,
+            date: "Nov 9, 2001",
+            description: "Positioner supply pressure drop",
+        },
+        FaultEvent {
+            item: 3,
+            fault: FaultType::F18,
+            start: 58_830,
+            end: 58_930,
+            date: "Nov 9, 2001",
+            description: "Partly opened bypass valve",
+        },
+        FaultEvent {
+            item: 4,
+            fault: FaultType::F18,
+            start: 58_520,
+            end: 58_625,
+            date: "Nov 9, 2001",
+            description: "Partly opened bypass valve",
+        },
+        FaultEvent {
+            item: 5,
+            fault: FaultType::F18,
+            start: 54_600,
+            end: 54_700,
+            date: "Nov 17, 2001",
+            description: "Partly opened bypass valve",
+        },
+        FaultEvent {
+            item: 6,
+            fault: FaultType::F16,
+            start: 56_670,
+            end: 56_770,
+            date: "Nov 17, 2001",
+            description: "Positioner supply pressure drop",
+        },
+        FaultEvent {
+            item: 7,
+            fault: FaultType::F17,
+            start: 37_780,
+            end: 38_400,
+            date: "Nov 20, 2001",
+            description: "Unexpected pressure drop across the valve",
+        },
+    ]
+}
+
+/// Look up a Table 2 row by its Item number.
+pub fn schedule_item(item: u32) -> Option<FaultEvent> {
+    actuator1_schedule().into_iter().find(|e| e.item == item)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_seven_items_in_order() {
+        let sched = actuator1_schedule();
+        assert_eq!(sched.len(), 7);
+        for (i, e) in sched.iter().enumerate() {
+            assert_eq!(e.item as usize, i + 1);
+            assert!(e.start < e.end, "item {}", e.item);
+            assert!(!e.is_empty());
+        }
+    }
+
+    #[test]
+    fn table2_windows_match_paper() {
+        let sched = actuator1_schedule();
+        assert_eq!((sched[0].start, sched[0].end), (58_800, 59_800));
+        assert_eq!(sched[0].fault, FaultType::F18);
+        assert_eq!((sched[6].start, sched[6].end), (37_780, 38_400));
+        assert_eq!(sched[6].fault, FaultType::F17);
+        assert_eq!(sched[1].fault, FaultType::F16);
+    }
+
+    #[test]
+    fn windows_fit_in_a_day_trace() {
+        for e in actuator1_schedule() {
+            assert!(e.end < 86_400, "item {} exceeds one day", e.item);
+        }
+    }
+
+    #[test]
+    fn contains_is_inclusive() {
+        let e = schedule_item(3).unwrap();
+        assert!(e.contains(58_830));
+        assert!(e.contains(58_930));
+        assert!(!e.contains(58_829));
+        assert!(!e.contains(58_931));
+        assert_eq!(e.len(), 101);
+    }
+
+    #[test]
+    fn catalog_matches_table1() {
+        let cat = fault_catalog();
+        assert_eq!(cat.len(), 4);
+        assert_eq!(cat[0].0.to_string(), "f16");
+        assert!(cat[3].1.contains("Flow rate sensor"));
+    }
+}

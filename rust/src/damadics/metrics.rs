@@ -1,0 +1,141 @@
+//! Detection-quality metrics for fault experiments (Figs. 6–7 framing).
+
+use super::faults::FaultEvent;
+
+/// Outcome of running a detector over a labelled trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectionReport {
+    /// Fault item evaluated.
+    pub item: u32,
+    /// First flagged sample index inside the window, if any.
+    pub first_detection: Option<usize>,
+    /// Detection latency in samples from fault onset.
+    pub latency: Option<usize>,
+    /// Flagged samples inside the fault window.
+    pub hits_in_window: usize,
+    /// Window length.
+    pub window_len: usize,
+    /// Flags raised outside the window after the warmup prefix.
+    pub false_alarms: usize,
+    /// Samples considered for false alarms.
+    pub normal_samples: usize,
+}
+
+impl DetectionReport {
+    /// Whether the fault was caught at all.
+    pub fn detected(&self) -> bool {
+        self.first_detection.is_some()
+    }
+
+    /// Fraction of window samples flagged.
+    pub fn window_hit_rate(&self) -> f64 {
+        if self.window_len == 0 {
+            0.0
+        } else {
+            self.hits_in_window as f64 / self.window_len as f64
+        }
+    }
+
+    /// False alarms per normal sample.
+    pub fn false_alarm_rate(&self) -> f64 {
+        if self.normal_samples == 0 {
+            0.0
+        } else {
+            self.false_alarms as f64 / self.normal_samples as f64
+        }
+    }
+}
+
+/// Score a verdict sequence against a fault window.
+///
+/// `outlier_flags[k]` is the detector's verdict for sample k; samples
+/// before `warmup` are excluded from false-alarm accounting (every
+/// streaming detector needs a run-in; the paper's plots likewise start
+/// deep into the day).
+pub fn evaluate_detection(
+    outlier_flags: &[bool],
+    event: &FaultEvent,
+    warmup: usize,
+) -> DetectionReport {
+    let mut first_detection = None;
+    let mut hits = 0usize;
+    let mut false_alarms = 0usize;
+    let mut normal = 0usize;
+    for (k, &flag) in outlier_flags.iter().enumerate() {
+        if event.contains(k) {
+            if flag {
+                hits += 1;
+                if first_detection.is_none() {
+                    first_detection = Some(k);
+                }
+            }
+        } else if k >= warmup {
+            normal += 1;
+            if flag {
+                false_alarms += 1;
+            }
+        }
+    }
+    DetectionReport {
+        item: event.item,
+        first_detection,
+        latency: first_detection.map(|k| k - event.start),
+        hits_in_window: hits,
+        window_len: event.len().min(outlier_flags.len()),
+        false_alarms,
+        normal_samples: normal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::damadics::faults::{FaultEvent, FaultType};
+
+    fn event() -> FaultEvent {
+        FaultEvent {
+            item: 42,
+            fault: FaultType::F18,
+            start: 10,
+            end: 19,
+            date: "",
+            description: "",
+        }
+    }
+
+    #[test]
+    fn detects_and_measures_latency() {
+        let mut flags = vec![false; 30];
+        flags[13] = true;
+        flags[14] = true;
+        let r = evaluate_detection(&flags, &event(), 5);
+        assert!(r.detected());
+        assert_eq!(r.first_detection, Some(13));
+        assert_eq!(r.latency, Some(3));
+        assert_eq!(r.hits_in_window, 2);
+        assert_eq!(r.window_len, 10);
+        assert_eq!(r.false_alarms, 0);
+        assert!((r.window_hit_rate() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counts_false_alarms_after_warmup_only() {
+        let mut flags = vec![false; 30];
+        flags[2] = true; // inside warmup — ignored
+        flags[25] = true; // false alarm
+        let r = evaluate_detection(&flags, &event(), 5);
+        assert!(!r.detected());
+        assert_eq!(r.false_alarms, 1);
+        // normal samples: k in [5,30) minus window [10,19] = 25-10=15
+        assert_eq!(r.normal_samples, 15);
+        assert!(r.false_alarm_rate() > 0.0);
+    }
+
+    #[test]
+    fn empty_flags_safe() {
+        let r = evaluate_detection(&[], &event(), 0);
+        assert!(!r.detected());
+        assert_eq!(r.window_hit_rate(), 0.0);
+        assert_eq!(r.false_alarm_rate(), 0.0);
+    }
+}

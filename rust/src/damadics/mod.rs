@@ -1,0 +1,26 @@
+//! DAMADICS-like actuator benchmark substrate.
+//!
+//! The paper validates on the DAMADICS benchmark (actuator 1 of a Polish
+//! sugar-factory evaporator; Tables 1–2, Figs. 6–7). The original dataset
+//! is no longer distributable, so this module implements the substitution
+//! documented in DESIGN.md §2: a physics-flavoured simulator of the
+//! benchmark's control-valve + pneumatic-servo + positioner actuator,
+//! with the paper's exact fault catalogue (Table 1) and actuator-1 fault
+//! schedule (Table 2) injected at the published sample windows.
+//!
+//! What TEDA sees is the *statistical signature* of the signals — smooth
+//! in-control behaviour with abrupt (f16–f18) or sensor-level (f19)
+//! excursions at fault onset — which is exactly what this simulator
+//! reproduces, at the same sample indices as the paper.
+
+mod actuator;
+mod faults;
+mod metrics;
+mod trace;
+
+pub use actuator::{ActuatorConfig, ActuatorSim};
+pub use faults::{
+    actuator1_schedule, fault_catalog, schedule_item, FaultEvent, FaultType,
+};
+pub use metrics::{evaluate_detection, DetectionReport};
+pub use trace::Trace;

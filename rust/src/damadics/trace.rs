@@ -1,0 +1,147 @@
+//! Trace container + CSV I/O.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::faults::FaultEvent;
+
+/// One generated run: samples, ground-truth labels, and the injected
+/// fault (if any).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// `samples[k]` is the observed feature vector at sample k.
+    pub samples: Vec<Vec<f64>>,
+    /// `labels[k]` is true when sample k lies in the fault window.
+    pub labels: Vec<bool>,
+    /// The injected fault event, if any.
+    pub fault: Option<FaultEvent>,
+}
+
+impl Trace {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when the trace holds no samples.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Feature dimension (0 for an empty trace).
+    pub fn n_features(&self) -> usize {
+        self.samples.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// A sub-trace view `[start, end)` copied out (for windowed plots).
+    pub fn slice(&self, start: usize, end: usize) -> Trace {
+        let end = end.min(self.len());
+        let start = start.min(end);
+        Trace {
+            samples: self.samples[start..end].to_vec(),
+            labels: self.labels[start..end].to_vec(),
+            fault: self.fault.clone(),
+        }
+    }
+
+    /// Write as CSV: `k,x1..xN,label`.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let p = path.as_ref();
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| Error::io(format!("mkdir {}", parent.display()), e))?;
+        }
+        let file = std::fs::File::create(p)
+            .map_err(|e| Error::io(format!("create {}", p.display()), e))?;
+        let mut w = std::io::BufWriter::new(file);
+        let n = self.n_features();
+        let header: Vec<String> =
+            (1..=n).map(|i| format!("x{i}")).collect();
+        writeln!(w, "k,{},label", header.join(","))
+            .map_err(|e| Error::io("csv header", e))?;
+        for (k, (s, &l)) in self.samples.iter().zip(&self.labels).enumerate() {
+            let row: Vec<String> = s.iter().map(|v| format!("{v:.6}")).collect();
+            writeln!(w, "{k},{},{}", row.join(","), l as u8)
+                .map_err(|e| Error::io("csv row", e))?;
+        }
+        Ok(())
+    }
+
+    /// Read back a CSV written by [`Trace::write_csv`].
+    pub fn read_csv(path: impl AsRef<Path>) -> Result<Trace> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error::io(format!("read {}", p.display()), e))?;
+        let mut samples = Vec::new();
+        let mut labels = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.is_empty() {
+                continue; // header
+            }
+            let fields: Vec<&str> = line.split(',').collect();
+            if fields.len() < 3 {
+                return Err(Error::Stream(format!(
+                    "csv line {i}: expected >=3 fields"
+                )));
+            }
+            let feat = fields[1..fields.len() - 1]
+                .iter()
+                .map(|f| {
+                    f.parse::<f64>().map_err(|e| {
+                        Error::Stream(format!("csv line {i}: {e}"))
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            samples.push(feat);
+            labels.push(fields[fields.len() - 1].trim() == "1");
+        }
+        Ok(Trace { samples, labels, fault: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Trace {
+        Trace {
+            samples: vec![vec![0.1, 0.2], vec![0.3, 0.4], vec![0.5, 0.6]],
+            labels: vec![false, true, false],
+            fault: None,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("teda_fpga_trace_test");
+        let path = dir.join("t.csv");
+        let t = tiny();
+        t.write_csv(&path).unwrap();
+        let back = Trace::read_csv(&path).unwrap();
+        assert_eq!(back.labels, t.labels);
+        assert_eq!(back.n_features(), 2);
+        for (a, b) in back.samples.iter().flatten().zip(t.samples.iter().flatten())
+        {
+            assert!((a - b).abs() < 1e-6);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn slice_bounds_are_safe() {
+        let t = tiny();
+        assert_eq!(t.slice(1, 2).len(), 1);
+        assert_eq!(t.slice(0, 99).len(), 3);
+        assert_eq!(t.slice(5, 9).len(), 0);
+        assert!(t.slice(2, 1).is_empty());
+    }
+
+    #[test]
+    fn n_features_handles_empty() {
+        let e = Trace { samples: vec![], labels: vec![], fault: None };
+        assert_eq!(e.n_features(), 0);
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Software (scalar f64) engine — the Table 5 "software platform" row.
+
+use std::collections::HashMap;
+
+use crate::stream::Sample;
+use crate::teda::TedaDetector;
+use crate::Result;
+
+use super::{Engine, EngineVerdict};
+
+/// One f64 `TedaDetector` per stream; verdicts are immediate.
+pub struct SoftwareEngine {
+    n_features: usize,
+    m: f64,
+    streams: HashMap<u64, TedaDetector>,
+}
+
+impl SoftwareEngine {
+    pub fn new(n_features: usize, m: f64) -> Self {
+        SoftwareEngine { n_features, m, streams: HashMap::new() }
+    }
+
+    /// Direct access to a stream's detector (state manager integration).
+    pub fn detector(&self, stream_id: u64) -> Option<&TedaDetector> {
+        self.streams.get(&stream_id)
+    }
+}
+
+impl Engine for SoftwareEngine {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>> {
+        let det = self
+            .streams
+            .entry(sample.stream_id)
+            .or_insert_with(|| TedaDetector::new(self.n_features, self.m));
+        let v = det.step(&sample.values);
+        Ok(vec![EngineVerdict {
+            stream_id: sample.stream_id,
+            seq: sample.seq,
+            k: v.k,
+            eccentricity: v.eccentricity,
+            zeta: v.zeta,
+            threshold: v.threshold,
+            outlier: v.outlier,
+        }])
+    }
+
+    fn flush(&mut self) -> Result<Vec<EngineVerdict>> {
+        Ok(Vec::new()) // nothing ever pends
+    }
+
+    fn active_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn as_software(&mut self) -> Option<&mut SoftwareEngine> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::testutil::{interleaved, run_engine};
+
+    #[test]
+    fn verdict_per_sample_immediately() {
+        let mut eng = SoftwareEngine::new(2, 3.0);
+        let samples = interleaved(3, 50, 2, 11);
+        let out = run_engine(&mut eng, &samples);
+        assert_eq!(out.len(), 150);
+        assert_eq!(eng.active_streams(), 3);
+        // k tracks per-stream seq.
+        for ((_, seq), v) in &out {
+            assert_eq!(v.k, seq + 1);
+        }
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut eng = SoftwareEngine::new(1, 3.0);
+        // Stream 0: tight around 0. Stream 1: tight around 100.
+        for seq in 0..100u64 {
+            let a = Sample {
+                stream_id: 0,
+                seq,
+                values: vec![(seq % 7) as f64 * 0.01],
+            };
+            let b = Sample {
+                stream_id: 1,
+                seq,
+                values: vec![100.0 + (seq % 7) as f64 * 0.01],
+            };
+            eng.ingest(&a).unwrap();
+            eng.ingest(&b).unwrap();
+        }
+        // A 100-ish value is normal for stream 1, outlier for stream 0.
+        let probe0 = Sample { stream_id: 0, seq: 100, values: vec![100.0] };
+        let probe1 = Sample { stream_id: 1, seq: 100, values: vec![100.0] };
+        assert!(eng.ingest(&probe0).unwrap()[0].outlier);
+        assert!(!eng.ingest(&probe1).unwrap()[0].outlier);
+    }
+}

@@ -1,0 +1,353 @@
+//! XLA engine: drives the AOT-compiled JAX/Pallas artifact through PJRT.
+//!
+//! Batching model: every stream buffers samples until it has a full
+//! T-chunk; full chunks from up to S streams are packed into one
+//! (S, T, N) execution (S and T fixed by the artifact variant chosen at
+//! construction). Streams with fewer than S ready chunks are padded with
+//! dummy lanes whose outputs are discarded — lanes are independent, so
+//! padding is sound. Partial chunks at [`Engine::flush`] run through a
+//! scalar f32 fallback that computes the identical recurrence, so stream
+//! state never forks from the artifact's semantics.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::{Executable, XlaRuntime};
+use crate::stream::Sample;
+use crate::teda::TedaState;
+use crate::{Error, Result};
+
+use super::{Engine, EngineVerdict};
+
+struct StreamState {
+    /// f32 carry, exactly the artifact's state tensors.
+    mu: Vec<f32>,
+    var: f32,
+    k: f32,
+    /// Full T-chunks waiting to execute: (seq of first sample, t·n
+    /// flattened values). A stream may queue several chunks while the
+    /// batcher waits for co-batching partners; chunks of one stream
+    /// execute strictly in order (state carries between them), so one
+    /// batch holds at most one chunk per stream.
+    chunks: std::collections::VecDeque<(u64, Vec<f32>)>,
+    /// Partially-filled chunk (t_filled × n values).
+    buf: Vec<f32>,
+    /// seq of the first sample in `buf`.
+    seq_base: u64,
+}
+
+/// PJRT-backed batching engine.
+pub struct XlaEngine {
+    exe: Arc<Executable>,
+    n: usize,
+    t: usize,
+    s: usize,
+    m: f64,
+    streams: HashMap<u64, StreamState>,
+    /// Streams holding a full chunk, in arrival order.
+    ready: Vec<u64>,
+    /// Execute as soon as `min_ready` full chunks are waiting (≤ s);
+    /// 1 = lowest latency, s = maximal batching.
+    min_ready: usize,
+    /// Number of chunk executions so far (metrics hook).
+    pub chunks_executed: u64,
+    /// Samples classified through the scalar fallback.
+    pub scalar_samples: u64,
+}
+
+impl XlaEngine {
+    /// Build from a runtime: picks the smallest pallas variant with
+    /// matching N whose capacity fits `min_batch_samples`.
+    pub fn new(
+        runtime: &XlaRuntime,
+        n_features: usize,
+        min_batch_samples: usize,
+    ) -> Result<Self> {
+        let spec = runtime
+            .manifest()
+            .select(n_features, min_batch_samples)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no artifact variant with n={n_features}"
+                ))
+            })?
+            .clone();
+        let exe = runtime.load(&spec.name)?;
+        Ok(XlaEngine {
+            n: spec.n,
+            t: spec.t,
+            s: spec.s,
+            m: spec.m,
+            exe,
+            streams: HashMap::new(),
+            ready: Vec::new(),
+            min_ready: 1,
+            chunks_executed: 0,
+            scalar_samples: 0,
+        })
+    }
+
+    /// Batching aggressiveness: wait for `min_ready` full stream-chunks
+    /// before executing (clamped to [1, S]).
+    pub fn with_min_ready(mut self, min_ready: usize) -> Self {
+        self.min_ready = min_ready.clamp(1, self.s);
+        self
+    }
+
+    /// The artifact variant geometry (S, T, N).
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        (self.s, self.t, self.n)
+    }
+
+    /// Pick up to S *unique* streams from the ready list (preserving
+    /// arrival order); duplicate entries (further chunks of the same
+    /// stream) stay queued for the next batch.
+    fn take_batch_ids(&mut self) -> Vec<u64> {
+        let mut ids: Vec<u64> = Vec::with_capacity(self.s);
+        let mut rest: Vec<u64> = Vec::new();
+        for id in self.ready.drain(..) {
+            if ids.len() < self.s && !ids.contains(&id) {
+                ids.push(id);
+            } else {
+                rest.push(id);
+            }
+        }
+        self.ready = rest;
+        ids
+    }
+
+    /// Execute one packed batch: the front chunk of each given stream.
+    fn execute_batch(&mut self, ids: &[u64]) -> Result<Vec<EngineVerdict>> {
+        debug_assert!(ids.len() <= self.s);
+        let (s, t, n) = (self.s, self.t, self.n);
+        let mut mu = vec![0f32; s * n];
+        let mut var = vec![0f32; s];
+        let mut k = vec![0f32; s];
+        let mut x = vec![0f32; s * t * n];
+        let mut seq_bases = Vec::with_capacity(ids.len());
+        for (lane, id) in ids.iter().enumerate() {
+            let st = self.streams.get_mut(id).unwrap();
+            let (seq_base, chunk) =
+                st.chunks.pop_front().expect("stream in batch has a chunk");
+            mu[lane * n..(lane + 1) * n].copy_from_slice(&st.mu);
+            var[lane] = st.var;
+            k[lane] = st.k;
+            x[lane * t * n..(lane + 1) * t * n].copy_from_slice(&chunk);
+            seq_bases.push(seq_base);
+        }
+        // Dummy lanes keep zeros — fresh state over zero samples.
+        let outs = self.exe.run_f32(&[&mu, &var, &k, &x])?;
+        self.chunks_executed += 1;
+        let (ecc, zeta, outlier) = (&outs[0], &outs[1], &outs[2]);
+        let (mu2, var2, k2) = (&outs[3], &outs[4], &outs[5]);
+
+        let mut verdicts = Vec::with_capacity(ids.len() * t);
+        for (lane, id) in ids.iter().enumerate() {
+            let st = self.streams.get_mut(id).unwrap();
+            let k0 = st.k as u64;
+            for ti in 0..t {
+                let idx = lane * t + ti;
+                let kk = k0 + ti as u64 + 1;
+                verdicts.push(EngineVerdict {
+                    stream_id: *id,
+                    seq: seq_bases[lane] + ti as u64,
+                    k: kk,
+                    eccentricity: ecc[idx] as f64,
+                    zeta: zeta[idx] as f64,
+                    threshold: (self.m * self.m + 1.0) / (2.0 * kk as f64),
+                    outlier: outlier[idx] > 0.5,
+                });
+            }
+            st.mu.copy_from_slice(&mu2[lane * n..(lane + 1) * n]);
+            st.var = var2[lane];
+            st.k = k2[lane];
+        }
+        Ok(verdicts)
+    }
+
+    /// Scalar f32 fallback for a partial chunk (same recurrence).
+    fn scalar_chunk(&mut self, id: u64) -> Vec<EngineVerdict> {
+        let m = self.m;
+        let n = self.n;
+        let st = self.streams.get_mut(&id).unwrap();
+        let mut state = TedaState::<f32> {
+            mean: st.mu.clone(),
+            var: st.var,
+            k: st.k as u64,
+        };
+        let mut out = Vec::new();
+        let samples = st.buf.len() / n;
+        for i in 0..samples {
+            let x = &st.buf[i * n..(i + 1) * n];
+            let step = state.step(x, m as f32);
+            out.push(EngineVerdict {
+                stream_id: id,
+                seq: st.seq_base + i as u64,
+                k: state.k,
+                eccentricity: step.eccentricity as f64,
+                zeta: step.zeta as f64,
+                threshold: step.threshold as f64,
+                outlier: step.outlier,
+            });
+        }
+        st.mu.copy_from_slice(&state.mean);
+        st.var = state.var;
+        st.k = state.k as f32;
+        st.seq_base += samples as u64;
+        st.buf.clear();
+        self.scalar_samples += samples as u64;
+        out
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>> {
+        if sample.values.len() != self.n {
+            return Err(Error::Stream(format!(
+                "stream {}: sample dim {} != engine dim {}",
+                sample.stream_id,
+                sample.values.len(),
+                self.n
+            )));
+        }
+        let chunk_len = self.t * self.n;
+        let st =
+            self.streams.entry(sample.stream_id).or_insert_with(|| {
+                StreamState {
+                    mu: vec![0.0; sample.values.len()],
+                    var: 0.0,
+                    k: 0.0,
+                    chunks: std::collections::VecDeque::new(),
+                    buf: Vec::with_capacity(chunk_len),
+                    seq_base: sample.seq,
+                }
+            });
+        for &v in &sample.values {
+            st.buf.push(v as f32);
+        }
+        if st.buf.len() == chunk_len {
+            let chunk =
+                std::mem::replace(&mut st.buf, Vec::with_capacity(chunk_len));
+            st.chunks.push_back((st.seq_base, chunk));
+            st.seq_base += self.t as u64;
+            self.ready.push(sample.stream_id);
+        }
+        if self.ready.len() >= self.min_ready.min(self.s) {
+            let ids = self.take_batch_ids();
+            return self.execute_batch(&ids);
+        }
+        Ok(Vec::new())
+    }
+
+    fn flush(&mut self) -> Result<Vec<EngineVerdict>> {
+        let mut out = Vec::new();
+        // Full chunks first (possibly several padded batches)...
+        while !self.ready.is_empty() {
+            let ids = self.take_batch_ids();
+            out.extend(self.execute_batch(&ids)?);
+        }
+        // ...then partial buffers through the scalar path.
+        let partial: Vec<u64> = self
+            .streams
+            .iter()
+            .filter(|(_, st)| !st.buf.is_empty())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in partial {
+            out.extend(self.scalar_chunk(id));
+        }
+        Ok(out)
+    }
+
+    fn active_streams(&self) -> usize {
+        self.streams.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::testutil::{interleaved, run_engine};
+    use crate::engine::SoftwareEngine;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            Some(XlaRuntime::new(dir).unwrap())
+        } else {
+            eprintln!("artifacts missing; skipping XLA engine test");
+            None
+        }
+    }
+
+    #[test]
+    fn batches_and_matches_software_flags() {
+        let Some(rt) = runtime() else { return };
+        let mut eng = XlaEngine::new(&rt, 2, 1).unwrap();
+        let (_, t, _) = eng.geometry();
+        // 4 streams, enough for several chunks + a partial tail.
+        let per_stream = t * 3 + t / 2;
+        let samples = interleaved(4, per_stream, 2, 77);
+        let mut sw = SoftwareEngine::new(2, 3.0);
+        let a = run_engine(&mut eng, &samples);
+        let b = run_engine(&mut sw, &samples);
+        assert_eq!(a.len(), 4 * per_stream);
+        assert_eq!(a.len(), b.len());
+        assert!(eng.chunks_executed >= 3);
+        assert!(eng.scalar_samples > 0); // the partial tail
+        let mut flag_diffs = 0;
+        for (key, va) in &a {
+            let vb = &b[key];
+            assert_eq!(va.k, vb.k, "{key:?}");
+            if va.outlier != vb.outlier {
+                flag_diffs += 1; // f32-vs-f64 threshold-edge differences
+            }
+        }
+        assert!(
+            flag_diffs as f64 <= 0.01 * a.len() as f64,
+            "flag diffs {flag_diffs}/{}",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn state_carries_across_chunks() {
+        let Some(rt) = runtime() else { return };
+        let mut eng = XlaEngine::new(&rt, 2, 1).unwrap();
+        let (_, t, _) = eng.geometry();
+        let samples = interleaved(1, t * 2, 2, 5);
+        let out = run_engine(&mut eng, &samples);
+        // k must be contiguous 1..=2t for the single stream.
+        let ks: Vec<u64> = out.values().map(|v| v.k).collect();
+        assert_eq!(ks, (1..=2 * t as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn min_ready_controls_batching() {
+        let Some(rt) = runtime() else { return };
+        let mut eng = XlaEngine::new(&rt, 2, 256).unwrap().with_min_ready(4);
+        let (s, t, _) = eng.geometry();
+        assert!(s >= 4);
+        // Feed 4 streams exactly one chunk each; execution fires only
+        // when the 4th becomes ready.
+        let samples = interleaved(4, t, 2, 13);
+        let mut got = 0;
+        for smp in &samples {
+            got += eng.ingest(smp).unwrap().len();
+        }
+        assert_eq!(got, 4 * t);
+        assert_eq!(eng.chunks_executed, 1);
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let Some(rt) = runtime() else { return };
+        let mut eng = XlaEngine::new(&rt, 2, 1).unwrap();
+        let bad = Sample { stream_id: 0, seq: 0, values: vec![1.0; 5] };
+        assert!(eng.ingest(&bad).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! # teda-fpga — TEDA streaming anomaly detection, three-layer reproduction
+//!
+//! Reproduction of *"Hardware Architecture Proposal for TEDA algorithm to
+//! Data Streaming Anomaly Detection"* (da Silva et al., 2020) as a
+//! production-shaped stack:
+//!
+//! - [`teda`] — the TEDA recurrences (Eqs. 1–6) as a software reference.
+//! - [`rtl`] — a cycle-accurate simulator of the paper's pipelined RTL
+//!   architecture (Figs. 1–5).
+//! - [`synth`] — Virtex-6 resource/timing model regenerating Tables 3–4.
+//! - [`damadics`] — a DAMADICS-like actuator/fault simulator (Tables 1–2,
+//!   the data behind Figs. 6–7).
+//! - [`engine`] — pluggable detector backends: software, RTL-sim, XLA.
+//! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   artifact (L1/L2 live in `python/compile/`).
+//! - [`stream`] / [`coordinator`] — the L3 streaming service: sources,
+//!   backpressure, routing, dynamic batching, per-stream state.
+//! - [`baselines`] — m-sigma and sliding z-score detectors for comparison.
+//! - [`metrics`], [`config`], [`util`] — ops surface and support kit.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use teda_fpga::teda::TedaDetector;
+//!
+//! let mut det = TedaDetector::new(2, 3.0); // N=2 features, m=3 threshold
+//! for k in 0..100u32 {
+//!     let x = [k as f64 * 0.01, 1.0 - k as f64 * 0.01];
+//!     let _v = det.step(&x);
+//! }
+//! let verdict = det.step(&[50.0, -50.0]); // gross outlier
+//! assert!(verdict.outlier);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod damadics;
+pub mod engine;
+pub mod metrics;
+pub mod rtl;
+pub mod runtime;
+pub mod stream;
+pub mod synth;
+pub mod teda;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Errors bubbling out of the PJRT/XLA runtime layer.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Configuration file / CLI parse errors.
+    #[error("config: {0}")]
+    Config(String),
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact: {0}")]
+    Artifact(String),
+    /// Coordinator / streaming errors (closed channels, unknown streams...).
+    #[error("stream: {0}")]
+    Stream(String),
+    /// RTL netlist construction or simulation errors.
+    #[error("rtl: {0}")]
+    Rtl(String),
+    /// I/O with context.
+    #[error("io: {context}: {source}")]
+    Io {
+        context: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Wrap an `io::Error` with a human context string.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { context: context.into(), source }
+    }
+}

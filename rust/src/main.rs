@@ -1,0 +1,320 @@
+//! teda-fpga CLI — launcher for the TEDA streaming anomaly-detection
+//! service and the paper's experiment drivers.
+//!
+//! ```text
+//! teda-fpga serve    [--config FILE] [--engine software|rtl|xla]
+//!                    [--workers N] [--streams S] [--samples K] [--seed X]
+//! teda-fpga detect   [--item 1..7] [--m 3.0] [--engine ...] [--csv OUT]
+//! teda-fpga synth    [--n-features N] [--netlist]
+//! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
+//! teda-fpga doctor
+//! ```
+//!
+//! (Argument parsing is hand-rolled: crates.io — and therefore clap —
+//! is unavailable in this build environment; see DESIGN.md §3.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use teda_fpga::config::{EngineKind, ServiceConfig};
+use teda_fpga::coordinator::Service;
+use teda_fpga::damadics::{
+    actuator1_schedule, evaluate_detection, fault_catalog, schedule_item,
+    ActuatorSim,
+};
+use teda_fpga::rtl::TedaRtl;
+use teda_fpga::stream::{ReplaySource, StreamSource, SyntheticSource};
+use teda_fpga::synth::{critical_path, OccupationReport, PipelineTiming, Virtex6};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", USAGE);
+        return ExitCode::FAILURE;
+    };
+    let flags = match Flags::parse(rest) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", USAGE);
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&flags),
+        "detect" => cmd_detect(&flags),
+        "synth" => cmd_synth(&flags),
+        "damadics" => cmd_damadics(&flags),
+        "doctor" => cmd_doctor(),
+        "help" | "--help" | "-h" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'").into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+teda-fpga — TEDA streaming anomaly detection (paper reproduction)
+
+USAGE:
+  teda-fpga serve    [--config FILE] [--engine software|rtl|xla]
+                     [--workers N] [--streams S] [--samples K] [--seed X]
+  teda-fpga detect   [--item 1..7] [--m 3.0] [--engine software|rtl] [--csv OUT]
+  teda-fpga synth    [--n-features N] [--netlist]
+  teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I] [--seed X]
+  teda-fpga doctor";
+
+type CliError = Box<dyn std::error::Error>;
+
+/// `--key value` / `--flag` parser.
+struct Flags {
+    map: HashMap<String, String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags, CliError> {
+        let mut map = HashMap::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+            let value = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(), // boolean flag
+            };
+            map.insert(key.to_string(), value);
+        }
+        Ok(Flags { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    fn parse_as<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => {
+                raw.parse().map_err(|e| format!("--{key} '{raw}': {e}").into())
+            }
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ServiceConfig::load(path)?,
+        None => ServiceConfig::default(),
+    };
+    if let Some(engine) = flags.get("engine") {
+        cfg.engine = engine.parse::<EngineKind>()?;
+    }
+    cfg.workers = flags.parse_as("workers", cfg.workers)?;
+    cfg.seed = flags.parse_as("seed", cfg.seed)?;
+    let streams: u64 = flags.parse_as("streams", 16u64)?;
+    let samples: usize = flags.parse_as("samples", 10_000usize)?;
+
+    println!(
+        "serving {streams} streams × {samples} samples on {} engine, {} workers",
+        cfg.engine, cfg.workers
+    );
+    let t0 = std::time::Instant::now();
+    let svc = Service::start(cfg.clone())?;
+    let mut sources: Vec<SyntheticSource> = (0..streams)
+        .map(|sid| {
+            SyntheticSource::new(sid, cfg.n_features, samples, cfg.seed)
+                .with_outliers(0.001)
+        })
+        .collect();
+    loop {
+        let mut any = false;
+        for src in &mut sources {
+            if let Some(s) = src.next_sample() {
+                svc.submit(s)?;
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    let metrics = svc.metrics();
+    let out = svc.finish()?;
+    let dt = t0.elapsed();
+    println!("{}", metrics.render());
+    println!(
+        "processed {} samples in {:.3}s — {:.0} samples/s end-to-end",
+        out.len(),
+        dt.as_secs_f64(),
+        out.len() as f64 / dt.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_detect(flags: &Flags) -> Result<(), CliError> {
+    let item: u32 = flags.parse_as("item", 1u32)?;
+    let m: f64 = flags.parse_as("m", 3.0f64)?;
+    let seed: u64 = flags.parse_as("seed", 2001u64)?;
+    let engine = flags.get("engine").unwrap_or("software");
+    let event =
+        schedule_item(item).ok_or_else(|| format!("no Table 2 item {item}"))?;
+    println!(
+        "fault item {item}: {} ({}) window {}..{} — engine {engine}",
+        event.fault, event.description, event.start, event.end
+    );
+    let trace = ActuatorSim::with_seed(seed).generate_day(Some(&event));
+    let outlier_flags: Vec<bool> = match engine {
+        "software" => {
+            let mut det = teda_fpga::teda::TedaDetector::new(2, m);
+            trace.samples.iter().map(|s| det.step(s).outlier).collect()
+        }
+        "rtl" => {
+            let mut rtl = TedaRtl::new(2, m as f32)?;
+            let s32: Vec<Vec<f32>> = trace
+                .samples
+                .iter()
+                .map(|s| s.iter().map(|&v| v as f32).collect())
+                .collect();
+            rtl.run(&s32)?.into_iter().map(|v| v.outlier).collect()
+        }
+        other => {
+            return Err(
+                format!("detect supports software|rtl, got {other}").into()
+            )
+        }
+    };
+    let report = evaluate_detection(&outlier_flags, &event, 1000);
+    println!(
+        "detected={} latency={:?} hits={}/{} false_alarm_rate={:.5}",
+        report.detected(),
+        report.latency,
+        report.hits_in_window,
+        report.window_len,
+        report.false_alarm_rate()
+    );
+    if let Some(csv) = flags.get("csv") {
+        trace.write_csv(csv)?;
+        println!("trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_synth(flags: &Flags) -> Result<(), CliError> {
+    let n: usize = flags.parse_as("n-features", 2usize)?;
+    let rtl = TedaRtl::new(n, 3.0)?;
+    let occ = OccupationReport::analyze(rtl.netlist(), Virtex6::xc6vlx240t());
+    let timing = PipelineTiming::analyze(rtl.netlist());
+    println!("TEDA RTL synthesis estimate (N={n} features)\n");
+    println!("{}", occ.render_table3());
+    println!("{}", timing.render_table4());
+    let path = critical_path(rtl.netlist());
+    println!("critical path: {}", path.path.join(" → "));
+    if flags.has("netlist") {
+        println!("\nnetlist:\n{}", rtl.netlist().dump());
+    }
+    Ok(())
+}
+
+fn cmd_damadics(flags: &Flags) -> Result<(), CliError> {
+    if flags.has("catalog") {
+        println!("Table 1: Fault types");
+        for (f, desc) in fault_catalog() {
+            println!("  {f}  {desc}");
+        }
+        return Ok(());
+    }
+    if flags.has("schedule") {
+        println!("Table 2: Artificial failures introduced to actuator 1");
+        for e in actuator1_schedule() {
+            println!(
+                "  item {} {} samples {:>5}-{:<5} {} — {}",
+                e.item, e.fault, e.start, e.end, e.date, e.description
+            );
+        }
+        return Ok(());
+    }
+    let item: u32 = flags.parse_as("item", 1u32)?;
+    let seed: u64 = flags.parse_as("seed", 2001u64)?;
+    let event =
+        schedule_item(item).ok_or_else(|| format!("no Table 2 item {item}"))?;
+    let trace = ActuatorSim::with_seed(seed).generate_day(Some(&event));
+    match flags.get("csv") {
+        Some(csv) => {
+            trace.write_csv(csv)?;
+            println!("wrote {} samples to {csv}", trace.len());
+        }
+        None => println!(
+            "generated {} samples (item {item}, fault {}) — use --csv to save",
+            trace.len(),
+            event.fault
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_doctor() -> Result<(), CliError> {
+    println!("teda-fpga doctor");
+    // 1. artifacts + PJRT round trip
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let m = teda_fpga::runtime::Manifest::load(dir)?;
+        println!(
+            "  artifacts: OK ({} variants, jax {})",
+            m.variants.len(),
+            m.jax_version
+        );
+        let rt = teda_fpga::runtime::XlaRuntime::new(dir)?;
+        let exe = rt.load(&m.variants[0].name)?;
+        let spec = exe.spec();
+        let mu = vec![0f32; spec.s * spec.n];
+        let var = vec![0f32; spec.s];
+        let k = vec![0f32; spec.s];
+        let x = vec![0.5f32; spec.s * spec.t * spec.n];
+        let outs = exe.run_f32(&[&mu, &var, &k, &x])?;
+        println!(
+            "  pjrt: OK (platform {}, {} outputs, k'={})",
+            rt.platform(),
+            outs.len(),
+            outs[5][0]
+        );
+    } else {
+        println!("  artifacts: MISSING — run `make artifacts`");
+    }
+    // 2. RTL self-check
+    let rtl = TedaRtl::new(2, 3.0)?;
+    let t = PipelineTiming::analyze(rtl.netlist());
+    println!(
+        "  rtl: OK (t_c = {} ns, {:.1} MSPS)",
+        t.critical_ns,
+        t.throughput_sps / 1e6
+    );
+    // 3. DAMADICS smoke
+    let event = schedule_item(1).unwrap();
+    let trace = ActuatorSim::with_seed(2001).generate_day(Some(&event));
+    let mut src = ReplaySource::new(0, trace).with_limit(10);
+    let mut n = 0;
+    while src.next_sample().is_some() {
+        n += 1;
+    }
+    println!("  damadics: OK ({n} samples replayed)");
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Service metrics: lock-free counters and log-bucketed latency
+//! histograms (an HdrHistogram-flavoured fixed layout), plus a registry
+//! for rendering.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed histogram for nanosecond latencies.
+///
+/// Buckets: `[2^i, 2^{i+1})` for i in 0..=63; recording is one atomic
+/// add, quantiles are reconstructed from bucket midpoints (≤ 2× bucket
+/// resolution error — plenty for service dashboards).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a nanosecond value.
+    pub fn record(&self, ns: u64) {
+        let idx = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in ns (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (0.0..=1.0) from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                // Bucket midpoint: 1.5 × 2^i.
+                return (1u64 << i) + (1u64 << i) / 2;
+            }
+        }
+        self.max()
+    }
+
+    /// p50/p95/p99/max one-liner for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}ns p50={}ns p95={}ns p99={}ns max={}ns",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Shared metrics bundle for the coordinator service.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Samples accepted into the service.
+    pub samples_in: Counter,
+    /// Verdicts emitted.
+    pub verdicts_out: Counter,
+    /// Outliers flagged.
+    pub outliers: Counter,
+    /// XLA chunk executions.
+    pub chunks_executed: Counter,
+    /// Samples processed through the scalar fallback path (partial
+    /// chunks at flush).
+    pub scalar_fallback: Counter,
+    /// Times a submit blocked on a full worker queue (backpressure).
+    pub backpressure_events: Counter,
+    /// Per-sample end-to-end latency (submit → verdict).
+    pub latency: Histogram,
+    /// Per-chunk execution time (XLA engine).
+    pub chunk_time: Histogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        format!(
+            "samples_in        {}\n\
+             verdicts_out      {}\n\
+             outliers          {}\n\
+             chunks_executed   {}\n\
+             scalar_fallback   {}\n\
+             backpressure      {}\n\
+             latency           {}\n\
+             chunk_time        {}\n",
+            self.samples_in.get(),
+            self.verdicts_out.get(),
+            self.outliers.get(),
+            self.chunks_executed.get(),
+            self.scalar_fallback.get(),
+            self.backpressure_events.get(),
+            self.latency.summary(),
+            self.chunk_time.summary(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 100);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.mean() > 0.0);
+        assert_eq!(h.max(), 100_000);
+        // p50 within its power-of-two bucket of the true median 50_050.
+        assert!(p50 >= 32_768 && p50 <= 98_304, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(i + 1);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn service_metrics_render() {
+        let m = ServiceMetrics::new();
+        m.samples_in.add(10);
+        m.latency.record(1234);
+        let s = m.render();
+        assert!(s.contains("samples_in        10"));
+        assert!(s.contains("latency"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Cycle-accurate RTL simulator of the paper's TEDA hardware
+//! architecture (Figs. 1–5).
+//!
+//! This module is the substitution for the paper's Virtex-6 FPGA
+//! implementation (DESIGN.md §2): the exact netlist of the four modules —
+//! MEAN (Fig. 2), VARIANCE (Fig. 3), ECCENTRICITY (Fig. 4), OUTLIER
+//! (Fig. 5) — is instantiated component-by-component (MCOMPn, MMUXn,
+//! MREGn, MMULT1n, … the paper's instance names are preserved) and
+//! simulated cycle-by-cycle with IEEE-754 f32 arithmetic, which is what
+//! the Xilinx floating-point operator cores compute.
+//!
+//! The same netlist drives the synthesis estimator ([`crate::synth`]):
+//! resource occupation (Table 3) and the critical-path timing model
+//! (Table 4) are derived from the very component instances simulated
+//! here, so function and cost cannot drift apart.
+//!
+//! Pipeline structure (§4.1): three stages —
+//!
+//! ```text
+//! cycle c   : MEAN     computes μ_k                  (sample x_k enters)
+//! cycle c+1 : VARIANCE computes σ²_k, ‖x_k−μ_k‖²
+//! cycle c+2 : ECCENTRICITY + OUTLIER emit ξ_k, ζ_k, outlier_k
+//! ```
+//!
+//! so the verdict for `x_k` appears [`TedaRtl::LATENCY`] = 2 cycles after
+//! it was clocked in, matching "the output of the ECCENTRICITY and
+//! OUTLIER modules are ... two [cycles delayed] in relation to MEAN
+//! module", and the initial delay is `d = 3·t_c` (Eq. 7: the first
+//! verdict exists at the end of the 3rd cycle).
+
+mod netlist;
+mod pipeline;
+
+pub use netlist::{CompKind, Component, Netlist, Wire};
+pub use pipeline::{RtlVerdict, TedaRtl};

@@ -1,0 +1,463 @@
+//! Generic RTL netlist: components, wires, cycle-based simulation.
+//!
+//! Semantics: a flat netlist of combinational components and registers
+//! over f32 wires (booleans are encoded 0.0/1.0, as a single-bit wire
+//! would be). Each clock cycle runs two phases:
+//!
+//! 1. **evaluate** — combinational components are evaluated in netlist
+//!    order (construction enforces topological validity: a combinational
+//!    input must already be driven); register components drive their
+//!    *latched* state onto their output wire at the start of the phase.
+//! 2. **latch** — every register captures its input wire; the counter
+//!    increments.
+//!
+//! This matches synchronous RTL with registers breaking all cycles.
+
+use crate::{Error, Result};
+
+/// Index of a wire in the netlist's value vector.
+pub type Wire = usize;
+
+/// Component kinds (one output wire each unless noted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompKind {
+    /// Constant driver.
+    Const(f32),
+    /// f32 adder.
+    Add,
+    /// f32 subtractor.
+    Sub,
+    /// f32 multiplier (DSP-mapped FP core).
+    Mult,
+    /// f32 divider (logic-mapped FP core).
+    Div,
+    /// Divide-by-two (exponent decrement — near-free in hardware).
+    Half,
+    /// 2:1 multiplexer: out = sel != 0 ? a : b.
+    Mux,
+    /// Equality comparator against a constant: out = (a == c).
+    CompEqConst(f32),
+    /// Greater-than comparator: out = (a > b).
+    CompGt,
+    /// 32-bit sample counter with int→float converters. TWO outputs:
+    /// `k` (count *after* increment for the incoming sample) and
+    /// `k_prev = k − 1` (the register value before increment, free in
+    /// hardware). Increments at every latch phase.
+    Counter,
+    /// f32 register (one output; input connected possibly after
+    /// construction to close recurrences).
+    Reg { init: f32 },
+}
+
+/// One instantiated component.
+#[derive(Debug, Clone)]
+pub struct Component {
+    /// Instance name — the paper's labels (MMULT11, VSUM2, …).
+    pub name: String,
+    pub kind: CompKind,
+    /// Input wires (arity fixed by kind).
+    pub inputs: Vec<Wire>,
+    /// Output wires (1, or 2 for Counter).
+    pub outputs: Vec<Wire>,
+}
+
+/// A complete netlist plus simulation state.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    comps: Vec<Component>,
+    /// Current wire values (phase-1 results).
+    values: Vec<f32>,
+    /// Which wires are driven (for topological validation).
+    driven: Vec<bool>,
+    /// Register states, indexed like `comps` (None for non-regs).
+    reg_state: Vec<Option<f32>>,
+    /// Counter state (sample count before increment).
+    counter_state: u64,
+    cycles: u64,
+}
+
+impl Default for Netlist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Netlist {
+    /// Empty netlist.
+    pub fn new() -> Self {
+        Netlist {
+            comps: Vec::new(),
+            values: Vec::new(),
+            driven: Vec::new(),
+            reg_state: Vec::new(),
+            counter_state: 0,
+            cycles: 0,
+        }
+    }
+
+    /// Allocate an *input port* wire (driven externally each cycle).
+    pub fn input(&mut self) -> Wire {
+        let w = self.alloc_wire();
+        self.driven[w] = true;
+        w
+    }
+
+    fn alloc_wire(&mut self) -> Wire {
+        self.values.push(0.0);
+        self.driven.push(false);
+        self.values.len() - 1
+    }
+
+    fn check_driven(&self, name: &str, ins: &[Wire]) -> Result<()> {
+        for &w in ins {
+            if !self.driven[w] {
+                return Err(Error::Rtl(format!(
+                    "component {name}: input wire {w} not yet driven \
+                     (combinational loop or construction-order bug)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Add a component; returns its output wire(s).
+    ///
+    /// Combinational inputs must already be driven (register outputs are
+    /// driven from construction time, so recurrences go through `Reg`).
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        kind: CompKind,
+        inputs: &[Wire],
+    ) -> Result<Vec<Wire>> {
+        let name = name.into();
+        let arity = match kind {
+            CompKind::Const(_) => 0,
+            CompKind::Counter => 0,
+            CompKind::Half | CompKind::CompEqConst(_) => 1,
+            CompKind::Reg { .. } => 0, // input connected separately
+            CompKind::Add
+            | CompKind::Sub
+            | CompKind::Mult
+            | CompKind::Div
+            | CompKind::CompGt => 2,
+            CompKind::Mux => 3,
+        };
+        if inputs.len() != arity {
+            return Err(Error::Rtl(format!(
+                "component {name}: arity {} expected, got {}",
+                arity,
+                inputs.len()
+            )));
+        }
+        // Registers break cycles: their inputs are wired later. All other
+        // components are combinational and need driven inputs NOW.
+        if !matches!(kind, CompKind::Reg { .. }) {
+            self.check_driven(&name, inputs)?;
+        }
+        let n_outputs = if matches!(kind, CompKind::Counter) { 2 } else { 1 };
+        let outputs: Vec<Wire> =
+            (0..n_outputs).map(|_| self.alloc_wire()).collect();
+        for &w in &outputs {
+            self.driven[w] = true; // regs/counter drive state; comb computed
+        }
+        let state = match kind {
+            CompKind::Reg { init } => Some(init),
+            _ => None,
+        };
+        self.reg_state.push(state);
+        self.comps.push(Component { name, kind, inputs: inputs.to_vec(), outputs });
+        Ok(self.comps.last().unwrap().outputs.clone())
+    }
+
+    /// Convenience: add and return the single output wire.
+    pub fn add1(
+        &mut self,
+        name: impl Into<String>,
+        kind: CompKind,
+        inputs: &[Wire],
+    ) -> Result<Wire> {
+        Ok(self.add(name, kind, inputs)?[0])
+    }
+
+    /// Connect a register's input wire (closing a recurrence).
+    pub fn connect_reg(&mut self, reg_name: &str, input: Wire) -> Result<()> {
+        if !self.driven[input] {
+            return Err(Error::Rtl(format!(
+                "connect_reg {reg_name}: wire {input} not driven"
+            )));
+        }
+        let comp = self
+            .comps
+            .iter_mut()
+            .find(|c| c.name == reg_name)
+            .ok_or_else(|| Error::Rtl(format!("no component {reg_name}")))?;
+        if !matches!(comp.kind, CompKind::Reg { .. }) {
+            return Err(Error::Rtl(format!("{reg_name} is not a register")));
+        }
+        if !comp.inputs.is_empty() {
+            return Err(Error::Rtl(format!("{reg_name} already connected")));
+        }
+        comp.inputs.push(input);
+        Ok(())
+    }
+
+    /// Every register must have exactly one input after construction.
+    pub fn validate(&self) -> Result<()> {
+        for c in &self.comps {
+            if matches!(c.kind, CompKind::Reg { .. }) && c.inputs.len() != 1 {
+                return Err(Error::Rtl(format!(
+                    "register {} left unconnected",
+                    c.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive an input-port wire for the current cycle.
+    pub fn set(&mut self, wire: Wire, value: f32) {
+        self.values[wire] = value;
+    }
+
+    /// Read any wire's current (post-evaluate) value.
+    pub fn get(&self, wire: Wire) -> f32 {
+        self.values[wire]
+    }
+
+    /// One clock cycle: evaluate then latch.
+    pub fn clock(&mut self) {
+        // Phase 1 — evaluate in construction (topological) order.
+        for (i, c) in self.comps.iter().enumerate() {
+            let v = &mut self.values;
+            match c.kind {
+                CompKind::Const(x) => v[c.outputs[0]] = x,
+                CompKind::Add => {
+                    v[c.outputs[0]] = v[c.inputs[0]] + v[c.inputs[1]]
+                }
+                CompKind::Sub => {
+                    v[c.outputs[0]] = v[c.inputs[0]] - v[c.inputs[1]]
+                }
+                CompKind::Mult => {
+                    v[c.outputs[0]] = v[c.inputs[0]] * v[c.inputs[1]]
+                }
+                CompKind::Div => {
+                    v[c.outputs[0]] = v[c.inputs[0]] / v[c.inputs[1]]
+                }
+                CompKind::Half => v[c.outputs[0]] = v[c.inputs[0]] * 0.5,
+                CompKind::Mux => {
+                    v[c.outputs[0]] = if v[c.inputs[0]] != 0.0 {
+                        v[c.inputs[1]]
+                    } else {
+                        v[c.inputs[2]]
+                    }
+                }
+                CompKind::CompEqConst(x) => {
+                    v[c.outputs[0]] =
+                        if v[c.inputs[0]] == x { 1.0 } else { 0.0 }
+                }
+                CompKind::CompGt => {
+                    v[c.outputs[0]] =
+                        if v[c.inputs[0]] > v[c.inputs[1]] { 1.0 } else { 0.0 }
+                }
+                CompKind::Counter => {
+                    // k for the sample entering THIS cycle (post-increment
+                    // view), k_prev = k − 1 (pre-increment register).
+                    let k = self.counter_state + 1;
+                    v[c.outputs[0]] = k as f32;
+                    v[c.outputs[1]] = self.counter_state as f32;
+                }
+                CompKind::Reg { .. } => {
+                    v[c.outputs[0]] = self.reg_state[i].unwrap();
+                }
+            }
+        }
+        // Phase 2 — latch.
+        for (i, c) in self.comps.iter().enumerate() {
+            match c.kind {
+                CompKind::Reg { .. } => {
+                    self.reg_state[i] = Some(self.values[c.inputs[0]]);
+                }
+                CompKind::Counter => {}
+                _ => {}
+            }
+        }
+        self.counter_state += 1;
+        self.cycles += 1;
+    }
+
+    /// Reset registers to their init values and the counter to zero.
+    pub fn reset(&mut self) {
+        for (i, c) in self.comps.iter().enumerate() {
+            if let CompKind::Reg { init } = c.kind {
+                self.reg_state[i] = Some(init);
+            }
+        }
+        self.counter_state = 0;
+        self.cycles = 0;
+        for v in &mut self.values {
+            *v = 0.0;
+        }
+    }
+
+    /// Cycles simulated since construction/reset.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// All components (for synthesis/timing analysis and netlist dumps).
+    pub fn components(&self) -> &[Component] {
+        &self.comps
+    }
+
+    /// Count components matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Component) -> bool) -> usize {
+        self.comps.iter().filter(|c| pred(c)).count()
+    }
+
+    /// Human-readable netlist dump (one line per instance).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for c in &self.comps {
+            out.push_str(&format!(
+                "{:<12} {:?} inputs={:?} outputs={:?}\n",
+                c.name, c.kind, c.inputs, c.outputs
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combinational_add_mult() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let sum = nl.add1("S", CompKind::Add, &[a, b]).unwrap();
+        let prod = nl.add1("P", CompKind::Mult, &[sum, b]).unwrap();
+        nl.set(a, 2.0);
+        nl.set(b, 3.0);
+        nl.clock();
+        assert_eq!(nl.get(sum), 5.0);
+        assert_eq!(nl.get(prod), 15.0);
+    }
+
+    #[test]
+    fn register_delays_one_cycle() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let r = nl.add1("R", CompKind::Reg { init: 9.0 }, &[]).unwrap();
+        nl.connect_reg("R", a).unwrap();
+        nl.validate().unwrap();
+        nl.set(a, 1.0);
+        nl.clock();
+        assert_eq!(nl.get(r), 9.0); // init visible during first cycle
+        nl.set(a, 2.0);
+        nl.clock();
+        assert_eq!(nl.get(r), 1.0); // previous input
+    }
+
+    #[test]
+    fn register_recurrence_accumulates() {
+        // r <= r + in  (accumulator)
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let r = nl.add1("R", CompKind::Reg { init: 0.0 }, &[]).unwrap();
+        let sum = nl.add1("S", CompKind::Add, &[r, a]).unwrap();
+        nl.connect_reg("R", sum).unwrap();
+        for i in 1..=4 {
+            nl.set(a, i as f32);
+            nl.clock();
+        }
+        assert_eq!(nl.get(sum), 10.0); // 1+2+3+4
+    }
+
+    #[test]
+    fn counter_outputs_k_and_prev() {
+        let mut nl = Netlist::new();
+        let outs = nl.add("K", CompKind::Counter, &[]).unwrap();
+        nl.clock();
+        assert_eq!(nl.get(outs[0]), 1.0);
+        assert_eq!(nl.get(outs[1]), 0.0);
+        nl.clock();
+        assert_eq!(nl.get(outs[0]), 2.0);
+        assert_eq!(nl.get(outs[1]), 1.0);
+    }
+
+    #[test]
+    fn mux_and_comparators() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let b = nl.input();
+        let eq = nl.add1("E", CompKind::CompEqConst(1.0), &[a]).unwrap();
+        let gt = nl.add1("G", CompKind::CompGt, &[a, b]).unwrap();
+        let mux = nl.add1("M", CompKind::Mux, &[eq, a, b]).unwrap();
+        nl.set(a, 1.0);
+        nl.set(b, 5.0);
+        nl.clock();
+        assert_eq!(nl.get(eq), 1.0);
+        assert_eq!(nl.get(gt), 0.0);
+        assert_eq!(nl.get(mux), 1.0);
+        nl.set(a, 7.0);
+        nl.clock();
+        assert_eq!(nl.get(eq), 0.0);
+        assert_eq!(nl.get(gt), 1.0);
+        assert_eq!(nl.get(mux), 5.0);
+    }
+
+    #[test]
+    fn use_before_def_rejected() {
+        let mut nl = Netlist::new();
+        let r = nl.add1("R", CompKind::Reg { init: 0.0 }, &[]).unwrap();
+        // Wire r+1 does not exist / is not driven:
+        let bogus = r + 100;
+        let _ = bogus;
+        let a = nl.alloc_wire_public_for_test();
+        assert!(nl.add1("S", CompKind::Add, &[r, a]).is_err());
+    }
+
+    #[test]
+    fn unconnected_register_fails_validation() {
+        let mut nl = Netlist::new();
+        nl.add1("R", CompKind::Reg { init: 0.0 }, &[]).unwrap();
+        assert!(nl.validate().is_err());
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let r = nl.add1("R", CompKind::Reg { init: 3.0 }, &[]).unwrap();
+        nl.connect_reg("R", a).unwrap();
+        nl.set(a, 8.0);
+        nl.clock();
+        nl.clock();
+        assert_eq!(nl.get(r), 8.0);
+        nl.reset();
+        nl.set(a, 0.0);
+        nl.clock();
+        assert_eq!(nl.get(r), 3.0);
+        assert_eq!(nl.cycles(), 1);
+    }
+
+    #[test]
+    fn half_is_exact() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let h = nl.add1("H", CompKind::Half, &[a]).unwrap();
+        nl.set(a, 7.0);
+        nl.clock();
+        assert_eq!(nl.get(h), 3.5);
+    }
+
+    impl Netlist {
+        /// Test helper: an undriven wire.
+        fn alloc_wire_public_for_test(&mut self) -> Wire {
+            self.alloc_wire()
+        }
+    }
+}

@@ -1,0 +1,442 @@
+//! The paper's TEDA pipeline netlist (Figs. 1–5), instantiated
+//! component-by-component with the paper's instance names.
+//!
+//! Bit-exactness contract: for every sample with `k ≥ 2` and σ² > 0 the
+//! wire values equal `teda::TedaState::<f32>::step` exactly (same IEEE
+//! operations in the same order — see rtl_vs_oracle integration tests).
+//! At `k = 1` the ECCENTRICITY divider sees 0/0 (the paper's Eq. 1 guard
+//! `[σ²] > 0` notes the value is undefined there); the NaN propagates to
+//! OCOMP1 which — like the FPGA comparator core — returns *false* for
+//! unordered comparisons, so the k = 1 sample is never flagged, matching
+//! Algorithm 1.
+
+use crate::{Error, Result};
+
+use super::netlist::{CompKind, Netlist, Wire};
+
+/// One classified sample leaving the OUTLIER module.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RtlVerdict {
+    /// Sample index k (1-based), from the OREG2-synchronized counter.
+    pub k: u64,
+    /// Eccentricity ξ_k (NaN at k = 1 — see module docs).
+    pub eccentricity: f32,
+    /// Normalized eccentricity ζ_k.
+    pub zeta: f32,
+    /// Chebyshev threshold (m²+1)/(2k) from the D3 divider.
+    pub threshold: f32,
+    /// OCOMP1 output.
+    pub outlier: bool,
+    /// Mean vector μ_k as latched in the MREGn registers.
+    pub variance: f32,
+}
+
+/// The full TEDA hardware pipeline for `n` features.
+///
+/// ```
+/// use teda_fpga::rtl::TedaRtl;
+/// let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+/// assert_eq!(rtl.clock(&[0.5, 0.5]).unwrap(), None); // pipeline filling
+/// assert_eq!(rtl.clock(&[0.6, 0.4]).unwrap(), None);
+/// let v = rtl.clock(&[0.5, 0.5]).unwrap().unwrap();  // verdict for k=1
+/// assert_eq!(v.k, 1);
+/// assert!(!v.outlier);
+/// ```
+pub struct TedaRtl {
+    nl: Netlist,
+    n: usize,
+    m: f32,
+    // Input ports.
+    x_in: Vec<Wire>,
+    // Observed output wires (stage C).
+    ecc: Wire,
+    zeta: Wire,
+    threshold: Wire,
+    outlier: Wire,
+    k_out: Wire,
+    var_wire: Wire,
+    samples_in: u64,
+}
+
+/// Pipeline latency: a sample's verdict appears this many cycles after
+/// it is clocked in (§4.1: ECCENTRICITY/OUTLIER are two cycles delayed
+/// w.r.t. the MEAN input). The first verdict therefore completes at the
+/// end of cycle 3 — the paper's initial delay d = 3·t_c (Eq. 7).
+pub const LATENCY: u64 = 2;
+
+impl TedaRtl {
+    /// Build the netlist for `n`-feature samples and threshold `m`.
+    pub fn new(n: usize, m: f32) -> Result<Self> {
+        if n == 0 {
+            return Err(Error::Rtl("n_features must be > 0".into()));
+        }
+        if !(m > 0.0) {
+            return Err(Error::Rtl(format!("m must be > 0, got {m}")));
+        }
+        let mut nl = Netlist::new();
+
+        // ------------------------------------------------- input ports
+        let x_in: Vec<Wire> = (0..n).map(|_| nl.input()).collect();
+
+        // ------------------------------------------------- K-logic
+        // Sample counter with int→float converters; k_prev = k − 1 comes
+        // from the pre-increment register value (free in hardware).
+        let kk = nl.add("KCNT", CompKind::Counter, &[])?;
+        let (k, k_prev) = (kk[0], kk[1]);
+        let one = nl.add1("CONST1", CompKind::Const(1.0), &[])?;
+        // D1: 1/k, D2: (k−1)/k — the two shared divider cores.
+        let inv_k = nl.add1("D1", CompKind::Div, &[one, k])?;
+        let ratio = nl.add1("D2", CompKind::Div, &[k_prev, k])?;
+
+        // ------------------------------------------------- MEAN (Fig. 2)
+        // Per feature: MCOMPn, MMUXn, MREGn, MMULT1n, MMULT2n, MSUMn.
+        let mut mu_regs = Vec::with_capacity(n); // MREGn outputs = μ_{k}
+        for i in 1..=n {
+            let is_first =
+                nl.add1(format!("MCOMP{i}"), CompKind::CompEqConst(1.0), &[k])?;
+            let mreg = nl.add1(
+                format!("MREG{i}"),
+                CompKind::Reg { init: 0.0 },
+                &[],
+            )?;
+            let m1 =
+                nl.add1(format!("MMULT1{i}"), CompKind::Mult, &[mreg, ratio])?;
+            let m2 = nl.add1(
+                format!("MMULT2{i}"),
+                CompKind::Mult,
+                &[x_in[i - 1], inv_k],
+            )?;
+            let msum = nl.add1(format!("MSUM{i}"), CompKind::Add, &[m1, m2])?;
+            let mmux = nl.add1(
+                format!("MMUX{i}"),
+                CompKind::Mux,
+                &[is_first, x_in[i - 1], msum],
+            )?;
+            nl.connect_reg(&format!("MREG{i}"), mmux)?;
+            mu_regs.push(mreg);
+        }
+
+        // --------------------------------- stage A→B pipeline registers
+        // VREGn delay the sample, VREG2 delays k (§4.3); IREG1/RREG1
+        // delay the shared 1/k and (k−1)/k values ("to avoid redundant
+        // operations" — §4.3 note on forwarding 1/k).
+        let mut x_d = Vec::with_capacity(n);
+        for i in 1..=n {
+            let r = nl.add1(
+                format!("VREG{}", i + 2),
+                CompKind::Reg { init: 0.0 },
+                &[],
+            )?;
+            nl.connect_reg(&format!("VREG{}", i + 2), x_in[i - 1])?;
+            x_d.push(r);
+        }
+        let k_d = nl.add1("VREG2", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("VREG2", k)?;
+        let inv_k_d = nl.add1("IREG1", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("IREG1", inv_k)?;
+        let ratio_d = nl.add1("RREG1", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("RREG1", ratio)?;
+
+        // --------------------------------------------- VARIANCE (Fig. 3)
+        let is_first_d =
+            nl.add1("VCOMP1", CompKind::CompEqConst(1.0), &[k_d])?;
+        // ‖x_k − μ_k‖²: VSUBn, VMULT1_n, VSUM1 (left-fold adder chain so
+        // the sum order matches the software oracle exactly).
+        let mut sq_terms = Vec::with_capacity(n);
+        for i in 1..=n {
+            let d = nl.add1(
+                format!("VSUB{i}"),
+                CompKind::Sub,
+                &[x_d[i - 1], mu_regs[i - 1]],
+            )?;
+            let sq =
+                nl.add1(format!("VMULT1_{i}"), CompKind::Mult, &[d, d])?;
+            sq_terms.push(sq);
+        }
+        let mut sq_dist = sq_terms[0];
+        for (j, &t) in sq_terms.iter().enumerate().skip(1) {
+            sq_dist =
+                nl.add1(format!("VSUM1_{j}"), CompKind::Add, &[sq_dist, t])?;
+        }
+        let var_reg = nl.add1("VREG1", CompKind::Reg { init: 0.0 }, &[])?;
+        let vm3 = nl.add1("VMULT3", CompKind::Mult, &[var_reg, ratio_d])?;
+        let vm2 = nl.add1("VMULT2", CompKind::Mult, &[sq_dist, inv_k_d])?;
+        let vsum2 = nl.add1("VSUM2", CompKind::Add, &[vm3, vm2])?;
+        let zero = nl.add1("CONST0", CompKind::Const(0.0), &[])?;
+        let vmux1 =
+            nl.add1("VMUX1", CompKind::Mux, &[is_first_d, zero, vsum2])?;
+        nl.connect_reg("VREG1", vmux1)?;
+
+        // --------------------------------- stage B→C pipeline registers
+        // EREG3 holds ‖x−μ‖², EREG4 the twice-delayed 1/k (Fig. 4);
+        // OREG1 the twice-delayed k (Fig. 5).
+        let sq_dist_d = nl.add1("EREG3", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("EREG3", sq_dist)?;
+        let inv_k_dd = nl.add1("EREG4", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("EREG4", inv_k_d)?;
+        let k_dd = nl.add1("OREG1", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("OREG1", k_d)?;
+
+        // ----------------------------------------- ECCENTRICITY (Fig. 4)
+        // ξ = 1/k + ‖x−μ‖² / (σ²·k). VREG1 holds σ²_k during this cycle.
+        let var_k = nl.add1("EMULT1", CompKind::Mult, &[var_reg, k_dd])?;
+        let ediv = nl.add1("EDIV1", CompKind::Div, &[sq_dist_d, var_k])?;
+        let ecc = nl.add1("ESUM1", CompKind::Add, &[inv_k_dd, ediv])?;
+
+        // ---------------------------------------------- OUTLIER (Fig. 5)
+        // ζ = ξ/2 (ODIV1 — exponent decrement), threshold (m²+1)/2 ÷ k
+        // (D3, the constant stored in the module per §4.1), OCOMP1.
+        let zeta = nl.add1("ODIV1", CompKind::Half, &[ecc])?;
+        let c_thr = nl.add1(
+            "CONSTM",
+            CompKind::Const((m * m + 1.0) * 0.5),
+            &[],
+        )?;
+        let threshold = nl.add1("D3", CompKind::Div, &[c_thr, k_dd])?;
+        let outlier = nl.add1("OCOMP1", CompKind::CompGt, &[zeta, threshold])?;
+        // OREG2 re-registers the iteration number at the module boundary
+        // (§4.5, Fig. 5); the combinational stage-C outputs read out in
+        // the same cycle are synchronized with OREG1's k (`k_dd`).
+        let _oreg2 = nl.add1("OREG2", CompKind::Reg { init: 0.0 }, &[])?;
+        nl.connect_reg("OREG2", k_dd)?;
+        let k_out = k_dd;
+
+        nl.validate()?;
+        Ok(TedaRtl {
+            nl,
+            n,
+            m,
+            x_in,
+            ecc,
+            zeta,
+            threshold,
+            outlier,
+            k_out,
+            var_wire: var_reg,
+            samples_in: 0,
+        })
+    }
+
+    /// Feature count N.
+    pub fn n_features(&self) -> usize {
+        self.n
+    }
+
+    /// Chebyshev multiplier m.
+    pub fn m(&self) -> f32 {
+        self.m
+    }
+
+    /// Clock one sample in; returns the verdict for sample `k − LATENCY`
+    /// once the pipeline is full (`None` during the first two cycles —
+    /// the paper's initial delay d = 3·t_c).
+    ///
+    /// # Errors
+    /// Returns an error if `x.len() != n_features`.
+    pub fn clock(&mut self, x: &[f32]) -> Result<Option<RtlVerdict>> {
+        if x.len() != self.n {
+            return Err(Error::Rtl(format!(
+                "sample has {} features, pipeline built for {}",
+                x.len(),
+                self.n
+            )));
+        }
+        for (w, &v) in self.x_in.clone().iter().zip(x) {
+            self.nl.set(*w, v);
+        }
+        self.nl.clock();
+        self.samples_in += 1;
+        if self.samples_in <= LATENCY {
+            return Ok(None);
+        }
+        Ok(Some(self.read_verdict()))
+    }
+
+    /// Flush the pipeline after the last sample: clock `LATENCY` bubbles
+    /// and return the remaining verdicts.
+    pub fn drain(&mut self) -> Result<Vec<RtlVerdict>> {
+        let zeros = vec![0.0; self.n];
+        let mut out = Vec::with_capacity(LATENCY as usize);
+        for _ in 0..LATENCY {
+            // Bubbles advance the pipeline; their own (future) verdicts
+            // are discarded by the caller because k_out identifies them.
+            if let Some(v) = self.clock(&zeros)? {
+                out.push(v);
+            }
+        }
+        // Keep only verdicts for real samples.
+        let real = self.samples_in - LATENCY;
+        out.retain(|v| v.k <= real);
+        Ok(out)
+    }
+
+    fn read_verdict(&self) -> RtlVerdict {
+        RtlVerdict {
+            k: self.nl.get(self.k_out) as u64,
+            eccentricity: self.nl.get(self.ecc),
+            zeta: self.nl.get(self.zeta),
+            threshold: self.nl.get(self.threshold),
+            outlier: self.nl.get(self.outlier) != 0.0,
+            variance: self.nl.get(self.var_wire),
+        }
+    }
+
+    /// Run a whole f32 sample batch through the pipeline (clock + drain),
+    /// returning one verdict per sample.
+    pub fn run(&mut self, samples: &[Vec<f32>]) -> Result<Vec<RtlVerdict>> {
+        let mut out = Vec::with_capacity(samples.len());
+        for s in samples {
+            if let Some(v) = self.clock(s)? {
+                out.push(v);
+            }
+        }
+        out.extend(self.drain()?);
+        Ok(out)
+    }
+
+    /// The underlying netlist (synthesis / netlist dumps).
+    pub fn netlist(&self) -> &Netlist {
+        &self.nl
+    }
+
+    /// Reset pipeline state (k back to 0, registers to init).
+    pub fn reset(&mut self) {
+        self.nl.reset();
+        self.samples_in = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::teda::TedaState;
+    use crate::util::prng::SplitMix64;
+
+    #[test]
+    fn pipeline_latency_is_two_cycles() {
+        let mut rtl = TedaRtl::new(1, 3.0).unwrap();
+        assert!(rtl.clock(&[1.0]).unwrap().is_none());
+        assert!(rtl.clock(&[2.0]).unwrap().is_none());
+        let v = rtl.clock(&[3.0]).unwrap().unwrap();
+        assert_eq!(v.k, 1);
+    }
+
+    #[test]
+    fn matches_software_oracle_bit_exact() {
+        // The central RTL property: wire-level equality with the f32
+        // software reference for k ≥ 2.
+        let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+        let mut sw = TedaState::<f32>::new(2);
+        let mut rng = SplitMix64::new(99);
+        let samples: Vec<Vec<f32>> = (0..500)
+            .map(|_| vec![rng.uniform(-2.0, 2.0) as f32, rng.uniform(-2.0, 2.0) as f32])
+            .collect();
+        let verdicts = rtl.run(&samples).unwrap();
+        assert_eq!(verdicts.len(), samples.len());
+        for (i, v) in verdicts.iter().enumerate() {
+            let step = sw.step(&samples[i], 3.0);
+            assert_eq!(v.k, (i + 1) as u64, "k mismatch");
+            if v.k >= 2 {
+                assert_eq!(
+                    v.eccentricity.to_bits(),
+                    step.eccentricity.to_bits(),
+                    "ecc bits k={}",
+                    v.k
+                );
+                assert_eq!(v.zeta.to_bits(), step.zeta.to_bits());
+                assert_eq!(v.threshold.to_bits(), step.threshold.to_bits());
+            }
+            assert_eq!(v.outlier, step.outlier, "outlier k={}", v.k);
+        }
+    }
+
+    #[test]
+    fn k1_is_nan_but_not_outlier() {
+        let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+        let samples = vec![vec![1.0, 2.0], vec![1.5, 2.5], vec![0.5, 1.5]];
+        let verdicts = rtl.run(&samples).unwrap();
+        assert!(verdicts[0].eccentricity.is_nan());
+        assert!(!verdicts[0].outlier);
+    }
+
+    #[test]
+    fn detects_gross_outlier() {
+        let mut rtl = TedaRtl::new(1, 3.0).unwrap();
+        let mut rng = SplitMix64::new(3);
+        let mut samples: Vec<Vec<f32>> =
+            (0..300).map(|_| vec![rng.uniform(0.0, 1.0) as f32]).collect();
+        samples.push(vec![1000.0]);
+        let verdicts = rtl.run(&samples).unwrap();
+        assert!(verdicts.last().unwrap().outlier);
+        let flagged = verdicts.iter().filter(|v| v.outlier).count();
+        assert!(flagged >= 1 && flagged < 10);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+        assert!(rtl.clock(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn invalid_construction_rejected() {
+        assert!(TedaRtl::new(0, 3.0).is_err());
+        assert!(TedaRtl::new(2, 0.0).is_err());
+        assert!(TedaRtl::new(2, -1.0).is_err());
+    }
+
+    #[test]
+    fn reset_replays_identically() {
+        let mut rtl = TedaRtl::new(2, 3.0).unwrap();
+        let mut rng = SplitMix64::new(17);
+        let samples: Vec<Vec<f32>> = (0..50)
+            .map(|_| vec![rng.uniform(0.0, 1.0) as f32, rng.uniform(0.0, 1.0) as f32])
+            .collect();
+        let a = rtl.run(&samples).unwrap();
+        rtl.reset();
+        let b = rtl.run(&samples).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.k, y.k);
+            assert_eq!(x.outlier, y.outlier);
+            assert_eq!(x.zeta.to_bits(), y.zeta.to_bits());
+        }
+    }
+
+    #[test]
+    fn component_inventory_matches_paper_n2() {
+        // 3N+3 = 9 FP multiplier cores at N=2 (§5.2.1 calibration:
+        // 9 cores × 3 DSP48E1 = the paper's 27 "multipliers").
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let nl = rtl.netlist();
+        let mults = nl.count(|c| matches!(c.kind, CompKind::Mult));
+        assert_eq!(mults, 9);
+        let divs = nl.count(|c| matches!(c.kind, CompKind::Div));
+        assert_eq!(divs, 4); // D1, D2, EDIV1, D3
+        let regs = nl.count(|c| matches!(c.kind, CompKind::Reg { .. }));
+        assert_eq!(regs, 12); // 2 MREG + 2 VREGn + VREG2 + IREG1 + RREG1
+                              // + VREG1 + EREG3 + EREG4 + OREG1 + OREG2
+    }
+
+    #[test]
+    fn multiplier_count_scales_3n_plus_3() {
+        for n in 1..=6 {
+            let rtl = TedaRtl::new(n, 3.0).unwrap();
+            let mults =
+                rtl.netlist().count(|c| matches!(c.kind, CompKind::Mult));
+            assert_eq!(mults, 3 * n + 3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn drain_returns_tail_verdicts_only() {
+        let mut rtl = TedaRtl::new(1, 3.0).unwrap();
+        for i in 0..5 {
+            rtl.clock(&[i as f32]).unwrap();
+        }
+        let tail = rtl.drain().unwrap();
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0].k, 4);
+        assert_eq!(tail[1].k, 5);
+    }
+}

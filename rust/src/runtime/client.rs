@@ -1,0 +1,164 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::{Error, Result};
+
+use super::manifest::{Manifest, VariantSpec};
+
+/// A compiled executable plus its manifest spec.
+pub struct Executable {
+    spec: VariantSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// The manifest spec this executable was compiled from.
+    pub fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    /// Execute with f32 inputs in manifest order; returns f32 outputs in
+    /// manifest order.
+    ///
+    /// Input lengths are validated against the manifest shapes; outputs
+    /// are length-validated before returning.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, ispec) in inputs.iter().zip(&self.spec.inputs) {
+            if data.len() != ispec.elements() {
+                return Err(Error::Runtime(format!(
+                    "{}: input '{}' expects {} elements, got {}",
+                    self.spec.name,
+                    ispec.name,
+                    ispec.elements(),
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("to_literal: {e}")))?
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("to_tuple: {e}")))?;
+        if tuple.len() != self.spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tuple.len()
+            )));
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (lit, ospec) in tuple.into_iter().zip(&self.spec.outputs) {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| Error::Runtime(format!("to_vec: {e}")))?;
+            if v.len() != ospec.elements() {
+                return Err(Error::Runtime(format!(
+                    "{}: output '{}' expects {} elements, got {}",
+                    self.spec.name,
+                    ospec.name,
+                    ospec.elements(),
+                    v.len()
+                )));
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// PJRT CPU client + executable cache keyed by variant name.
+///
+/// `XlaRuntime` is `Send + Sync` (inner mutability behind a mutex) so
+/// engines on worker threads can share one client; PJRT compilation
+/// happens at most once per variant.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifact_dir`.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(XlaRuntime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (for logs / doctor output).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) a variant by name.
+    pub fn load(&self, variant: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(variant) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .variant(variant)
+            .ok_or_else(|| {
+                Error::Artifact(format!("variant '{variant}' not in manifest"))
+            })?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact("non-utf8 path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| Error::Artifact(format!("parse {path_str}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {variant}: {e}")))?;
+        let exe = Arc::new(Executable { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(variant.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile every pallas variant up front (service warm start).
+    pub fn load_all(&self) -> Result<Vec<Arc<Executable>>> {
+        let names: Vec<String> =
+            self.manifest.variants.iter().map(|v| v.name.clone()).collect();
+        names.iter().map(|n| self.load(n)).collect()
+    }
+}
+
+// NOTE on threading: the `xla` crate's client wraps an `Rc` internally,
+// so `XlaRuntime`/`Executable` are deliberately NOT Send/Sync. The
+// coordinator gives each worker thread its own runtime instance
+// (constructed inside the thread — see coordinator::service), which is
+// also what PJRT recommends for CPU clients.

@@ -1,0 +1,275 @@
+//! Artifact manifest — the contract with `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::Json;
+use crate::{Error, Result};
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Artifact("tensor spec missing name".into()))?
+            .to_string();
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Artifact(format!("{name}: missing dtype")))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact(format!("{name}: missing shape")))?
+            .iter()
+            .map(|d| {
+                d.as_usize().ok_or_else(|| {
+                    Error::Artifact(format!("{name}: non-integer dim"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One AOT-compiled (S, N, T, m) model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantSpec {
+    pub name: String,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Streams per batch.
+    pub s: usize,
+    /// Features per sample.
+    pub n: usize,
+    /// Time steps per chunk.
+    pub t: usize,
+    /// Chebyshev multiplier baked into the artifact.
+    pub m: f64,
+    /// Pallas stream-block size (S is a multiple of this).
+    pub block_s: usize,
+    /// Which kernel produced it ("pallas" or "jnp_ref").
+    pub kernel: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl VariantSpec {
+    fn from_json(v: &Json) -> Result<VariantSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Artifact("variant missing name".into()))?
+            .to_string();
+        let need_usize = |key: &str| {
+            v.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                Error::Artifact(format!("variant {name}: missing {key}"))
+            })
+        };
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| {
+                    Error::Artifact(format!("variant {name}: missing {key}"))
+                })?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(VariantSpec {
+            file: v
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::Artifact(format!("variant {name}: missing file"))
+                })?
+                .to_string(),
+            s: need_usize("s")?,
+            n: need_usize("n")?,
+            t: need_usize("t")?,
+            m: v
+                .get("m")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing m")))?,
+            block_s: need_usize("block_s")?,
+            kernel: v
+                .get("kernel")
+                .and_then(Json::as_str)
+                .unwrap_or("pallas")
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            name,
+        })
+    }
+
+    /// Samples classified per execution (S·T).
+    pub fn samples_per_chunk(&self) -> usize {
+        self.s * self.t
+    }
+}
+
+/// Parsed `artifacts/manifest.json` plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub variants: Vec<VariantSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(format!("reading {}", path.display()), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (directory recorded for artifact paths).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = Json::parse(text)
+            .map_err(|e| Error::Artifact(format!("manifest: {e}")))?;
+        match v.get("format").and_then(Json::as_u64) {
+            Some(1) => {}
+            other => {
+                return Err(Error::Artifact(format!(
+                    "unsupported manifest format {other:?}"
+                )))
+            }
+        }
+        if v.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            return Err(Error::Artifact(
+                "manifest interchange is not hlo-text".into(),
+            ));
+        }
+        let variants = v
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing variants".into()))?
+            .iter()
+            .map(VariantSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir,
+            jax_version: v
+                .get("jax_version")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            variants,
+        })
+    }
+
+    /// Find a variant by name.
+    pub fn variant(&self, name: &str) -> Option<&VariantSpec> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Smallest pallas variant matching `n` features whose S·T capacity is
+    /// ≥ `min_samples` — the batcher's variant-selection policy. Falls
+    /// back to the largest matching variant when none is big enough.
+    pub fn select(&self, n: usize, min_samples: usize) -> Option<&VariantSpec> {
+        let mut matching: Vec<&VariantSpec> = self
+            .variants
+            .iter()
+            .filter(|v| v.n == n && v.kernel == "pallas")
+            .collect();
+        matching.sort_by_key(|v| v.samples_per_chunk());
+        matching
+            .iter()
+            .find(|v| v.samples_per_chunk() >= min_samples)
+            .copied()
+            .or_else(|| matching.last().copied())
+    }
+
+    /// Absolute path to a variant's HLO file.
+    pub fn hlo_path(&self, v: &VariantSpec) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "format": 1,
+          "interchange": "hlo-text",
+          "jax_version": "0.8.2",
+          "variants": [
+            {"name": "teda_s8_n2_t16_m3p0", "file": "a.hlo.txt",
+             "s": 8, "n": 2, "t": 16, "m": 3.0, "block_s": 8,
+             "kernel": "pallas",
+             "inputs": [{"name": "mu", "dtype": "f32", "shape": [8, 2]}],
+             "outputs": [{"name": "ecc", "dtype": "f32", "shape": [8, 16]}]},
+            {"name": "teda_s32_n2_t32_m3p0", "file": "b.hlo.txt",
+             "s": 32, "n": 2, "t": 32, "m": 3.0, "block_s": 8,
+             "kernel": "pallas",
+             "inputs": [], "outputs": []}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(&sample_manifest(), PathBuf::from("/a")).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        let v = m.variant("teda_s8_n2_t16_m3p0").unwrap();
+        assert_eq!((v.s, v.n, v.t), (8, 2, 16));
+        assert_eq!(v.inputs[0].elements(), 16);
+        assert_eq!(m.hlo_path(v), PathBuf::from("/a/a.hlo.txt"));
+    }
+
+    #[test]
+    fn select_prefers_smallest_sufficient() {
+        let m = Manifest::parse(&sample_manifest(), PathBuf::from("/a")).unwrap();
+        assert_eq!(m.select(2, 100).unwrap().s, 8); // 8*16=128 >= 100
+        assert_eq!(m.select(2, 200).unwrap().s, 32); // needs the big one
+        assert_eq!(m.select(2, 99999).unwrap().s, 32); // fallback: largest
+        assert!(m.select(7, 1).is_none()); // no such N
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let text = r#"{"format": 9, "interchange": "hlo-text", "variants": []}"#;
+        assert!(Manifest::parse(text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_interchange() {
+        let text = r#"{"format": 1, "interchange": "proto", "variants": []}"#;
+        assert!(Manifest::parse(text, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Uses the actual artifacts/ when present (after `make artifacts`).
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(m.hlo_path(v).exists(), "{} missing", v.file);
+                assert_eq!(v.inputs.len(), 4);
+                assert_eq!(v.outputs.len(), 6);
+            }
+        }
+    }
+}

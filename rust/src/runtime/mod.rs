@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched. The flow
+//! (per /opt/xla-example and DESIGN.md §3):
+//!
+//! ```text
+//! artifacts/manifest.json ── runtime::Manifest
+//! artifacts/<variant>.hlo.txt ── HloModuleProto::from_text_file
+//!                                → XlaComputation → client.compile
+//!                                → PjRtLoadedExecutable (cached)
+//! ```
+//!
+//! Python/JAX is *never* on this path — artifacts are produced once by
+//! `make artifacts` and the Rust binary is self-contained afterwards.
+
+mod client;
+mod manifest;
+
+pub use client::{Executable, XlaRuntime};
+pub use manifest::{Manifest, TensorSpec, VariantSpec};

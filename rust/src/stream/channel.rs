@@ -1,0 +1,327 @@
+//! Bounded MPMC channel (Mutex + Condvar), the backpressure primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Error: channel closed (no receivers remain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SendError;
+
+/// Error: channel closed (no senders remain) and empty.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecvError;
+
+struct Shared<T> {
+    q: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half (clonable).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half (clonable — MPMC).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create an unbounded channel (`send` never blocks). Use ONLY for
+/// result/return paths where the producer must never deadlock against
+/// its own consumer; ingress paths should stay [`bounded`] so
+/// backpressure reaches the sources.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    bounded(usize::MAX)
+}
+
+/// Create a bounded channel with capacity `cap` (≥ 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1, "capacity must be >= 1");
+    let shared = Arc::new(Shared {
+        q: Mutex::new(State {
+            // Pre-size modestly; unbounded channels grow on demand.
+            buf: VecDeque::with_capacity(cap.min(1024)),
+            senders: 1,
+            receivers: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        cap,
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; returns Err when every receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), SendError> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError);
+            }
+            if st.buf.len() < self.shared.cap {
+                st.buf.push_back(value);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; returns the value back (`Ok(Some(value))`)
+    /// when the queue is full so the caller can count a backpressure
+    /// event and fall back to a blocking [`Sender::send`].
+    pub fn try_send(&self, value: T) -> Result<Option<T>, SendError> {
+        let mut st = self.shared.q.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(SendError);
+        }
+        if st.buf.len() < self.shared.cap {
+            st.buf.push_back(value);
+            self.shared.not_empty.notify_one();
+            Ok(None)
+        } else {
+            Ok(Some(value))
+        }
+    }
+
+    /// Current queue depth (diagnostics only; racy by nature).
+    pub fn len(&self) -> usize {
+        self.shared.q.lock().unwrap().buf.len()
+    }
+
+    /// Whether the queue is currently empty (racy; diagnostics).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.q.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            // Wake blocked receivers so they observe closure.
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; returns Err when all senders are gone AND the
+    /// buffer is drained.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Option<T>, RecvError> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(Some(v));
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self
+                .shared
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+            if res.timed_out() && st.buf.is_empty() {
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Result<Option<T>, RecvError> {
+        let mut st = self.shared.q.lock().unwrap();
+        if let Some(v) = st.buf.pop_front() {
+            self.shared.not_full.notify_one();
+            return Ok(Some(v));
+        }
+        if st.senders == 0 {
+            return Err(RecvError);
+        }
+        Ok(None)
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.q.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.shared.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn blocks_and_resumes_on_full() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(tx.try_send(3).unwrap(), Some(3)); // full, value back
+        let t = thread::spawn(move || tx.send(3)); // blocks
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1); // frees a slot
+        t.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn recv_err_after_senders_drop() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn send_err_after_receiver_drop() {
+        let (tx, rx) = bounded::<u32>(4);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = bounded::<u32>(4);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)).unwrap(), None);
+        tx.send(9).unwrap();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)).unwrap(),
+            Some(9)
+        );
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let (tx, rx) = bounded::<u64>(16);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), 4000);
+        all.dedup();
+        assert_eq!(all.len(), 4000, "duplicate deliveries");
+    }
+
+    #[test]
+    fn per_producer_fifo_preserved() {
+        // Single consumer: items from one producer arrive in their send
+        // order (the per-stream ordering property the router relies on).
+        let (tx, rx) = bounded::<(u8, u64)>(4);
+        let t1 = {
+            let tx = tx.clone();
+            thread::spawn(move || {
+                for i in 0..500 {
+                    tx.send((1, i)).unwrap();
+                }
+            })
+        };
+        drop(tx);
+        let mut last = None;
+        while let Ok((p, i)) = rx.recv() {
+            assert_eq!(p, 1);
+            if let Some(prev) = last {
+                assert!(i > prev);
+            }
+            last = Some(i);
+        }
+        t1.join().unwrap();
+        assert_eq!(last, Some(499));
+    }
+}

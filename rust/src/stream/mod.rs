@@ -1,0 +1,15 @@
+//! Streaming substrate: bounded channels with backpressure, sample
+//! messages, and stream sources.
+//!
+//! `std::sync::mpsc` has no bounded MPMC flavour and crates.io is
+//! unavailable in this environment (DESIGN.md §3), so [`channel`]
+//! provides the Mutex+Condvar bounded channel the coordinator is built
+//! on: `send` *blocks* when the queue is full — that is the
+//! backpressure mechanism propagating from a slow engine all the way to
+//! the sources.
+
+mod channel;
+mod source;
+
+pub use channel::{bounded, unbounded, Receiver, RecvError, SendError, Sender};
+pub use source::{ReplaySource, Sample, StreamSource, SyntheticSource};

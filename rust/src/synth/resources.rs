@@ -1,0 +1,186 @@
+//! Resource model → Table 3 (hardware occupation).
+
+use crate::rtl::{CompKind, Netlist};
+
+/// Per-primitive resource usage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ResourceCost {
+    pub dsp: usize,
+    pub lut: usize,
+    pub ff: usize,
+}
+
+/// The calibrated Virtex-6 resource model (see `synth` module docs for
+/// the calibration table and rationale).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResourceModel;
+
+impl ResourceModel {
+    /// Cost of one component instance.
+    pub fn cost(&self, kind: &CompKind) -> ResourceCost {
+        match kind {
+            CompKind::Mult => ResourceCost { dsp: 3, lut: 15, ff: 0 },
+            CompKind::Add | CompKind::Sub => {
+                ResourceCost { dsp: 0, lut: 220, ff: 0 }
+            }
+            CompKind::Div => ResourceCost { dsp: 0, lut: 2400, ff: 0 },
+            CompKind::CompEqConst(_) | CompKind::CompGt => {
+                ResourceCost { dsp: 0, lut: 40, ff: 0 }
+            }
+            CompKind::Mux => ResourceCost { dsp: 0, lut: 32, ff: 0 },
+            CompKind::Half => ResourceCost { dsp: 0, lut: 8, ff: 0 },
+            CompKind::Counter => ResourceCost { dsp: 0, lut: 28, ff: 32 },
+            CompKind::Reg { .. } => ResourceCost { dsp: 0, lut: 0, ff: 32 },
+            CompKind::Const(_) => ResourceCost::default(),
+        }
+    }
+}
+
+/// Target-device capacities for occupation percentages.
+#[derive(Debug, Clone, Copy)]
+pub struct Virtex6 {
+    pub name: &'static str,
+    pub dsp48e1: usize,
+    pub luts: usize,
+    pub ffs: usize,
+}
+
+impl Virtex6 {
+    /// The paper's target: Xilinx Virtex-6 xc6vlx240t-1ff1156.
+    pub fn xc6vlx240t() -> Self {
+        Virtex6 {
+            name: "xc6vlx240t-1ff1156",
+            dsp48e1: 768,
+            luts: 150_720,
+            ffs: 301_440,
+        }
+    }
+}
+
+/// Table 3 replica: totals plus device occupation percentages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OccupationReport {
+    /// DSP48E1 slices ("Multipliers" column of Table 3).
+    pub multipliers: usize,
+    /// Flip-flop bits ("Registers" column).
+    pub registers: usize,
+    /// LUTs.
+    pub luts: usize,
+    pub multipliers_pct: f64,
+    pub registers_pct: f64,
+    pub luts_pct: f64,
+    /// FP multiplier core instances (27 DSP = 9 cores × 3).
+    pub mult_cores: usize,
+    /// FP divider core instances.
+    pub div_cores: usize,
+    /// Adder/subtractor core instances.
+    pub addsub_cores: usize,
+    pub device: &'static str,
+}
+
+impl OccupationReport {
+    /// Analyze a netlist against a device.
+    pub fn analyze(nl: &Netlist, device: Virtex6) -> Self {
+        let model = ResourceModel;
+        let mut total = ResourceCost::default();
+        let mut mult_cores = 0;
+        let mut div_cores = 0;
+        let mut addsub_cores = 0;
+        for c in nl.components() {
+            let cost = model.cost(&c.kind);
+            total.dsp += cost.dsp;
+            total.lut += cost.lut;
+            total.ff += cost.ff;
+            match c.kind {
+                CompKind::Mult => mult_cores += 1,
+                CompKind::Div => div_cores += 1,
+                CompKind::Add | CompKind::Sub => addsub_cores += 1,
+                _ => {}
+            }
+        }
+        OccupationReport {
+            multipliers: total.dsp,
+            registers: total.ff,
+            luts: total.lut,
+            multipliers_pct: 100.0 * total.dsp as f64 / device.dsp48e1 as f64,
+            registers_pct: 100.0 * total.ff as f64 / device.ffs as f64,
+            luts_pct: 100.0 * total.lut as f64 / device.luts as f64,
+            mult_cores,
+            div_cores,
+            addsub_cores,
+            device: device.name,
+        }
+    }
+
+    /// Render in the paper's Table 3 shape.
+    pub fn render_table3(&self) -> String {
+        format!(
+            "Table 3: Hardware occupation ({})\n\
+             | Multipliers | Registers | n_LUT |\n\
+             |-------------|-----------|-------|\n\
+             | {} ({:.0}%) | {} (<{:.0}%) | {} ({:.0}%) |\n",
+            self.device,
+            self.multipliers,
+            self.multipliers_pct.floor(), // paper prints floored percents
+            self.registers,
+            self.registers_pct.max(1.0).ceil(),
+            self.luts,
+            self.luts_pct.floor(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::TedaRtl;
+
+    #[test]
+    fn n2_reproduces_table3() {
+        // The paper's Table 3: 27 multipliers (3%), 414 registers (<1%),
+        // 11 567 LUT (7%). Validation bar (DESIGN.md §5): multipliers and
+        // LUTs exact, registers within 1%.
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let rep =
+            OccupationReport::analyze(rtl.netlist(), Virtex6::xc6vlx240t());
+        assert_eq!(rep.multipliers, 27, "DSP mismatch");
+        assert_eq!(rep.luts, 11_567, "LUT mismatch");
+        let reg_err =
+            (rep.registers as f64 - 414.0).abs() / 414.0;
+        assert!(reg_err < 0.01, "registers {} vs 414", rep.registers);
+        // Occupation percentages as printed in the paper.
+        assert!((rep.multipliers_pct - 3.5).abs() < 1.0); // "3%"
+        assert!(rep.registers_pct < 1.0); // "<1%"
+        assert!((rep.luts_pct - 7.0).abs() < 1.0); // "7%"
+        assert_eq!(rep.mult_cores, 9);
+        assert_eq!(rep.div_cores, 4);
+    }
+
+    #[test]
+    fn occupation_scales_with_n() {
+        let small = OccupationReport::analyze(
+            TedaRtl::new(1, 3.0).unwrap().netlist(),
+            Virtex6::xc6vlx240t(),
+        );
+        let big = OccupationReport::analyze(
+            TedaRtl::new(8, 3.0).unwrap().netlist(),
+            Virtex6::xc6vlx240t(),
+        );
+        assert!(big.multipliers > small.multipliers);
+        assert!(big.luts > small.luts);
+        assert!(big.registers > small.registers);
+        // Multipliers follow 3·(3N+3).
+        assert_eq!(small.multipliers, 3 * (3 + 3));
+        assert_eq!(big.multipliers, 3 * (27));
+    }
+
+    #[test]
+    fn table3_renders() {
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let rep =
+            OccupationReport::analyze(rtl.netlist(), Virtex6::xc6vlx240t());
+        let s = rep.render_table3();
+        assert!(s.contains("27"));
+        assert!(s.contains("11567") || s.contains("11 567"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Timing model → Table 4 (processing time) via static timing analysis
+//! over the netlist.
+//!
+//! Combinational delay coefficients are in the `synth` module docs. The
+//! analysis computes, for every wire, the worst-case arrival time from
+//! any register/counter/input source, and takes the maximum over all
+//! register inputs and outputs — the classic register-to-register
+//! critical path. The pipeline algebra then follows the paper exactly:
+//! `t_TEDA = t_c` (Eq. 8), `d = 3·t_c` (Eq. 7), `th = 1/t_TEDA` (Eq. 9).
+
+use crate::rtl::{CompKind, Netlist};
+
+/// Combinational delay of one component traversal (ns).
+pub fn comp_delay(kind: &CompKind) -> f64 {
+    match kind {
+        CompKind::Mult => 16.0,
+        CompKind::Add | CompKind::Sub => 24.0,
+        CompKind::Div => 90.0,
+        CompKind::CompEqConst(_) | CompKind::CompGt => 6.0,
+        CompKind::Mux => 2.0,
+        CompKind::Half => 1.0,
+        // Source delay: counter register → int-to-float converters.
+        CompKind::Counter => 6.0,
+        CompKind::Reg { .. } | CompKind::Const(_) => 0.0,
+    }
+}
+
+/// Critical-path result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingReport {
+    /// Critical path t_c in ns.
+    pub critical_ns: f64,
+    /// Instance names along the critical path (source → sink).
+    pub path: Vec<String>,
+}
+
+/// Static timing analysis: longest combinational path in ns.
+pub fn critical_path(nl: &Netlist) -> TimingReport {
+    // Arrival time per wire + the component that set it (for the path
+    // walk-back).
+    let n_wires = nl
+        .components()
+        .iter()
+        .flat_map(|c| c.outputs.iter().chain(c.inputs.iter()))
+        .max()
+        .map(|&w| w + 1)
+        .unwrap_or(0);
+    let mut arrival = vec![0.0f64; n_wires];
+    let mut setter: Vec<Option<usize>> = vec![None; n_wires];
+
+    let mut best = (0.0f64, None::<usize>);
+    for (ci, c) in nl.components().iter().enumerate() {
+        match c.kind {
+            CompKind::Reg { .. } | CompKind::Const(_) => {
+                // Outputs launch at t=0 (register clock-to-out folded
+                // into the coefficients).
+                for &o in &c.outputs {
+                    arrival[o] = 0.0;
+                    setter[o] = Some(ci);
+                }
+                // Register *inputs* are path endpoints.
+                for &i in &c.inputs {
+                    if arrival[i] > best.0 {
+                        best = (arrival[i], setter[i]);
+                    }
+                }
+            }
+            CompKind::Counter => {
+                for &o in &c.outputs {
+                    arrival[o] = comp_delay(&c.kind);
+                    setter[o] = Some(ci);
+                }
+            }
+            _ => {
+                let worst_in = c
+                    .inputs
+                    .iter()
+                    .map(|&i| arrival[i])
+                    .fold(0.0f64, f64::max);
+                let t = worst_in + comp_delay(&c.kind);
+                for &o in &c.outputs {
+                    arrival[o] = t;
+                    setter[o] = Some(ci);
+                }
+                if t > best.0 {
+                    best = (t, Some(ci));
+                }
+            }
+        }
+    }
+    // Also terminate at register inputs scanned after all components
+    // (registers whose input was produced later in netlist order).
+    for c in nl.components() {
+        if matches!(c.kind, CompKind::Reg { .. }) {
+            for &i in &c.inputs {
+                if arrival[i] > best.0 {
+                    best = (arrival[i], setter[i]);
+                }
+            }
+        }
+    }
+
+    // Walk back the critical path.
+    let mut path = Vec::new();
+    let mut cur = best.1;
+    let comps = nl.components();
+    let mut guard = 0;
+    while let Some(ci) = cur {
+        path.push(comps[ci].name.clone());
+        let c = &comps[ci];
+        cur = c
+            .inputs
+            .iter()
+            .max_by(|&&a, &&b| arrival[a].partial_cmp(&arrival[b]).unwrap())
+            .and_then(|&w| setter[w])
+            .filter(|_| {
+                !matches!(c.kind, CompKind::Reg { .. } | CompKind::Const(_))
+            });
+        guard += 1;
+        if guard > comps.len() {
+            break;
+        }
+    }
+    path.reverse();
+    TimingReport { critical_ns: best.0, path }
+}
+
+/// Table 4 replica: the pipeline-time algebra of Eqs. 7–9.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineTiming {
+    /// Critical path t_c (ns).
+    pub critical_ns: f64,
+    /// Initial delay d = 3·t_c (ns, Eq. 7).
+    pub delay_ns: f64,
+    /// Steady-state per-sample time t_TEDA = t_c (ns, Eq. 8).
+    pub teda_time_ns: f64,
+    /// Throughput 1/t_TEDA in samples/s (Eq. 9).
+    pub throughput_sps: f64,
+}
+
+impl PipelineTiming {
+    /// Derive the full Table 4 row from a critical path.
+    pub fn from_critical(critical_ns: f64) -> Self {
+        PipelineTiming {
+            critical_ns,
+            delay_ns: 3.0 * critical_ns,
+            teda_time_ns: critical_ns,
+            throughput_sps: 1e9 / critical_ns,
+        }
+    }
+
+    /// Analyze a netlist end-to-end.
+    pub fn analyze(nl: &Netlist) -> Self {
+        Self::from_critical(critical_path(nl).critical_ns)
+    }
+
+    /// Render in the paper's Table 4 shape.
+    pub fn render_table4(&self) -> String {
+        format!(
+            "Table 4: Processing time\n\
+             | Critical time | Delay | TEDA time | Throughput |\n\
+             |---------------|-------|-----------|------------|\n\
+             | {:.0} ns | {:.0} ns | {:.0} ns | {:.1} MSPS |\n",
+            self.critical_ns,
+            self.delay_ns,
+            self.teda_time_ns,
+            self.throughput_sps / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtl::TedaRtl;
+
+    #[test]
+    fn n2_reproduces_table4() {
+        // Paper: t_c = 138 ns, d = 414 ns, t_TEDA = 138 ns, 7.2 MSPS.
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let t = PipelineTiming::analyze(rtl.netlist());
+        assert_eq!(t.critical_ns, 138.0);
+        assert_eq!(t.delay_ns, 414.0);
+        assert_eq!(t.teda_time_ns, 138.0);
+        assert!((t.throughput_sps / 1e6 - 7.246).abs() < 0.05);
+    }
+
+    #[test]
+    fn critical_path_is_the_mean_stage() {
+        // counter → D1 (1/k) → MMULT2n → MSUMn → MMUXn (→ MREGn)
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let tr = critical_path(rtl.netlist());
+        assert_eq!(tr.critical_ns, 138.0);
+        let joined = tr.path.join(" ");
+        assert!(joined.contains("KCNT"), "path: {joined}");
+        assert!(joined.contains("D1"), "path: {joined}");
+        assert!(joined.contains("MMULT2"), "path: {joined}");
+        assert!(joined.contains("MSUM"), "path: {joined}");
+    }
+
+    #[test]
+    fn eq7_eq8_eq9_algebra() {
+        let t = PipelineTiming::from_critical(100.0);
+        assert_eq!(t.delay_ns, 300.0);
+        assert_eq!(t.teda_time_ns, 100.0);
+        assert_eq!(t.throughput_sps, 1e7);
+    }
+
+    #[test]
+    fn wide_n_moves_critical_path_to_variance() {
+        // The VSUM1 adder chain grows with N; beyond N≈3 the VARIANCE
+        // stage overtakes MEAN — the scaling insight the synthesizable
+        // model adds beyond the paper's single N=2 data point.
+        let t2 = PipelineTiming::analyze(TedaRtl::new(2, 3.0).unwrap().netlist());
+        let t8 = PipelineTiming::analyze(TedaRtl::new(8, 3.0).unwrap().netlist());
+        assert!(t8.critical_ns > t2.critical_ns);
+        let tr8 = critical_path(TedaRtl::new(8, 3.0).unwrap().netlist());
+        assert!(tr8.path.join(" ").contains("VSUM1"));
+    }
+
+    #[test]
+    fn table4_renders() {
+        let rtl = TedaRtl::new(2, 3.0).unwrap();
+        let s = PipelineTiming::analyze(rtl.netlist()).render_table4();
+        assert!(s.contains("138 ns"));
+        assert!(s.contains("414 ns"));
+        assert!(s.contains("7.2 MSPS"));
+    }
+}

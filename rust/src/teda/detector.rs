@@ -1,0 +1,167 @@
+//! User-facing streaming TEDA detector.
+
+use super::{TedaState, TedaStep};
+
+/// Classification verdict for one sample, as emitted by [`TedaDetector`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Verdict {
+    /// Sample index `k` (1-based, as in the paper).
+    pub k: u64,
+    /// Eccentricity `ξ_k`.
+    pub eccentricity: f64,
+    /// Normalized eccentricity `ζ_k`.
+    pub zeta: f64,
+    /// The `(m²+1)/(2k)` threshold the sample was compared to.
+    pub threshold: f64,
+    /// `true` iff Algorithm 1 classified the sample as an outlier.
+    pub outlier: bool,
+}
+
+/// Streaming TEDA anomaly detector over `R^N` samples (Algorithm 1).
+///
+/// Owns a [`TedaState<f64>`] plus the comparison threshold `m`, and keeps
+/// simple detection counters. This is the reference "software platform"
+/// implementation used in the paper's Table 5 comparison, and the oracle
+/// against which the RTL and XLA engines are validated.
+///
+/// ```
+/// use teda_fpga::teda::TedaDetector;
+/// let mut det = TedaDetector::new(1, 3.0);
+/// for _ in 0..50 { det.step(&[0.0]); }
+/// assert!(det.step(&[1000.0]).outlier);
+/// ```
+#[derive(Debug, Clone)]
+pub struct TedaDetector {
+    state: TedaState<f64>,
+    m: f64,
+    n_outliers: u64,
+}
+
+impl TedaDetector {
+    /// New detector for `n_features`-dimensional samples with Chebyshev
+    /// multiplier `m` (the paper uses `m = 3`).
+    ///
+    /// # Panics
+    /// Panics if `n_features == 0` or `m <= 0` (Eq. 6 requires `m > 0`).
+    pub fn new(n_features: usize, m: f64) -> Self {
+        assert!(n_features > 0, "TEDA needs at least one feature");
+        assert!(m > 0.0, "Eq. 6 requires m > 0, got {m}");
+        TedaDetector { state: TedaState::new(n_features), m, n_outliers: 0 }
+    }
+
+    /// Absorb one sample and classify it.
+    pub fn step(&mut self, x: &[f64]) -> Verdict {
+        let out: TedaStep<f64> = self.state.step(x, self.m);
+        if out.outlier {
+            self.n_outliers += 1;
+        }
+        Verdict {
+            k: self.state.k,
+            eccentricity: out.eccentricity,
+            zeta: out.zeta,
+            threshold: out.threshold,
+            outlier: out.outlier,
+        }
+    }
+
+    /// Run a whole slice of samples, returning one verdict per sample.
+    pub fn run(&mut self, samples: &[Vec<f64>]) -> Vec<Verdict> {
+        samples.iter().map(|s| self.step(s)).collect()
+    }
+
+    /// Samples absorbed so far.
+    pub fn k(&self) -> u64 {
+        self.state.k
+    }
+
+    /// Outliers flagged so far.
+    pub fn n_outliers(&self) -> u64 {
+        self.n_outliers
+    }
+
+    /// Chebyshev multiplier `m`.
+    pub fn m(&self) -> f64 {
+        self.m
+    }
+
+    /// Current running mean (read-only view).
+    pub fn mean(&self) -> &[f64] {
+        &self.state.mean
+    }
+
+    /// Current running variance σ²_k.
+    pub fn variance(&self) -> f64 {
+        self.state.var
+    }
+
+    /// Reset to a fresh stream (keeps N and m).
+    pub fn reset(&mut self) {
+        self.state.reset();
+        self.n_outliers = 0;
+    }
+
+    /// Snapshot of the internal state (for checkpointing in the
+    /// coordinator's state manager).
+    pub fn state(&self) -> &TedaState<f64> {
+        &self.state
+    }
+
+    /// Restore from a snapshot.
+    ///
+    /// # Panics
+    /// Panics if the snapshot dimensionality differs from this detector's.
+    pub fn restore(&mut self, state: TedaState<f64>) {
+        assert_eq!(state.n_features(), self.state.n_features());
+        self.state = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_track_outliers() {
+        let mut det = TedaDetector::new(1, 3.0);
+        let mut rng = crate::util::prng::SplitMix64::new(11);
+        for _ in 0..500 {
+            det.step(&[rng.next_f64()]);
+        }
+        let before = det.n_outliers();
+        let v = det.step(&[1e6]);
+        assert!(v.outlier);
+        assert_eq!(det.n_outliers(), before + 1);
+        assert_eq!(det.k(), 501);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut a = TedaDetector::new(2, 3.0);
+        let mut rng = crate::util::prng::SplitMix64::new(5);
+        for _ in 0..100 {
+            a.step(&[rng.next_f64(), rng.next_f64()]);
+        }
+        let snap = a.state().clone();
+        let mut b = TedaDetector::new(2, 3.0);
+        b.restore(snap);
+        let x = [0.33, 0.44];
+        assert_eq!(a.step(&x), b.step(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "m > 0")]
+    fn zero_m_rejected() {
+        TedaDetector::new(1, 0.0);
+    }
+
+    #[test]
+    fn run_matches_step() {
+        let samples: Vec<Vec<f64>> = (0..32).map(|i| vec![i as f64 * 0.1]).collect();
+        let mut a = TedaDetector::new(1, 3.0);
+        let verdicts = a.run(&samples);
+        let mut b = TedaDetector::new(1, 3.0);
+        for (s, v) in samples.iter().zip(verdicts) {
+            assert_eq!(b.step(s), v);
+        }
+    }
+}

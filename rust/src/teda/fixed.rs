@@ -1,0 +1,283 @@
+//! Fixed-point TEDA — the ablation the paper's §5.2.1 invites.
+//!
+//! The paper implements the datapath in floating point and notes that a
+//! fixed-point implementation "demands less hardware resources"; related
+//! FPGA detectors ([20], [21] in its bibliography) chose fixed point.
+//! This module quantifies the other side of that trade: what a Qm.n
+//! datapath does to detection quality.
+//!
+//! [`Q16_16`] is a 32-bit Q16.16 signed fixed-point scalar with
+//! round-to-nearest on multiply/divide (64-bit intermediates, saturating
+//! pack — the behaviour of a DSP48E1 multiplier followed by a saturating
+//! shift). [`TedaFixed`] runs Algorithm 1 entirely in that format; the
+//! `fixed_point_ablation` test (and the EXPERIMENTS.md §Ablations row)
+//! compares its flags against the f64 reference on the DAMADICS
+//! workload.
+
+/// Q16.16 signed fixed point (range ±32768, resolution ≈ 1.5e-5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q16_16(pub i32);
+
+impl Q16_16 {
+    pub const FRAC_BITS: u32 = 16;
+    pub const ONE: Q16_16 = Q16_16(1 << 16);
+    pub const ZERO: Q16_16 = Q16_16(0);
+    pub const MAX: Q16_16 = Q16_16(i32::MAX);
+
+    /// Quantize an f64 (round-to-nearest, saturating).
+    pub fn from_f64(v: f64) -> Self {
+        let scaled = (v * (1i64 << Self::FRAC_BITS) as f64).round();
+        Q16_16(scaled.clamp(i32::MIN as f64, i32::MAX as f64) as i32)
+    }
+
+    /// Back to f64 (exact).
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / (1i64 << Self::FRAC_BITS) as f64
+    }
+
+    /// Saturating add.
+    #[inline]
+    pub fn add(self, rhs: Self) -> Self {
+        Q16_16(self.0.saturating_add(rhs.0))
+    }
+
+    /// Saturating subtract.
+    #[inline]
+    pub fn sub(self, rhs: Self) -> Self {
+        Q16_16(self.0.saturating_sub(rhs.0))
+    }
+
+    /// Round-to-nearest multiply (64-bit intermediate, saturating pack).
+    #[inline]
+    pub fn mul(self, rhs: Self) -> Self {
+        let wide = self.0 as i64 * rhs.0 as i64;
+        let rounded = (wide + (1i64 << (Self::FRAC_BITS - 1)))
+            >> Self::FRAC_BITS;
+        Q16_16(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+    }
+
+    /// Round-to-nearest divide (returns MAX on division by zero, like a
+    /// saturating hardware divider's overflow flag).
+    #[inline]
+    pub fn div(self, rhs: Self) -> Self {
+        if rhs.0 == 0 {
+            return if self.0 >= 0 { Self::MAX } else { Q16_16(i32::MIN) };
+        }
+        let num = (self.0 as i64) << Self::FRAC_BITS;
+        let d = rhs.0 as i64;
+        // Round half away from zero on magnitudes.
+        let neg = (num < 0) != (d < 0);
+        let (an, ad) = (num.unsigned_abs(), d.unsigned_abs());
+        let q = ((an + ad / 2) / ad) as i64;
+        let q = if neg { -q } else { q };
+        Q16_16(q.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+    }
+
+    /// Divide by an *integer* (the sample counter k lives in the integer
+    /// counter domain — Q16.16 itself saturates at 32 768, far below a
+    /// day of samples).
+    #[inline]
+    pub fn div_int(self, k: u64) -> Self {
+        if k == 0 {
+            return Self::MAX;
+        }
+        let num = self.0 as i64;
+        let neg = num < 0;
+        let q = ((num.unsigned_abs() + k / 2) / k) as i64;
+        Q16_16((if neg { -q } else { q }) as i32)
+    }
+
+    /// Multiply by an integer, saturating.
+    #[inline]
+    pub fn mul_int(self, k: u64) -> Self {
+        let wide = self.0 as i64 * k as i64;
+        Q16_16(wide.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+    }
+
+    /// 1/k as Q16.16 (round-to-nearest).
+    #[inline]
+    pub fn recip_int(k: u64) -> Self {
+        Self::ONE.div_int(k)
+    }
+
+    /// (k−1)/k as Q16.16.
+    #[inline]
+    pub fn ratio_int(k: u64) -> Self {
+        if k == 0 {
+            return Self::ZERO;
+        }
+        let num = (k - 1) << Self::FRAC_BITS;
+        Q16_16(((num + k / 2) / k).min(i32::MAX as u64) as i32)
+    }
+
+    /// Exact halving (arithmetic shift — the ODIV1 analogue).
+    #[inline]
+    pub fn half(self) -> Self {
+        Q16_16(self.0 >> 1)
+    }
+}
+
+/// TEDA state with the entire datapath in Q16.16.
+#[derive(Debug, Clone)]
+pub struct TedaFixed {
+    mean: Vec<Q16_16>,
+    var: Q16_16,
+    k: u64,
+    m2_plus_1_half: Q16_16, // (m²+1)/2, the OUTLIER-module constant
+}
+
+/// One fixed-point step result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FixedStep {
+    pub zeta: Q16_16,
+    pub threshold: Q16_16,
+    pub outlier: bool,
+}
+
+impl TedaFixed {
+    /// New detector; `m` is quantized once into the threshold constant.
+    pub fn new(n_features: usize, m: f64) -> Self {
+        assert!(n_features > 0 && m > 0.0);
+        TedaFixed {
+            mean: vec![Q16_16::ZERO; n_features],
+            var: Q16_16::ZERO,
+            k: 0,
+            m2_plus_1_half: Q16_16::from_f64((m * m + 1.0) * 0.5),
+        }
+    }
+
+    /// Samples absorbed.
+    pub fn k(&self) -> u64 {
+        self.k
+    }
+
+    /// Algorithm 1 in fixed point (same op order as the RTL datapath).
+    pub fn step(&mut self, x: &[f64]) -> FixedStep {
+        assert_eq!(x.len(), self.mean.len());
+        self.k += 1;
+        let k = self.k;
+        // k stays in the integer counter domain (a Q16.16 k would
+        // saturate at 32 768 — less than half a DAMADICS day).
+        let inv_k = Q16_16::recip_int(k);
+        let ratio = Q16_16::ratio_int(k);
+        let xq: Vec<Q16_16> = x.iter().map(|&v| Q16_16::from_f64(v)).collect();
+
+        if k == 1 {
+            self.mean.copy_from_slice(&xq);
+            self.var = Q16_16::ZERO;
+            return FixedStep {
+                zeta: Q16_16::ONE.half(),
+                threshold: self.m2_plus_1_half,
+                outlier: false,
+            };
+        }
+        for (mu, &xi) in self.mean.iter_mut().zip(&xq) {
+            *mu = mu.mul(ratio).add(xi.mul(inv_k));
+        }
+        let mut sq = Q16_16::ZERO;
+        for (mu, &xi) in self.mean.iter().zip(&xq) {
+            let d = xi.sub(*mu);
+            sq = sq.add(d.mul(d));
+        }
+        self.var = self.var.mul(ratio).add(sq.mul(inv_k));
+        let ecc = if self.var > Q16_16::ZERO {
+            inv_k.add(sq.div(self.var.mul_int(k)))
+        } else {
+            inv_k
+        };
+        let zeta = ecc.half();
+        let threshold = self.m2_plus_1_half.div_int(k);
+        FixedStep { zeta, threshold, outlier: zeta > threshold }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::damadics::{schedule_item, ActuatorSim};
+    use crate::teda::chebyshev_threshold;
+    use crate::teda::TedaDetector;
+    use crate::util::prng::SplitMix64;
+
+    #[test]
+    fn q16_16_roundtrip_and_arith() {
+        let a = Q16_16::from_f64(1.5);
+        let b = Q16_16::from_f64(-0.25);
+        assert_eq!(a.to_f64(), 1.5);
+        assert_eq!(a.mul(b).to_f64(), -0.375);
+        assert_eq!(a.add(b).to_f64(), 1.25);
+        assert_eq!(a.div(b).to_f64(), -6.0);
+        assert_eq!(a.half().to_f64(), 0.75);
+    }
+
+    #[test]
+    fn q16_16_saturates_not_wraps() {
+        let big = Q16_16::from_f64(30000.0);
+        assert_eq!(big.mul(big), Q16_16::MAX);
+        assert_eq!(Q16_16::ONE.div(Q16_16::ZERO), Q16_16::MAX);
+    }
+
+    #[test]
+    fn quantization_resolution() {
+        // Anything below 2^-17 quantizes to 0 or 1 ulp.
+        let tiny = Q16_16::from_f64(1e-6);
+        assert!(tiny.0 <= 1);
+    }
+
+    #[test]
+    fn fixed_point_ablation_flags_against_f64() {
+        // The EXPERIMENTS.md §Ablations row: Q16.16 vs f64 on random
+        // unit-scale streams. Fixed point must agree on the easy
+        // decisions; disagreements concentrate near the threshold.
+        let mut fixed = TedaFixed::new(2, 3.0);
+        let mut float = TedaDetector::new(2, 3.0);
+        let mut rng = SplitMix64::new(17);
+        let mut diff = 0u32;
+        let total = 5_000u32;
+        for _ in 0..total {
+            let x = [rng.next_f64(), rng.next_f64()];
+            let a = fixed.step(&x);
+            let b = float.step(&x);
+            if a.outlier != b.outlier {
+                diff += 1;
+            }
+        }
+        assert!(
+            (diff as f64) < 0.02 * total as f64,
+            "fixed/float disagreement {diff}/{total}"
+        );
+    }
+
+    #[test]
+    fn fixed_point_detects_damadics_fault() {
+        // The practical question: does the cheaper datapath still catch
+        // the paper's faults? (Answer: yes for the abrupt f18 — the
+        // eccentricity excursion is far above quantization noise.)
+        let event = schedule_item(1).unwrap();
+        let trace = ActuatorSim::with_seed(2001).generate_day(Some(&event));
+        let mut det = TedaFixed::new(2, 3.0);
+        let mut hits = 0;
+        for (i, s) in trace.samples.iter().enumerate() {
+            let v = det.step(s);
+            if v.outlier && event.contains(i) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 0, "fixed-point TEDA missed the f18 fault");
+    }
+
+    #[test]
+    fn fixed_threshold_decays_like_5_over_k() {
+        let mut det = TedaFixed::new(1, 3.0);
+        for i in 0..100 {
+            let v = det.step(&[i as f64 * 0.01]);
+            let want = chebyshev_threshold(3.0f64, det.k());
+            let got = v.threshold.to_f64();
+            assert!(
+                (got - want).abs() < 2e-4 + want * 1e-3,
+                "k={}: {got} vs {want}",
+                det.k()
+            );
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Core TEDA algorithm — Typicality and Eccentricity Data Analytics.
+//!
+//! Implements Algorithm 1 of the paper via the recursive statistics of
+//! Eqs. 1–6:
+//!
+//! - mean (Eq. 2):        `μ_k = (k-1)/k · μ_{k-1} + 1/k · x_k`
+//! - variance (Eq. 3):    `σ²_k = (k-1)/k · σ²_{k-1} + 1/k · ‖x_k − μ_k‖²`
+//! - eccentricity (Eq. 1): `ξ_k = 1/k + ‖μ_k − x_k‖² / (k · σ²_k)`
+//! - typicality (Eq. 4):  `τ_k = 1 − ξ_k`
+//! - normalized ecc (Eq. 5): `ζ_k = ξ_k / 2`
+//! - outlier test (Eq. 6, Chebyshev): `ζ_k > (m² + 1) / (2k)`
+//!
+//! Two entry points:
+//! - [`TedaState`] / [`TedaStep`]: the raw recurrence, generic over f32/f64
+//!   ([`Real`]), exactly mirroring what the RTL pipeline computes — this is
+//!   the bit-level oracle for `rtl`'s pipeline.
+//! - [`TedaDetector`]: the user-facing streaming detector (f64, owns its
+//!   state, exposes verdicts).
+
+mod detector;
+pub mod fixed;
+mod state;
+
+pub use detector::{TedaDetector, Verdict};
+pub use fixed::{FixedStep, Q16_16, TedaFixed};
+pub use state::{TedaState, TedaStep};
+
+use num_traits::Float;
+
+/// Scalar trait for TEDA arithmetic: `f32` (bit-matches the RTL float
+/// cores) or `f64` (software reference precision).
+pub trait Real:
+    Float + std::fmt::Debug + std::fmt::Display + Default + Send + Sync + 'static
+{
+    /// Lossless-enough conversion from a sample index.
+    fn from_k(k: u64) -> Self;
+}
+
+impl Real for f32 {
+    #[inline]
+    fn from_k(k: u64) -> Self {
+        k as f32
+    }
+}
+
+impl Real for f64 {
+    #[inline]
+    fn from_k(k: u64) -> Self {
+        k as f64
+    }
+}
+
+/// The Chebyshev comparison threshold of Eq. 6: `(m² + 1) / (2k)`.
+///
+/// For `m = 3` this is the `5/k` curve drawn in Figs. 6–7.
+#[inline]
+pub fn chebyshev_threshold<T: Real>(m: T, k: u64) -> T {
+    let two = T::one() + T::one();
+    (m * m + T::one()) / (two * T::from_k(k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chebyshev_m3_is_5_over_k() {
+        // The paper plots the m=3 threshold as 5/k (Figs. 6-7 captions).
+        for k in 1..2000u64 {
+            let t = chebyshev_threshold(3.0f64, k);
+            assert!((t - 5.0 / k as f64).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_decreases_with_k() {
+        let mut prev = f64::INFINITY;
+        for k in 1..100 {
+            let t = chebyshev_threshold(3.0f64, k);
+            assert!(t < prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal criterion-style bench harness (no crates.io in this build
+//! environment, so `criterion` is replaced by this module; benches are
+//! declared with `harness = false` and call [`Bench::run`]).
+//!
+//! Method: warmup, then fixed-count timed iterations, reporting
+//! min / p50 / mean / p95 / max per-iteration wall time plus derived
+//! throughput. A `black_box` re-export prevents the optimizer from
+//! deleting the measured work.
+
+use std::time::{Duration, Instant};
+
+/// Re-export of the standard black box.
+pub use std::hint::black_box;
+
+/// One benchmark's configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Report label.
+    pub name: String,
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Number of timed iterations.
+    pub iters: usize,
+    /// Work units per iteration (samples, cycles...) for throughput lines.
+    pub units_per_iter: u64,
+    /// Name of the unit for the throughput line (e.g. "samples").
+    pub unit: &'static str,
+}
+
+/// Result of a bench run.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub p50: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+    /// Units processed per second, from the mean iteration time.
+    pub throughput: f64,
+    pub unit: &'static str,
+    /// Per-unit latency from the mean (ns).
+    pub ns_per_unit: f64,
+}
+
+impl Bench {
+    /// New bench with sane defaults: 0.3 s warmup, 50 iterations, 1 unit.
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup: Duration::from_millis(300),
+            iters: 50,
+            units_per_iter: 1,
+            unit: "iter",
+        }
+    }
+
+    /// Builder: timed iteration count.
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n.max(1);
+        self
+    }
+
+    /// Builder: warmup budget.
+    pub fn warmup(mut self, d: Duration) -> Self {
+        self.warmup = d;
+        self
+    }
+
+    /// Builder: declare throughput units.
+    pub fn units(mut self, per_iter: u64, unit: &'static str) -> Self {
+        self.units_per_iter = per_iter;
+        self.unit = unit;
+        self
+    }
+
+    /// Run `f` (one call = one iteration) and print + return the report.
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchReport {
+        // Warmup until the budget is spent (at least one call).
+        let wstart = Instant::now();
+        loop {
+            f();
+            if wstart.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let total: Duration = times.iter().sum();
+        let mean = total / self.iters as u32;
+        let pct = |p: f64| times[((times.len() - 1) as f64 * p) as usize];
+        let ns_per_unit =
+            mean.as_nanos() as f64 / self.units_per_iter.max(1) as f64;
+        let report = BenchReport {
+            name: self.name,
+            iters: self.iters,
+            min: times[0],
+            p50: pct(0.50),
+            mean,
+            p95: pct(0.95),
+            max: *times.last().unwrap(),
+            throughput: 1e9 / ns_per_unit * 1.0,
+            unit: self.unit,
+            ns_per_unit,
+        };
+        println!("{report}");
+        report
+    }
+}
+
+impl std::fmt::Display for BenchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} iters={:<4} min={:>10.3?} p50={:>10.3?} mean={:>10.3?} p95={:>10.3?} | {:>12.1} {}/s ({:.1} ns/{})",
+            self.name,
+            self.iters,
+            self.min,
+            self.p50,
+            self.mean,
+            self.p95,
+            self.throughput,
+            self.unit,
+            self.ns_per_unit,
+            self.unit,
+        )
+    }
+}
+
+/// Format a nanosecond quantity with an adaptive unit (for tables).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_percentiles() {
+        let r = Bench::new("noop")
+            .warmup(Duration::from_millis(1))
+            .iters(20)
+            .units(100, "ops")
+            .run(|| {
+                black_box((0..100).sum::<u64>());
+            });
+        assert!(r.min <= r.p50 && r.p50 <= r.p95 && r.p95 <= r.max);
+        assert!(r.throughput > 0.0);
+        assert_eq!(r.unit, "ops");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with(" s"));
+    }
+}

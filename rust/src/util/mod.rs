@@ -1,0 +1,10 @@
+//! Support kit: deterministic PRNGs, the bench harness, and the
+//! property-test sweep helper.
+//!
+//! The build environment has no crates.io access, so the usual suspects
+//! (`rand`, `criterion`, `proptest`) are replaced by small, auditable
+//! in-repo equivalents (see DESIGN.md §3 "No-network substitutions").
+
+pub mod benchkit;
+pub mod prng;
+pub mod propkit;

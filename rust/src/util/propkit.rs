@@ -1,0 +1,157 @@
+//! Property-test sweep helper (in-repo stand-in for `proptest`; see
+//! DESIGN.md §3).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The
+//! runner executes it for `cases` distinct seeds; a failing case panics
+//! with its seed so the exact input is reproducible with
+//! `Gen::from_seed(seed)`. No shrinking — generated inputs are kept small
+//! and the seed is enough to debug.
+
+use super::prng::SplitMix64;
+
+/// Seeded value source handed to each property case.
+pub struct Gen {
+    rng: SplitMix64,
+    seed: u64,
+}
+
+impl Gen {
+    /// Rebuild the generator a failing case printed.
+    pub fn from_seed(seed: u64) -> Self {
+        Gen { rng: SplitMix64::new(seed), seed }
+    }
+
+    /// The case's seed (printed on failure).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform u64 below `n`.
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vector of uniform f64 samples.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// A batch of `count` N-dimensional samples (uniform in `[lo, hi)`).
+    pub fn samples(
+        &mut self,
+        count: usize,
+        n: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<Vec<f64>> {
+        (0..count).map(|_| self.vec_f64(n, lo, hi)).collect()
+    }
+
+    /// Standard normal draw.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Access to the raw RNG for anything not covered above.
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Run `property` for `cases` seeded cases. Panics (with the seed) on the
+/// first failing case.
+///
+/// ```
+/// use teda_fpga::util::propkit::forall;
+/// forall("abs is non-negative", 64, |g| {
+///     let x = g.f64_in(-10.0, 10.0);
+///     assert!(x.abs() >= 0.0);
+/// });
+/// ```
+pub fn forall<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut property: F) {
+    // Derive case seeds from the property name so distinct properties
+    // explore distinct inputs, deterministically across runs.
+    let mut root = SplitMix64::new(fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let seed = root.next_u64();
+        let mut gen = Gen::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || property(&mut gen),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (reproduce with Gen::from_seed({seed})): {msg}"
+            );
+        }
+    }
+}
+
+/// FNV-1a 64-bit hash (stable across runs/platforms, unlike `DefaultHasher`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true_property() {
+        forall("sum of squares non-negative", 32, |g| {
+            let v = g.vec_f64(8, -3.0, 3.0);
+            assert!(v.iter().map(|x| x * x).sum::<f64>() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reproduce with Gen::from_seed")]
+    fn forall_reports_seed_on_failure() {
+        forall("always fails", 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn usize_in_is_inclusive() {
+        let mut g = Gen::from_seed(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = g.usize_in(2, 5);
+            assert!((2..=5).contains(&v));
+            seen_lo |= v == 2;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn fnv1a_distinct_names() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

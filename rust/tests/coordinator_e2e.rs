@@ -1,0 +1,187 @@
+//! End-to-end coordinator integration: sources → router → workers →
+//! engines → verdicts, across all three backends, with the same
+//! correctness bar (every sample classified exactly once, per-stream
+//! order preserved, detections match the oracle).
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{EngineKind, ServiceConfig};
+use teda_fpga::coordinator::Service;
+use teda_fpga::damadics::{schedule_item, ActuatorSim};
+use teda_fpga::engine::EngineVerdict;
+use teda_fpga::stream::{ReplaySource, Sample, StreamSource, SyntheticSource};
+use teda_fpga::teda::TedaDetector;
+use teda_fpga::util::propkit::forall;
+
+fn artifacts_present() -> bool {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+fn cfg(engine: EngineKind, workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        engine,
+        workers,
+        n_features: 2,
+        queue_capacity: 128,
+        artifact_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        ..Default::default()
+    }
+}
+
+/// Drive `streams`×`per_stream` synthetic samples through a service and
+/// index verdicts by (stream, seq), asserting exactly-once delivery.
+fn drive(
+    engine: EngineKind,
+    workers: usize,
+    streams: u64,
+    per_stream: usize,
+) -> BTreeMap<(u64, u64), EngineVerdict> {
+    let svc = Service::start(cfg(engine, workers)).unwrap();
+    let mut sources: Vec<SyntheticSource> = (0..streams)
+        .map(|sid| SyntheticSource::new(sid, 2, per_stream, 42))
+        .collect();
+    // Round-robin interleave, as a fair multi-stream ingress would.
+    loop {
+        let mut any = false;
+        for src in &mut sources {
+            if let Some(s) = src.next_sample() {
+                svc.submit(s).unwrap();
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    let out = svc.finish().unwrap();
+    let mut map = BTreeMap::new();
+    for c in out {
+        let key = (c.verdict.stream_id, c.verdict.seq);
+        assert!(map.insert(key, c.verdict).is_none(), "duplicate {key:?}");
+    }
+    assert_eq!(map.len(), streams as usize * per_stream);
+    map
+}
+
+#[test]
+fn software_service_end_to_end() {
+    let out = drive(EngineKind::Software, 4, 8, 100);
+    // Verdicts must equal a direct per-stream detector run.
+    for sid in 0..8u64 {
+        let mut det = TedaDetector::new(2, 3.0);
+        let mut src = SyntheticSource::new(sid, 2, 100, 42);
+        while let Some(s) = src.next_sample() {
+            let v = det.step(&s.values);
+            let got = &out[&(sid, s.seq)];
+            assert_eq!(got.k, v.k);
+            assert_eq!(got.outlier, v.outlier);
+            assert!((got.zeta - v.zeta).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn rtl_service_end_to_end() {
+    let out = drive(EngineKind::Rtl, 3, 5, 80);
+    // Flags must match the f64 oracle away from k=1.
+    for sid in 0..5u64 {
+        let mut det = TedaDetector::new(2, 3.0);
+        let mut src = SyntheticSource::new(sid, 2, 80, 42);
+        while let Some(s) = src.next_sample() {
+            let v = det.step(&s.values);
+            let got = &out[&(sid, s.seq)];
+            assert_eq!(got.k, v.k);
+            if v.k > 1 {
+                assert_eq!(got.outlier, v.outlier, "sid={sid} k={}", v.k);
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_service_end_to_end() {
+    if !artifacts_present() {
+        eprintln!("artifacts missing — skipping XLA e2e");
+        return;
+    }
+    // 2 workers only: each builds its own PJRT runtime.
+    let out = drive(EngineKind::Xla, 2, 6, 70);
+    let mut flag_diffs = 0usize;
+    for sid in 0..6u64 {
+        let mut det = TedaDetector::new(2, 3.0);
+        let mut src = SyntheticSource::new(sid, 2, 70, 42);
+        while let Some(s) = src.next_sample() {
+            let v = det.step(&s.values);
+            let got = &out[&(sid, s.seq)];
+            assert_eq!(got.k, v.k, "sid={sid} seq={}", s.seq);
+            if got.outlier != v.outlier {
+                flag_diffs += 1; // f32 vs f64 threshold edges only
+            }
+        }
+    }
+    assert!(flag_diffs <= 4, "too many flag diffs: {flag_diffs}");
+}
+
+#[test]
+fn damadics_day_through_service_detects_fault() {
+    // The Fig. 6 workload run through the full service instead of a
+    // bare detector: fault item 1 must still be caught.
+    let event = schedule_item(1).unwrap();
+    let trace = ActuatorSim::with_seed(2001).generate_day(Some(&event));
+    let svc = Service::start(cfg(EngineKind::Software, 2)).unwrap();
+    let mut src = ReplaySource::new(0, trace);
+    while let Some(s) = src.next_sample() {
+        svc.submit(s).unwrap();
+    }
+    let metrics = svc.metrics();
+    let out = svc.finish().unwrap();
+    assert_eq!(out.len(), 86_400);
+    let hits = out
+        .iter()
+        .filter(|c| c.verdict.outlier && event.contains(c.verdict.seq as usize))
+        .count();
+    assert!(hits > 0, "fault not detected through the service");
+    assert_eq!(metrics.verdicts_out.get(), 86_400);
+    assert!(metrics.outliers.get() >= hits as u64);
+}
+
+#[test]
+fn prop_service_exactly_once_any_topology() {
+    forall("service exactly-once", 6, |g| {
+        let workers = g.usize_in(1, 6);
+        let streams = g.usize_in(1, 10) as u64;
+        let per_stream = g.usize_in(1, 60);
+        let map = drive(EngineKind::Software, workers, streams, per_stream);
+        // Sequences are contiguous per stream.
+        for sid in 0..streams {
+            for seq in 0..per_stream as u64 {
+                assert!(map.contains_key(&(sid, seq)), "missing {sid}/{seq}");
+            }
+        }
+    });
+}
+
+#[test]
+fn backpressure_blocks_but_loses_nothing() {
+    // Tiny queues force the backpressure path; every sample must still
+    // come back exactly once.
+    let mut c = cfg(EngineKind::Software, 2);
+    c.queue_capacity = 2;
+    let svc = Service::start(c).unwrap();
+    for seq in 0..2000u64 {
+        for sid in 0..4u64 {
+            svc.submit(Sample {
+                stream_id: sid,
+                seq,
+                values: vec![0.4, 0.6],
+            })
+            .unwrap();
+        }
+    }
+    let metrics = svc.metrics();
+    let out = svc.finish().unwrap();
+    assert_eq!(out.len(), 8000);
+    // With capacity 2 and 8000 fast submits, blocking must have happened.
+    assert!(metrics.backpressure_events.get() > 0);
+}

@@ -1,0 +1,59 @@
+//! Smoke tests for the paper's experiments: every figure/table driver
+//! must produce the paper's qualitative result (DESIGN.md §5 validation
+//! bar). These run the same code paths as the examples, on smaller
+//! budgets where possible.
+
+use teda_fpga::damadics::{
+    actuator1_schedule, evaluate_detection, ActuatorSim,
+};
+use teda_fpga::teda::TedaDetector;
+
+/// Figs. 6–7: for every Table 2 fault item, ζ must cross 5/k inside the
+/// fault window (detection), with a sane false-alarm budget outside.
+#[test]
+fn teda_detects_every_table2_fault() {
+    for event in actuator1_schedule() {
+        let sim = ActuatorSim::with_seed(2001);
+        let trace = sim.generate_day(Some(&event));
+        let mut det = TedaDetector::new(2, 3.0);
+        let flags: Vec<bool> =
+            trace.samples.iter().map(|s| det.step(s).outlier).collect();
+        let report = evaluate_detection(&flags, &event, 1000);
+        assert!(
+            report.detected(),
+            "item {} ({}) not detected",
+            event.item,
+            event.fault
+        );
+        let latency = report.latency.unwrap();
+        assert!(
+            latency < event.len(),
+            "item {}: latency {} ≥ window {}",
+            event.item,
+            latency,
+            event.len()
+        );
+        // The paper's plots show clean normal behaviour before the fault;
+        // allow a modest false-alarm rate (process steps also excite ζ).
+        assert!(
+            report.false_alarm_rate() < 0.05,
+            "item {}: false alarm rate {}",
+            event.item,
+            report.false_alarm_rate()
+        );
+    }
+}
+
+/// Healthy day: no fault window, and the overall flag rate stays small.
+#[test]
+fn healthy_day_low_flag_rate() {
+    let sim = ActuatorSim::with_seed(2002);
+    let trace = sim.generate_day(None);
+    let mut det = TedaDetector::new(2, 3.0);
+    let flags: Vec<bool> =
+        trace.samples.iter().map(|s| det.step(s).outlier).collect();
+    let after_warmup = &flags[1000..];
+    let rate = after_warmup.iter().filter(|&&f| f).count() as f64
+        / after_warmup.len() as f64;
+    assert!(rate < 0.02, "healthy flag rate {rate}");
+}

@@ -1,0 +1,198 @@
+//! Integration: the AOT-compiled JAX/Pallas artifact, loaded through the
+//! PJRT runtime, must agree with the Rust TEDA oracle (f32).
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially with a notice) when artifacts/ is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::teda::TedaState;
+use teda_fpga::util::prng::SplitMix64;
+
+fn artifact_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` — skipping");
+        None
+    }
+}
+
+/// Run one chunk through the artifact and through the f32 oracle; compare.
+fn check_variant(rt: &XlaRuntime, name: &str, seed: u64) {
+    let exe = rt.load(name).expect("load variant");
+    let spec = exe.spec().clone();
+    let (s, n, t) = (spec.s, spec.n, spec.t);
+
+    // Random warm state + chunk.
+    let mut rng = SplitMix64::new(seed);
+    let mu: Vec<f32> =
+        (0..s * n).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+    let var: Vec<f32> = (0..s).map(|_| rng.uniform(0.2, 2.0) as f32).collect();
+    let k: Vec<f32> = (0..s).map(|_| (rng.below(200) + 2) as f32).collect();
+    let x: Vec<f32> =
+        (0..s * t * n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+
+    let outs = exe
+        .run_f32(&[&mu, &var, &k, &x])
+        .expect("execute");
+    let (ecc, zeta, outlier) = (&outs[0], &outs[1], &outs[2]);
+    let (mu2, var2, k2) = (&outs[3], &outs[4], &outs[5]);
+
+    // Oracle: per-stream recursive TEDA in f32.
+    for si in 0..s {
+        let mut st = TedaState::<f32> {
+            mean: mu[si * n..(si + 1) * n].to_vec(),
+            var: var[si],
+            k: k[si] as u64,
+        };
+        for ti in 0..t {
+            let sample = &x[(si * t + ti) * n..(si * t + ti + 1) * n];
+            let step = st.step(sample, spec.m as f32);
+            let idx = si * t + ti;
+            let tol = 1e-3_f32; // fp reassociation XLA-vs-Rust
+            assert!(
+                (ecc[idx] - step.eccentricity).abs()
+                    <= tol * step.eccentricity.abs().max(1.0),
+                "{name} ecc s={si} t={ti}: {} vs {}",
+                ecc[idx],
+                step.eccentricity
+            );
+            assert!(
+                (zeta[idx] - step.zeta).abs() <= tol * step.zeta.abs().max(1.0),
+                "{name} zeta s={si} t={ti}"
+            );
+            // Outlier bits may legitimately differ within fp tolerance of
+            // the threshold; only compare when zeta is clearly away from it.
+            let margin = (step.zeta - step.threshold).abs();
+            if margin > 1e-4 * step.threshold.max(1e-3) {
+                assert_eq!(
+                    outlier[idx] > 0.5,
+                    step.outlier,
+                    "{name} outlier s={si} t={ti} zeta={} thr={}",
+                    step.zeta,
+                    step.threshold
+                );
+            }
+        }
+        // Final state must carry over.
+        for fi in 0..n {
+            let got = mu2[si * n + fi];
+            let want = st.mean[fi];
+            assert!(
+                (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                "{name} mu' s={si} f={fi}: {got} vs {want}"
+            );
+        }
+        assert!(
+            (var2[si] - st.var).abs() <= 1e-3 * st.var.abs().max(1.0),
+            "{name} var' s={si}: {} vs {}",
+            var2[si],
+            st.var
+        );
+        assert_eq!(k2[si] as u64, st.k, "{name} k' s={si}");
+    }
+}
+
+#[test]
+fn artifact_matches_rust_oracle_all_variants() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    assert_eq!(rt.platform(), "cpu");
+    let names: Vec<String> = rt
+        .manifest()
+        .variants
+        .iter()
+        .filter(|v| v.kernel == "pallas")
+        .map(|v| v.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for (i, name) in names.iter().enumerate() {
+        check_variant(&rt, name, 1000 + i as u64);
+    }
+}
+
+#[test]
+fn artifact_fresh_state_first_sample_not_outlier() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let spec = rt.manifest().select(2, 1).expect("n=2 variant").clone();
+    let exe = rt.load(&spec.name).unwrap();
+    let (s, n, t) = (spec.s, spec.n, spec.t);
+    let mu = vec![0f32; s * n];
+    let var = vec![0f32; s];
+    let k = vec![0f32; s];
+    let mut rng = SplitMix64::new(7);
+    let x: Vec<f32> =
+        (0..s * t * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let outs = exe.run_f32(&[&mu, &var, &k, &x]).unwrap();
+    let outlier = &outs[2];
+    for si in 0..s {
+        assert_eq!(outlier[si * t], 0.0, "k=1 must never flag (stream {si})");
+    }
+    // k' must equal t for every stream.
+    for si in 0..s {
+        assert_eq!(outs[5][si], t as f32);
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_arity_and_shape() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let spec = rt.manifest().variants[0].clone();
+    let exe = rt.load(&spec.name).unwrap();
+    // Wrong number of inputs.
+    assert!(exe.run_f32(&[&[0.0]]).is_err());
+    // Right arity, wrong length.
+    let bad = vec![0f32; 3];
+    let ok_var = vec![0f32; spec.s];
+    let ok_k = vec![0f32; spec.s];
+    let ok_x = vec![0f32; spec.s * spec.t * spec.n];
+    assert!(exe.run_f32(&[&bad, &ok_var, &ok_k, &ok_x]).is_err());
+}
+
+#[test]
+fn chunked_equals_oneshot_through_artifact() {
+    // Feeding 2×T/2 chunks with carried state == the oracle's full run.
+    let Some(dir) = artifact_dir() else { return };
+    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let spec = rt.manifest().select(2, 1).expect("n=2").clone();
+    let exe = rt.load(&spec.name).unwrap();
+    let (s, n, t) = (spec.s, spec.n, spec.t);
+
+    let mut rng = SplitMix64::new(21);
+    let x: Vec<f32> =
+        (0..s * t * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+    // Chunk 1.
+    let mu0 = vec![0f32; s * n];
+    let var0 = vec![0f32; s];
+    let k0 = vec![0f32; s];
+    let o1 = exe.run_f32(&[&mu0, &var0, &k0, &x]).unwrap();
+    // Chunk 2 continues from chunk 1's state.
+    let x2: Vec<f32> =
+        (0..s * t * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let o2 = exe.run_f32(&[&o1[3], &o1[4], &o1[5], &x2]).unwrap();
+
+    // Oracle over the concatenated stream.
+    for si in 0..s.min(4) {
+        let mut st = TedaState::<f32>::new(n);
+        for ti in 0..t {
+            st.step(&x[(si * t + ti) * n..(si * t + ti + 1) * n], spec.m as f32);
+        }
+        for ti in 0..t {
+            let step = st
+                .step(&x2[(si * t + ti) * n..(si * t + ti + 1) * n], spec.m as f32);
+            let idx = si * t + ti;
+            assert!(
+                (o2[1][idx] - step.zeta).abs() <= 2e-3 * step.zeta.abs().max(1.0),
+                "s={si} t={ti}: {} vs {}",
+                o2[1][idx],
+                step.zeta
+            );
+        }
+        assert_eq!(o2[5][si] as u64, st.k);
+    }
+}
