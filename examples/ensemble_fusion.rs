@@ -1,0 +1,189 @@
+//! Single-TEDA vs fused-ensemble detection quality on the DAMADICS
+//! fault schedule (Tables 1–2).
+//!
+//! ```bash
+//! cargo run --release --example ensemble_fusion
+//! cargo run --release --example ensemble_fusion -- \
+//!     --members "teda+teda:m=2.5+msigma" --combiner majority
+//! cargo run --release --example ensemble_fusion -- --item 7 --verbose
+//! ```
+//!
+//! For every Table 2 fault item this driver replays the same simulated
+//! actuator day through (a) the paper's single TEDA detector (m = 3)
+//! and (b) an N-member fused ensemble, then prints one comparison row
+//! each: detection, latency (samples after fault onset), and false
+//! alarm rate outside the fault window. With `--verbose` it also dumps
+//! the per-member vote balance so you can see *which* detector family
+//! carried each decision.
+
+use teda_fpga::config::{CombinerKind, EnsembleConfig};
+use teda_fpga::damadics::{
+    actuator1_schedule, evaluate_detection, schedule_item, ActuatorSim,
+};
+use teda_fpga::engine::Engine as _;
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::stream::Sample;
+use teda_fpga::teda::TedaDetector;
+
+struct Args {
+    item: Option<u32>,
+    members: String,
+    combiner: CombinerKind,
+    m: f64,
+    seed: u64,
+    verbose: bool,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        item: None,
+        members: "teda:m=3+msigma:m=3+zscore:m=3,w=64".to_string(),
+        combiner: CombinerKind::Majority,
+        m: 3.0,
+        seed: 2001,
+        verbose: false,
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--item" => {
+                args.item = Some(argv[i + 1].parse().expect("--item"));
+                i += 2;
+            }
+            "--members" => {
+                args.members = argv[i + 1].clone();
+                i += 2;
+            }
+            "--combiner" => {
+                args.combiner = argv[i + 1].parse().expect("--combiner");
+                i += 2;
+            }
+            "--m" => {
+                args.m = argv[i + 1].parse().expect("--m");
+                i += 2;
+            }
+            "--seed" => {
+                args.seed = argv[i + 1].parse().expect("--seed");
+                i += 2;
+            }
+            "--verbose" => {
+                args.verbose = true;
+                i += 1;
+            }
+            other => panic!("unknown flag {other}"),
+        }
+    }
+    args
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = parse_args();
+    let ecfg =
+        EnsembleConfig::from_member_list(&args.members, args.combiner)?;
+    let items: Vec<u32> = match args.item {
+        Some(i) => vec![i],
+        None => actuator1_schedule().iter().map(|e| e.item).collect(),
+    };
+    println!(
+        "ensemble: [{}] via {}\n",
+        ecfg.labels().join(", "),
+        ecfg.combiner
+    );
+    println!(
+        "item | fault | single: det lat    far     | fused: det lat    far"
+    );
+    println!(
+        "-----|-------|---------------------------|-----------------------"
+    );
+    let mut fused_detected = 0usize;
+    let mut single_detected = 0usize;
+    for item in &items {
+        let (s, f) = run_item(*item, &args, &ecfg)?;
+        single_detected += s as usize;
+        fused_detected += f as usize;
+    }
+    println!(
+        "\ndetected {}/{} single vs {}/{} fused",
+        single_detected,
+        items.len(),
+        fused_detected,
+        items.len()
+    );
+    Ok(())
+}
+
+/// Returns (single detected, fused detected) for one Table 2 item.
+fn run_item(
+    item: u32,
+    args: &Args,
+    ecfg: &EnsembleConfig,
+) -> Result<(bool, bool), Box<dyn std::error::Error>> {
+    let event = schedule_item(item).ok_or("unknown Table 2 item")?;
+    let trace =
+        ActuatorSim::with_seed(args.seed).generate_day(Some(&event));
+
+    // (a) Single TEDA, the paper's configuration.
+    let mut det = TedaDetector::new(2, args.m);
+    let single: Vec<bool> =
+        trace.samples.iter().map(|s| det.step(s).outlier).collect();
+    let single_report = evaluate_detection(&single, &event, 1000);
+
+    // (b) Fused ensemble over the identical day.
+    let mut eng =
+        EnsembleEngine::new(ecfg, 2)?.with_breakdown(args.verbose);
+    let mut fused = vec![false; trace.samples.len()];
+    for (seq, values) in trace.samples.iter().enumerate() {
+        let sample = Sample {
+            stream_id: 0,
+            seq: seq as u64,
+            values: values.clone(),
+        };
+        for v in eng.ingest(&sample)? {
+            fused[v.seq as usize] = v.outlier;
+        }
+    }
+    for v in eng.flush()? {
+        fused[v.seq as usize] = v.outlier;
+    }
+    let fused_report = evaluate_detection(&fused, &event, 1000);
+
+    println!(
+        "  {}  | {:<5} | {:<5} {:>6} {:.5} | {:<5} {:>6} {:.5}",
+        item,
+        event.fault.to_string(),
+        single_report.detected(),
+        single_report
+            .latency
+            .map(|l| l.to_string())
+            .unwrap_or_else(|| "-".into()),
+        single_report.false_alarm_rate(),
+        fused_report.detected(),
+        fused_report
+            .latency
+            .map(|l| l.to_string())
+            .unwrap_or_else(|| "-".into()),
+        fused_report.false_alarm_rate(),
+    );
+
+    if args.verbose {
+        // Vote balance inside the fault window: who carried the call?
+        let mut per_member_hits =
+            vec![0u64; eng.n_members()];
+        let labels = eng.member_labels();
+        for b in eng.take_breakdowns() {
+            let seq = b.seq as usize;
+            if seq >= event.start && seq <= event.end {
+                for (i, (_, flag, _)) in b.votes.iter().enumerate() {
+                    if *flag {
+                        per_member_hits[i] += 1;
+                    }
+                }
+            }
+        }
+        for (label, hits) in labels.iter().zip(&per_member_hits) {
+            println!("         {label:<20} {hits} window hits");
+        }
+    }
+    Ok((single_report.detected(), fused_report.detected()))
+}

@@ -1,0 +1,116 @@
+//! Ensemble throughput: samples/sec for 1, 3, 5 members × combiner.
+//!
+//! Establishes the perf trajectory baseline for the fusion layer: the
+//! cost of quorum alignment + fusion on top of N member detectors.
+//! Emits `BENCH_ensemble.json` at the repository root.
+//!
+//! Run: `cargo bench --bench ensemble`
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{CombinerKind, EnsembleConfig, Json};
+use teda_fpga::engine::Engine as _;
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const STREAMS: u64 = 8;
+const PER_STREAM: usize = 2_000;
+const N_FEATURES: usize = 2;
+
+fn workload() -> Vec<Sample> {
+    let mut rng = SplitMix64::new(0x7EDA);
+    let mut out = Vec::with_capacity(STREAMS as usize * PER_STREAM);
+    for seq in 0..PER_STREAM {
+        for sid in 0..STREAMS {
+            out.push(Sample {
+                stream_id: sid,
+                seq: seq as u64,
+                values: (0..N_FEATURES).map(|_| rng.normal()).collect(),
+            });
+        }
+    }
+    out
+}
+
+fn main() {
+    // Software-only member rosters: this measures the fusion layer, not
+    // the (much slower) cycle-accurate RTL simulation.
+    let rosters: [(usize, &str); 3] = [
+        (1, "teda:m=3"),
+        (3, "teda:m=3+teda:m=2.5+msigma:m=3"),
+        (5, "teda:m=3+teda:m=2.5+teda:m=4+msigma:m=3+zscore:m=3,w=64"),
+    ];
+    let combiners = [
+        CombinerKind::Majority,
+        CombinerKind::WeightedScore,
+        CombinerKind::Adaptive,
+    ];
+    let samples = workload();
+    let total = samples.len() as u64;
+    println!(
+        "== ensemble throughput ({} streams × {} samples, N={}) ==",
+        STREAMS, PER_STREAM, N_FEATURES
+    );
+
+    let mut results = Vec::new();
+    for (n_members, roster) in rosters {
+        for combiner in combiners {
+            let cfg = EnsembleConfig::from_member_list(roster, combiner)
+                .expect("roster");
+            let report = Bench::new(format!(
+                "ensemble_{n_members}members_{combiner}"
+            ))
+            .iters(10)
+            .units(total, "samples")
+            .run(|| {
+                let mut eng =
+                    EnsembleEngine::new(&cfg, N_FEATURES).unwrap();
+                let mut got = 0usize;
+                for s in &samples {
+                    got += eng.ingest(s).unwrap().len();
+                }
+                got += eng.flush().unwrap().len();
+                assert_eq!(got, total as usize);
+                black_box(got);
+            });
+            let mut row = BTreeMap::new();
+            row.insert(
+                "members".to_string(),
+                Json::Num(n_members as f64),
+            );
+            row.insert(
+                "combiner".to_string(),
+                Json::Str(combiner.to_string()),
+            );
+            row.insert(
+                "samples_per_sec".to_string(),
+                Json::Num(report.throughput.round()),
+            );
+            row.insert(
+                "ns_per_sample".to_string(),
+                Json::Num((report.ns_per_unit * 10.0).round() / 10.0),
+            );
+            results.push(Json::Obj(row));
+        }
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("ensemble".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "{STREAMS} streams x {PER_STREAM} samples, N={N_FEATURES}, \
+             interleaved normal data"
+        )),
+    );
+    doc.insert("unit".to_string(), Json::Str("samples/sec".to_string()));
+    doc.insert("results".to_string(), Json::Arr(results));
+    let json = Json::Obj(doc).to_string_compact();
+
+    // Repo root (one level above the cargo manifest).
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ensemble.json");
+    std::fs::write(path, json + "\n").expect("write BENCH_ensemble.json");
+    println!("wrote {path}");
+}

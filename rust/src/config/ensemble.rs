@@ -1,0 +1,520 @@
+//! `[ensemble]` configuration: member specs, combiner choice, and the
+//! TOML/JSON (de)serialization both the service config and the CLI use.
+//!
+//! A member is written as a compact spec string:
+//!
+//! ```text
+//! kind[:key=value[,key=value...]]
+//!
+//! kinds:  teda    — software TEDA (f64 reference)
+//!         rtl     — cycle-accurate RTL-sim TEDA (f32, 2-cycle latency)
+//!         msigma  — running m·σ baseline
+//!         zscore  — sliding-window z-score baseline
+//! keys:   m       — Chebyshev / sigma multiplier (default 3)
+//!         w       — window length, zscore only (default 64)
+//!         weight  — static fusion weight for weighted combiners (default 1)
+//! ```
+//!
+//! e.g. `"teda:m=2.5"`, `"zscore:m=3,w=128"`, `"rtl:m=3,weight=0.5"` —
+//! a TOML `members = ["teda", "teda:m=2.5", "msigma"]` array therefore
+//! describes an m-threshold sweep plus a heterogeneous baseline.
+
+use crate::config::{Json, TomlDoc};
+use crate::{Error, Result};
+
+/// Which detector family a member instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemberKind {
+    /// Software TEDA ([`crate::engine::SoftwareEngine`]).
+    TedaSoftware,
+    /// RTL-sim TEDA ([`crate::engine::RtlEngine`]).
+    TedaRtl,
+    /// Running m·σ baseline ([`crate::baselines::MSigmaDetector`]).
+    MSigma,
+    /// Sliding z-score baseline ([`crate::baselines::SlidingZScore`]).
+    ZScore,
+}
+
+impl MemberKind {
+    /// Canonical spec-string name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemberKind::TedaSoftware => "teda",
+            MemberKind::TedaRtl => "rtl",
+            MemberKind::MSigma => "msigma",
+            MemberKind::ZScore => "zscore",
+        }
+    }
+}
+
+/// One ensemble member: detector family plus its parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberSpec {
+    pub kind: MemberKind,
+    /// Chebyshev multiplier (TEDA members) / sigma multiplier (baselines).
+    pub m: f64,
+    /// Sliding-window length (zscore members only).
+    pub window: usize,
+    /// Static fusion weight (weighted combiners; 1.0 = neutral).
+    pub weight: f64,
+}
+
+impl MemberSpec {
+    /// A member of `kind` with default parameters (m=3, w=64, weight=1).
+    pub fn new(kind: MemberKind) -> Self {
+        MemberSpec { kind, m: 3.0, window: 64, weight: 1.0 }
+    }
+
+    /// Builder: override the m multiplier.
+    pub fn with_m(mut self, m: f64) -> Self {
+        self.m = m;
+        self
+    }
+
+    /// Human label for reports/metrics (e.g. `"teda(m=2.5)"`).
+    pub fn label(&self) -> String {
+        match self.kind {
+            MemberKind::ZScore => {
+                format!("{}(m={},w={})", self.kind.name(), self.m, self.window)
+            }
+            _ => format!("{}(m={})", self.kind.name(), self.m),
+        }
+    }
+}
+
+impl std::str::FromStr for MemberSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (kind_s, params) = match s.split_once(':') {
+            Some((k, p)) => (k.trim(), Some(p)),
+            None => (s, None),
+        };
+        let kind = match kind_s {
+            "teda" | "software" | "sw" => MemberKind::TedaSoftware,
+            "rtl" | "fpga" => MemberKind::TedaRtl,
+            "msigma" | "sigma" => MemberKind::MSigma,
+            "zscore" | "window" => MemberKind::ZScore,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown ensemble member kind '{other}' \
+                     (teda|rtl|msigma|zscore)"
+                )))
+            }
+        };
+        let mut spec = MemberSpec::new(kind);
+        if let Some(params) = params {
+            for kv in params.split(',') {
+                let (key, val) = kv.split_once('=').ok_or_else(|| {
+                    Error::Config(format!(
+                        "member '{s}': expected key=value, got '{kv}'"
+                    ))
+                })?;
+                let (key, val) = (key.trim(), val.trim());
+                match key {
+                    "m" => {
+                        spec.m = val.parse().map_err(|_| {
+                            Error::Config(format!("member '{s}': bad m '{val}'"))
+                        })?;
+                        if spec.m <= 0.0 {
+                            return Err(Error::Config(format!(
+                                "member '{s}': m must be > 0"
+                            )));
+                        }
+                    }
+                    "w" | "window" => {
+                        if kind != MemberKind::ZScore {
+                            return Err(Error::Config(format!(
+                                "member '{s}': window only applies to zscore"
+                            )));
+                        }
+                        spec.window = val.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "member '{s}': bad window '{val}'"
+                            ))
+                        })?;
+                        if spec.window < 2 {
+                            return Err(Error::Config(format!(
+                                "member '{s}': window must be >= 2"
+                            )));
+                        }
+                    }
+                    "weight" => {
+                        spec.weight = val.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "member '{s}': bad weight '{val}'"
+                            ))
+                        })?;
+                        if spec.weight <= 0.0 {
+                            return Err(Error::Config(format!(
+                                "member '{s}': weight must be > 0"
+                            )));
+                        }
+                    }
+                    other => {
+                        return Err(Error::Config(format!(
+                            "member '{s}': unknown parameter '{other}' \
+                             (m|w|weight)"
+                        )))
+                    }
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for MemberSpec {
+    /// Canonical spec string; `parse ∘ to_string` is the identity.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:m={}", self.kind.name(), self.m)?;
+        if self.kind == MemberKind::ZScore {
+            write!(f, ",w={}", self.window)?;
+        }
+        if self.weight != 1.0 {
+            write!(f, ",weight={}", self.weight)?;
+        }
+        Ok(())
+    }
+}
+
+/// Fusion strategy selector (the strategies live in
+/// [`crate::ensemble::combiner`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombinerKind {
+    /// Strict majority of member outlier flags.
+    Majority,
+    /// Sign of the static-weighted sum of member margin scores.
+    WeightedScore,
+    /// Flag when ANY member flags (max sensitivity).
+    AnyOf,
+    /// Flag when ALL members flag (max precision).
+    AllOf,
+    /// Weighted vote whose weights decay on disagreement (fSEAD-style).
+    Adaptive,
+}
+
+impl std::str::FromStr for CombinerKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim() {
+            "majority" | "majority-vote" | "vote" => Ok(CombinerKind::Majority),
+            "weighted" | "weighted-score" => Ok(CombinerKind::WeightedScore),
+            "any" | "any-of" | "or" => Ok(CombinerKind::AnyOf),
+            "all" | "all-of" | "and" => Ok(CombinerKind::AllOf),
+            "adaptive" | "adaptive-weighted" => Ok(CombinerKind::Adaptive),
+            other => Err(Error::Config(format!(
+                "unknown combiner '{other}' \
+                 (majority|weighted-score|any-of|all-of|adaptive)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for CombinerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            CombinerKind::Majority => "majority",
+            CombinerKind::WeightedScore => "weighted-score",
+            CombinerKind::AnyOf => "any-of",
+            CombinerKind::AllOf => "all-of",
+            CombinerKind::Adaptive => "adaptive",
+        })
+    }
+}
+
+/// The `[ensemble]` section: member roster + fusion strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleConfig {
+    pub members: Vec<MemberSpec>,
+    pub combiner: CombinerKind,
+}
+
+impl Default for EnsembleConfig {
+    /// Default heterogeneous trio: TEDA reference, the m·σ strawman, and
+    /// a sliding z-score — three detector families, majority-fused.
+    fn default() -> Self {
+        EnsembleConfig {
+            members: vec![
+                MemberSpec::new(MemberKind::TedaSoftware),
+                MemberSpec::new(MemberKind::MSigma),
+                MemberSpec::new(MemberKind::ZScore),
+            ],
+            combiner: CombinerKind::Majority,
+        }
+    }
+}
+
+impl EnsembleConfig {
+    /// Build from a `+`-separated member list (CLI `--members`), e.g.
+    /// `"teda+teda:m=2.5+zscore:m=3,w=128"`. `+`/`;` separate members
+    /// because `,` already separates parameters *within* one spec.
+    pub fn from_member_list(
+        members: &str,
+        combiner: CombinerKind,
+    ) -> Result<Self> {
+        let members: Vec<MemberSpec> = members
+            .split(&['+', ';'][..])
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::parse)
+            .collect::<Result<_>>()?;
+        if members.is_empty() {
+            return Err(Error::Config(
+                "ensemble needs at least one member".into(),
+            ));
+        }
+        Ok(EnsembleConfig { members, combiner })
+    }
+
+    /// Overlay the `[ensemble]` section of a parsed TOML doc, if present.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(c) = doc.str_("ensemble.combiner") {
+            self.combiner = c.parse()?;
+        } else if doc.get("ensemble.combiner").is_some() {
+            return Err(Error::Config(
+                "ensemble.combiner must be a string".into(),
+            ));
+        }
+        if let Some(j) = doc.get("ensemble.members") {
+            self.members = parse_member_array(j)?;
+        }
+        Ok(())
+    }
+
+    /// Parse from the `"ensemble"` object of a JSON service config.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = EnsembleConfig::default();
+        if let Some(c) = j.get("combiner") {
+            let s = c.as_str().ok_or_else(|| {
+                Error::Config("ensemble.combiner must be a string".into())
+            })?;
+            cfg.combiner = s.parse()?;
+        }
+        if let Some(m) = j.get("members") {
+            cfg.members = parse_member_array(m)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to the JSON object shape [`EnsembleConfig::from_json`]
+    /// accepts (round-trip safe).
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(
+            "combiner".to_string(),
+            Json::Str(self.combiner.to_string()),
+        );
+        obj.insert(
+            "members".to_string(),
+            Json::Arr(
+                self.members
+                    .iter()
+                    .map(|m| Json::Str(m.to_string()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Serialize to a TOML `[ensemble]` section (round-trip safe).
+    pub fn to_toml_section(&self) -> String {
+        let members: Vec<String> =
+            self.members.iter().map(|m| format!("\"{m}\"")).collect();
+        format!(
+            "[ensemble]\ncombiner = \"{}\"\nmembers = [{}]\n",
+            self.combiner,
+            members.join(", ")
+        )
+    }
+
+    /// Per-member display labels (metrics, reports).
+    pub fn labels(&self) -> Vec<String> {
+        self.members.iter().map(MemberSpec::label).collect()
+    }
+
+    /// Invariant checks (used by `ServiceConfig::validate`).
+    pub fn validate(&self) -> Result<()> {
+        if self.members.is_empty() {
+            return Err(Error::Config(
+                "ensemble needs at least one member".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a JSON/TOML array of member spec strings (shared error paths).
+fn parse_member_array(j: &Json) -> Result<Vec<MemberSpec>> {
+    let arr = j.as_arr().ok_or_else(|| {
+        Error::Config("ensemble.members must be an array of strings".into())
+    })?;
+    if arr.is_empty() {
+        return Err(Error::Config(
+            "ensemble.members must list at least one member".into(),
+        ));
+    }
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .ok_or_else(|| {
+                    Error::Config(
+                        "ensemble.members entries must be strings".into(),
+                    )
+                })?
+                .parse()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn member_spec_parse_display_roundtrip() {
+        for s in [
+            "teda",
+            "teda:m=2.5",
+            "rtl:m=3",
+            "msigma:m=4,weight=0.5",
+            "zscore:m=3,w=128",
+        ] {
+            let spec: MemberSpec = s.parse().unwrap();
+            let back: MemberSpec = spec.to_string().parse().unwrap();
+            assert_eq!(spec, back, "roundtrip failed for '{s}'");
+        }
+    }
+
+    #[test]
+    fn member_spec_defaults() {
+        let spec: MemberSpec = "teda".parse().unwrap();
+        assert_eq!(spec.kind, MemberKind::TedaSoftware);
+        assert_eq!(spec.m, 3.0);
+        assert_eq!(spec.weight, 1.0);
+        let z: MemberSpec = "zscore".parse().unwrap();
+        assert_eq!(z.window, 64);
+    }
+
+    #[test]
+    fn member_spec_rejects_bad_input() {
+        assert!("gpu".parse::<MemberSpec>().is_err());
+        assert!("teda:m=0".parse::<MemberSpec>().is_err());
+        assert!("teda:m=abc".parse::<MemberSpec>().is_err());
+        assert!("teda:w=8".parse::<MemberSpec>().is_err()); // window ≠ teda
+        assert!("zscore:w=1".parse::<MemberSpec>().is_err());
+        assert!("teda:bogus=1".parse::<MemberSpec>().is_err());
+        assert!("teda:m".parse::<MemberSpec>().is_err());
+        assert!("msigma:weight=-2".parse::<MemberSpec>().is_err());
+    }
+
+    #[test]
+    fn combiner_kind_parse_display_roundtrip() {
+        for k in [
+            CombinerKind::Majority,
+            CombinerKind::WeightedScore,
+            CombinerKind::AnyOf,
+            CombinerKind::AllOf,
+            CombinerKind::Adaptive,
+        ] {
+            assert_eq!(k.to_string().parse::<CombinerKind>().unwrap(), k);
+        }
+        assert!("plurality".parse::<CombinerKind>().is_err());
+    }
+
+    #[test]
+    fn member_list_uses_plus_separator() {
+        let cfg = EnsembleConfig::from_member_list(
+            "teda + teda:m=2.5 + zscore:m=3,w=128",
+            CombinerKind::AnyOf,
+        )
+        .unwrap();
+        assert_eq!(cfg.members.len(), 3);
+        assert_eq!(cfg.members[1].m, 2.5);
+        assert_eq!(cfg.members[2].window, 128);
+        assert!(EnsembleConfig::from_member_list("", CombinerKind::AnyOf)
+            .is_err());
+    }
+
+    #[test]
+    fn toml_json_roundtrip() {
+        let toml = "\
+            [ensemble]\n\
+            combiner = \"adaptive\"\n\
+            members = [\"teda\", \"rtl:m=2.5\", \"zscore:m=3,w=32\"]\n";
+        let doc = TomlDoc::parse(toml).unwrap();
+        let mut cfg = EnsembleConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.combiner, CombinerKind::Adaptive);
+        assert_eq!(cfg.members.len(), 3);
+
+        // TOML → JSON → EnsembleConfig must be lossless.
+        let json = cfg.to_json();
+        let back = EnsembleConfig::from_json(&json).unwrap();
+        assert_eq!(cfg, back);
+
+        // And back through the TOML section renderer too.
+        let doc2 = TomlDoc::parse(&cfg.to_toml_section()).unwrap();
+        let mut cfg2 = EnsembleConfig::default();
+        cfg2.apply_toml(&doc2).unwrap();
+        assert_eq!(cfg, cfg2);
+    }
+
+    #[test]
+    fn json_text_roundtrip() {
+        let json = Json::parse(
+            r#"{"combiner": "weighted-score",
+                "members": ["teda:m=3,weight=2", "msigma"]}"#,
+        )
+        .unwrap();
+        let cfg = EnsembleConfig::from_json(&json).unwrap();
+        assert_eq!(cfg.combiner, CombinerKind::WeightedScore);
+        assert_eq!(cfg.members[0].weight, 2.0);
+        let reparsed =
+            Json::parse(&cfg.to_json().to_string_compact()).unwrap();
+        assert_eq!(EnsembleConfig::from_json(&reparsed).unwrap(), cfg);
+    }
+
+    #[test]
+    fn unknown_combiner_rejected_in_both_formats() {
+        let doc = TomlDoc::parse(
+            "[ensemble]\ncombiner = \"plurality\"\n",
+        )
+        .unwrap();
+        let mut cfg = EnsembleConfig::default();
+        assert!(cfg.apply_toml(&doc).is_err());
+
+        let json =
+            Json::parse(r#"{"combiner": "plurality"}"#).unwrap();
+        assert!(EnsembleConfig::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn empty_members_rejected_in_both_formats() {
+        let doc =
+            TomlDoc::parse("[ensemble]\nmembers = []\n").unwrap();
+        let mut cfg = EnsembleConfig::default();
+        assert!(cfg.apply_toml(&doc).is_err());
+
+        let json = Json::parse(r#"{"members": []}"#).unwrap();
+        assert!(EnsembleConfig::from_json(&json).is_err());
+
+        // Mistyped entries are rejected, not skipped.
+        let json = Json::parse(r#"{"members": [42]}"#).unwrap();
+        assert!(EnsembleConfig::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn defaults_are_a_valid_heterogeneous_trio() {
+        let cfg = EnsembleConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.members.len(), 3);
+        let kinds: Vec<MemberKind> =
+            cfg.members.iter().map(|m| m.kind).collect();
+        assert!(kinds.contains(&MemberKind::TedaSoftware));
+        assert!(kinds.contains(&MemberKind::MSigma));
+        assert!(kinds.contains(&MemberKind::ZScore));
+    }
+}

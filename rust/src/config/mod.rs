@@ -4,10 +4,12 @@
 //! In-repo stand-ins for `serde_json` / `toml` (no crates.io in this
 //! build environment, DESIGN.md §3).
 
+pub mod ensemble;
 pub mod json;
 pub mod service;
 pub mod toml;
 
+pub use ensemble::{CombinerKind, EnsembleConfig, MemberKind, MemberSpec};
 pub use json::Json;
 pub use service::{EngineKind, ServiceConfig};
 pub use toml::TomlDoc;

@@ -2,7 +2,7 @@
 
 use std::path::PathBuf;
 
-use crate::config::TomlDoc;
+use crate::config::{EnsembleConfig, Json, TomlDoc};
 use crate::{Error, Result};
 
 /// Which detector backend the coordinator drives.
@@ -14,6 +14,9 @@ pub enum EngineKind {
     Rtl,
     /// AOT-compiled JAX/Pallas artifact via PJRT.
     Xla,
+    /// Multi-detector fusion over pluggable members
+    /// ([`crate::ensemble::EnsembleEngine`], configured by `[ensemble]`).
+    Ensemble,
 }
 
 impl std::str::FromStr for EngineKind {
@@ -24,8 +27,9 @@ impl std::str::FromStr for EngineKind {
             "software" | "sw" => Ok(EngineKind::Software),
             "rtl" | "fpga" => Ok(EngineKind::Rtl),
             "xla" | "pjrt" => Ok(EngineKind::Xla),
+            "ensemble" | "fusion" => Ok(EngineKind::Ensemble),
             other => Err(Error::Config(format!(
-                "unknown engine kind '{other}' (software|rtl|xla)"
+                "unknown engine kind '{other}' (software|rtl|xla|ensemble)"
             ))),
         }
     }
@@ -37,6 +41,7 @@ impl std::fmt::Display for EngineKind {
             EngineKind::Software => "software",
             EngineKind::Rtl => "rtl",
             EngineKind::Xla => "xla",
+            EngineKind::Ensemble => "ensemble",
         })
     }
 }
@@ -72,6 +77,8 @@ pub struct ServiceConfig {
     pub checkpoint_every: u64,
     /// RNG seed for anything stochastic in the service (workload gen).
     pub seed: u64,
+    /// Ensemble member roster + combiner (used when `engine = ensemble`).
+    pub ensemble: EnsembleConfig,
 }
 
 impl Default for ServiceConfig {
@@ -89,6 +96,7 @@ impl Default for ServiceConfig {
             artifact_dir: PathBuf::from("artifacts"),
             checkpoint_every: 0,
             seed: 0x7EDA, // "TEDA"
+            ensemble: EnsembleConfig::default(),
         }
     }
 }
@@ -134,16 +142,89 @@ impl ServiceConfig {
         if let Some(v) = doc.u64_("service.seed") {
             cfg.seed = v;
         }
+        cfg.ensemble.apply_toml(&doc)?;
         cfg.validate()?;
         Ok(cfg)
     }
 
-    /// Load from a file path.
+    /// Parse from JSON text (same section/key layout as the TOML form:
+    /// `{"engine": {...}, "service": {...}, "batcher": {...},
+    /// "artifacts": {...}, "ensemble": {...}}`).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)
+            .map_err(|e| Error::Config(format!("json: {e}")))?;
+        let mut cfg = ServiceConfig::default();
+        if let Some(v) = doc.get("name").and_then(Json::as_str) {
+            cfg.name = v.to_string();
+        }
+        if let Some(engine) = doc.get("engine") {
+            if let Some(v) = engine.get("kind").and_then(Json::as_str) {
+                cfg.engine = v.parse()?;
+            }
+            if let Some(v) = engine.get("n_features").and_then(Json::as_usize)
+            {
+                cfg.n_features = v;
+            }
+            if let Some(v) = engine.get("m").and_then(Json::as_f64) {
+                cfg.m = v;
+            }
+        }
+        if let Some(service) = doc.get("service") {
+            if let Some(v) = service.get("workers").and_then(Json::as_usize) {
+                cfg.workers = v;
+            }
+            if let Some(v) =
+                service.get("queue_capacity").and_then(Json::as_usize)
+            {
+                cfg.queue_capacity = v;
+            }
+            if let Some(v) =
+                service.get("checkpoint_every").and_then(Json::as_u64)
+            {
+                cfg.checkpoint_every = v;
+            }
+            if let Some(v) = service.get("seed").and_then(Json::as_u64) {
+                cfg.seed = v;
+            }
+        }
+        if let Some(batcher) = doc.get("batcher") {
+            if let Some(v) =
+                batcher.get("max_streams").and_then(Json::as_usize)
+            {
+                cfg.batch_max_streams = v;
+            }
+            if let Some(v) = batcher.get("chunk_t").and_then(Json::as_usize) {
+                cfg.chunk_t = v;
+            }
+            if let Some(v) = batcher.get("linger_us").and_then(Json::as_u64) {
+                cfg.batch_linger_us = v;
+            }
+        }
+        if let Some(v) = doc
+            .get("artifacts")
+            .and_then(|a| a.get("dir"))
+            .and_then(Json::as_str)
+        {
+            cfg.artifact_dir = PathBuf::from(v);
+        }
+        if let Some(e) = doc.get("ensemble") {
+            cfg.ensemble = EnsembleConfig::from_json(e)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path (`.json` dispatches to the JSON parser,
+    /// anything else is treated as TOML).
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
         let p = path.as_ref();
         let text = std::fs::read_to_string(p)
             .map_err(|e| Error::io(format!("reading {}", p.display()), e))?;
-        Self::from_toml(&text)
+        if p.extension().and_then(|e| e.to_str()) == Some("json") {
+            Self::from_json(&text)
+        } else {
+            Self::from_toml(&text)
+        }
     }
 
     /// Invariant checks shared by all constructors.
@@ -164,6 +245,9 @@ impl ServiceConfig {
             return Err(Error::Config(
                 "batcher dimensions must be > 0".into(),
             ));
+        }
+        if self.engine == EngineKind::Ensemble {
+            self.ensemble.validate()?;
         }
         Ok(())
     }
@@ -237,9 +321,114 @@ mod tests {
             ("software", EngineKind::Software),
             ("rtl", EngineKind::Rtl),
             ("xla", EngineKind::Xla),
+            ("ensemble", EngineKind::Ensemble),
         ] {
             assert_eq!(s.parse::<EngineKind>().unwrap(), k);
             assert_eq!(k.to_string(), s);
         }
+    }
+
+    #[test]
+    fn ensemble_section_toml() {
+        let text = r#"
+            [engine]
+            kind = "ensemble"
+            [ensemble]
+            combiner = "weighted-score"
+            members = ["teda:m=3", "teda:m=2.5", "msigma:m=3,weight=0.5"]
+        "#;
+        let cfg = ServiceConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Ensemble);
+        assert_eq!(
+            cfg.ensemble.combiner,
+            crate::config::CombinerKind::WeightedScore
+        );
+        assert_eq!(cfg.ensemble.members.len(), 3);
+        assert_eq!(cfg.ensemble.members[2].weight, 0.5);
+    }
+
+    #[test]
+    fn ensemble_section_toml_error_paths() {
+        // Unknown combiner.
+        assert!(ServiceConfig::from_toml(
+            "[ensemble]\ncombiner = \"plurality\"\n"
+        )
+        .is_err());
+        // Empty member list.
+        assert!(
+            ServiceConfig::from_toml("[ensemble]\nmembers = []\n").is_err()
+        );
+        // Unknown member kind.
+        assert!(ServiceConfig::from_toml(
+            "[ensemble]\nmembers = [\"gpu\"]\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn ensemble_engine_without_section_gets_default_trio() {
+        let cfg =
+            ServiceConfig::from_toml("[engine]\nkind = \"ensemble\"\n")
+                .unwrap();
+        assert_eq!(cfg.engine, EngineKind::Ensemble);
+        assert_eq!(cfg.ensemble, crate::config::EnsembleConfig::default());
+    }
+
+    #[test]
+    fn json_config_matches_toml_config() {
+        // Every key both parsers understand, with non-default values —
+        // guards the two hand-written mappings against drifting apart.
+        let toml = r#"
+            name = "fused"
+            [engine]
+            kind = "ensemble"
+            n_features = 4
+            m = 2.5
+            [service]
+            workers = 2
+            queue_capacity = 99
+            checkpoint_every = 7
+            seed = 123
+            [batcher]
+            max_streams = 8
+            chunk_t = 16
+            linger_us = 42
+            [artifacts]
+            dir = "/opt/a"
+            [ensemble]
+            combiner = "adaptive"
+            members = ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]
+        "#;
+        let json = r#"{
+            "name": "fused",
+            "engine": {"kind": "ensemble", "n_features": 4, "m": 2.5},
+            "service": {"workers": 2, "queue_capacity": 99,
+                        "checkpoint_every": 7, "seed": 123},
+            "batcher": {"max_streams": 8, "chunk_t": 16, "linger_us": 42},
+            "artifacts": {"dir": "/opt/a"},
+            "ensemble": {"combiner": "adaptive",
+                         "members": ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]}
+        }"#;
+        let a = ServiceConfig::from_toml(toml).unwrap();
+        let b = ServiceConfig::from_json(json).unwrap();
+        assert_eq!(a, b);
+        // And the values really landed (not both defaulted).
+        assert_eq!(a.queue_capacity, 99);
+        assert_eq!(a.batch_linger_us, 42);
+        assert_eq!(a.checkpoint_every, 7);
+        assert_eq!(a.m, 2.5);
+    }
+
+    #[test]
+    fn json_config_error_paths() {
+        assert!(ServiceConfig::from_json("{not json").is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"ensemble": {"combiner": "plurality"}}"#
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"ensemble": {"members": []}}"#
+        )
+        .is_err());
     }
 }

@@ -8,7 +8,8 @@ use std::time::Instant;
 use crate::config::{EngineKind, ServiceConfig};
 use crate::coordinator::{Router, StateCheckpoint, StateManager};
 use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine};
-use crate::metrics::ServiceMetrics;
+use crate::ensemble::EnsembleEngine;
+use crate::metrics::{EnsembleMetrics, ServiceMetrics};
 use crate::runtime::XlaRuntime;
 use crate::stream::{bounded, Receiver, Sample, Sender};
 use crate::{Error, Result};
@@ -40,6 +41,8 @@ pub struct Service {
     /// channel synchronization off the per-sample path.
     results_rx: Receiver<Vec<Classified>>,
     metrics: Arc<ServiceMetrics>,
+    /// Per-member counters, present when the engine is an ensemble.
+    ensemble_metrics: Option<Arc<EnsembleMetrics>>,
     state_mgr: Arc<StateManager>,
 }
 
@@ -99,6 +102,10 @@ impl Service {
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
         cfg.validate()?;
         let metrics = ServiceMetrics::new();
+        // Ensemble runs get one shared per-member counter bundle: every
+        // worker shard's EnsembleEngine adds into the same atomics.
+        let ensemble_metrics = (cfg.engine == EngineKind::Ensemble)
+            .then(|| EnsembleMetrics::new(cfg.ensemble.labels()));
         let state_mgr = Arc::new(StateManager::new());
         let router = Router::new(cfg.workers);
         // Results flow on an unbounded channel: a worker must never
@@ -118,6 +125,7 @@ impl Service {
             senders.push(tx);
             let res_tx = res_tx.clone();
             let metrics = metrics.clone();
+            let ens_metrics = ensemble_metrics.clone();
             let state_mgr = state_mgr.clone();
             let cfg = cfg.clone();
             workers.push(
@@ -149,6 +157,16 @@ impl Service {
                                     .with_min_ready(cfg.batch_max_streams),
                                 )
                             }
+                            EngineKind::Ensemble => {
+                                let mut eng = EnsembleEngine::new(
+                                    &cfg.ensemble,
+                                    cfg.n_features,
+                                )?;
+                                if let Some(em) = ens_metrics {
+                                    eng = eng.with_metrics(em);
+                                }
+                                Box::new(eng)
+                            }
                         };
                         worker_loop(
                             rx,
@@ -170,6 +188,7 @@ impl Service {
             workers,
             results_rx: res_rx,
             metrics,
+            ensemble_metrics,
             state_mgr,
         })
     }
@@ -182,6 +201,11 @@ impl Service {
     /// Shared metrics.
     pub fn metrics(&self) -> Arc<ServiceMetrics> {
         self.metrics.clone()
+    }
+
+    /// Shared per-member ensemble counters (ensemble engine only).
+    pub fn ensemble_metrics(&self) -> Option<Arc<EnsembleMetrics>> {
+        self.ensemble_metrics.clone()
     }
 
     /// Shared state manager (checkpoints).
@@ -443,6 +467,39 @@ mod tests {
         let cp = mgr.latest(2).unwrap();
         assert_eq!(cp.seq, 99); // checkpoint at seq 49 then 99
         assert_eq!(cp.state.k, 100);
+    }
+
+    #[test]
+    fn ensemble_service_classifies_everything_with_member_metrics() {
+        let cfg = base_cfg(EngineKind::Ensemble, 3); // default trio roster
+        let n_members = cfg.ensemble.members.len();
+        let svc = Service::start(cfg).unwrap();
+        let em = svc.ensemble_metrics().expect("ensemble metrics");
+        assert_eq!(em.members.len(), n_members);
+        let mut rng = crate::util::prng::SplitMix64::new(9);
+        for seq in 0..150u64 {
+            for sid in 0..6u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![rng.next_f64(), rng.next_f64()],
+                })
+                .unwrap();
+            }
+        }
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 900);
+        assert_eq!(em.fused_verdicts.get(), 900);
+        for m in &em.members {
+            assert_eq!(m.votes.get(), 900);
+        }
+    }
+
+    #[test]
+    fn non_ensemble_service_has_no_ensemble_metrics() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 1)).unwrap();
+        assert!(svc.ensemble_metrics().is_none());
+        svc.finish().unwrap();
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Fusion strategies combining per-member votes into one verdict.
+//!
+//! Semantics (N = member count, `s_i ∈ [-1, 1]` the margin score,
+//! `o_i` the hard flag, `w_i > 0` the weight):
+//!
+//! - **majority** — outlier iff `|{i : o_i}| · 2 > N` (strict; ties
+//!   resolve to inlier, biasing toward precision).
+//! - **weighted-score** — outlier iff `Σ w_i·s_i > 0` with the *static*
+//!   per-member weights from the member specs. Confident members (big
+//!   threshold margins) can overrule timid majorities.
+//! - **any-of** — OR of the flags: maximum sensitivity, for workloads
+//!   where a miss costs more than a false alarm.
+//! - **all-of** — AND of the flags: maximum precision.
+//! - **adaptive** — weighted *vote* (`Σ w_i·sign(o_i)`) whose weights
+//!   are learned online, fSEAD-style: after each fusion, members that
+//!   disagreed with the fused verdict decay (`w ← max(w·(1−η), w_min)`)
+//!   and members that agreed recover toward 1 (`w ← w + ρ·(1−w)`), so a
+//!   detector family that keeps mis-voting on this workload loses its
+//!   franchise without ever being silenced permanently. η = 0.1,
+//!   ρ = 0.01, w_min = 0.05; weights start at the spec weights.
+//!
+//! Combiners may be stateful (adaptive), so each engine instance owns
+//! its combiner — coordinator shards each adapt to their own streams.
+
+use crate::config::CombinerKind;
+
+use super::member::MemberVote;
+
+/// A fused decision for one sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fused {
+    /// The ensemble's verdict.
+    pub outlier: bool,
+    /// The decision statistic that produced it (combiner-specific:
+    /// vote fraction, weighted score...). Diagnostic only.
+    pub score: f64,
+}
+
+/// A fusion strategy: member votes in (member order), one verdict out.
+pub trait Combiner {
+    /// Display name for logs/reports.
+    fn name(&self) -> &'static str;
+
+    /// Fuse one sample's aligned votes (one per member, member order).
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused;
+
+    /// Current effective member weights (adaptive combiners evolve
+    /// them; static ones return the configured weights).
+    fn weights(&self) -> Vec<f64>;
+}
+
+/// Build the combiner for a roster of `weights.len()` members.
+pub fn build_combiner(
+    kind: CombinerKind,
+    weights: Vec<f64>,
+) -> Box<dyn Combiner> {
+    match kind {
+        CombinerKind::Majority => Box::new(MajorityVote { n: weights.len() }),
+        CombinerKind::WeightedScore => Box::new(WeightedScore { weights }),
+        CombinerKind::AnyOf => Box::new(AnyOf { n: weights.len() }),
+        CombinerKind::AllOf => Box::new(AllOf { n: weights.len() }),
+        CombinerKind::Adaptive => Box::new(AdaptiveWeighted::new(weights)),
+    }
+}
+
+/// Strict majority of hard flags.
+pub struct MajorityVote {
+    n: usize,
+}
+
+impl Combiner for MajorityVote {
+    fn name(&self) -> &'static str {
+        "majority"
+    }
+
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        let ayes = votes.iter().filter(|v| v.outlier).count();
+        Fused {
+            outlier: ayes * 2 > votes.len(),
+            score: ayes as f64 / votes.len().max(1) as f64,
+        }
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        vec![1.0; self.n]
+    }
+}
+
+/// Static-weighted sum of margin scores.
+pub struct WeightedScore {
+    weights: Vec<f64>,
+}
+
+impl Combiner for WeightedScore {
+    fn name(&self) -> &'static str {
+        "weighted-score"
+    }
+
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        let score: f64 = votes
+            .iter()
+            .zip(&self.weights)
+            .map(|(v, w)| w * v.score)
+            .sum();
+        Fused { outlier: score > 0.0, score }
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.weights.clone()
+    }
+}
+
+/// OR of the flags.
+pub struct AnyOf {
+    n: usize,
+}
+
+impl Combiner for AnyOf {
+    fn name(&self) -> &'static str {
+        "any-of"
+    }
+
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        let ayes = votes.iter().filter(|v| v.outlier).count();
+        Fused {
+            outlier: ayes > 0,
+            score: ayes as f64 / votes.len().max(1) as f64,
+        }
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        vec![1.0; self.n]
+    }
+}
+
+/// AND of the flags.
+pub struct AllOf {
+    n: usize,
+}
+
+impl Combiner for AllOf {
+    fn name(&self) -> &'static str {
+        "all-of"
+    }
+
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        let ayes = votes.iter().filter(|v| v.outlier).count();
+        Fused {
+            outlier: !votes.is_empty() && ayes == votes.len(),
+            score: ayes as f64 / votes.len().max(1) as f64,
+        }
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        vec![1.0; self.n]
+    }
+}
+
+/// Online-weighted vote with multiplicative decay on disagreement.
+pub struct AdaptiveWeighted {
+    weights: Vec<f64>,
+    /// Decay factor η applied to disagreeing members.
+    eta: f64,
+    /// Recovery rate ρ pulling agreeing members back toward 1.
+    rho: f64,
+    /// Weight floor: no member is ever fully silenced.
+    w_min: f64,
+}
+
+impl AdaptiveWeighted {
+    /// Start from the spec weights with the documented defaults.
+    pub fn new(weights: Vec<f64>) -> Self {
+        AdaptiveWeighted { weights, eta: 0.1, rho: 0.01, w_min: 0.05 }
+    }
+}
+
+impl Combiner for AdaptiveWeighted {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        let score: f64 = votes
+            .iter()
+            .zip(&self.weights)
+            .map(|(v, w)| if v.outlier { *w } else { -*w })
+            .sum();
+        let outlier = score > 0.0;
+        // fSEAD-style reweighting against the fused verdict.
+        for (v, w) in votes.iter().zip(self.weights.iter_mut()) {
+            if v.outlier != outlier {
+                *w = (*w * (1.0 - self.eta)).max(self.w_min);
+            } else {
+                *w += self.rho * (1.0 - *w);
+            }
+        }
+        Fused { outlier, score }
+    }
+
+    fn weights(&self) -> Vec<f64> {
+        self.weights.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vote(outlier: bool, score: f64) -> MemberVote {
+        MemberVote { stream_id: 0, seq: 0, outlier, score, detail: None }
+    }
+
+    fn flags(v: &[bool]) -> Vec<MemberVote> {
+        v.iter()
+            .map(|&o| vote(o, if o { 1.0 } else { -1.0 }))
+            .collect()
+    }
+
+    #[test]
+    fn majority_is_strict() {
+        let mut c = build_combiner(CombinerKind::Majority, vec![1.0; 4]);
+        assert!(!c.fuse(&flags(&[true, true, false, false])).outlier); // tie
+        assert!(c.fuse(&flags(&[true, true, true, false])).outlier);
+        let mut c = build_combiner(CombinerKind::Majority, vec![1.0]);
+        assert!(c.fuse(&flags(&[true])).outlier);
+        assert!(!c.fuse(&flags(&[false])).outlier);
+    }
+
+    #[test]
+    fn any_and_all() {
+        let mut any = build_combiner(CombinerKind::AnyOf, vec![1.0; 3]);
+        let mut all = build_combiner(CombinerKind::AllOf, vec![1.0; 3]);
+        let one = flags(&[false, true, false]);
+        assert!(any.fuse(&one).outlier);
+        assert!(!all.fuse(&one).outlier);
+        let every = flags(&[true, true, true]);
+        assert!(any.fuse(&every).outlier);
+        assert!(all.fuse(&every).outlier);
+        let none = flags(&[false, false, false]);
+        assert!(!any.fuse(&none).outlier);
+        assert!(!all.fuse(&none).outlier);
+    }
+
+    #[test]
+    fn weighted_score_uses_margins_and_weights() {
+        // A single confident member outweighs two timid dissenters.
+        let mut c =
+            build_combiner(CombinerKind::WeightedScore, vec![1.0, 1.0, 1.0]);
+        let votes = vec![vote(true, 0.9), vote(false, -0.3), vote(false, -0.3)];
+        assert!(c.fuse(&votes).outlier);
+        // Downweighting the confident member flips the verdict.
+        let mut c =
+            build_combiner(CombinerKind::WeightedScore, vec![0.5, 1.0, 1.0]);
+        assert!(!c.fuse(&votes).outlier);
+    }
+
+    #[test]
+    fn adaptive_decays_persistent_dissenters() {
+        let mut c = AdaptiveWeighted::new(vec![1.0, 1.0, 1.0]);
+        // Member 2 keeps disagreeing with the (majority) fused verdict.
+        for _ in 0..50 {
+            c.fuse(&flags(&[false, false, true]));
+        }
+        let w = c.weights();
+        assert!(w[2] < 0.1, "dissenter weight {}", w[2]);
+        assert!(w[0] > 0.9 && w[1] > 0.9);
+        // Floor: never silenced entirely.
+        assert!(w[2] >= 0.05);
+        // After decay, the dissenter alone can no longer flip a fusion
+        // even if the others are split... (2 members, one decayed)
+        let mut c2 = AdaptiveWeighted::new(vec![1.0, 0.05]);
+        assert!(!c2.fuse(&flags(&[false, true])).outlier);
+    }
+
+    #[test]
+    fn adaptive_agreeing_members_recover() {
+        let mut c = AdaptiveWeighted::new(vec![0.5, 1.0, 1.0]);
+        for _ in 0..400 {
+            c.fuse(&flags(&[false, false, false]));
+        }
+        assert!(c.weights()[0] > 0.95, "w0={}", c.weights()[0]);
+    }
+
+    #[test]
+    fn fused_score_is_reported() {
+        let mut c = build_combiner(CombinerKind::Majority, vec![1.0; 4]);
+        let f = c.fuse(&flags(&[true, true, true, false]));
+        assert!((f.score - 0.75).abs() < 1e-12);
+    }
+}

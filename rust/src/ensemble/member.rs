@@ -1,0 +1,314 @@
+//! Ensemble member adapter: one uniform wrapper around any
+//! [`Engine`] or [`AnomalyDetector`], with per-member state and
+//! latency accounting.
+//!
+//! Engine-backed members (TEDA software / RTL-sim) emit full
+//! [`EngineVerdict`]s and a *margin score*; baseline members (m·σ,
+//! sliding z-score) keep one detector per stream and emit hard ±1
+//! votes. Either way the ensemble sees the same [`MemberVote`].
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::baselines::{AnomalyDetector, MSigmaDetector, SlidingZScore};
+use crate::config::{MemberKind, MemberSpec};
+use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine};
+use crate::stream::Sample;
+use crate::Result;
+
+/// One member's opinion about one sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberVote {
+    pub stream_id: u64,
+    pub seq: u64,
+    /// The member's hard outlier flag.
+    pub outlier: bool,
+    /// Signed, scale-free confidence in `[-1, 1]`: positive votes
+    /// outlier. TEDA members report the relative threshold margin
+    /// `(ζ − thr) / thr` (clamped); baselines report ±1.
+    pub score: f64,
+    /// Full TEDA verdict when the member computes one (engine-backed
+    /// members); `None` for boolean baselines.
+    pub detail: Option<EngineVerdict>,
+}
+
+/// Cumulative per-member accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemberStats {
+    /// Votes produced.
+    pub votes: u64,
+    /// Votes that flagged an outlier.
+    pub outliers: u64,
+    /// Wall-clock ns spent inside this member's ingest/flush calls.
+    pub busy_ns: u64,
+}
+
+enum MemberImpl {
+    /// Full multi-stream engine (TEDA software / RTL-sim).
+    Engine(Box<dyn Engine>),
+    /// Per-stream boolean baseline detectors, created on first sample.
+    Baseline(HashMap<u64, Box<dyn AnomalyDetector>>),
+}
+
+/// A detector enrolled in an ensemble: uniform ingest/flush surface
+/// plus latency/vote accounting, whatever the backing implementation.
+pub struct EnsembleMember {
+    spec: MemberSpec,
+    n_features: usize,
+    imp: MemberImpl,
+    stats: MemberStats,
+}
+
+impl EnsembleMember {
+    /// Instantiate a member from its spec for `n_features`-dim streams.
+    pub fn build(spec: &MemberSpec, n_features: usize) -> Self {
+        let imp = match spec.kind {
+            MemberKind::TedaSoftware => MemberImpl::Engine(Box::new(
+                SoftwareEngine::new(n_features, spec.m),
+            )),
+            MemberKind::TedaRtl => MemberImpl::Engine(Box::new(
+                RtlEngine::new(n_features, spec.m),
+            )),
+            MemberKind::MSigma | MemberKind::ZScore => {
+                MemberImpl::Baseline(HashMap::new())
+            }
+        };
+        EnsembleMember {
+            spec: spec.clone(),
+            n_features,
+            imp,
+            stats: MemberStats::default(),
+        }
+    }
+
+    /// The spec this member was built from.
+    pub fn spec(&self) -> &MemberSpec {
+        &self.spec
+    }
+
+    /// Display label (`"teda(m=3)"`, `"zscore(m=3,w=64)"`, ...).
+    pub fn label(&self) -> String {
+        self.spec.label()
+    }
+
+    /// Cumulative accounting snapshot.
+    pub fn stats(&self) -> MemberStats {
+        self.stats
+    }
+
+    /// Static fusion weight from the spec.
+    pub fn weight(&self) -> f64 {
+        self.spec.weight
+    }
+
+    /// Absorb one sample; returns this member's votes that became ready
+    /// (engine-backed members may answer for earlier samples — the RTL
+    /// pipeline has 2-cycle latency — or not at all yet).
+    pub fn ingest(&mut self, sample: &Sample) -> Result<Vec<MemberVote>> {
+        let t0 = Instant::now();
+        let votes = match &mut self.imp {
+            MemberImpl::Engine(eng) => {
+                let verdicts = eng.ingest(sample)?;
+                verdicts.into_iter().map(vote_from_verdict).collect()
+            }
+            MemberImpl::Baseline(streams) => {
+                let n = self.n_features;
+                let spec = &self.spec;
+                let det = streams
+                    .entry(sample.stream_id)
+                    .or_insert_with(|| make_baseline(spec, n));
+                let outlier = det.step(&sample.values);
+                vec![MemberVote {
+                    stream_id: sample.stream_id,
+                    seq: sample.seq,
+                    outlier,
+                    score: if outlier { 1.0 } else { -1.0 },
+                    detail: None,
+                }]
+            }
+        };
+        self.account(t0, &votes);
+        Ok(votes)
+    }
+
+    /// Force out everything pending (end of stream).
+    pub fn flush(&mut self) -> Result<Vec<MemberVote>> {
+        let t0 = Instant::now();
+        let votes = match &mut self.imp {
+            MemberImpl::Engine(eng) => eng
+                .flush()?
+                .into_iter()
+                .map(vote_from_verdict)
+                .collect(),
+            MemberImpl::Baseline(_) => Vec::new(), // nothing ever pends
+        };
+        self.account(t0, &votes);
+        Ok(votes)
+    }
+
+    /// Streams with in-flight state.
+    pub fn active_streams(&self) -> usize {
+        match &self.imp {
+            MemberImpl::Engine(eng) => eng.active_streams(),
+            MemberImpl::Baseline(streams) => streams.len(),
+        }
+    }
+
+    fn account(&mut self, t0: Instant, votes: &[MemberVote]) {
+        self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
+        self.stats.votes += votes.len() as u64;
+        self.stats.outliers +=
+            votes.iter().filter(|v| v.outlier).count() as u64;
+    }
+}
+
+/// Relative threshold margin → `[-1, 1]` score (NaN-safe: the RTL
+/// pipeline reports ζ₁ = NaN, which must not poison weighted sums).
+fn vote_from_verdict(v: EngineVerdict) -> MemberVote {
+    let margin = (v.zeta - v.threshold) / v.threshold;
+    let score = if margin.is_finite() {
+        margin.clamp(-1.0, 1.0)
+    } else {
+        0.0
+    };
+    MemberVote {
+        stream_id: v.stream_id,
+        seq: v.seq,
+        outlier: v.outlier,
+        score,
+        detail: Some(v),
+    }
+}
+
+fn make_baseline(
+    spec: &MemberSpec,
+    n_features: usize,
+) -> Box<dyn AnomalyDetector> {
+    match spec.kind {
+        MemberKind::MSigma => {
+            Box::new(MSigmaDetector::new(n_features, spec.m))
+        }
+        MemberKind::ZScore => {
+            Box::new(SlidingZScore::new(n_features, spec.m, spec.window))
+        }
+        // `build` never routes TEDA kinds here.
+        MemberKind::TedaSoftware | MemberKind::TedaRtl => {
+            unreachable!("TEDA members are engine-backed")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(sid: u64, seq: u64, v: f64) -> Sample {
+        Sample { stream_id: sid, seq, values: vec![v, -v] }
+    }
+
+    #[test]
+    fn software_member_votes_immediately_with_detail() {
+        let spec: MemberSpec = "teda:m=3".parse().unwrap();
+        let mut member = EnsembleMember::build(&spec, 2);
+        let votes = member.ingest(&sample(7, 0, 0.5)).unwrap();
+        assert_eq!(votes.len(), 1);
+        assert_eq!(votes[0].stream_id, 7);
+        assert_eq!(votes[0].seq, 0);
+        assert!(votes[0].detail.is_some());
+        assert!(!votes[0].outlier); // k=1 is never an outlier
+        assert!(member.flush().unwrap().is_empty());
+        assert_eq!(member.stats().votes, 1);
+        assert_eq!(member.active_streams(), 1);
+    }
+
+    #[test]
+    fn rtl_member_votes_arrive_after_pipeline_latency() {
+        let spec: MemberSpec = "rtl:m=3".parse().unwrap();
+        let mut member = EnsembleMember::build(&spec, 2);
+        let mut got = 0;
+        for seq in 0..5u64 {
+            got += member
+                .ingest(&sample(1, seq, 0.1 * seq as f64))
+                .unwrap()
+                .len();
+        }
+        assert!(got < 5, "RTL latency should delay some votes");
+        got += member.flush().unwrap().len();
+        assert_eq!(got, 5, "flush must emit the tail");
+    }
+
+    #[test]
+    fn baseline_member_is_per_stream() {
+        let spec: MemberSpec = "msigma:m=3".parse().unwrap();
+        let mut member = EnsembleMember::build(&spec, 1);
+        // Stream 0 near 0, stream 1 near 100.
+        for seq in 0..200u64 {
+            member
+                .ingest(&Sample {
+                    stream_id: 0,
+                    seq,
+                    values: vec![(seq % 5) as f64 * 0.01],
+                })
+                .unwrap();
+            member
+                .ingest(&Sample {
+                    stream_id: 1,
+                    seq,
+                    values: vec![100.0 + (seq % 5) as f64 * 0.01],
+                })
+                .unwrap();
+        }
+        assert_eq!(member.active_streams(), 2);
+        let v0 = member
+            .ingest(&Sample { stream_id: 0, seq: 200, values: vec![100.0] })
+            .unwrap();
+        let v1 = member
+            .ingest(&Sample { stream_id: 1, seq: 200, values: vec![100.0] })
+            .unwrap();
+        assert!(v0[0].outlier && v0[0].score == 1.0);
+        assert!(!v1[0].outlier && v1[0].score == -1.0);
+        assert!(v0[0].detail.is_none());
+    }
+
+    #[test]
+    fn margin_score_is_clamped_and_signed() {
+        let v = EngineVerdict {
+            stream_id: 0,
+            seq: 9,
+            k: 10,
+            eccentricity: 1.0,
+            zeta: 0.5,
+            threshold: 0.1,
+            outlier: true,
+        };
+        let vote = vote_from_verdict(v);
+        assert_eq!(vote.score, 1.0); // margin 4.0 clamps to 1
+        let v = EngineVerdict {
+            stream_id: 0,
+            seq: 9,
+            k: 10,
+            eccentricity: 1.0,
+            zeta: f64::NAN,
+            threshold: 0.1,
+            outlier: false,
+        };
+        assert_eq!(vote_from_verdict(v).score, 0.0); // NaN-safe
+    }
+
+    #[test]
+    fn busy_ns_accumulates() {
+        let spec: MemberSpec = "zscore:m=3,w=8".parse().unwrap();
+        let mut member = EnsembleMember::build(&spec, 1);
+        for seq in 0..50u64 {
+            member
+                .ingest(&Sample {
+                    stream_id: 0,
+                    seq,
+                    values: vec![seq as f64],
+                })
+                .unwrap();
+        }
+        assert!(member.stats().busy_ns > 0);
+        assert_eq!(member.stats().votes, 50);
+    }
+}

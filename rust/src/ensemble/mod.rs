@@ -1,0 +1,501 @@
+//! Ensemble subsystem — multi-detector fusion over pluggable engines.
+//!
+//! The paper scales TEDA by instantiating "multiple TEDA modules
+//! applied in parallel" (§5.2.1); fSEAD (Lou et al. 2024) shows the
+//! production version of that idea is a *composable ensemble* of
+//! heterogeneous streaming detectors, because no single detector wins
+//! across workloads (Choudhary et al. 2017). This module supplies that
+//! layer:
+//!
+//! - [`member`] — [`EnsembleMember`] adapts any [`Engine`]
+//!   (TEDA software / RTL-sim) or [`crate::baselines::AnomalyDetector`]
+//!   (m·σ, sliding z-score) into one uniform voting surface with
+//!   per-member latency/vote accounting.
+//! - [`combiner`] — pluggable fusion: majority, static weighted score,
+//!   any-of, all-of, and an adaptive weighted vote that decays members
+//!   disagreeing with the fused verdict (see the module doc for exact
+//!   semantics).
+//! - [`partition`] — static planner answering "does this ensemble fit
+//!   the xc6vlx240t, and how does it spread across worker shards?" via
+//!   the calibrated [`crate::synth`] occupation model.
+//! - [`EnsembleEngine`] — the composition, itself an [`Engine`], so the
+//!   coordinator drives a fused N-member ensemble exactly like a single
+//!   backend (`[engine] kind = "ensemble"`).
+//!
+//! ## Vote alignment
+//!
+//! Members emit votes at different latencies (software TEDA answers
+//! immediately, the RTL pipeline answers 2 samples late, batching
+//! engines in bursts). The engine aligns votes by `(stream, seq)` and
+//! fuses a sample only when *every* member has voted on it, so fusion
+//! semantics are latency-independent: the fused stream is identical
+//! whatever mix of member latencies is enrolled. Per-stream order is
+//! preserved because each member emits per-stream in order and a
+//! sample's quorum therefore completes in order too.
+//!
+//! ## Equivalence guarantee
+//!
+//! A single-member ensemble is verdict-for-verdict identical to the
+//! wrapped engine (property-tested against
+//! [`crate::engine::SoftwareEngine`]):
+//! the fused verdict copies the member's full TEDA statistics and every
+//! combiner degenerates to the member's own flag at N = 1.
+
+pub mod combiner;
+pub mod member;
+pub mod partition;
+
+pub use combiner::{build_combiner, Combiner, Fused};
+pub use member::{EnsembleMember, MemberStats, MemberVote};
+pub use partition::{MemberFootprint, PartitionPlan};
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::config::EnsembleConfig;
+use crate::engine::{Engine, EngineVerdict};
+use crate::metrics::EnsembleMetrics;
+use crate::stream::Sample;
+use crate::{Error, Result};
+
+/// Per-sample record of how the fused verdict came about (kept only
+/// when breakdown capture is enabled — see
+/// [`EnsembleEngine::with_breakdown`]).
+#[derive(Debug, Clone)]
+pub struct FusedBreakdown {
+    pub stream_id: u64,
+    pub seq: u64,
+    /// The ensemble's verdict.
+    pub outlier: bool,
+    /// Combiner decision statistic.
+    pub score: f64,
+    /// `(member label, member flag, member score)` per member.
+    pub votes: Vec<(String, bool, f64)>,
+}
+
+/// An ensemble of heterogeneous detectors behind the [`Engine`] trait.
+pub struct EnsembleEngine {
+    members: Vec<EnsembleMember>,
+    combiner: Box<dyn Combiner>,
+    /// Votes waiting for quorum, keyed by (stream, seq); one slot per
+    /// member in member order.
+    pending: HashMap<(u64, u64), Vec<Option<MemberVote>>>,
+    /// Stream ids ever seen (the engine-level active-stream count).
+    seen: HashSet<u64>,
+    /// Shared per-member counters (coordinator wiring); optional so the
+    /// engine also runs standalone (examples, benches, CLI one-shots).
+    metrics: Option<Arc<EnsembleMetrics>>,
+    /// busy_ns already flushed into `metrics` per member.
+    synced_busy_ns: Vec<u64>,
+    /// Per-sample vote breakdowns (only when enabled).
+    breakdowns: Option<Vec<FusedBreakdown>>,
+}
+
+impl EnsembleEngine {
+    /// Build the roster + combiner from a validated config.
+    pub fn new(cfg: &EnsembleConfig, n_features: usize) -> Result<Self> {
+        cfg.validate()?;
+        let members: Vec<EnsembleMember> = cfg
+            .members
+            .iter()
+            .map(|spec| EnsembleMember::build(spec, n_features))
+            .collect();
+        let weights = members.iter().map(EnsembleMember::weight).collect();
+        let combiner = build_combiner(cfg.combiner, weights);
+        let n = members.len();
+        Ok(EnsembleEngine {
+            members,
+            combiner,
+            pending: HashMap::new(),
+            seen: HashSet::new(),
+            metrics: None,
+            synced_busy_ns: vec![0; n],
+            breakdowns: None,
+        })
+    }
+
+    /// Attach shared per-member counters (must match the member count).
+    ///
+    /// # Panics
+    /// Panics when the counter bundle was built for a different roster
+    /// size — silently mis-attributing votes would be worse.
+    pub fn with_metrics(mut self, metrics: Arc<EnsembleMetrics>) -> Self {
+        assert_eq!(
+            metrics.members.len(),
+            self.members.len(),
+            "EnsembleMetrics rows must match the member roster"
+        );
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Capture per-sample vote breakdowns (diagnostics; costs memory —
+    /// drain with [`EnsembleEngine::take_breakdowns`]).
+    pub fn with_breakdown(mut self, enabled: bool) -> Self {
+        self.breakdowns = if enabled { Some(Vec::new()) } else { None };
+        self
+    }
+
+    /// Member count.
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Per-member labels (member order).
+    pub fn member_labels(&self) -> Vec<String> {
+        self.members.iter().map(EnsembleMember::label).collect()
+    }
+
+    /// Per-member accounting snapshots (member order).
+    pub fn member_stats(&self) -> Vec<MemberStats> {
+        self.members.iter().map(EnsembleMember::stats).collect()
+    }
+
+    /// Current combiner weights (adaptive combiners evolve them).
+    pub fn combiner_weights(&self) -> Vec<f64> {
+        self.combiner.weights()
+    }
+
+    /// Drain captured breakdowns (empty unless `with_breakdown(true)`).
+    pub fn take_breakdowns(&mut self) -> Vec<FusedBreakdown> {
+        self.breakdowns.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Feed one member's votes into the pending table.
+    fn stage_votes(
+        &mut self,
+        member_idx: usize,
+        votes: Vec<MemberVote>,
+    ) -> Result<()> {
+        let n = self.members.len();
+        for vote in votes {
+            let key = (vote.stream_id, vote.seq);
+            let slots =
+                self.pending.entry(key).or_insert_with(|| vec![None; n]);
+            if slots[member_idx].is_some() {
+                return Err(Error::Stream(format!(
+                    "member {member_idx} voted twice on stream {} seq {}",
+                    key.0, key.1
+                )));
+            }
+            slots[member_idx] = Some(vote);
+        }
+        Ok(())
+    }
+
+    /// Fuse every sample whose quorum is complete; returns verdicts
+    /// sorted by (stream, seq).
+    fn drain_ready(&mut self) -> Vec<EngineVerdict> {
+        let mut ready: Vec<(u64, u64)> = self
+            .pending
+            .iter()
+            .filter(|(_, slots)| slots.iter().all(Option::is_some))
+            .map(|(&k, _)| k)
+            .collect();
+        // Fuse in (stream, seq) order — stateful combiners (adaptive)
+        // must see samples deterministically, not in HashMap order.
+        ready.sort_unstable();
+        let mut out = Vec::with_capacity(ready.len());
+        for key in ready {
+            let slots = self.pending.remove(&key).unwrap();
+            let votes: Vec<MemberVote> =
+                slots.into_iter().map(Option::unwrap).collect();
+            out.push(self.fuse_one(key, &votes));
+        }
+        out.sort_by_key(|v| (v.stream_id, v.seq));
+        out
+    }
+
+    /// Combine one sample's aligned votes into the fused verdict.
+    fn fuse_one(
+        &mut self,
+        (stream_id, seq): (u64, u64),
+        votes: &[MemberVote],
+    ) -> EngineVerdict {
+        let fused = self.combiner.fuse(votes);
+        if let Some(m) = &self.metrics {
+            m.fused_verdicts.inc();
+            if fused.outlier {
+                m.fused_outliers.inc();
+            }
+            for (vote, mm) in votes.iter().zip(&m.members) {
+                mm.votes.inc();
+                if vote.outlier {
+                    mm.outliers.inc();
+                }
+                if vote.outlier != fused.outlier {
+                    mm.disagreements.inc();
+                }
+            }
+        }
+        if let Some(b) = &mut self.breakdowns {
+            b.push(FusedBreakdown {
+                stream_id,
+                seq,
+                outlier: fused.outlier,
+                score: fused.score,
+                votes: votes
+                    .iter()
+                    .zip(&self.members)
+                    .map(|(v, m)| (m.label(), v.outlier, v.score))
+                    .collect(),
+            });
+        }
+        // The fused verdict carries the first TEDA member's statistics
+        // (eccentricity/ζ/threshold) so downstream consumers keep the
+        // paper's observables; baseline-only ensembles synthesize them.
+        match votes.iter().find_map(|v| v.detail.clone()) {
+            Some(mut detail) => {
+                detail.outlier = fused.outlier;
+                detail
+            }
+            None => EngineVerdict {
+                stream_id,
+                seq,
+                k: seq + 1,
+                eccentricity: 0.0,
+                zeta: fused.score,
+                threshold: 0.0,
+                outlier: fused.outlier,
+            },
+        }
+    }
+
+    /// Push each member's busy-time delta into the shared counters.
+    fn sync_busy_ns(&mut self) {
+        if let Some(m) = &self.metrics {
+            for (i, member) in self.members.iter().enumerate() {
+                let total = member.stats().busy_ns;
+                let delta = total - self.synced_busy_ns[i];
+                if delta > 0 {
+                    m.members[i].busy_ns.add(delta);
+                    self.synced_busy_ns[i] = total;
+                }
+            }
+        }
+    }
+}
+
+impl Engine for EnsembleEngine {
+    fn name(&self) -> &'static str {
+        "ensemble"
+    }
+
+    fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>> {
+        self.seen.insert(sample.stream_id);
+        for i in 0..self.members.len() {
+            let votes = self.members[i].ingest(sample)?;
+            self.stage_votes(i, votes)?;
+        }
+        self.sync_busy_ns();
+        Ok(self.drain_ready())
+    }
+
+    fn flush(&mut self) -> Result<Vec<EngineVerdict>> {
+        for i in 0..self.members.len() {
+            let votes = self.members[i].flush()?;
+            self.stage_votes(i, votes)?;
+        }
+        self.sync_busy_ns();
+        let out = self.drain_ready();
+        if !self.pending.is_empty() {
+            let mut keys: Vec<&(u64, u64)> = self.pending.keys().collect();
+            keys.sort();
+            return Err(Error::Stream(format!(
+                "ensemble flush left {} samples without quorum \
+                 (first: {:?})",
+                self.pending.len(),
+                keys.first()
+            )));
+        }
+        Ok(out)
+    }
+
+    fn active_streams(&self) -> usize {
+        self.seen.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CombinerKind, EnsembleConfig};
+    use crate::engine::testutil::{interleaved, run_engine};
+    use crate::engine::SoftwareEngine;
+    use crate::util::propkit::forall;
+
+    fn ensemble(members: &str, combiner: CombinerKind) -> EnsembleEngine {
+        let cfg =
+            EnsembleConfig::from_member_list(members, combiner).unwrap();
+        EnsembleEngine::new(&cfg, 2).unwrap()
+    }
+
+    /// Satellite: a single-software-TEDA ensemble is verdict-for-verdict
+    /// identical to `SoftwareEngine` on interleaved multi-stream input,
+    /// across every combiner — the ensemble layer adds no verdict drift.
+    #[test]
+    fn prop_single_member_matches_software_engine() {
+        forall("single-member ensemble ≡ SoftwareEngine", 48, |g| {
+            let streams = g.usize_in(1, 4) as u64;
+            let per_stream = g.usize_in(2, 40);
+            let seed = g.rng().next_u64();
+            let m = g.f64_in(1.5, 4.5);
+            let combiner = match g.usize_in(0, 4) {
+                0 => CombinerKind::Majority,
+                1 => CombinerKind::WeightedScore,
+                2 => CombinerKind::AnyOf,
+                3 => CombinerKind::AllOf,
+                _ => CombinerKind::Adaptive,
+            };
+            let samples = interleaved(streams, per_stream, 2, seed);
+
+            let cfg = EnsembleConfig::from_member_list(
+                &format!("teda:m={m}"),
+                combiner,
+            )
+            .unwrap();
+            let mut ens = EnsembleEngine::new(&cfg, 2).unwrap();
+            let mut sw = SoftwareEngine::new(2, m);
+
+            let a = run_engine(&mut ens, &samples);
+            let b = run_engine(&mut sw, &samples);
+            assert_eq!(a, b, "drift with combiner {combiner}");
+        });
+    }
+
+    #[test]
+    fn mixed_latency_members_align_votes() {
+        // Software answers instantly, RTL two cycles late: quorum logic
+        // must still classify every sample exactly once.
+        let mut ens = ensemble("teda+rtl", CombinerKind::Majority);
+        let samples = interleaved(3, 40, 2, 17);
+        let out = run_engine(&mut ens, &samples);
+        assert_eq!(out.len(), 120);
+        assert_eq!(ens.active_streams(), 3);
+        // Verdict numerics come from the first TEDA member (f64).
+        for ((sid, seq), v) in &out {
+            assert_eq!(v.stream_id, *sid);
+            assert_eq!(v.seq, *seq);
+            assert_eq!(v.k, seq + 1);
+        }
+    }
+
+    #[test]
+    fn three_member_heterogeneous_ensemble_classifies_everything() {
+        let mut ens = ensemble(
+            "teda+msigma+zscore:m=3,w=32",
+            CombinerKind::Majority,
+        );
+        let samples = interleaved(4, 60, 2, 5);
+        let out = run_engine(&mut ens, &samples);
+        assert_eq!(out.len(), 240);
+        let stats = ens.member_stats();
+        assert_eq!(stats.len(), 3);
+        for s in &stats {
+            assert_eq!(s.votes, 240);
+        }
+    }
+
+    #[test]
+    fn anyof_flags_superset_of_allof() {
+        let samples = interleaved(2, 150, 2, 23);
+        let mut any = ensemble("teda+msigma", CombinerKind::AnyOf);
+        let mut all = ensemble("teda+msigma", CombinerKind::AllOf);
+        let a = run_engine(&mut any, &samples);
+        let b = run_engine(&mut all, &samples);
+        for (key, fused_all) in &b {
+            if fused_all.outlier {
+                assert!(a[key].outlier, "all-of flagged {key:?} but any-of not");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_outlier_on_gross_anomaly() {
+        let mut ens = ensemble(
+            "teda+msigma+zscore:m=3,w=32",
+            CombinerKind::Majority,
+        );
+        for seq in 0..200u64 {
+            let v = (seq % 7) as f64 * 0.01;
+            let out = ens
+                .ingest(&Sample { stream_id: 0, seq, values: vec![v, -v] })
+                .unwrap();
+            assert!(!out.iter().any(|o| o.outlier), "false alarm at {seq}");
+        }
+        let out = ens
+            .ingest(&Sample {
+                stream_id: 0,
+                seq: 200,
+                values: vec![500.0, -500.0],
+            })
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].outlier);
+    }
+
+    #[test]
+    fn breakdown_capture_records_votes() {
+        let mut ens = ensemble("teda+msigma", CombinerKind::Majority)
+            .with_breakdown(true);
+        let samples = interleaved(1, 10, 2, 9);
+        run_engine(&mut ens, &samples);
+        let breakdowns = ens.take_breakdowns();
+        assert_eq!(breakdowns.len(), 10);
+        assert_eq!(breakdowns[0].votes.len(), 2);
+        assert!(breakdowns[0].votes[0].0.starts_with("teda"));
+        // Drained: second take is empty.
+        assert!(ens.take_breakdowns().is_empty());
+    }
+
+    #[test]
+    fn metrics_wiring_counts_votes_and_disagreements() {
+        let cfg = EnsembleConfig::from_member_list(
+            "teda+msigma",
+            CombinerKind::Majority,
+        )
+        .unwrap();
+        let metrics = EnsembleMetrics::new(cfg.labels());
+        let mut ens = EnsembleEngine::new(&cfg, 2)
+            .unwrap()
+            .with_metrics(metrics.clone());
+        let samples = interleaved(2, 50, 2, 3);
+        run_engine(&mut ens, &samples);
+        assert_eq!(metrics.fused_verdicts.get(), 100);
+        assert_eq!(metrics.members[0].votes.get(), 100);
+        assert_eq!(metrics.members[1].votes.get(), 100);
+        assert!(metrics.members[0].busy_ns.get() > 0);
+    }
+
+    #[test]
+    fn empty_roster_rejected() {
+        let cfg = EnsembleConfig {
+            members: vec![],
+            combiner: CombinerKind::Majority,
+        };
+        assert!(EnsembleEngine::new(&cfg, 2).is_err());
+    }
+
+    #[test]
+    fn adaptive_weights_evolve_in_engine() {
+        // m·σ flags nothing early (k ≤ 2 guard) while TEDA never flags
+        // either on calm data — weights barely move. Force disagreement
+        // with an any-flagging workload instead: drive a spike regime.
+        let mut ens = ensemble("teda:m=1.1+msigma:m=6", CombinerKind::Adaptive);
+        let mut rng = crate::util::prng::SplitMix64::new(77);
+        for seq in 0..400u64 {
+            let spread = if seq % 3 == 0 { 4.0 } else { 0.1 };
+            ens.ingest(&Sample {
+                stream_id: 0,
+                seq,
+                values: vec![rng.normal() * spread, rng.normal() * spread],
+            })
+            .unwrap();
+        }
+        let w = ens.combiner_weights();
+        assert_eq!(w.len(), 2);
+        // A tight-threshold TEDA disagrees with a loose m·σ often enough
+        // that at least one weight must have moved off 1.0.
+        assert!(w.iter().any(|&x| (x - 1.0).abs() > 1e-6), "weights {w:?}");
+    }
+}

@@ -1,0 +1,391 @@
+//! Static partition planner: can this ensemble fit the paper's FPGA,
+//! and how should members spread across coordinator worker shards?
+//!
+//! ## Model
+//!
+//! The paper scales TEDA by instantiating "multiple TEDA modules
+//! applied in parallel" (§5.2.1); an ensemble generalizes that to
+//! *heterogeneous* modules. The planner treats each member as one
+//! hardware block:
+//!
+//! - **TEDA members** (software or RTL spec) cost exactly what the
+//!   [`crate::rtl`] netlist costs on the target device — the same
+//!   netlist the simulator executes, analyzed by
+//!   [`OccupationReport::analyze`], so plan and function cannot drift.
+//! - **Baseline members** are estimated from the same calibrated
+//!   [`ResourceModel`] primitives a direct datapath implementation
+//!   would instantiate (documented per member in
+//!   [`baseline_footprint`]); the z-score window buffer is counted as
+//!   FF bits (a real implementation would use BRAM — this is the
+//!   conservative bound).
+//!
+//! Members are placed on `shards` coordinator workers by greedy
+//! longest-processing-time (LPT) bin packing on LUT cost, the dominant
+//! resource. The **aggregate** occupation (Σ members, instantiated once
+//! each) is reported as a standard [`OccupationReport`] against the
+//! xc6vlx240t, answering the ISSUE's sizing question directly:
+//! `fits()` is true iff every resource stays under 100%.
+
+use crate::config::{MemberKind, MemberSpec};
+use crate::rtl::{CompKind, TedaRtl};
+use crate::synth::{OccupationReport, ResourceModel, Virtex6};
+use crate::{Error, Result};
+
+/// One member's modeled hardware cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberFootprint {
+    pub label: String,
+    /// DSP48E1 slices.
+    pub dsp: usize,
+    /// LUTs.
+    pub lut: usize,
+    /// Flip-flop bits.
+    pub ff: usize,
+    /// FP multiplier core instances.
+    pub mult_cores: usize,
+    /// FP divider core instances.
+    pub div_cores: usize,
+    /// FP adder/subtractor core instances.
+    pub addsub_cores: usize,
+}
+
+/// The planned placement of an ensemble on a device.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// Per-member modeled cost (member order).
+    pub footprints: Vec<MemberFootprint>,
+    /// Member indices assigned to each shard (LPT on LUTs).
+    pub shards: Vec<Vec<usize>>,
+    /// Aggregate occupation of the whole ensemble on the device.
+    pub occupation: OccupationReport,
+    device: Virtex6,
+}
+
+impl PartitionPlan {
+    /// Plan `specs` across `shards` workers for `n_features`-dim
+    /// streams on `device`.
+    pub fn plan(
+        specs: &[MemberSpec],
+        n_features: usize,
+        shards: usize,
+        device: Virtex6,
+    ) -> Result<PartitionPlan> {
+        if specs.is_empty() {
+            return Err(Error::Config(
+                "cannot partition an empty ensemble".into(),
+            ));
+        }
+        if shards == 0 {
+            return Err(Error::Config("need at least one shard".into()));
+        }
+        let footprints: Result<Vec<MemberFootprint>> = specs
+            .iter()
+            .map(|s| member_footprint(s, n_features, device))
+            .collect();
+        let footprints = footprints?;
+
+        // Greedy LPT on LUTs: heaviest member onto the lightest shard.
+        let mut order: Vec<usize> = (0..footprints.len()).collect();
+        order.sort_by(|&a, &b| {
+            footprints[b]
+                .lut
+                .cmp(&footprints[a].lut)
+                .then_with(|| a.cmp(&b))
+        });
+        let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        let mut shard_lut = vec![0usize; shards];
+        for idx in order {
+            let lightest = shard_lut
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap();
+            assignment[lightest].push(idx);
+            shard_lut[lightest] += footprints[idx].lut;
+        }
+        for members in &mut assignment {
+            members.sort_unstable();
+        }
+
+        let occupation = aggregate_occupation(&footprints, device);
+        Ok(PartitionPlan {
+            footprints,
+            shards: assignment,
+            occupation,
+            device,
+        })
+    }
+
+    /// Does the whole ensemble fit the device?
+    pub fn fits(&self) -> bool {
+        self.occupation.multipliers_pct <= 100.0
+            && self.occupation.registers_pct <= 100.0
+            && self.occupation.luts_pct <= 100.0
+    }
+
+    /// How many copies of this ensemble the device could host (the
+    /// §5.2.1 "multiple modules in parallel" headroom).
+    pub fn max_replicas(&self) -> usize {
+        let per = [
+            (self.occupation.multipliers, self.device.dsp48e1),
+            (self.occupation.registers, self.device.ffs),
+            (self.occupation.luts, self.device.luts),
+        ];
+        per.iter()
+            .map(|&(used, cap)| if used == 0 { usize::MAX } else { cap / used })
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Human-readable plan (member table, shard map, occupation).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("ensemble partition plan\n\n");
+        out.push_str("member                     DSP48E1    LUT     FF\n");
+        for fp in &self.footprints {
+            out.push_str(&format!(
+                "  {:<24} {:>7} {:>7} {:>6}\n",
+                fp.label, fp.dsp, fp.lut, fp.ff
+            ));
+        }
+        out.push('\n');
+        for (i, members) in self.shards.iter().enumerate() {
+            let labels: Vec<&str> = members
+                .iter()
+                .map(|&m| self.footprints[m].label.as_str())
+                .collect();
+            let lut: usize =
+                members.iter().map(|&m| self.footprints[m].lut).sum();
+            out.push_str(&format!(
+                "  shard {i}: [{}] ({lut} LUT)\n",
+                labels.join(", ")
+            ));
+        }
+        out.push('\n');
+        out.push_str(&self.occupation.render_table3());
+        out.push_str(&format!(
+            "fits {}: {} (≤ {} replica{} of the full ensemble)\n",
+            self.device.name,
+            if self.fits() { "YES" } else { "NO" },
+            self.max_replicas(),
+            if self.max_replicas() == 1 { "" } else { "s" },
+        ));
+        out
+    }
+}
+
+/// Cost of one member on `device`.
+fn member_footprint(
+    spec: &MemberSpec,
+    n_features: usize,
+    device: Virtex6,
+) -> Result<MemberFootprint> {
+    match spec.kind {
+        MemberKind::TedaSoftware | MemberKind::TedaRtl => {
+            // Both map to the paper's TEDA datapath in hardware; the
+            // software/RTL distinction only matters for host execution.
+            let rtl = TedaRtl::new(n_features, spec.m as f32)?;
+            let rep = OccupationReport::analyze(rtl.netlist(), device);
+            Ok(MemberFootprint {
+                label: spec.label(),
+                dsp: rep.multipliers,
+                lut: rep.luts,
+                ff: rep.registers,
+                mult_cores: rep.mult_cores,
+                div_cores: rep.div_cores,
+                addsub_cores: rep.addsub_cores,
+            })
+        }
+        MemberKind::MSigma => {
+            Ok(baseline_footprint(spec.label(), n_features, 0))
+        }
+        MemberKind::ZScore => {
+            Ok(baseline_footprint(spec.label(), n_features, spec.window))
+        }
+    }
+}
+
+/// Datapath estimate for the m·σ / z-score baselines, priced with the
+/// calibrated [`ResourceModel`] primitives:
+///
+/// per feature — 1 subtractor (x−μ), 1 multiplier (m·σ or squaring),
+/// 1 divider (running-mean update), 2 adders (mean/var accumulate),
+/// 1 comparator (flag), 2 state registers (μ, σ² accumulators);
+/// plus one shared sample counter. A `window > 0` (z-score) adds
+/// `window · n_features` 32-bit buffer words, costed as registers.
+fn baseline_footprint(
+    label: String,
+    n_features: usize,
+    window: usize,
+) -> MemberFootprint {
+    let model = ResourceModel;
+    let mut dsp = 0;
+    let mut lut = 0;
+    let mut ff = 0;
+    {
+        let mut add = |kind: &CompKind, count: usize| {
+            let c = model.cost(kind);
+            dsp += c.dsp * count;
+            lut += c.lut * count;
+            ff += c.ff * count;
+        };
+        add(&CompKind::Sub, n_features);
+        add(&CompKind::Mult, n_features);
+        add(&CompKind::Div, n_features);
+        add(&CompKind::Add, 2 * n_features);
+        add(&CompKind::CompGt, n_features);
+        add(&CompKind::Reg { init: 0.0 }, 2 * n_features);
+        add(&CompKind::Counter, 1);
+        // Window buffer: one 32-bit word per buffered value.
+        add(&CompKind::Reg { init: 0.0 }, window * n_features);
+    }
+    MemberFootprint {
+        label,
+        dsp,
+        lut,
+        ff,
+        mult_cores: n_features,
+        div_cores: n_features,
+        addsub_cores: 3 * n_features,
+    }
+}
+
+/// Sum member footprints into a standard Table-3-shaped report.
+fn aggregate_occupation(
+    footprints: &[MemberFootprint],
+    device: Virtex6,
+) -> OccupationReport {
+    let dsp: usize = footprints.iter().map(|f| f.dsp).sum();
+    let lut: usize = footprints.iter().map(|f| f.lut).sum();
+    let ff: usize = footprints.iter().map(|f| f.ff).sum();
+    OccupationReport {
+        multipliers: dsp,
+        registers: ff,
+        luts: lut,
+        multipliers_pct: 100.0 * dsp as f64 / device.dsp48e1 as f64,
+        registers_pct: 100.0 * ff as f64 / device.ffs as f64,
+        luts_pct: 100.0 * lut as f64 / device.luts as f64,
+        mult_cores: footprints.iter().map(|f| f.mult_cores).sum(),
+        div_cores: footprints.iter().map(|f| f.div_cores).sum(),
+        addsub_cores: footprints.iter().map(|f| f.addsub_cores).sum(),
+        device: device.name,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EnsembleConfig;
+
+    fn specs(list: &str) -> Vec<MemberSpec> {
+        EnsembleConfig::from_member_list(
+            list,
+            crate::config::CombinerKind::Majority,
+        )
+        .unwrap()
+        .members
+    }
+
+    #[test]
+    fn teda_member_footprint_matches_table3() {
+        let plan = PartitionPlan::plan(
+            &specs("teda"),
+            2,
+            1,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        // One TEDA member = the paper's Table 3 exactly.
+        assert_eq!(plan.occupation.multipliers, 27);
+        assert_eq!(plan.occupation.luts, 11_567);
+        assert!(plan.fits());
+    }
+
+    #[test]
+    fn five_member_sweep_fits_xc6vlx240t() {
+        // The ISSUE's sizing question: a TEDA m-sweep plus baselines.
+        let plan = PartitionPlan::plan(
+            &specs("teda+teda:m=2.5+teda:m=4+msigma+zscore:m=3,w=64"),
+            2,
+            2,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        assert!(plan.fits(), "{}", plan.render());
+        assert!(plan.max_replicas() >= 1);
+        // All members placed, exactly once.
+        let mut placed: Vec<usize> =
+            plan.shards.iter().flatten().copied().collect();
+        placed.sort_unstable();
+        assert_eq!(placed, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn lpt_balances_lut_load() {
+        let plan = PartitionPlan::plan(
+            &specs("teda+teda+teda+teda"),
+            2,
+            2,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        // Four identical members over two shards → 2 + 2.
+        assert_eq!(plan.shards[0].len(), 2);
+        assert_eq!(plan.shards[1].len(), 2);
+    }
+
+    #[test]
+    fn oversized_ensemble_reports_not_fitting() {
+        // 14 TEDA netlists ≈ 14 × 11 567 LUT > 150 720.
+        let list = vec!["teda"; 14].join("+");
+        let plan = PartitionPlan::plan(
+            &specs(&list),
+            2,
+            4,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        assert!(!plan.fits());
+        assert_eq!(plan.max_replicas(), 0);
+    }
+
+    #[test]
+    fn zscore_window_costs_registers() {
+        let small = member_footprint(
+            &"zscore:m=3,w=8".parse().unwrap(),
+            2,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        let big = member_footprint(
+            &"zscore:m=3,w=512".parse().unwrap(),
+            2,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        assert!(big.ff > small.ff);
+        assert_eq!(big.lut, small.lut);
+    }
+
+    #[test]
+    fn plan_rejects_degenerate_inputs() {
+        assert!(PartitionPlan::plan(&[], 2, 1, Virtex6::xc6vlx240t())
+            .is_err());
+        assert!(PartitionPlan::plan(
+            &specs("teda"),
+            2,
+            0,
+            Virtex6::xc6vlx240t()
+        )
+        .is_err());
+        let plan = PartitionPlan::plan(
+            &specs("teda"),
+            2,
+            1,
+            Virtex6::xc6vlx240t(),
+        )
+        .unwrap();
+        assert!(plan.render().contains("shard 0"));
+    }
+}

@@ -11,6 +11,11 @@
 //! - [`damadics`] — a DAMADICS-like actuator/fault simulator (Tables 1–2,
 //!   the data behind Figs. 6–7).
 //! - [`engine`] — pluggable detector backends: software, RTL-sim, XLA.
+//! - [`ensemble`] — multi-detector fusion: N heterogeneous members
+//!   (TEDA software/RTL, m·σ, sliding z-score, TEDA `m`-sweeps) behind
+//!   one [`engine::Engine`], with pluggable combiners and a Virtex-6
+//!   partition/occupation planner ("multiple TEDA modules applied in
+//!   parallel", §5.2.1, generalized fSEAD-style).
 //! - [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   artifact (L1/L2 live in `python/compile/`).
 //! - [`stream`] / [`coordinator`] — the L3 streaming service: sources,
@@ -37,6 +42,7 @@ pub mod config;
 pub mod coordinator;
 pub mod damadics;
 pub mod engine;
+pub mod ensemble;
 pub mod metrics;
 pub mod rtl;
 pub mod runtime;
@@ -49,30 +55,50 @@ pub mod util;
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// (`Display`/`Error` are hand-implemented: `thiserror` is unavailable
+/// in this registry-less build environment, DESIGN.md §3.)
+#[derive(Debug)]
 pub enum Error {
     /// Errors bubbling out of the PJRT/XLA runtime layer.
-    #[error("runtime: {0}")]
     Runtime(String),
     /// Configuration file / CLI parse errors.
-    #[error("config: {0}")]
     Config(String),
     /// Artifact manifest / HLO loading problems.
-    #[error("artifact: {0}")]
     Artifact(String),
     /// Coordinator / streaming errors (closed channels, unknown streams...).
-    #[error("stream: {0}")]
     Stream(String),
     /// RTL netlist construction or simulation errors.
-    #[error("rtl: {0}")]
     Rtl(String),
     /// I/O with context.
-    #[error("io: {context}: {source}")]
     Io {
         context: String,
-        #[source]
         source: std::io::Error,
     },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Stream(m) => write!(f, "stream: {m}"),
+            Error::Rtl(m) => write!(f, "rtl: {m}"),
+            Error::Io { context, source } => {
+                write!(f, "io: {context}: {source}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {

@@ -2,11 +2,12 @@
 //! service and the paper's experiment drivers.
 //!
 //! ```text
-//! teda-fpga serve    [--config FILE] [--engine software|rtl|xla]
+//! teda-fpga serve    [--config FILE] [--engine software|rtl|xla|ensemble]
 //!                    [--workers N] [--streams S] [--samples K] [--seed X]
 //! teda-fpga detect   [--item 1..7] [--m 3.0] [--engine ...] [--csv OUT]
 //! teda-fpga synth    [--n-features N] [--netlist]
 //! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
+//! teda-fpga ensemble [--members LIST] [--combiner KIND] [--item 1..7]
 //! teda-fpga doctor
 //! ```
 //!
@@ -16,14 +17,16 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use teda_fpga::config::{EngineKind, ServiceConfig};
+use teda_fpga::config::{CombinerKind, EngineKind, EnsembleConfig, ServiceConfig};
 use teda_fpga::coordinator::Service;
 use teda_fpga::damadics::{
     actuator1_schedule, evaluate_detection, fault_catalog, schedule_item,
     ActuatorSim,
 };
+use teda_fpga::engine::Engine as _;
+use teda_fpga::ensemble::{EnsembleEngine, PartitionPlan};
 use teda_fpga::rtl::TedaRtl;
-use teda_fpga::stream::{ReplaySource, StreamSource, SyntheticSource};
+use teda_fpga::stream::{ReplaySource, Sample, StreamSource, SyntheticSource};
 use teda_fpga::synth::{critical_path, OccupationReport, PipelineTiming, Virtex6};
 
 fn main() -> ExitCode {
@@ -44,6 +47,7 @@ fn main() -> ExitCode {
         "detect" => cmd_detect(&flags),
         "synth" => cmd_synth(&flags),
         "damadics" => cmd_damadics(&flags),
+        "ensemble" => cmd_ensemble(&flags),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!("{}", USAGE);
@@ -64,12 +68,22 @@ const USAGE: &str = "\
 teda-fpga — TEDA streaming anomaly detection (paper reproduction)
 
 USAGE:
-  teda-fpga serve    [--config FILE] [--engine software|rtl|xla]
+  teda-fpga serve    [--config FILE(.toml|.json)]
+                     [--engine software|rtl|xla|ensemble]
                      [--workers N] [--streams S] [--samples K] [--seed X]
-  teda-fpga detect   [--item 1..7] [--m 3.0] [--engine software|rtl] [--csv OUT]
+                     [--members LIST] [--combiner KIND]
+  teda-fpga detect   [--item 1..7] [--m 3.0]
+                     [--engine software|rtl|ensemble] [--csv OUT]
+                     [--members LIST] [--combiner KIND]
   teda-fpga synth    [--n-features N] [--netlist]
   teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I] [--seed X]
-  teda-fpga doctor";
+  teda-fpga ensemble [--members LIST] [--combiner KIND] [--workers N]
+                     [--n-features N] [--item 1..7] [--seed X]
+  teda-fpga doctor
+
+  LIST is `+`-separated member specs, e.g. 'teda+teda:m=2.5+zscore:m=3,w=64'
+  (kinds: teda|rtl|msigma|zscore; params: m=, w=, weight=).
+  KIND is majority|weighted-score|any-of|all-of|adaptive.";
 
 type CliError = Box<dyn std::error::Error>;
 
@@ -120,6 +134,60 @@ impl Flags {
     }
 }
 
+/// `--members` / `--combiner` overrides on top of a base ensemble
+/// config. Without `--members`, a `--m` flag re-thresholds the whole
+/// default roster (with `--members`, each spec carries its own `m`).
+fn ensemble_from_flags(
+    flags: &Flags,
+    base: EnsembleConfig,
+) -> Result<EnsembleConfig, CliError> {
+    let combiner = match flags.get("combiner") {
+        Some(c) => c.parse::<CombinerKind>()?,
+        None => base.combiner,
+    };
+    match flags.get("members") {
+        Some(list) => Ok(EnsembleConfig::from_member_list(list, combiner)?),
+        None => {
+            let mut cfg = EnsembleConfig { combiner, ..base };
+            if flags.has("m") {
+                let m: f64 = flags.parse_as("m", 3.0f64)?;
+                if m <= 0.0 {
+                    return Err("--m must be > 0".into());
+                }
+                for member in &mut cfg.members {
+                    member.m = m;
+                }
+            }
+            Ok(cfg)
+        }
+    }
+}
+
+/// Replay a recorded trace through an ensemble as stream 0; returns the
+/// fused outlier flag per sample (trace order).
+fn run_ensemble_over_trace(
+    cfg: &EnsembleConfig,
+    samples: &[Vec<f64>],
+    n_features: usize,
+) -> Result<Vec<bool>, CliError> {
+    let mut eng = EnsembleEngine::new(cfg, n_features)?;
+    let mut out = vec![false; samples.len()];
+    for (seq, values) in samples.iter().enumerate() {
+        let sample = Sample {
+            stream_id: 0,
+            seq: seq as u64,
+            values: values.clone(),
+        };
+        for v in eng.ingest(&sample)? {
+            out[v.seq as usize] = v.outlier;
+        }
+    }
+    for v in eng.flush()? {
+        out[v.seq as usize] = v.outlier;
+    }
+    Ok(out)
+}
+
 fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     let mut cfg = match flags.get("config") {
         Some(path) => ServiceConfig::load(path)?,
@@ -128,6 +196,7 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     if let Some(engine) = flags.get("engine") {
         cfg.engine = engine.parse::<EngineKind>()?;
     }
+    cfg.ensemble = ensemble_from_flags(flags, cfg.ensemble)?;
     cfg.workers = flags.parse_as("workers", cfg.workers)?;
     cfg.seed = flags.parse_as("seed", cfg.seed)?;
     let streams: u64 = flags.parse_as("streams", 16u64)?;
@@ -158,9 +227,13 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         }
     }
     let metrics = svc.metrics();
+    let ens_metrics = svc.ensemble_metrics();
     let out = svc.finish()?;
     let dt = t0.elapsed();
     println!("{}", metrics.render());
+    if let Some(em) = ens_metrics {
+        println!("{}", em.render());
+    }
     println!(
         "processed {} samples in {:.3}s — {:.0} samples/s end-to-end",
         out.len(),
@@ -196,10 +269,21 @@ fn cmd_detect(flags: &Flags) -> Result<(), CliError> {
                 .collect();
             rtl.run(&s32)?.into_iter().map(|v| v.outlier).collect()
         }
+        "ensemble" => {
+            let ecfg =
+                ensemble_from_flags(flags, EnsembleConfig::default())?;
+            println!(
+                "ensemble: [{}] via {}",
+                ecfg.labels().join(", "),
+                ecfg.combiner
+            );
+            run_ensemble_over_trace(&ecfg, &trace.samples, 2)?
+        }
         other => {
-            return Err(
-                format!("detect supports software|rtl, got {other}").into()
+            return Err(format!(
+                "detect supports software|rtl|ensemble, got {other}"
             )
+            .into())
         }
     };
     let report = evaluate_detection(&outlier_flags, &event, 1000);
@@ -267,6 +351,59 @@ fn cmd_damadics(flags: &Flags) -> Result<(), CliError> {
             trace.len(),
             event.fault
         ),
+    }
+    Ok(())
+}
+
+fn cmd_ensemble(flags: &Flags) -> Result<(), CliError> {
+    let ecfg = ensemble_from_flags(flags, EnsembleConfig::default())?;
+    let workers: usize = flags.parse_as("workers", 4usize)?;
+    let n: usize = flags.parse_as("n-features", 2usize)?;
+    println!(
+        "ensemble: [{}] via {} ({} workers, N={n})\n",
+        ecfg.labels().join(", "),
+        ecfg.combiner,
+        workers
+    );
+    let plan = PartitionPlan::plan(
+        &ecfg.members,
+        n,
+        workers,
+        Virtex6::xc6vlx240t(),
+    )?;
+    println!("{}", plan.render());
+
+    // Optional one-shot fused detection demo on a Table 2 fault item.
+    if flags.has("item") {
+        let item: u32 = flags.parse_as("item", 1u32)?;
+        let seed: u64 = flags.parse_as("seed", 2001u64)?;
+        let event = schedule_item(item)
+            .ok_or_else(|| format!("no Table 2 item {item}"))?;
+        let trace = ActuatorSim::with_seed(seed).generate_day(Some(&event));
+        println!(
+            "fault item {item}: {} ({}) window {}..{}",
+            event.fault, event.description, event.start, event.end
+        );
+        // Single TEDA reference.
+        let mut det = teda_fpga::teda::TedaDetector::new(2, 3.0);
+        let single: Vec<bool> =
+            trace.samples.iter().map(|s| det.step(s).outlier).collect();
+        let single_report = evaluate_detection(&single, &event, 1000);
+        // Fused ensemble.
+        let fused = run_ensemble_over_trace(&ecfg, &trace.samples, 2)?;
+        let fused_report = evaluate_detection(&fused, &event, 1000);
+        println!(
+            "  single teda(m=3): detected={} latency={:?} far={:.5}",
+            single_report.detected(),
+            single_report.latency,
+            single_report.false_alarm_rate()
+        );
+        println!(
+            "  fused ensemble:   detected={} latency={:?} far={:.5}",
+            fused_report.detected(),
+            fused_report.latency,
+            fused_report.false_alarm_rate()
+        );
     }
     Ok(())
 }

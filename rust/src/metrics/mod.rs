@@ -169,6 +169,78 @@ impl ServiceMetrics {
     }
 }
 
+/// Per-ensemble-member counters (shared across all worker shards: each
+/// shard's `EnsembleEngine` adds into the same atomics).
+#[derive(Debug)]
+pub struct MemberMetrics {
+    /// Display label (`"teda(m=3)"`, ...).
+    pub label: String,
+    /// Votes this member produced.
+    pub votes: Counter,
+    /// Votes that flagged an outlier.
+    pub outliers: Counter,
+    /// Votes that disagreed with the fused verdict.
+    pub disagreements: Counter,
+    /// Wall-clock ns spent inside this member's ingest/flush calls.
+    pub busy_ns: Counter,
+}
+
+/// Ensemble-wide metrics bundle: fused totals + one row per member.
+#[derive(Debug)]
+pub struct EnsembleMetrics {
+    pub members: Vec<MemberMetrics>,
+    /// Fused verdicts emitted.
+    pub fused_verdicts: Counter,
+    /// Fused verdicts that flagged an outlier.
+    pub fused_outliers: Counter,
+}
+
+impl EnsembleMetrics {
+    /// One row per member label, all counters zeroed.
+    pub fn new(labels: Vec<String>) -> Arc<Self> {
+        Arc::new(EnsembleMetrics {
+            members: labels
+                .into_iter()
+                .map(|label| MemberMetrics {
+                    label,
+                    votes: Counter::new(),
+                    outliers: Counter::new(),
+                    disagreements: Counter::new(),
+                    busy_ns: Counter::new(),
+                })
+                .collect(),
+            fused_verdicts: Counter::new(),
+            fused_outliers: Counter::new(),
+        })
+    }
+
+    /// Multi-line human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fused_verdicts    {}\nfused_outliers    {}\n",
+            self.fused_verdicts.get(),
+            self.fused_outliers.get()
+        );
+        for m in &self.members {
+            let votes = m.votes.get();
+            let disagree_pct = if votes == 0 {
+                0.0
+            } else {
+                100.0 * m.disagreements.get() as f64 / votes as f64
+            };
+            out.push_str(&format!(
+                "  {:<24} votes={} outliers={} disagree={:.1}% busy={}µs\n",
+                m.label,
+                votes,
+                m.outliers.get(),
+                disagree_pct,
+                m.busy_ns.get() / 1000,
+            ));
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,6 +294,22 @@ mod tests {
             t.join().unwrap();
         }
         assert_eq!(h.count(), 40_000);
+    }
+
+    #[test]
+    fn ensemble_metrics_render_per_member() {
+        let em = EnsembleMetrics::new(vec![
+            "teda(m=3)".to_string(),
+            "msigma(m=3)".to_string(),
+        ]);
+        em.fused_verdicts.add(10);
+        em.members[0].votes.add(10);
+        em.members[1].votes.add(10);
+        em.members[1].disagreements.add(5);
+        let s = em.render();
+        assert!(s.contains("teda(m=3)"));
+        assert!(s.contains("disagree=50.0%"));
+        assert!(s.contains("fused_verdicts    10"));
     }
 
     #[test]

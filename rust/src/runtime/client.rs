@@ -6,7 +6,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::{Error, Result};
 
+// The stub mirrors the real `xla` bindings' API; swap this import for
+// `use xla;` when building in an environment that has the crate.
 use super::manifest::{Manifest, VariantSpec};
+use super::xla_stub as xla;
 
 /// A compiled executable plus its manifest spec.
 pub struct Executable {

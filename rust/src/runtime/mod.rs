@@ -15,6 +15,7 @@
 
 mod client;
 mod manifest;
+pub mod xla_stub;
 
 pub use client::{Executable, XlaRuntime};
 pub use manifest::{Manifest, TensorSpec, VariantSpec};

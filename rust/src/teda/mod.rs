@@ -25,18 +25,45 @@ pub use detector::{TedaDetector, Verdict};
 pub use fixed::{FixedStep, Q16_16, TedaFixed};
 pub use state::{TedaState, TedaStep};
 
-use num_traits::Float;
-
 /// Scalar trait for TEDA arithmetic: `f32` (bit-matches the RTL float
 /// cores) or `f64` (software reference precision).
+///
+/// Self-contained stand-in for `num_traits::Float` (crates.io is
+/// unavailable in this build environment, DESIGN.md §3): only the
+/// operations the recurrence actually needs.
 pub trait Real:
-    Float + std::fmt::Debug + std::fmt::Display + Default + Send + Sync + 'static
+    Copy
+    + PartialOrd
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::fmt::Debug
+    + std::fmt::Display
+    + Default
+    + Send
+    + Sync
+    + 'static
 {
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Multiplicative identity.
+    fn one() -> Self;
     /// Lossless-enough conversion from a sample index.
     fn from_k(k: u64) -> Self;
 }
 
 impl Real for f32 {
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+
     #[inline]
     fn from_k(k: u64) -> Self {
         k as f32
@@ -44,6 +71,16 @@ impl Real for f32 {
 }
 
 impl Real for f64 {
+    #[inline]
+    fn zero() -> Self {
+        0.0
+    }
+
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+
     #[inline]
     fn from_k(k: u64) -> Self {
         k as f64

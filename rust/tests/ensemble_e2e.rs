@@ -1,0 +1,185 @@
+//! End-to-end: the coordinator drives a ≥3-member ensemble exactly like
+//! a single backend, and fused detection still catches the paper's
+//! DAMADICS faults (the `teda-fpga detect --engine ensemble` path).
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{
+    CombinerKind, EngineKind, EnsembleConfig, ServiceConfig,
+};
+use teda_fpga::coordinator::Service;
+use teda_fpga::damadics::{evaluate_detection, schedule_item, ActuatorSim};
+use teda_fpga::engine::Engine as _;
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+
+fn ensemble_cfg(members: &str, workers: usize) -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineKind::Ensemble,
+        workers,
+        n_features: 2,
+        queue_capacity: 128,
+        ensemble: EnsembleConfig::from_member_list(
+            members,
+            CombinerKind::Majority,
+        )
+        .unwrap(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn service_drives_three_member_ensemble_exactly_once_per_sample() {
+    let svc =
+        Service::start(ensemble_cfg("teda+msigma+zscore:m=3,w=32", 3))
+            .unwrap();
+    let em = svc.ensemble_metrics().expect("per-member counters");
+    let mut rng = SplitMix64::new(41);
+    let (streams, per_stream) = (8u64, 120u64);
+    for seq in 0..per_stream {
+        for sid in 0..streams {
+            svc.submit(Sample {
+                stream_id: sid,
+                seq,
+                values: vec![rng.normal(), rng.normal()],
+            })
+            .unwrap();
+        }
+    }
+    let out = svc.finish().unwrap();
+    let total = (streams * per_stream) as usize;
+    assert_eq!(out.len(), total);
+
+    // Exactly-once per (stream, seq), per-stream order preserved.
+    let mut seen: BTreeMap<(u64, u64), bool> = BTreeMap::new();
+    let mut last_seq: BTreeMap<u64, u64> = BTreeMap::new();
+    for c in &out {
+        let v = &c.verdict;
+        assert!(
+            seen.insert((v.stream_id, v.seq), v.outlier).is_none(),
+            "duplicate verdict for {:?}",
+            (v.stream_id, v.seq)
+        );
+        if let Some(&prev) = last_seq.get(&v.stream_id) {
+            assert!(v.seq > prev, "stream {} reordered", v.stream_id);
+        }
+        last_seq.insert(v.stream_id, v.seq);
+    }
+    assert_eq!(seen.len(), total);
+
+    // Per-member counters agree across all shards combined.
+    assert_eq!(em.fused_verdicts.get(), total as u64);
+    for m in &em.members {
+        assert_eq!(m.votes.get(), total as u64, "member {}", m.label);
+    }
+}
+
+#[test]
+fn mixed_rtl_software_ensemble_in_service() {
+    // Heterogeneous latencies (RTL answers two samples late) must not
+    // lose or duplicate verdicts through the worker/flush path.
+    let svc = Service::start(ensemble_cfg("teda+rtl+msigma", 2)).unwrap();
+    for seq in 0..60u64 {
+        for sid in 0..4u64 {
+            svc.submit(Sample {
+                stream_id: sid,
+                seq,
+                values: vec![seq as f64 * 0.01, 0.4],
+            })
+            .unwrap();
+        }
+    }
+    let out = svc.finish().unwrap();
+    assert_eq!(out.len(), 240);
+}
+
+#[test]
+fn fused_ensemble_detects_damadics_fault_items() {
+    // The detect --engine ensemble path: a 3-member majority ensemble
+    // must still catch Table 2 faults with a sane false-alarm budget.
+    let ecfg = EnsembleConfig::from_member_list(
+        "teda:m=3+msigma:m=3+zscore:m=3,w=64",
+        CombinerKind::Majority,
+    )
+    .unwrap();
+    for item in [1u32, 4, 7] {
+        let event = schedule_item(item).unwrap();
+        let trace =
+            ActuatorSim::with_seed(2001).generate_day(Some(&event));
+        let mut eng = EnsembleEngine::new(&ecfg, 2).unwrap();
+        let mut flags = vec![false; trace.samples.len()];
+        for (seq, values) in trace.samples.iter().enumerate() {
+            for v in eng
+                .ingest(&Sample {
+                    stream_id: 0,
+                    seq: seq as u64,
+                    values: values.clone(),
+                })
+                .unwrap()
+            {
+                flags[v.seq as usize] = v.outlier;
+            }
+        }
+        for v in eng.flush().unwrap() {
+            flags[v.seq as usize] = v.outlier;
+        }
+        let report = evaluate_detection(&flags, &event, 1000);
+        assert!(report.detected(), "item {item} not detected by ensemble");
+        assert!(
+            report.false_alarm_rate() < 0.05,
+            "item {item}: far {}",
+            report.false_alarm_rate()
+        );
+    }
+}
+
+#[test]
+fn any_of_ensemble_is_at_least_as_sensitive_as_single_teda() {
+    let event = schedule_item(2).unwrap();
+    let trace = ActuatorSim::with_seed(2001).generate_day(Some(&event));
+
+    let mut single = teda_fpga::teda::TedaDetector::new(2, 3.0);
+    let single_flags: Vec<bool> =
+        trace.samples.iter().map(|s| single.step(s).outlier).collect();
+    let single_report = evaluate_detection(&single_flags, &event, 1000);
+
+    let ecfg = EnsembleConfig::from_member_list(
+        "teda:m=3+msigma:m=3+zscore:m=3,w=64",
+        CombinerKind::AnyOf,
+    )
+    .unwrap();
+    let mut eng = EnsembleEngine::new(&ecfg, 2).unwrap();
+    let mut fused = vec![false; trace.samples.len()];
+    for (seq, values) in trace.samples.iter().enumerate() {
+        for v in eng
+            .ingest(&Sample {
+                stream_id: 0,
+                seq: seq as u64,
+                values: values.clone(),
+            })
+            .unwrap()
+        {
+            fused[v.seq as usize] = v.outlier;
+        }
+    }
+    for v in eng.flush().unwrap() {
+        fused[v.seq as usize] = v.outlier;
+    }
+    let fused_report = evaluate_detection(&fused, &event, 1000);
+
+    // Any-of contains the TEDA member, so it can only detect earlier
+    // (or equally) and hit at least as many window samples.
+    assert!(fused_report.detected());
+    assert!(
+        fused_report.hits_in_window >= single_report.hits_in_window,
+        "any-of lost window hits: {} < {}",
+        fused_report.hits_in_window,
+        single_report.hits_in_window
+    );
+    if let (Some(fl), Some(sl)) =
+        (fused_report.latency, single_report.latency)
+    {
+        assert!(fl <= sl, "any-of later than single: {fl} > {sl}");
+    }
+}
