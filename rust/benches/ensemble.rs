@@ -109,8 +109,13 @@ fn main() {
     doc.insert("results".to_string(), Json::Arr(results));
     let json = Json::Obj(doc).to_string_compact();
 
-    // Repo root (one level above the cargo manifest).
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_ensemble.json");
-    std::fs::write(path, json + "\n").expect("write BENCH_ensemble.json");
-    println!("wrote {path}");
+    // Always the repository root (one level above the cargo manifest),
+    // regardless of the CWD the bench is launched from — ROADMAP's
+    // trend tracking expects the file there.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent")
+        .join("BENCH_ensemble.json");
+    std::fs::write(&path, json + "\n").expect("write BENCH_ensemble.json");
+    println!("wrote {}", path.display());
 }

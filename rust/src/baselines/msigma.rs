@@ -8,7 +8,7 @@ use super::AnomalyDetector;
 /// it assumes the data distribution (Gaussian for the usual m=3
 /// coverage guarantee) and compares each point to the *global* mean —
 /// precisely the punctual/local information loss §1 criticises.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MSigmaDetector {
     m: f64,
     k: u64,

@@ -10,7 +10,7 @@ use super::AnomalyDetector;
 /// Regains the locality the global m·σ rule lacks, but needs O(W·N)
 /// memory and assumes a window length — the two costs TEDA's recursion
 /// avoids (paper §1/§3).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SlidingZScore {
     m: f64,
     window: usize,

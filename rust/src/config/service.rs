@@ -74,7 +74,13 @@ pub struct ServiceConfig {
     /// Directory with AOT artifacts (XLA engine only).
     pub artifact_dir: PathBuf,
     /// Per-stream state checkpoint interval in samples (0 = disabled).
+    /// TOML/JSON: `checkpoint.interval` (legacy alias
+    /// `service.checkpoint_every`), CLI: `--checkpoint-interval`.
     pub checkpoint_every: u64,
+    /// Restore a stream's latest checkpoint when the stream resumes
+    /// mid-sequence on a fresh worker (failover). TOML/JSON:
+    /// `checkpoint.restore`, CLI: `--restore`.
+    pub restore_on_resume: bool,
     /// RNG seed for anything stochastic in the service (workload gen).
     pub seed: u64,
     /// Ensemble member roster + combiner (used when `engine = ensemble`).
@@ -95,6 +101,7 @@ impl Default for ServiceConfig {
             batch_linger_us: 200,
             artifact_dir: PathBuf::from("artifacts"),
             checkpoint_every: 0,
+            restore_on_resume: false,
             seed: 0x7EDA, // "TEDA"
             ensemble: EnsembleConfig::default(),
         }
@@ -137,7 +144,13 @@ impl ServiceConfig {
             cfg.artifact_dir = PathBuf::from(v);
         }
         if let Some(v) = doc.u64_("service.checkpoint_every") {
+            cfg.checkpoint_every = v; // legacy spelling
+        }
+        if let Some(v) = doc.u64_("checkpoint.interval") {
             cfg.checkpoint_every = v;
+        }
+        if let Some(v) = doc.bool_("checkpoint.restore") {
+            cfg.restore_on_resume = v;
         }
         if let Some(v) = doc.u64_("service.seed") {
             cfg.seed = v;
@@ -181,10 +194,20 @@ impl ServiceConfig {
             if let Some(v) =
                 service.get("checkpoint_every").and_then(Json::as_u64)
             {
-                cfg.checkpoint_every = v;
+                cfg.checkpoint_every = v; // legacy spelling
             }
             if let Some(v) = service.get("seed").and_then(Json::as_u64) {
                 cfg.seed = v;
+            }
+        }
+        if let Some(checkpoint) = doc.get("checkpoint") {
+            if let Some(v) = checkpoint.get("interval").and_then(Json::as_u64)
+            {
+                cfg.checkpoint_every = v;
+            }
+            if let Some(v) = checkpoint.get("restore").and_then(Json::as_bool)
+            {
+                cfg.restore_on_resume = v;
             }
         }
         if let Some(batcher) = doc.get("batcher") {
@@ -387,8 +410,10 @@ mod tests {
             [service]
             workers = 2
             queue_capacity = 99
-            checkpoint_every = 7
             seed = 123
+            [checkpoint]
+            interval = 7
+            restore = true
             [batcher]
             max_streams = 8
             chunk_t = 16
@@ -402,8 +427,8 @@ mod tests {
         let json = r#"{
             "name": "fused",
             "engine": {"kind": "ensemble", "n_features": 4, "m": 2.5},
-            "service": {"workers": 2, "queue_capacity": 99,
-                        "checkpoint_every": 7, "seed": 123},
+            "service": {"workers": 2, "queue_capacity": 99, "seed": 123},
+            "checkpoint": {"interval": 7, "restore": true},
             "batcher": {"max_streams": 8, "chunk_t": 16, "linger_us": 42},
             "artifacts": {"dir": "/opt/a"},
             "ensemble": {"combiner": "adaptive",
@@ -416,7 +441,31 @@ mod tests {
         assert_eq!(a.queue_capacity, 99);
         assert_eq!(a.batch_linger_us, 42);
         assert_eq!(a.checkpoint_every, 7);
+        assert!(a.restore_on_resume);
         assert_eq!(a.m, 2.5);
+    }
+
+    #[test]
+    fn checkpoint_section_and_legacy_key_coexist() {
+        // New section wins; legacy spelling still parses alone.
+        let cfg = ServiceConfig::from_toml(
+            "[service]\ncheckpoint_every = 3\n[checkpoint]\ninterval = 11\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 11);
+        let cfg = ServiceConfig::from_toml(
+            "[service]\ncheckpoint_every = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 3);
+        assert!(!cfg.restore_on_resume);
+        let cfg = ServiceConfig::from_json(
+            r#"{"service": {"checkpoint_every": 3},
+                "checkpoint": {"interval": 11, "restore": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 11);
+        assert!(cfg.restore_on_resume);
     }
 
     #[test]

@@ -18,8 +18,12 @@
 //!   (software / RTL / XLA per config) and processes its queue in
 //!   arrival order. The XLA engine performs dynamic batching internally
 //!   (S×T chunks); `min_ready` is the service's batching knob.
-//! - **State manager** ([`StateManager`]): periodic per-stream state
-//!   checkpoints (μ, σ², k) for recovery/migration.
+//! - **State manager** ([`StateManager`]): periodic per-stream,
+//!   engine-agnostic [`crate::engine::Snapshot`] checkpoints — software
+//!   counters, RTL register files, XLA carries, or whole ensembles with
+//!   per-stream combiner weights — published every
+//!   `checkpoint.interval` samples and restored on stream resume for
+//!   recovery/migration (`checkpoint.restore`).
 //! - **Backpressure**: all queues are bounded; a full worker queue
 //!   blocks the router (and ultimately the source), never drops.
 
@@ -28,5 +32,5 @@ mod service;
 mod state_mgr;
 
 pub use router::Router;
-pub use service::{Service, ServiceHandle};
+pub use service::{Classified, Service, ServiceHandle};
 pub use state_mgr::{StateCheckpoint, StateManager};

@@ -1,6 +1,6 @@
 //! The service: worker threads + router + result collection.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -29,6 +29,10 @@ enum Job {
     Batch(Vec<Sample>, Instant),
     /// Force pending batches out (end of input).
     Flush,
+    /// Die immediately WITHOUT flushing — crash simulation for failover
+    /// testing and fast teardown. In-flight engine state is abandoned
+    /// exactly as a killed worker would abandon it.
+    Abort,
 }
 
 /// A running service instance.
@@ -98,15 +102,26 @@ fn submit_inner(
 }
 
 impl Service {
-    /// Start workers per the config.
+    /// Start workers per the config, with a fresh checkpoint store.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        Self::start_with_state(cfg, Arc::new(StateManager::new()))
+    }
+
+    /// Start workers against an existing checkpoint store — the
+    /// failover path: a resurrected service inherits the dead
+    /// instance's [`StateManager`] and, with
+    /// `checkpoint.restore = true`, restores each stream's latest
+    /// snapshot the moment the stream resumes.
+    pub fn start_with_state(
+        cfg: ServiceConfig,
+        state_mgr: Arc<StateManager>,
+    ) -> Result<Service> {
         cfg.validate()?;
         let metrics = ServiceMetrics::new();
         // Ensemble runs get one shared per-member counter bundle: every
         // worker shard's EnsembleEngine adds into the same atomics.
         let ensemble_metrics = (cfg.engine == EngineKind::Ensemble)
             .then(|| EnsembleMetrics::new(cfg.ensemble.labels()));
-        let state_mgr = Arc::new(StateManager::new());
         let router = Router::new(cfg.workers);
         // Results flow on an unbounded channel: a worker must never
         // block on its own consumer (the submitter only drains results
@@ -175,6 +190,7 @@ impl Service {
                             metrics,
                             state_mgr,
                             cfg.checkpoint_every,
+                            cfg.restore_on_resume,
                         )
                     })
                     .map_err(|e| Error::io("spawn worker", e))?,
@@ -273,9 +289,29 @@ impl Service {
     /// Finish: flush engines, stop workers, and return every remaining
     /// verdict (in addition to whatever `poll_results` already handed out).
     pub fn finish(self) -> Result<Vec<Classified>> {
+        self.stop(|| Job::Flush, "flush")
+    }
+
+    /// Crash simulation: stop every worker WITHOUT flushing, abandoning
+    /// in-flight engine state exactly as a killed process would, and
+    /// return only the verdicts that had already been emitted. The
+    /// shared [`StateManager`] (and whatever checkpoints it holds)
+    /// survives — pass it to [`Service::start_with_state`] to failover.
+    pub fn abort(self) -> Result<Vec<Classified>> {
+        self.stop(|| Job::Abort, "abort")
+    }
+
+    /// Shared shutdown sequence: send `last_job` to every worker, close
+    /// the queues, drain the results channel, join the workers.
+    fn stop(
+        self,
+        last_job: impl Fn() -> Job,
+        what: &str,
+    ) -> Result<Vec<Classified>> {
         for tx in &self.senders {
-            tx.send(Job::Flush)
-                .map_err(|_| Error::Stream("worker gone at flush".into()))?;
+            tx.send(last_job()).map_err(|_| {
+                Error::Stream(format!("worker gone at {what}"))
+            })?;
         }
         drop(self.senders); // workers exit after draining queues
         let mut out = Vec::new();
@@ -290,6 +326,7 @@ impl Service {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     rx: Receiver<Job>,
     engine: &mut dyn Engine,
@@ -297,9 +334,18 @@ fn worker_loop(
     metrics: Arc<ServiceMetrics>,
     state_mgr: Arc<StateManager>,
     checkpoint_every: u64,
+    restore_on_resume: bool,
 ) -> Result<()> {
     // submit-time of every in-flight sample, for latency accounting.
     let mut inflight: HashMap<(u64, u64), Instant> = HashMap::new();
+    // Streams this worker has fed to its engine (restore-on-resume runs
+    // once, before a stream's first sample).
+    let mut seen: HashSet<u64> = HashSet::new();
+    // Watermark each stream was restored at: re-fed samples at or below
+    // it are already folded into the snapshot and must be dropped, so an
+    // upstream that replays from the watermark *inclusively* stays
+    // exactly-once instead of double-counting (or, worse, restarting).
+    let mut restored_at: HashMap<u64, u64> = HashMap::new();
     // One burst send per engine call: metrics are batched too (counter
     // adds are cheap but the channel lock is not).
     let emit = |verdicts: Vec<EngineVerdict>,
@@ -311,11 +357,18 @@ fn worker_loop(
         let mut burst = Vec::with_capacity(verdicts.len());
         let mut outliers = 0u64;
         for v in verdicts {
-            let latency_ns = inflight
-                .remove(&(v.stream_id, v.seq))
-                .map(|t| t.elapsed().as_nanos() as u64)
-                .unwrap_or(0);
-            metrics.latency.record(latency_ns);
+            // Verdicts without a submit record (re-emitted in-flight
+            // work after a restore) report 0 but are NOT recorded into
+            // the histogram — fabricated 0 ns entries would drag every
+            // post-failover quantile toward zero.
+            let latency_ns = match inflight.remove(&(v.stream_id, v.seq)) {
+                Some(t) => {
+                    let ns = t.elapsed().as_nanos() as u64;
+                    metrics.latency.record(ns);
+                    ns
+                }
+                None => 0,
+            };
             if v.outlier {
                 outliers += 1;
             }
@@ -329,48 +382,81 @@ fn worker_loop(
         Ok(())
     };
 
+    // One sample through the engine: restore-on-resume before its first
+    // sample of a stream, replay-window dedup, ingest, then periodic
+    // engine-agnostic checkpointing — identical on the single-sample
+    // and batch paths.
+    let process = |engine: &mut dyn Engine,
+                   sample: Sample,
+                   t0: Instant,
+                   inflight: &mut HashMap<(u64, u64), Instant>,
+                   seen: &mut HashSet<u64>,
+                   restored_at: &mut HashMap<u64, u64>,
+                   out: &mut Vec<EngineVerdict>|
+     -> Result<()> {
+        let (sid, seq) = (sample.stream_id, sample.seq);
+        if seen.insert(sid) && restore_on_resume && seq > 0 {
+            // First sample of a mid-stream resume: adopt the newest
+            // checkpoint. The upstream replays at-least-once from the
+            // watermark (inclusively or after it); either way the
+            // watermark filter below keeps processing exactly-once.
+            if let Some(cp) = state_mgr.latest(sid) {
+                engine.restore(sid, cp.snapshot)?;
+                metrics.stream_restores.inc();
+                restored_at.insert(sid, cp.seq);
+            }
+        }
+        if let Some(&wm) = restored_at.get(&sid) {
+            if seq <= wm {
+                // Already folded into the restored snapshot: dropping it
+                // (instead of re-ingesting) is what keeps the detector
+                // state exactly-once under an inclusive replay window.
+                metrics.replay_skipped.inc();
+                return Ok(());
+            }
+        }
+        inflight.insert((sid, seq), t0);
+        out.extend(engine.ingest(&sample)?);
+        if checkpoint_every > 0 && (seq + 1) % checkpoint_every == 0 {
+            if let Some(snapshot) = engine.snapshot(sid) {
+                state_mgr.publish(StateCheckpoint {
+                    stream_id: sid,
+                    seq,
+                    snapshot,
+                });
+            }
+        }
+        Ok(())
+    };
+
     while let Ok(job) = rx.recv() {
         match job {
             Job::Sample(sample, t0) => {
-                inflight.insert((sample.stream_id, sample.seq), t0);
-                let seq = sample.seq;
-                let sid = sample.stream_id;
-                let verdicts = engine.ingest(&sample)?;
+                let mut verdicts = Vec::new();
+                process(
+                    &mut *engine,
+                    sample,
+                    t0,
+                    &mut inflight,
+                    &mut seen,
+                    &mut restored_at,
+                    &mut verdicts,
+                )?;
                 emit(verdicts, &mut inflight)?;
-                // Periodic checkpointing (software engine exposes state).
-                if checkpoint_every > 0 && (seq + 1) % checkpoint_every == 0 {
-                    if let Some(sw) = engine.as_software() {
-                        if let Some(det) = sw.detector(sid) {
-                            state_mgr.publish(StateCheckpoint {
-                                stream_id: sid,
-                                seq,
-                                state: det.state().clone(),
-                            });
-                        }
-                    }
-                }
             }
             Job::Batch(samples, t0) => {
                 // Accumulate the whole burst's verdicts and emit once.
                 let mut all = Vec::with_capacity(samples.len());
                 for sample in samples {
-                    inflight.insert((sample.stream_id, sample.seq), t0);
-                    let seq = sample.seq;
-                    let sid = sample.stream_id;
-                    all.extend(engine.ingest(&sample)?);
-                    if checkpoint_every > 0
-                        && (seq + 1) % checkpoint_every == 0
-                    {
-                        if let Some(sw) = engine.as_software() {
-                            if let Some(det) = sw.detector(sid) {
-                                state_mgr.publish(StateCheckpoint {
-                                    stream_id: sid,
-                                    seq,
-                                    state: det.state().clone(),
-                                });
-                            }
-                        }
-                    }
+                    process(
+                        &mut *engine,
+                        sample,
+                        t0,
+                        &mut inflight,
+                        &mut seen,
+                        &mut restored_at,
+                        &mut all,
+                    )?;
                 }
                 emit(all, &mut inflight)?;
             }
@@ -378,6 +464,8 @@ fn worker_loop(
                 let verdicts = engine.flush()?;
                 emit(verdicts, &mut inflight)?;
             }
+            // Crash simulation: drop everything on the floor, no flush.
+            Job::Abort => return Ok(()),
         }
     }
     // Input closed: final flush for whatever is still buffered.
@@ -466,7 +554,54 @@ mod tests {
         assert_eq!(mgr.len(), 4);
         let cp = mgr.latest(2).unwrap();
         assert_eq!(cp.seq, 99); // checkpoint at seq 49 then 99
-        assert_eq!(cp.state.k, 100);
+        let crate::engine::Snapshot::Software(snap) = cp.snapshot else {
+            panic!("software engine must publish software snapshots")
+        };
+        assert_eq!(snap.state.k, 100);
+    }
+
+    #[test]
+    fn rtl_and_ensemble_engines_checkpoint_too() {
+        // Checkpointing is engine-agnostic now — every backend
+        // publishes, not just the software engine.
+        for kind in [EngineKind::Rtl, EngineKind::Ensemble] {
+            let mut cfg = base_cfg(kind, 2);
+            cfg.checkpoint_every = 20;
+            let svc = Service::start(cfg).unwrap();
+            let mgr = svc.state_manager();
+            for seq in 0..40u64 {
+                for sid in 0..3u64 {
+                    svc.submit(Sample {
+                        stream_id: sid,
+                        seq,
+                        values: vec![0.3, 0.7],
+                    })
+                    .unwrap();
+                }
+            }
+            svc.finish().unwrap();
+            assert_eq!(mgr.len(), 3, "engine {kind}");
+            let cp = mgr.latest(1).unwrap();
+            assert_eq!(cp.seq, 39);
+            assert_eq!(cp.snapshot.kind(), kind.to_string());
+        }
+    }
+
+    #[test]
+    fn abort_skips_flush_and_keeps_checkpoints() {
+        let mut cfg = base_cfg(EngineKind::Rtl, 2);
+        cfg.checkpoint_every = 10;
+        let svc = Service::start(cfg).unwrap();
+        let mgr = svc.state_manager();
+        for seq in 0..10u64 {
+            svc.submit(Sample { stream_id: 0, seq, values: vec![0.1, 0.2] })
+                .unwrap();
+        }
+        let out = svc.abort().unwrap();
+        // RTL latency = 2: the two in-flight verdicts died with the
+        // worker instead of being flushed out.
+        assert_eq!(out.len(), 8);
+        assert_eq!(mgr.latest(0).unwrap().seq, 9);
     }
 
     #[test]

@@ -3,15 +3,19 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::teda::TedaState;
+use crate::engine::Snapshot;
 
-/// One checkpoint of a stream's TEDA state.
+/// One checkpoint of a stream's complete detector state — whatever the
+/// backing engine is (software counters, RTL register file, XLA carry,
+/// or a full ensemble with per-stream combiner weights).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StateCheckpoint {
     pub stream_id: u64,
-    /// Sequence number of the last sample folded into this state.
+    /// Sequence number of the last sample folded into this snapshot
+    /// (the watermark the upstream re-requests samples after).
     pub seq: u64,
-    pub state: TedaState<f64>,
+    /// Engine-agnostic detector state.
+    pub snapshot: Snapshot,
 }
 
 /// Thread-safe checkpoint store.
@@ -72,7 +76,11 @@ mod tests {
         for i in 0..=seq {
             det.step(&[i as f64 * 0.1, 0.5]);
         }
-        StateCheckpoint { stream_id: sid, seq, state: det.state().clone() }
+        StateCheckpoint {
+            stream_id: sid,
+            seq,
+            snapshot: Snapshot::Software(det.snapshot()),
+        }
     }
 
     #[test]
@@ -82,7 +90,8 @@ mod tests {
         mgr.publish(cp.clone());
         let got = mgr.latest(1).unwrap();
         assert_eq!(got, cp);
-        assert_eq!(got.state.k, 10);
+        let Snapshot::Software(snap) = got.snapshot else { unreachable!() };
+        assert_eq!(snap.state.k, 10);
     }
 
     #[test]
@@ -96,27 +105,44 @@ mod tests {
     #[test]
     fn restored_detector_continues_identically() {
         // A detector restored from a checkpoint must continue exactly
-        // like the uninterrupted one — the failover correctness property.
-        let samples: Vec<Vec<f64>> =
-            (0..50).map(|i| vec![(i % 9) as f64 * 0.2, 1.0]).collect();
+        // like the uninterrupted one — the failover correctness
+        // property — with its counters intact, not reset to zero.
+        let samples: Vec<Vec<f64>> = (0..50)
+            .map(|i| {
+                if i == 20 {
+                    vec![1e6, -1e6] // mid-prefix outlier bumps the counter
+                } else {
+                    vec![(i % 9) as f64 * 0.2, 1.0]
+                }
+            })
+            .collect();
         let mut full = TedaDetector::new(2, 3.0);
         for s in &samples[..30] {
             full.step(s);
         }
+        assert!(full.n_outliers() > 0, "prefix must contain an outlier");
         let mgr = StateManager::new();
         mgr.publish(StateCheckpoint {
             stream_id: 5,
             seq: 29,
-            state: full.state().clone(),
+            snapshot: Snapshot::Software(full.snapshot()),
         });
         // "Failover": new detector restores and replays the tail.
         let mut restored = TedaDetector::new(2, 3.0);
-        restored.restore(mgr.latest(5).unwrap().state);
+        let Snapshot::Software(snap) = mgr.latest(5).unwrap().snapshot
+        else {
+            unreachable!()
+        };
+        restored.restore(snap);
+        assert_eq!(restored.n_outliers(), full.n_outliers());
         for s in &samples[30..] {
             let a = full.step(s);
             let b = restored.step(s);
             assert_eq!(a, b);
         }
+        // Counter equality holds after the tail too.
+        assert_eq!(restored.n_outliers(), full.n_outliers());
+        assert_eq!(restored.k(), full.k());
     }
 
     #[test]

@@ -24,10 +24,61 @@ mod xla_engine;
 
 pub use rtl_engine::RtlEngine;
 pub use software::SoftwareEngine;
-pub use xla_engine::XlaEngine;
+pub use xla_engine::{XlaEngine, XlaSnapshot};
 
 use crate::stream::Sample;
-use crate::Result;
+use crate::{Error, Result};
+
+/// Engine-agnostic checkpoint of ONE stream's complete detector state.
+///
+/// The TEDA recurrence carries only `(μ_k, σ²_k, k)` per stream, which
+/// is what makes line-rate checkpointing affordable; each variant adds
+/// exactly what its backend needs on top of that carry so a restore is
+/// *observably identical* to never having failed:
+///
+/// - [`Snapshot::Software`] — recurrence state **and** detection
+///   counters ([`crate::teda::DetectorSnapshot`]).
+/// - [`Snapshot::Rtl`] — the full pipeline register file
+///   ([`crate::rtl::RtlSnapshot`]): architectural state *and* the
+///   ≤ 2 in-flight samples still inside the MEAN→VARIANCE→OUTLIER
+///   stages, so the restored pipeline emits their verdicts bit-exactly.
+/// - [`Snapshot::Xla`] — the f32 carry tensors plus buffered samples
+///   not yet executed through the artifact.
+/// - [`Snapshot::Ensemble`] — every member's snapshot, the per-stream
+///   combiner weights, and the unfused quorum slots, all captured at
+///   one `(stream, seq)` watermark so no member restores ahead of the
+///   fusion barrier ([`crate::ensemble::EnsembleSnapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Snapshot {
+    /// Software TEDA detector state + counters.
+    Software(crate::teda::DetectorSnapshot),
+    /// RTL pipeline register file (in-flight samples included).
+    Rtl(crate::rtl::RtlSnapshot),
+    /// XLA engine carry + unexecuted sample buffers.
+    Xla(XlaSnapshot),
+    /// All ensemble member snapshots + combiner weights + quorum slots.
+    Ensemble(crate::ensemble::EnsembleSnapshot),
+}
+
+impl Snapshot {
+    /// Which engine family produced this snapshot.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Snapshot::Software(_) => "software",
+            Snapshot::Rtl(_) => "rtl",
+            Snapshot::Xla(_) => "xla",
+            Snapshot::Ensemble(_) => "ensemble",
+        }
+    }
+
+    /// Uniform error for a snapshot handed to the wrong engine family.
+    pub(crate) fn kind_mismatch(&self, engine: &'static str) -> Error {
+        Error::Stream(format!(
+            "cannot restore a '{}' snapshot into the '{engine}' engine",
+            self.kind()
+        ))
+    }
+}
 
 /// One classified sample leaving an engine.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,12 +113,17 @@ pub trait Engine {
     /// Streams with in-flight state.
     fn active_streams(&self) -> usize;
 
-    /// Checkpointing hook: the software engine exposes its detectors;
-    /// other engines return `None` (their state lives in f32 tensors /
-    /// pipeline registers and is checkpointed at chunk boundaries only).
-    fn as_software(&mut self) -> Option<&mut SoftwareEngine> {
-        None
-    }
+    /// Checkpoint one stream's complete detector state, or `None` when
+    /// the engine holds no state for that stream yet. Every engine
+    /// implements this — failover must not silently degrade by backend.
+    fn snapshot(&self, stream_id: u64) -> Option<Snapshot>;
+
+    /// Restore one stream from a snapshot taken by an engine of the
+    /// same kind and geometry (failover / migration / rebalancing).
+    /// Replaces whatever state this engine already holds for the
+    /// stream; samples with `seq` greater than the snapshot's watermark
+    /// are then re-fed by the at-least-once upstream.
+    fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()>;
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@ use crate::rtl::TedaRtl;
 use crate::stream::Sample;
 use crate::Result;
 
-use super::{Engine, EngineVerdict};
+use super::{Engine, EngineVerdict, Snapshot};
 
 /// Per-stream pipeline instance (the "multiple TEDA modules in
 /// parallel" deployment of §5.2.1, one module per stream).
@@ -75,6 +75,25 @@ impl Engine for RtlEngine {
     fn active_streams(&self) -> usize {
         self.streams.len()
     }
+
+    fn snapshot(&self, stream_id: u64) -> Option<Snapshot> {
+        self.streams
+            .get(&stream_id)
+            .map(|rtl| Snapshot::Rtl(rtl.save()))
+    }
+
+    fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()> {
+        let snap = match snapshot {
+            Snapshot::Rtl(s) => s,
+            other => return Err(other.kind_mismatch("rtl")),
+        };
+        // A fresh pipeline adopts the saved register file — geometry is
+        // validated by `load` (the snapshot carries its own n and m).
+        let mut rtl = TedaRtl::new(self.n_features, self.m)?;
+        rtl.load(&snap)?;
+        self.streams.insert(stream_id, rtl);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +134,46 @@ mod tests {
                 va.zeta,
                 vb.zeta
             );
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_keeps_inflight_verdicts() {
+        // Cut an interleaved run mid-stream: the restored engine must
+        // emit the in-flight verdicts (pipeline latency = 2) exactly as
+        // the uninterrupted engine would.
+        let samples = interleaved(2, 30, 2, 8);
+        let cut = samples.len() / 2;
+        let mut oracle = RtlEngine::new(2, 3.0);
+        let full = run_engine(&mut oracle, &samples);
+
+        let mut live = RtlEngine::new(2, 3.0);
+        let mut got = std::collections::BTreeMap::new();
+        for s in &samples[..cut] {
+            for v in live.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        let mut restored = RtlEngine::new(2, 3.0);
+        for sid in 0..2u64 {
+            restored.restore(sid, live.snapshot(sid).unwrap()).unwrap();
+        }
+        for s in &samples[cut..] {
+            for v in restored.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        for v in restored.flush().unwrap() {
+            got.insert((v.stream_id, v.seq), v);
+        }
+        // NaN-safe equality (ζ₁ is NaN by design): compare bit patterns.
+        assert_eq!(got.len(), full.len());
+        for (key, a) in &got {
+            let b = &full[key];
+            assert_eq!(a.k, b.k, "{key:?}");
+            assert_eq!(a.outlier, b.outlier, "{key:?}");
+            assert_eq!(a.zeta.to_bits(), b.zeta.to_bits(), "{key:?}");
+            assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
         }
     }
 }

@@ -4,9 +4,9 @@ use std::collections::HashMap;
 
 use crate::stream::Sample;
 use crate::teda::TedaDetector;
-use crate::Result;
+use crate::{Error, Result};
 
-use super::{Engine, EngineVerdict};
+use super::{Engine, EngineVerdict, Snapshot};
 
 /// One f64 `TedaDetector` per stream; verdicts are immediate.
 pub struct SoftwareEngine {
@@ -56,8 +56,33 @@ impl Engine for SoftwareEngine {
         self.streams.len()
     }
 
-    fn as_software(&mut self) -> Option<&mut SoftwareEngine> {
-        Some(self)
+    fn snapshot(&self, stream_id: u64) -> Option<Snapshot> {
+        self.streams
+            .get(&stream_id)
+            .map(|det| Snapshot::Software(det.snapshot()))
+    }
+
+    fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()> {
+        let snap = match snapshot {
+            Snapshot::Software(s) => s,
+            other => return Err(other.kind_mismatch("software")),
+        };
+        if snap.state.n_features() != self.n_features || snap.m != self.m {
+            return Err(Error::Stream(format!(
+                "snapshot is for (n={}, m={}), engine configured for \
+                 (n={}, m={})",
+                snap.state.n_features(),
+                snap.m,
+                self.n_features,
+                self.m
+            )));
+        }
+        let det = self
+            .streams
+            .entry(stream_id)
+            .or_insert_with(|| TedaDetector::new(self.n_features, self.m));
+        det.restore(snap);
+        Ok(())
     }
 }
 
@@ -102,5 +127,42 @@ mod tests {
         let probe1 = Sample { stream_id: 1, seq: 100, values: vec![100.0] };
         assert!(eng.ingest(&probe0).unwrap()[0].outlier);
         assert!(!eng.ingest(&probe1).unwrap()[0].outlier);
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically() {
+        let samples = interleaved(2, 60, 2, 7);
+        let mut a = SoftwareEngine::new(2, 3.0);
+        for s in &samples {
+            a.ingest(s).unwrap();
+        }
+        assert!(a.snapshot(99).is_none()); // unknown stream
+        let mut b = SoftwareEngine::new(2, 3.0);
+        for sid in 0..2u64 {
+            b.restore(sid, a.snapshot(sid).unwrap()).unwrap();
+        }
+        let probe = Sample { stream_id: 1, seq: 60, values: vec![9.0, 9.0] };
+        assert_eq!(a.ingest(&probe).unwrap(), b.ingest(&probe).unwrap());
+        // Counters travelled too.
+        assert_eq!(
+            a.detector(1).unwrap().n_outliers(),
+            b.detector(1).unwrap().n_outliers()
+        );
+    }
+
+    #[test]
+    fn restore_rejects_wrong_kind_and_shape() {
+        let mut a = SoftwareEngine::new(3, 3.0);
+        a.ingest(&Sample { stream_id: 0, seq: 0, values: vec![0.0; 3] })
+            .unwrap();
+        let snap = a.snapshot(0).unwrap();
+        let mut b = SoftwareEngine::new(2, 3.0);
+        assert!(b.restore(0, snap).is_err()); // feature mismatch
+        let snap = a.snapshot(0).unwrap();
+        let mut c = SoftwareEngine::new(3, 2.5);
+        assert!(c.restore(0, snap).is_err()); // threshold mismatch
+        let mut rtl = crate::engine::RtlEngine::new(3, 3.0);
+        let snap = a.snapshot(0).unwrap();
+        assert!(rtl.restore(0, snap).is_err()); // kind mismatch
     }
 }

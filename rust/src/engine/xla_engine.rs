@@ -17,7 +17,31 @@ use crate::stream::Sample;
 use crate::teda::TedaState;
 use crate::{Error, Result};
 
-use super::{Engine, EngineVerdict};
+use super::{Engine, EngineVerdict, Snapshot};
+
+/// Checkpoint of one stream inside the [`XlaEngine`]: the f32 carry
+/// tensors (exactly the artifact's VMEM state) plus every buffered
+/// sample that has not executed yet — full chunks waiting for
+/// co-batching partners and the partially filled tail. Restoring
+/// re-queues those samples verbatim, so their verdicts are emitted by
+/// the restored engine instead of being lost with the dead worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct XlaSnapshot {
+    /// Per-feature mean carry μ (length N).
+    pub mu: Vec<f32>,
+    /// Variance carry σ².
+    pub var: f32,
+    /// Iteration carry k (f32, as the artifact stores it).
+    pub k: f32,
+    /// Chebyshev multiplier baked into the artifact variant.
+    pub m: f64,
+    /// Full unexecuted T-chunks: (seq of first sample, t·n values).
+    pub chunks: Vec<(u64, Vec<f32>)>,
+    /// Partially filled chunk (t_filled × n values).
+    pub buf: Vec<f32>,
+    /// seq of the first sample in `buf`.
+    pub seq_base: u64,
+}
 
 struct StreamState {
     /// f32 carry, exactly the artifact's state tensors.
@@ -266,6 +290,57 @@ impl Engine for XlaEngine {
     fn active_streams(&self) -> usize {
         self.streams.len()
     }
+
+    fn snapshot(&self, stream_id: u64) -> Option<Snapshot> {
+        self.streams.get(&stream_id).map(|st| {
+            Snapshot::Xla(XlaSnapshot {
+                mu: st.mu.clone(),
+                var: st.var,
+                k: st.k,
+                m: self.m,
+                chunks: st.chunks.iter().cloned().collect(),
+                buf: st.buf.clone(),
+                seq_base: st.seq_base,
+            })
+        })
+    }
+
+    fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()> {
+        let snap = match snapshot {
+            Snapshot::Xla(s) => s,
+            other => return Err(other.kind_mismatch("xla")),
+        };
+        let chunk_len = self.t * self.n;
+        if snap.mu.len() != self.n
+            || snap.m != self.m
+            || snap.buf.len() >= chunk_len
+            || snap.buf.len() % self.n != 0
+            || snap.chunks.iter().any(|(_, c)| c.len() != chunk_len)
+        {
+            return Err(Error::Stream(format!(
+                "xla snapshot does not fit engine geometry \
+                 (S,T,N,m)=({},{},{},{})",
+                self.s, self.t, self.n, self.m
+            )));
+        }
+        // Replacing a stream's state also replaces its ready-queue
+        // entries (one per full unexecuted chunk).
+        self.ready.retain(|&id| id != stream_id);
+        self.ready
+            .extend(std::iter::repeat(stream_id).take(snap.chunks.len()));
+        self.streams.insert(
+            stream_id,
+            StreamState {
+                mu: snap.mu,
+                var: snap.var,
+                k: snap.k,
+                chunks: snap.chunks.into_iter().collect(),
+                buf: snap.buf,
+                seq_base: snap.seq_base,
+            },
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +416,41 @@ mod tests {
         }
         assert_eq!(got, 4 * t);
         assert_eq!(eng.chunks_executed, 1);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_chunk_matches_uninterrupted() {
+        let Some(rt) = runtime() else { return };
+        let mut eng = XlaEngine::new(&rt, 2, 1).unwrap();
+        let (_, t, _) = eng.geometry();
+        let samples = interleaved(1, t + t / 2, 2, 3);
+        let mut full_eng = XlaEngine::new(&rt, 2, 1).unwrap();
+        let full = run_engine(&mut full_eng, &samples);
+        // Cut mid-chunk: buffered samples must survive the failover.
+        let cut = t + 2;
+        let mut got = std::collections::BTreeMap::new();
+        for s in &samples[..cut] {
+            for v in eng.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        let mut restored = XlaEngine::new(&rt, 2, 1).unwrap();
+        restored.restore(0, eng.snapshot(0).unwrap()).unwrap();
+        for s in &samples[cut..] {
+            for v in restored.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        for v in restored.flush().unwrap() {
+            got.insert((v.stream_id, v.seq), v);
+        }
+        assert_eq!(got.len(), full.len());
+        for (key, a) in &got {
+            let b = &full[key];
+            assert_eq!(a.k, b.k, "{key:?}");
+            assert_eq!(a.outlier, b.outlier, "{key:?}");
+            assert_eq!(a.zeta.to_bits(), b.zeta.to_bits(), "{key:?}");
+        }
     }
 
     #[test]

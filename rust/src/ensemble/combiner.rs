@@ -19,8 +19,18 @@
 //!   franchise without ever being silenced permanently. η = 0.1,
 //!   ρ = 0.01, w_min = 0.05; weights start at the spec weights.
 //!
+//! Adaptive weights are **per stream** (lazily initialized from the
+//! spec weights on a stream's first fusion): interleaved streams with
+//! different regimes must not cross-contaminate each other's decay —
+//! a member that mis-votes on a noisy stream keeps its full franchise
+//! on a calm one. Per-stream weights are also exactly what failover
+//! must checkpoint, so the [`Combiner`] trait exposes them via
+//! [`Combiner::stream_weights`] / [`Combiner::set_stream_weights`].
+//!
 //! Combiners may be stateful (adaptive), so each engine instance owns
 //! its combiner — coordinator shards each adapt to their own streams.
+
+use std::collections::HashMap;
 
 use crate::config::CombinerKind;
 
@@ -42,11 +52,30 @@ pub trait Combiner {
     fn name(&self) -> &'static str;
 
     /// Fuse one sample's aligned votes (one per member, member order).
+    /// Stateful combiners key their state on the votes' stream id.
     fn fuse(&mut self, votes: &[MemberVote]) -> Fused;
 
-    /// Current effective member weights (adaptive combiners evolve
-    /// them; static ones return the configured weights).
+    /// The configured (initial) member weights.
     fn weights(&self) -> Vec<f64>;
+
+    /// Effective weights for one stream. Adaptive combiners evolve
+    /// these independently per stream; stateless combiners return the
+    /// configured weights.
+    fn stream_weights(&self, stream_id: u64) -> Vec<f64> {
+        let _ = stream_id;
+        self.weights()
+    }
+
+    /// Restore one stream's learned weights (checkpoint/failover hook;
+    /// no-op for stateless combiners).
+    fn set_stream_weights(&mut self, stream_id: u64, weights: Vec<f64>) {
+        let _ = (stream_id, weights);
+    }
+
+    /// Drop a finished stream's learned state (no-op when stateless).
+    fn evict_stream(&mut self, stream_id: u64) {
+        let _ = stream_id;
+    }
 }
 
 /// Build the combiner for a roster of `weights.len()` members.
@@ -157,8 +186,15 @@ impl Combiner for AllOf {
 }
 
 /// Online-weighted vote with multiplicative decay on disagreement.
+///
+/// Weights are per stream: each stream's vector starts from the spec
+/// weights on its first fusion and then evolves only on that stream's
+/// samples.
 pub struct AdaptiveWeighted {
-    weights: Vec<f64>,
+    /// Spec weights every new stream starts from.
+    initial: Vec<f64>,
+    /// Learned per-stream weights, lazily initialized from `initial`.
+    streams: HashMap<u64, Vec<f64>>,
     /// Decay factor η applied to disagreeing members.
     eta: f64,
     /// Recovery rate ρ pulling agreeing members back toward 1.
@@ -170,7 +206,13 @@ pub struct AdaptiveWeighted {
 impl AdaptiveWeighted {
     /// Start from the spec weights with the documented defaults.
     pub fn new(weights: Vec<f64>) -> Self {
-        AdaptiveWeighted { weights, eta: 0.1, rho: 0.01, w_min: 0.05 }
+        AdaptiveWeighted {
+            initial: weights,
+            streams: HashMap::new(),
+            eta: 0.1,
+            rho: 0.01,
+            w_min: 0.05,
+        }
     }
 }
 
@@ -180,25 +222,49 @@ impl Combiner for AdaptiveWeighted {
     }
 
     fn fuse(&mut self, votes: &[MemberVote]) -> Fused {
+        // Votes are aligned per sample, so every vote carries the same
+        // stream id; the engine never fuses an empty quorum.
+        let sid = votes[0].stream_id;
+        let (eta, rho, w_min) = (self.eta, self.rho, self.w_min);
+        let weights = self
+            .streams
+            .entry(sid)
+            .or_insert_with(|| self.initial.clone());
         let score: f64 = votes
             .iter()
-            .zip(&self.weights)
+            .zip(weights.iter())
             .map(|(v, w)| if v.outlier { *w } else { -*w })
             .sum();
         let outlier = score > 0.0;
         // fSEAD-style reweighting against the fused verdict.
-        for (v, w) in votes.iter().zip(self.weights.iter_mut()) {
+        for (v, w) in votes.iter().zip(weights.iter_mut()) {
             if v.outlier != outlier {
-                *w = (*w * (1.0 - self.eta)).max(self.w_min);
+                *w = (*w * (1.0 - eta)).max(w_min);
             } else {
-                *w += self.rho * (1.0 - *w);
+                *w += rho * (1.0 - *w);
             }
         }
         Fused { outlier, score }
     }
 
     fn weights(&self) -> Vec<f64> {
-        self.weights.clone()
+        self.initial.clone()
+    }
+
+    fn stream_weights(&self, stream_id: u64) -> Vec<f64> {
+        self.streams
+            .get(&stream_id)
+            .cloned()
+            .unwrap_or_else(|| self.initial.clone())
+    }
+
+    fn set_stream_weights(&mut self, stream_id: u64, weights: Vec<f64>) {
+        debug_assert_eq!(weights.len(), self.initial.len());
+        self.streams.insert(stream_id, weights);
+    }
+
+    fn evict_stream(&mut self, stream_id: u64) {
+        self.streams.remove(&stream_id);
     }
 }
 
@@ -213,6 +279,18 @@ mod tests {
     fn flags(v: &[bool]) -> Vec<MemberVote> {
         v.iter()
             .map(|&o| vote(o, if o { 1.0 } else { -1.0 }))
+            .collect()
+    }
+
+    fn flags_on(stream_id: u64, v: &[bool]) -> Vec<MemberVote> {
+        v.iter()
+            .map(|&o| MemberVote {
+                stream_id,
+                seq: 0,
+                outlier: o,
+                score: if o { 1.0 } else { -1.0 },
+                detail: None,
+            })
             .collect()
     }
 
@@ -261,11 +339,13 @@ mod tests {
         for _ in 0..50 {
             c.fuse(&flags(&[false, false, true]));
         }
-        let w = c.weights();
+        let w = c.stream_weights(0);
         assert!(w[2] < 0.1, "dissenter weight {}", w[2]);
         assert!(w[0] > 0.9 && w[1] > 0.9);
         // Floor: never silenced entirely.
         assert!(w[2] >= 0.05);
+        // The configured weights are untouched by learning.
+        assert_eq!(c.weights(), vec![1.0, 1.0, 1.0]);
         // After decay, the dissenter alone can no longer flip a fusion
         // even if the others are split... (2 members, one decayed)
         let mut c2 = AdaptiveWeighted::new(vec![1.0, 0.05]);
@@ -278,7 +358,45 @@ mod tests {
         for _ in 0..400 {
             c.fuse(&flags(&[false, false, false]));
         }
-        assert!(c.weights()[0] > 0.95, "w0={}", c.weights()[0]);
+        let w = c.stream_weights(0);
+        assert!(w[0] > 0.95, "w0={}", w[0]);
+    }
+
+    #[test]
+    fn adaptive_weights_are_per_stream() {
+        // Stream 0's dissenter decays; stream 1 (where the same member
+        // always agrees) must keep it at full weight — no cross-stream
+        // contamination.
+        let mut c = AdaptiveWeighted::new(vec![1.0, 1.0, 1.0]);
+        for _ in 0..50 {
+            c.fuse(&flags_on(0, &[false, false, true]));
+            c.fuse(&flags_on(1, &[false, false, false]));
+        }
+        assert!(c.stream_weights(0)[2] < 0.1);
+        assert!(c.stream_weights(1)[2] >= 1.0 - 1e-9);
+        // Unknown streams report the initial weights.
+        assert_eq!(c.stream_weights(42), vec![1.0, 1.0, 1.0]);
+        // Eviction forgets the learned vector.
+        c.evict_stream(0);
+        assert_eq!(c.stream_weights(0), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn adaptive_weights_restore_roundtrip() {
+        // Checkpoint/restore: a fresh combiner seeded with a stream's
+        // exported weights continues fusing identically.
+        let mut a = AdaptiveWeighted::new(vec![1.0, 1.0]);
+        for _ in 0..30 {
+            a.fuse(&flags_on(7, &[true, false]));
+        }
+        let mut b = AdaptiveWeighted::new(vec![1.0, 1.0]);
+        b.set_stream_weights(7, a.stream_weights(7));
+        for _ in 0..10 {
+            let fa = a.fuse(&flags_on(7, &[true, false]));
+            let fb = b.fuse(&flags_on(7, &[true, false]));
+            assert_eq!(fa, fb);
+        }
+        assert_eq!(a.stream_weights(7), b.stream_weights(7));
     }
 
     #[test]

@@ -12,9 +12,9 @@ use std::time::Instant;
 
 use crate::baselines::{AnomalyDetector, MSigmaDetector, SlidingZScore};
 use crate::config::{MemberKind, MemberSpec};
-use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine};
+use crate::engine::{Engine, EngineVerdict, RtlEngine, Snapshot, SoftwareEngine};
 use crate::stream::Sample;
-use crate::Result;
+use crate::{Error, Result};
 
 /// One member's opinion about one sample.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,11 +43,30 @@ pub struct MemberStats {
     pub busy_ns: u64,
 }
 
+/// Checkpoint of one member's state for ONE stream.
+///
+/// Engine-backed members reuse the engine-level [`Snapshot`]; baseline
+/// members are plain-data recursions, so their snapshot is a value copy
+/// of the per-stream detector itself.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MemberSnapshot {
+    /// TEDA software / RTL-sim member ([`Snapshot::Software`] /
+    /// [`Snapshot::Rtl`]).
+    Engine(Snapshot),
+    /// Running m·σ baseline state.
+    MSigma(MSigmaDetector),
+    /// Sliding z-score baseline state (window buffer included).
+    ZScore(SlidingZScore),
+}
+
 enum MemberImpl {
     /// Full multi-stream engine (TEDA software / RTL-sim).
     Engine(Box<dyn Engine>),
     /// Per-stream boolean baseline detectors, created on first sample.
-    Baseline(HashMap<u64, Box<dyn AnomalyDetector>>),
+    /// Concrete types (not `dyn AnomalyDetector`) so checkpointing can
+    /// value-copy their state.
+    MSigma(HashMap<u64, MSigmaDetector>),
+    ZScore(HashMap<u64, SlidingZScore>),
 }
 
 /// A detector enrolled in an ensemble: uniform ingest/flush surface
@@ -69,9 +88,8 @@ impl EnsembleMember {
             MemberKind::TedaRtl => MemberImpl::Engine(Box::new(
                 RtlEngine::new(n_features, spec.m),
             )),
-            MemberKind::MSigma | MemberKind::ZScore => {
-                MemberImpl::Baseline(HashMap::new())
-            }
+            MemberKind::MSigma => MemberImpl::MSigma(HashMap::new()),
+            MemberKind::ZScore => MemberImpl::ZScore(HashMap::new()),
         };
         EnsembleMember {
             spec: spec.clone(),
@@ -106,25 +124,24 @@ impl EnsembleMember {
     /// pipeline has 2-cycle latency — or not at all yet).
     pub fn ingest(&mut self, sample: &Sample) -> Result<Vec<MemberVote>> {
         let t0 = Instant::now();
+        let n = self.n_features;
+        let spec = &self.spec;
         let votes = match &mut self.imp {
             MemberImpl::Engine(eng) => {
                 let verdicts = eng.ingest(sample)?;
                 verdicts.into_iter().map(vote_from_verdict).collect()
             }
-            MemberImpl::Baseline(streams) => {
-                let n = self.n_features;
-                let spec = &self.spec;
+            MemberImpl::MSigma(streams) => {
                 let det = streams
                     .entry(sample.stream_id)
-                    .or_insert_with(|| make_baseline(spec, n));
-                let outlier = det.step(&sample.values);
-                vec![MemberVote {
-                    stream_id: sample.stream_id,
-                    seq: sample.seq,
-                    outlier,
-                    score: if outlier { 1.0 } else { -1.0 },
-                    detail: None,
-                }]
+                    .or_insert_with(|| MSigmaDetector::new(n, spec.m));
+                vec![baseline_vote(sample, det.step(&sample.values))]
+            }
+            MemberImpl::ZScore(streams) => {
+                let det = streams.entry(sample.stream_id).or_insert_with(
+                    || SlidingZScore::new(n, spec.m, spec.window),
+                );
+                vec![baseline_vote(sample, det.step(&sample.values))]
             }
         };
         self.account(t0, &votes);
@@ -140,7 +157,8 @@ impl EnsembleMember {
                 .into_iter()
                 .map(vote_from_verdict)
                 .collect(),
-            MemberImpl::Baseline(_) => Vec::new(), // nothing ever pends
+            // Baselines answer immediately — nothing ever pends.
+            MemberImpl::MSigma(_) | MemberImpl::ZScore(_) => Vec::new(),
         };
         self.account(t0, &votes);
         Ok(votes)
@@ -150,7 +168,52 @@ impl EnsembleMember {
     pub fn active_streams(&self) -> usize {
         match &self.imp {
             MemberImpl::Engine(eng) => eng.active_streams(),
-            MemberImpl::Baseline(streams) => streams.len(),
+            MemberImpl::MSigma(streams) => streams.len(),
+            MemberImpl::ZScore(streams) => streams.len(),
+        }
+    }
+
+    /// Checkpoint this member's state for one stream (`None` until the
+    /// member has seen the stream).
+    pub fn snapshot(&self, stream_id: u64) -> Option<MemberSnapshot> {
+        match &self.imp {
+            MemberImpl::Engine(eng) => {
+                eng.snapshot(stream_id).map(MemberSnapshot::Engine)
+            }
+            MemberImpl::MSigma(streams) => streams
+                .get(&stream_id)
+                .cloned()
+                .map(MemberSnapshot::MSigma),
+            MemberImpl::ZScore(streams) => streams
+                .get(&stream_id)
+                .cloned()
+                .map(MemberSnapshot::ZScore),
+        }
+    }
+
+    /// Restore one stream's state from a snapshot taken by a member of
+    /// the same kind.
+    pub fn restore(
+        &mut self,
+        stream_id: u64,
+        snapshot: MemberSnapshot,
+    ) -> Result<()> {
+        match (&mut self.imp, snapshot) {
+            (MemberImpl::Engine(eng), MemberSnapshot::Engine(s)) => {
+                eng.restore(stream_id, s)
+            }
+            (MemberImpl::MSigma(streams), MemberSnapshot::MSigma(det)) => {
+                streams.insert(stream_id, det);
+                Ok(())
+            }
+            (MemberImpl::ZScore(streams), MemberSnapshot::ZScore(det)) => {
+                streams.insert(stream_id, det);
+                Ok(())
+            }
+            _ => Err(Error::Stream(format!(
+                "member snapshot kind does not match member '{}'",
+                self.label()
+            ))),
         }
     }
 
@@ -159,6 +222,17 @@ impl EnsembleMember {
         self.stats.votes += votes.len() as u64;
         self.stats.outliers +=
             votes.iter().filter(|v| v.outlier).count() as u64;
+    }
+}
+
+/// Hard ±1 vote for a baseline member's boolean flag.
+fn baseline_vote(sample: &Sample, outlier: bool) -> MemberVote {
+    MemberVote {
+        stream_id: sample.stream_id,
+        seq: sample.seq,
+        outlier,
+        score: if outlier { 1.0 } else { -1.0 },
+        detail: None,
     }
 }
 
@@ -177,24 +251,6 @@ fn vote_from_verdict(v: EngineVerdict) -> MemberVote {
         outlier: v.outlier,
         score,
         detail: Some(v),
-    }
-}
-
-fn make_baseline(
-    spec: &MemberSpec,
-    n_features: usize,
-) -> Box<dyn AnomalyDetector> {
-    match spec.kind {
-        MemberKind::MSigma => {
-            Box::new(MSigmaDetector::new(n_features, spec.m))
-        }
-        MemberKind::ZScore => {
-            Box::new(SlidingZScore::new(n_features, spec.m, spec.window))
-        }
-        // `build` never routes TEDA kinds here.
-        MemberKind::TedaSoftware | MemberKind::TedaRtl => {
-            unreachable!("TEDA members are engine-backed")
-        }
     }
 }
 
@@ -293,6 +349,47 @@ mod tests {
             outlier: false,
         };
         assert_eq!(vote_from_verdict(v).score, 0.0); // NaN-safe
+    }
+
+    #[test]
+    fn every_member_kind_snapshots_and_restores() {
+        for spec_s in ["teda:m=3", "rtl:m=3", "msigma:m=3", "zscore:m=3,w=16"]
+        {
+            let spec: MemberSpec = spec_s.parse().unwrap();
+            let mut a = EnsembleMember::build(&spec, 2);
+            assert!(a.snapshot(0).is_none(), "{spec_s}: unseen stream");
+            for seq in 0..40u64 {
+                a.ingest(&sample(0, seq, seq as f64 * 0.1)).unwrap();
+            }
+            let snap = a.snapshot(0).unwrap();
+            let mut b = EnsembleMember::build(&spec, 2);
+            b.restore(0, snap).unwrap();
+            // Both continue identically (flush tail included).
+            let mut va = Vec::new();
+            let mut vb = Vec::new();
+            for seq in 40..60u64 {
+                va.extend(a.ingest(&sample(0, seq, seq as f64 * 0.1)).unwrap());
+                vb.extend(b.ingest(&sample(0, seq, seq as f64 * 0.1)).unwrap());
+            }
+            va.extend(a.flush().unwrap());
+            vb.extend(b.flush().unwrap());
+            assert_eq!(va.len(), vb.len(), "{spec_s}");
+            for (x, y) in va.iter().zip(&vb) {
+                assert_eq!(x.seq, y.seq, "{spec_s}");
+                assert_eq!(x.outlier, y.outlier, "{spec_s} seq={}", x.seq);
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_cross_kind_snapshot() {
+        let teda: MemberSpec = "teda:m=3".parse().unwrap();
+        let msigma: MemberSpec = "msigma:m=3".parse().unwrap();
+        let mut a = EnsembleMember::build(&teda, 2);
+        a.ingest(&sample(0, 0, 0.5)).unwrap();
+        let snap = a.snapshot(0).unwrap();
+        let mut b = EnsembleMember::build(&msigma, 2);
+        assert!(b.restore(0, snap).is_err());
     }
 
     #[test]

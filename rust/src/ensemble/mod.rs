@@ -46,17 +46,37 @@ pub mod member;
 pub mod partition;
 
 pub use combiner::{build_combiner, Combiner, Fused};
-pub use member::{EnsembleMember, MemberStats, MemberVote};
+pub use member::{EnsembleMember, MemberSnapshot, MemberStats, MemberVote};
 pub use partition::{MemberFootprint, PartitionPlan};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::config::EnsembleConfig;
-use crate::engine::{Engine, EngineVerdict};
+use crate::engine::{Engine, EngineVerdict, Snapshot};
 use crate::metrics::EnsembleMetrics;
 use crate::stream::Sample;
 use crate::{Error, Result};
+
+/// Checkpoint of ONE stream's complete ensemble state, captured at a
+/// single `(stream, seq)` watermark:
+///
+/// - every member's own snapshot (engine state or baseline recursion),
+/// - the per-stream combiner weights (the adaptive combiner's learned
+///   state — exactly what a per-shard design could not checkpoint),
+/// - the unfused quorum slots for the stream: votes from fast members
+///   waiting on slow ones (the fusion barrier). Restoring them means no
+///   member restores "ahead" of fusion — re-fed samples complete the
+///   same quorums the dead worker was holding open.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleSnapshot {
+    /// One snapshot per member, in member (roster) order.
+    pub members: Vec<MemberSnapshot>,
+    /// Effective combiner weights for this stream.
+    pub weights: Vec<f64>,
+    /// Unfused votes: (seq, one optional vote per member slot).
+    pub pending: Vec<(u64, Vec<Option<MemberVote>>)>,
+}
 
 /// Per-sample record of how the fused verdict came about (kept only
 /// when breakdown capture is enabled — see
@@ -89,6 +109,8 @@ pub struct EnsembleEngine {
     synced_busy_ns: Vec<u64>,
     /// Per-sample vote breakdowns (only when enabled).
     breakdowns: Option<Vec<FusedBreakdown>>,
+    /// Samples evicted at flush because their quorum never completed.
+    quorum_evictions: u64,
 }
 
 impl EnsembleEngine {
@@ -111,6 +133,7 @@ impl EnsembleEngine {
             metrics: None,
             synced_busy_ns: vec![0; n],
             breakdowns: None,
+            quorum_evictions: 0,
         })
     }
 
@@ -151,9 +174,21 @@ impl EnsembleEngine {
         self.members.iter().map(EnsembleMember::stats).collect()
     }
 
-    /// Current combiner weights (adaptive combiners evolve them).
+    /// Configured (initial) combiner weights.
     pub fn combiner_weights(&self) -> Vec<f64> {
         self.combiner.weights()
+    }
+
+    /// Effective combiner weights for one stream (per-stream adaptive
+    /// combiners evolve these independently).
+    pub fn stream_weights(&self, stream_id: u64) -> Vec<f64> {
+        self.combiner.stream_weights(stream_id)
+    }
+
+    /// Samples evicted at flush because their quorum never completed
+    /// (a member erred or a stream ended mid-flight).
+    pub fn quorum_evictions(&self) -> u64 {
+        self.quorum_evictions
     }
 
     /// Drain captured breakdowns (empty unless `with_breakdown(true)`).
@@ -194,6 +229,7 @@ impl EnsembleEngine {
             .collect();
         // Fuse in (stream, seq) order — stateful combiners (adaptive)
         // must see samples deterministically, not in HashMap order.
+        // `out` inherits this order, so no second sort is needed.
         ready.sort_unstable();
         let mut out = Vec::with_capacity(ready.len());
         for key in ready {
@@ -202,7 +238,6 @@ impl EnsembleEngine {
                 slots.into_iter().map(Option::unwrap).collect();
             out.push(self.fuse_one(key, &votes));
         }
-        out.sort_by_key(|v| (v.stream_id, v.seq));
         out
     }
 
@@ -299,20 +334,85 @@ impl Engine for EnsembleEngine {
         self.sync_busy_ns();
         let out = self.drain_ready();
         if !self.pending.is_empty() {
-            let mut keys: Vec<&(u64, u64)> = self.pending.keys().collect();
-            keys.sort();
-            return Err(Error::Stream(format!(
-                "ensemble flush left {} samples without quorum \
-                 (first: {:?})",
-                self.pending.len(),
-                keys.first()
-            )));
+            // A quorum that flush could not complete will never
+            // complete (a member erred or the stream ended mid-flight).
+            // Retaining the slots forever would leak; evict them with a
+            // warning metric instead of wedging shutdown on an error.
+            // The signal surface is machine-readable on purpose: the
+            // shared `quorum_evictions` counter plus the engine-local
+            // [`EnsembleEngine::quorum_evictions`] getter — a library
+            // must not write to stderr behind its embedder's back.
+            let n = self.pending.len() as u64;
+            self.quorum_evictions += n;
+            if let Some(m) = &self.metrics {
+                m.quorum_evictions.add(n);
+            }
+            self.pending.clear();
         }
         Ok(out)
     }
 
     fn active_streams(&self) -> usize {
         self.seen.len()
+    }
+
+    fn snapshot(&self, stream_id: u64) -> Option<Snapshot> {
+        if !self.seen.contains(&stream_id) {
+            return None;
+        }
+        // Every member ingests every sample, so a seen stream has state
+        // in all members; a partially missing roster means the stream
+        // was never actually ingested here.
+        let members: Vec<MemberSnapshot> = self
+            .members
+            .iter()
+            .map(|m| m.snapshot(stream_id))
+            .collect::<Option<_>>()?;
+        let pending: Vec<(u64, Vec<Option<MemberVote>>)> = {
+            let mut p: Vec<_> = self
+                .pending
+                .iter()
+                .filter(|((sid, _), _)| *sid == stream_id)
+                .map(|(&(_, seq), slots)| (seq, slots.clone()))
+                .collect();
+            p.sort_unstable_by_key(|(seq, _)| *seq);
+            p
+        };
+        Some(Snapshot::Ensemble(EnsembleSnapshot {
+            members,
+            weights: self.combiner.stream_weights(stream_id),
+            pending,
+        }))
+    }
+
+    fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()> {
+        let snap = match snapshot {
+            Snapshot::Ensemble(s) => s,
+            other => return Err(other.kind_mismatch("ensemble")),
+        };
+        let n = self.members.len();
+        if snap.members.len() != n
+            || snap.weights.len() != n
+            || snap.pending.iter().any(|(_, slots)| slots.len() != n)
+        {
+            return Err(Error::Stream(format!(
+                "ensemble snapshot shaped for {} members, roster has {n}",
+                snap.members.len()
+            )));
+        }
+        for (member, ms) in self.members.iter_mut().zip(snap.members) {
+            member.restore(stream_id, ms)?;
+        }
+        self.combiner.set_stream_weights(stream_id, snap.weights);
+        // Re-open the quorums the snapshotted engine was holding: votes
+        // already cast stay cast, missing slots are filled as re-fed
+        // samples flow through the slower members.
+        self.pending.retain(|(sid, _), _| *sid != stream_id);
+        for (seq, slots) in snap.pending {
+            self.pending.insert((stream_id, seq), slots);
+        }
+        self.seen.insert(stream_id);
+        Ok(())
     }
 }
 
@@ -492,10 +592,122 @@ mod tests {
             })
             .unwrap();
         }
-        let w = ens.combiner_weights();
+        let w = ens.stream_weights(0);
         assert_eq!(w.len(), 2);
         // A tight-threshold TEDA disagrees with a loose m·σ often enough
         // that at least one weight must have moved off 1.0.
         assert!(w.iter().any(|&x| (x - 1.0).abs() > 1e-6), "weights {w:?}");
+        // The configured weights stay pristine.
+        assert_eq!(ens.combiner_weights(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn snapshot_restore_mid_quorum_continues_identically() {
+        // teda answers immediately, rtl two samples late: cutting
+        // mid-stream leaves open quorums. The snapshot must carry them
+        // (fusion barrier) so the restored engine fuses every sample
+        // exactly once, identically to the uninterrupted run.
+        let samples = interleaved(2, 40, 2, 31);
+        let cut = samples.len() / 2;
+        let mut oracle = ensemble("teda+rtl", CombinerKind::Adaptive);
+        let full = run_engine(&mut oracle, &samples);
+
+        let mut live = ensemble("teda+rtl", CombinerKind::Adaptive);
+        let mut got = std::collections::BTreeMap::new();
+        for s in &samples[..cut] {
+            for v in live.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        let mut restored = ensemble("teda+rtl", CombinerKind::Adaptive);
+        for sid in 0..2u64 {
+            let snap = live.snapshot(sid).unwrap();
+            // The snapshot carries the open quorum slots.
+            let Snapshot::Ensemble(es) = &snap else { unreachable!() };
+            assert!(!es.pending.is_empty(), "rtl lag leaves open quorums");
+            restored.restore(sid, snap).unwrap();
+        }
+        for s in &samples[cut..] {
+            for v in restored.ingest(s).unwrap() {
+                got.insert((v.stream_id, v.seq), v);
+            }
+        }
+        for v in restored.flush().unwrap() {
+            got.insert((v.stream_id, v.seq), v);
+        }
+        assert_eq!(got.len(), full.len());
+        for (key, a) in &got {
+            let b = &full[key];
+            assert_eq!(a.outlier, b.outlier, "{key:?}");
+            assert_eq!(a.k, b.k, "{key:?}");
+        }
+        // Learned per-stream weights travelled with the snapshot.
+        for sid in 0..2u64 {
+            assert_eq!(
+                restored.stream_weights(sid),
+                oracle.stream_weights(sid),
+                "stream {sid} weights diverged"
+            );
+        }
+        assert_eq!(restored.quorum_evictions(), 0);
+    }
+
+    #[test]
+    fn snapshot_rejects_unknown_stream_and_wrong_roster() {
+        let mut a = ensemble("teda+msigma", CombinerKind::Majority);
+        assert!(a.snapshot(0).is_none());
+        run_engine(&mut a, &interleaved(1, 10, 2, 2));
+        let snap = a.snapshot(0).unwrap();
+        // Restoring into a differently sized roster is rejected.
+        let mut b = ensemble("teda", CombinerKind::Majority);
+        assert!(b.restore(0, snap).is_err());
+    }
+
+    #[test]
+    fn flush_evicts_quorumless_samples_with_warning_metric() {
+        // Inject an open quorum whose missing member will never vote
+        // (the member never sees the sample), then flush: the entry must
+        // be evicted and counted, not retained forever or turned into a
+        // shutdown error.
+        let cfg = EnsembleConfig::from_member_list(
+            "teda+msigma",
+            CombinerKind::Majority,
+        )
+        .unwrap();
+        let metrics = EnsembleMetrics::new(cfg.labels());
+        let mut ens = EnsembleEngine::new(&cfg, 2)
+            .unwrap()
+            .with_metrics(metrics.clone());
+        let samples = interleaved(1, 5, 2, 4);
+        for s in &samples {
+            ens.ingest(s).unwrap();
+        }
+        // Simulate a member that dropped a vote: restore a snapshot
+        // whose pending table has a half-filled quorum for a sample the
+        // members themselves never ingested.
+        let Snapshot::Ensemble(mut es) = ens.snapshot(0).unwrap() else {
+            unreachable!()
+        };
+        es.pending.push((
+            99,
+            vec![
+                Some(MemberVote {
+                    stream_id: 0,
+                    seq: 99,
+                    outlier: false,
+                    score: -1.0,
+                    detail: None,
+                }),
+                None,
+            ],
+        ));
+        ens.restore(0, Snapshot::Ensemble(es)).unwrap();
+        let out = ens.flush().unwrap();
+        assert!(out.is_empty(), "no complete quorums were pending");
+        assert_eq!(ens.quorum_evictions(), 1);
+        assert_eq!(metrics.quorum_evictions.get(), 1);
+        // Flush is terminal for the leak: nothing left pending.
+        assert!(ens.flush().unwrap().is_empty());
+        assert_eq!(ens.quorum_evictions(), 1);
     }
 }

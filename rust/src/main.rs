@@ -4,6 +4,7 @@
 //! ```text
 //! teda-fpga serve    [--config FILE] [--engine software|rtl|xla|ensemble]
 //!                    [--workers N] [--streams S] [--samples K] [--seed X]
+//!                    [--checkpoint-interval N] [--restore]
 //! teda-fpga detect   [--item 1..7] [--m 3.0] [--engine ...] [--csv OUT]
 //! teda-fpga synth    [--n-features N] [--netlist]
 //! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
@@ -72,6 +73,7 @@ USAGE:
                      [--engine software|rtl|xla|ensemble]
                      [--workers N] [--streams S] [--samples K] [--seed X]
                      [--members LIST] [--combiner KIND]
+                     [--checkpoint-interval N] [--restore]
   teda-fpga detect   [--item 1..7] [--m 3.0]
                      [--engine software|rtl|ensemble] [--csv OUT]
                      [--members LIST] [--combiner KIND]
@@ -199,6 +201,11 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     cfg.ensemble = ensemble_from_flags(flags, cfg.ensemble)?;
     cfg.workers = flags.parse_as("workers", cfg.workers)?;
     cfg.seed = flags.parse_as("seed", cfg.seed)?;
+    cfg.checkpoint_every =
+        flags.parse_as("checkpoint-interval", cfg.checkpoint_every)?;
+    if flags.has("restore") {
+        cfg.restore_on_resume = true;
+    }
     let streams: u64 = flags.parse_as("streams", 16u64)?;
     let samples: usize = flags.parse_as("samples", 10_000usize)?;
 
@@ -228,11 +235,20 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     }
     let metrics = svc.metrics();
     let ens_metrics = svc.ensemble_metrics();
+    let state_mgr = svc.state_manager();
     let out = svc.finish()?;
     let dt = t0.elapsed();
     println!("{}", metrics.render());
     if let Some(em) = ens_metrics {
         println!("{}", em.render());
+    }
+    if cfg.checkpoint_every > 0 {
+        println!(
+            "checkpoints: {} streams (interval {} samples, restore {})",
+            state_mgr.len(),
+            cfg.checkpoint_every,
+            if cfg.restore_on_resume { "on" } else { "off" }
+        );
     }
     println!(
         "processed {} samples in {:.3}s — {:.0} samples/s end-to-end",

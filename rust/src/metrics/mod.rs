@@ -135,6 +135,11 @@ pub struct ServiceMetrics {
     pub scalar_fallback: Counter,
     /// Times a submit blocked on a full worker queue (backpressure).
     pub backpressure_events: Counter,
+    /// Streams restored from a checkpoint on resume (failover).
+    pub stream_restores: Counter,
+    /// Re-fed samples dropped because a restored snapshot already
+    /// covered them (the at-least-once replay window).
+    pub replay_skipped: Counter,
     /// Per-sample end-to-end latency (submit → verdict).
     pub latency: Histogram,
     /// Per-chunk execution time (XLA engine).
@@ -155,6 +160,8 @@ impl ServiceMetrics {
              chunks_executed   {}\n\
              scalar_fallback   {}\n\
              backpressure      {}\n\
+             stream_restores   {}\n\
+             replay_skipped    {}\n\
              latency           {}\n\
              chunk_time        {}\n",
             self.samples_in.get(),
@@ -163,6 +170,8 @@ impl ServiceMetrics {
             self.chunks_executed.get(),
             self.scalar_fallback.get(),
             self.backpressure_events.get(),
+            self.stream_restores.get(),
+            self.replay_skipped.get(),
             self.latency.summary(),
             self.chunk_time.summary(),
         )
@@ -193,6 +202,10 @@ pub struct EnsembleMetrics {
     pub fused_verdicts: Counter,
     /// Fused verdicts that flagged an outlier.
     pub fused_outliers: Counter,
+    /// Samples evicted at flush because their quorum never completed
+    /// (a member erred or a stream ended mid-flight). Non-zero values
+    /// are a warning sign: some samples were never classified.
+    pub quorum_evictions: Counter,
 }
 
 impl EnsembleMetrics {
@@ -211,15 +224,17 @@ impl EnsembleMetrics {
                 .collect(),
             fused_verdicts: Counter::new(),
             fused_outliers: Counter::new(),
+            quorum_evictions: Counter::new(),
         })
     }
 
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "fused_verdicts    {}\nfused_outliers    {}\n",
+            "fused_verdicts    {}\nfused_outliers    {}\nquorum_evictions  {}\n",
             self.fused_verdicts.get(),
-            self.fused_outliers.get()
+            self.fused_outliers.get(),
+            self.quorum_evictions.get()
         );
         for m in &self.members {
             let votes = m.votes.get();

@@ -31,5 +31,5 @@
 mod netlist;
 mod pipeline;
 
-pub use netlist::{CompKind, Component, Netlist, Wire};
-pub use pipeline::{RtlVerdict, TedaRtl};
+pub use netlist::{CompKind, Component, Netlist, RegFile, Wire};
+pub use pipeline::{RtlSnapshot, RtlVerdict, TedaRtl};

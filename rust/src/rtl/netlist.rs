@@ -61,6 +61,23 @@ pub struct Component {
     pub outputs: Vec<Wire>,
 }
 
+/// The complete sequential state of a netlist: every register's latched
+/// value (in component order) plus the counter. Two identically
+/// constructed netlists (same builder code, same parameters) have the
+/// same register layout, so a `RegFile` saved from one loads into the
+/// other — this is what makes checkpoint/restore of a live pipeline
+/// exact: combinational wires are recomputed from registers on the next
+/// clock, so registers ARE the pipeline's whole state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegFile {
+    /// Latched value of every `Reg` component, in component order.
+    regs: Vec<f32>,
+    /// Sample counter (pre-increment view).
+    counter: u64,
+    /// Cycles simulated.
+    cycles: u64,
+}
+
 /// A complete netlist plus simulation state.
 #[derive(Debug, Clone)]
 pub struct Netlist {
@@ -305,6 +322,42 @@ impl Netlist {
         self.cycles
     }
 
+    /// Capture the full sequential state (registers + counter).
+    pub fn save_state(&self) -> RegFile {
+        RegFile {
+            regs: self.reg_state.iter().filter_map(|s| *s).collect(),
+            counter: self.counter_state,
+            cycles: self.cycles,
+        }
+    }
+
+    /// Restore sequential state previously captured with
+    /// [`Netlist::save_state`] from an identically constructed netlist.
+    ///
+    /// Combinational wire values are NOT restored: they are recomputed
+    /// from the registers on the next [`Netlist::clock`], exactly as in
+    /// hardware after a bitstream readback-capture restore.
+    pub fn load_state(&mut self, rf: &RegFile) -> Result<()> {
+        let n_regs = self.reg_state.iter().filter(|s| s.is_some()).count();
+        if rf.regs.len() != n_regs {
+            return Err(Error::Rtl(format!(
+                "register file has {} entries, netlist has {} registers \
+                 (snapshot from a differently shaped netlist?)",
+                rf.regs.len(),
+                n_regs
+            )));
+        }
+        let mut it = rf.regs.iter();
+        for s in self.reg_state.iter_mut() {
+            if s.is_some() {
+                *s = Some(*it.next().unwrap());
+            }
+        }
+        self.counter_state = rf.counter;
+        self.cycles = rf.cycles;
+        Ok(())
+    }
+
     /// All components (for synthesis/timing analysis and netlist dumps).
     pub fn components(&self) -> &[Component] {
         &self.comps
@@ -442,6 +495,53 @@ mod tests {
         nl.clock();
         assert_eq!(nl.get(r), 3.0);
         assert_eq!(nl.cycles(), 1);
+    }
+
+    #[test]
+    fn save_load_state_resumes_accumulator_exactly() {
+        // r <= r + in, snapshotted mid-run and restored into a fresh
+        // identically built netlist: both must continue identically.
+        fn build() -> (Netlist, Wire, Wire) {
+            let mut nl = Netlist::new();
+            let a = nl.input();
+            let r = nl.add1("R", CompKind::Reg { init: 0.0 }, &[]).unwrap();
+            let sum = nl.add1("S", CompKind::Add, &[r, a]).unwrap();
+            nl.connect_reg("R", sum).unwrap();
+            (nl, a, sum)
+        }
+        let (mut live, a1, s1) = build();
+        for i in 1..=5 {
+            live.set(a1, i as f32);
+            live.clock();
+        }
+        let rf = live.save_state();
+        let (mut restored, a2, s2) = build();
+        restored.load_state(&rf).unwrap();
+        assert_eq!(restored.cycles(), live.cycles());
+        for i in 6..=9 {
+            live.set(a1, i as f32);
+            restored.set(a2, i as f32);
+            live.clock();
+            restored.clock();
+            assert_eq!(live.get(s1), restored.get(s2));
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_mismatched_shape() {
+        let mut nl = Netlist::new();
+        let a = nl.input();
+        let r = nl.add1("R", CompKind::Reg { init: 0.0 }, &[]).unwrap();
+        nl.connect_reg("R", a).unwrap();
+        let _ = r;
+        let mut other = Netlist::new();
+        let b = other.input();
+        for i in 0..2 {
+            let name = format!("R{i}");
+            other.add1(&name, CompKind::Reg { init: 0.0 }, &[]).unwrap();
+            other.connect_reg(&name, b).unwrap();
+        }
+        assert!(nl.load_state(&other.save_state()).is_err());
     }
 
     #[test]

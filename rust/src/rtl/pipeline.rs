@@ -12,7 +12,26 @@
 
 use crate::{Error, Result};
 
-use super::netlist::{CompKind, Netlist, Wire};
+use super::netlist::{CompKind, Netlist, RegFile, Wire};
+
+/// Checkpoint of a live [`TedaRtl`] pipeline: the full register file
+/// (pipeline registers included, so in-flight samples survive) plus the
+/// sample counter. Loading it into a freshly constructed pipeline of the
+/// same `(n, m)` resumes the stream bit-exactly — the paper's
+/// architectural state `(μ, σ², k)` lives in MREGn/VREG1/KCNT, and the
+/// stage A→B / B→C registers carry the ≤ `LATENCY` samples whose
+/// verdicts have not left the OUTLIER module yet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RtlSnapshot {
+    /// Feature count the pipeline was built for.
+    pub n: usize,
+    /// Chebyshev multiplier baked into the CONSTM core.
+    pub m: f32,
+    /// Samples clocked in so far.
+    pub samples_in: u64,
+    /// Every register's latched value + the KCNT state.
+    pub regs: RegFile,
+}
 
 /// One classified sample leaving the OUTLIER module.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -304,6 +323,32 @@ impl TedaRtl {
         self.nl.reset();
         self.samples_in = 0;
     }
+
+    /// Checkpoint the live pipeline (register file + counters).
+    pub fn save(&self) -> RtlSnapshot {
+        RtlSnapshot {
+            n: self.n,
+            m: self.m,
+            samples_in: self.samples_in,
+            regs: self.nl.save_state(),
+        }
+    }
+
+    /// Restore a checkpoint taken with [`TedaRtl::save`] from a pipeline
+    /// of the same geometry. In-flight samples are restored with the
+    /// registers, so the next [`TedaRtl::clock`] emits exactly the
+    /// verdict the snapshotted pipeline would have emitted.
+    pub fn load(&mut self, snap: &RtlSnapshot) -> Result<()> {
+        if snap.n != self.n || snap.m != self.m {
+            return Err(Error::Rtl(format!(
+                "snapshot is for (n={}, m={}), pipeline is (n={}, m={})",
+                snap.n, snap.m, self.n, self.m
+            )));
+        }
+        self.nl.load_state(&snap.regs)?;
+        self.samples_in = snap.samples_in;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -426,6 +471,63 @@ mod tests {
                 rtl.netlist().count(|c| matches!(c.kind, CompKind::Mult));
             assert_eq!(mults, 3 * n + 3, "n={n}");
         }
+    }
+
+    #[test]
+    fn save_load_resumes_pipeline_bit_exactly_at_every_cut() {
+        // Snapshot after every prefix of a stream; a fresh pipeline
+        // restored from the snapshot must emit bitwise-identical verdicts
+        // for the rest of the stream, including the in-flight tail.
+        let mut rng = SplitMix64::new(23);
+        let samples: Vec<Vec<f32>> = (0..40)
+            .map(|_| {
+                vec![
+                    rng.uniform(-2.0, 2.0) as f32,
+                    rng.uniform(-2.0, 2.0) as f32,
+                ]
+            })
+            .collect();
+        let mut oracle = TedaRtl::new(2, 3.0).unwrap();
+        let full = oracle.run(&samples).unwrap();
+        for cut in 0..samples.len() {
+            let mut live = TedaRtl::new(2, 3.0).unwrap();
+            let mut got: Vec<RtlVerdict> = Vec::new();
+            for s in &samples[..cut] {
+                if let Some(v) = live.clock(s).unwrap() {
+                    got.push(v);
+                }
+            }
+            let snap = live.save();
+            let mut restored = TedaRtl::new(2, 3.0).unwrap();
+            restored.load(&snap).unwrap();
+            for s in &samples[cut..] {
+                if let Some(v) = restored.clock(s).unwrap() {
+                    got.push(v);
+                }
+            }
+            got.extend(restored.drain().unwrap());
+            assert_eq!(got.len(), full.len(), "cut={cut}");
+            for (a, b) in got.iter().zip(&full) {
+                assert_eq!(a.k, b.k, "cut={cut}");
+                assert_eq!(a.outlier, b.outlier, "cut={cut} k={}", a.k);
+                assert_eq!(
+                    a.zeta.to_bits(),
+                    b.zeta.to_bits(),
+                    "cut={cut} k={}",
+                    a.k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_rejects_geometry_mismatch() {
+        let a = TedaRtl::new(2, 3.0).unwrap();
+        let snap = a.save();
+        let mut wrong_n = TedaRtl::new(3, 3.0).unwrap();
+        assert!(wrong_n.load(&snap).is_err());
+        let mut wrong_m = TedaRtl::new(2, 2.5).unwrap();
+        assert!(wrong_m.load(&snap).is_err());
     }
 
     #[test]

@@ -17,6 +17,23 @@ pub struct Verdict {
     pub outlier: bool,
 }
 
+/// Complete checkpoint of a [`TedaDetector`]: the recurrence carry
+/// `(μ_k, σ²_k, k)` **plus** the detection counters. Carrying the
+/// counters is what makes failover observably identical to an
+/// uninterrupted run — a restore that only moves the state silently
+/// resets `n_outliers` to 0 mid-stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectorSnapshot {
+    /// The TEDA recurrence carry.
+    pub state: TedaState<f64>,
+    /// Outliers flagged up to and including sample `state.k`.
+    pub n_outliers: u64,
+    /// Chebyshev multiplier the counters were accumulated under — a
+    /// restore into a detector with a different `m` would produce
+    /// verdicts matching neither the old run nor a fresh one.
+    pub m: f64,
+}
+
 /// Streaming TEDA anomaly detector over `R^N` samples (Algorithm 1).
 ///
 /// Owns a [`TedaState<f64>`] plus the comparison threshold `m`, and keeps
@@ -106,13 +123,29 @@ impl TedaDetector {
         &self.state
     }
 
-    /// Restore from a snapshot.
+    /// Full checkpoint: recurrence state **and** detection counters.
+    pub fn snapshot(&self) -> DetectorSnapshot {
+        DetectorSnapshot {
+            state: self.state.clone(),
+            n_outliers: self.n_outliers,
+            m: self.m,
+        }
+    }
+
+    /// Restore from a snapshot, counters included.
     ///
     /// # Panics
-    /// Panics if the snapshot dimensionality differs from this detector's.
-    pub fn restore(&mut self, state: TedaState<f64>) {
-        assert_eq!(state.n_features(), self.state.n_features());
-        self.state = state;
+    /// Panics if the snapshot dimensionality or threshold `m` differs
+    /// from this detector's (callers that need a recoverable error
+    /// validate first, as [`crate::engine::SoftwareEngine`] does).
+    pub fn restore(&mut self, snapshot: DetectorSnapshot) {
+        assert_eq!(snapshot.state.n_features(), self.state.n_features());
+        assert_eq!(
+            snapshot.m, self.m,
+            "snapshot was taken under a different threshold m"
+        );
+        self.state = snapshot.state;
+        self.n_outliers = snapshot.n_outliers;
     }
 }
 
@@ -141,11 +174,29 @@ mod tests {
         for _ in 0..100 {
             a.step(&[rng.next_f64(), rng.next_f64()]);
         }
-        let snap = a.state().clone();
+        let snap = a.snapshot();
         let mut b = TedaDetector::new(2, 3.0);
         b.restore(snap);
+        assert_eq!(a.n_outliers(), b.n_outliers());
         let x = [0.33, 0.44];
         assert_eq!(a.step(&x), b.step(&x));
+    }
+
+    #[test]
+    fn restore_carries_counters() {
+        // Regression: a restored detector must report the same outlier
+        // count as the one it was snapshotted from, not restart at 0.
+        let mut a = TedaDetector::new(1, 3.0);
+        let mut rng = crate::util::prng::SplitMix64::new(13);
+        for _ in 0..300 {
+            a.step(&[rng.next_f64()]);
+        }
+        a.step(&[1e9]); // guaranteed outlier
+        assert!(a.n_outliers() > 0);
+        let mut b = TedaDetector::new(1, 3.0);
+        b.restore(a.snapshot());
+        assert_eq!(b.n_outliers(), a.n_outliers());
+        assert_eq!(b.k(), a.k());
     }
 
     #[test]

@@ -21,7 +21,7 @@ mod detector;
 pub mod fixed;
 mod state;
 
-pub use detector::{TedaDetector, Verdict};
+pub use detector::{DetectorSnapshot, TedaDetector, Verdict};
 pub use fixed::{FixedStep, Q16_16, TedaFixed};
 pub use state::{TedaState, TedaStep};
 

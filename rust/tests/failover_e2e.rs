@@ -1,0 +1,241 @@
+//! Failover end-to-end: a service is killed mid-stream (no flush — the
+//! workers abandon their in-flight state exactly like a crashed
+//! process), a new service inherits the checkpoint store, streams
+//! resume after the last checkpoint watermark, and the union of
+//! verdicts must equal an uninterrupted run verdict-for-verdict — for
+//! every `EngineKind`, including an ensemble with an RTL member (open
+//! fusion quorums) and adaptive per-stream weights.
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{
+    CombinerKind, EngineKind, EnsembleConfig, ServiceConfig,
+};
+use teda_fpga::coordinator::Service;
+use teda_fpga::engine::EngineVerdict;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+
+const STREAMS: u64 = 4;
+const PER_STREAM: u64 = 90;
+const CHECKPOINT_EVERY: u64 = 20;
+/// Kill after submitting this seq (NOT checkpoint-aligned on purpose:
+/// the replay window re-derives seqs 40..=KILL_AT from the watermark).
+const KILL_AT: u64 = 53;
+/// Last published watermark before the kill: seq 39 (checkpoints land
+/// at (seq+1) % 20 == 0 → 19, 39).
+const RESUME_FROM: u64 = 40;
+
+fn artifacts_present() -> bool {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(dir).join("manifest.json").exists()
+}
+
+fn cfg(engine: EngineKind) -> ServiceConfig {
+    ServiceConfig {
+        engine,
+        workers: 3,
+        n_features: 2,
+        queue_capacity: 256,
+        checkpoint_every: CHECKPOINT_EVERY,
+        restore_on_resume: true,
+        artifact_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+            .into(),
+        // RTL member gives the ensemble open quorums at the kill point;
+        // its tighter threshold (m=1.5 vs 3) makes it disagree often, so
+        // the adaptive combiner's per-stream weights genuinely evolve —
+        // both the quorums and the learned weights must survive failover.
+        ensemble: EnsembleConfig::from_member_list(
+            "teda:m=3+rtl:m=1.5",
+            CombinerKind::Adaptive,
+        )
+        .unwrap(),
+        ..Default::default()
+    }
+}
+
+/// Deterministic per-(stream, seq) sample so both runs see identical
+/// input without sharing RNG state across services.
+fn sample(sid: u64, seq: u64) -> Sample {
+    let mut rng = SplitMix64::new(sid.wrapping_mul(0x9E37) ^ seq);
+    Sample {
+        stream_id: sid,
+        seq,
+        values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+    }
+}
+
+fn submit_range(svc: &Service, from: u64, to: u64) {
+    for seq in from..to {
+        for sid in 0..STREAMS {
+            svc.submit(sample(sid, seq)).unwrap();
+        }
+    }
+}
+
+fn index(
+    out: Vec<teda_fpga::coordinator::Classified>,
+    map: &mut BTreeMap<(u64, u64), EngineVerdict>,
+) {
+    for c in out {
+        let key = (c.verdict.stream_id, c.verdict.seq);
+        match map.get(&key) {
+            // Replay-window duplicates must be IDENTICAL re-derivations
+            // (NaN-safe: bit-compare the observables).
+            Some(prev) => {
+                assert_eq!(prev.k, c.verdict.k, "{key:?}");
+                assert_eq!(prev.outlier, c.verdict.outlier, "{key:?}");
+                assert_eq!(
+                    prev.zeta.to_bits(),
+                    c.verdict.zeta.to_bits(),
+                    "replayed verdict diverged at {key:?}"
+                );
+            }
+            None => {
+                map.insert(key, c.verdict);
+            }
+        }
+    }
+}
+
+fn run_uninterrupted(
+    engine: EngineKind,
+) -> BTreeMap<(u64, u64), EngineVerdict> {
+    let svc = Service::start(cfg(engine)).unwrap();
+    submit_range(&svc, 0, PER_STREAM);
+    let mut map = BTreeMap::new();
+    index(svc.finish().unwrap(), &mut map);
+    map
+}
+
+fn run_with_failover(
+    engine: EngineKind,
+) -> BTreeMap<(u64, u64), EngineVerdict> {
+    // Incarnation 1: processes seqs 0..=KILL_AT, checkpoints at 19/39,
+    // then dies without flushing.
+    let svc1 = Service::start(cfg(engine)).unwrap();
+    let state = svc1.state_manager();
+    submit_range(&svc1, 0, KILL_AT + 1);
+    let mut map = BTreeMap::new();
+    index(svc1.abort().unwrap(), &mut map);
+    // The kill lost the in-flight tail: nothing at/after the kill point
+    // can be complete for latency > 0 engines, and every stream's
+    // newest checkpoint is the seq-39 watermark.
+    for sid in 0..STREAMS {
+        let cp = state.latest(sid).unwrap_or_else(|| {
+            panic!("stream {sid} has no checkpoint before the kill")
+        });
+        assert_eq!(cp.seq, RESUME_FROM - 1, "stream {sid} watermark");
+    }
+    // Incarnation 2: inherits the checkpoint store; the at-least-once
+    // upstream re-requests everything after the watermark. The worker
+    // restores each stream's snapshot on its first resumed sample.
+    let svc2 =
+        Service::start_with_state(cfg(engine), state.clone()).unwrap();
+    submit_range(&svc2, RESUME_FROM, PER_STREAM);
+    index(svc2.finish().unwrap(), &mut map);
+    map
+}
+
+fn assert_failover_invisible(engine: EngineKind) {
+    let full = run_uninterrupted(engine);
+    let merged = run_with_failover(engine);
+    assert_eq!(
+        full.len(),
+        (STREAMS * PER_STREAM) as usize,
+        "{engine}: uninterrupted run must classify everything"
+    );
+    assert_eq!(
+        merged.len(),
+        full.len(),
+        "{engine}: failover lost or duplicated verdicts"
+    );
+    for (key, a) in &full {
+        let b = &merged[key];
+        assert_eq!(a.k, b.k, "{engine} {key:?}");
+        assert_eq!(a.outlier, b.outlier, "{engine} {key:?}");
+        assert_eq!(
+            a.zeta.to_bits(),
+            b.zeta.to_bits(),
+            "{engine} {key:?}: zeta {} vs {}",
+            a.zeta,
+            b.zeta
+        );
+        assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+    }
+}
+
+#[test]
+fn software_failover_is_invisible() {
+    assert_failover_invisible(EngineKind::Software);
+}
+
+#[test]
+fn rtl_failover_is_invisible() {
+    assert_failover_invisible(EngineKind::Rtl);
+}
+
+#[test]
+fn ensemble_failover_is_invisible_including_adaptive_weights() {
+    assert_failover_invisible(EngineKind::Ensemble);
+}
+
+#[test]
+fn xla_failover_is_invisible() {
+    if !artifacts_present() {
+        eprintln!("artifacts missing — skipping XLA failover e2e");
+        return;
+    }
+    assert_failover_invisible(EngineKind::Xla);
+}
+
+#[test]
+fn inclusive_replay_from_the_watermark_stays_exactly_once() {
+    // An at-least-once upstream may replay from the watermark
+    // INCLUSIVELY (seq == cp.seq), not just after it. The worker must
+    // still restore, drop the already-folded samples, and end up
+    // verdict-for-verdict identical — not silently restart the stream.
+    let full = run_uninterrupted(EngineKind::Software);
+    let svc1 = Service::start(cfg(EngineKind::Software)).unwrap();
+    let state = svc1.state_manager();
+    submit_range(&svc1, 0, KILL_AT + 1);
+    let mut map = BTreeMap::new();
+    index(svc1.abort().unwrap(), &mut map);
+    let svc2 =
+        Service::start_with_state(cfg(EngineKind::Software), state).unwrap();
+    // Replay window starts AT the watermark and overlaps further back.
+    submit_range(&svc2, RESUME_FROM - 1, PER_STREAM);
+    let m = svc2.metrics();
+    index(svc2.finish().unwrap(), &mut map);
+    assert_eq!(m.stream_restores.get(), STREAMS);
+    // One already-folded sample (the watermark itself) dropped per stream.
+    assert_eq!(m.replay_skipped.get(), STREAMS);
+    assert_eq!(map.len(), full.len());
+    for (key, a) in &full {
+        let b = &map[key];
+        assert_eq!((a.k, a.outlier), (b.k, b.outlier), "{key:?}");
+        assert_eq!(a.zeta.to_bits(), b.zeta.to_bits(), "{key:?}");
+    }
+}
+
+#[test]
+fn without_restore_the_resumed_run_diverges() {
+    // Control experiment: the same failover WITHOUT restore-on-resume
+    // silently restarts streams at k=1 — today's bug, now observable.
+    let mut c = cfg(EngineKind::Software);
+    c.restore_on_resume = false;
+    let svc1 = Service::start(c.clone()).unwrap();
+    let state = svc1.state_manager();
+    submit_range(&svc1, 0, KILL_AT + 1);
+    svc1.abort().unwrap();
+    let svc2 = Service::start_with_state(c, state).unwrap();
+    submit_range(&svc2, RESUME_FROM, PER_STREAM);
+    let out = svc2.finish().unwrap();
+    // Every resumed verdict has a reset k (counts from 1 again) —
+    // provably NOT a continuation.
+    let resumed = out
+        .iter()
+        .find(|c| c.verdict.seq == RESUME_FROM)
+        .expect("resumed verdicts exist");
+    assert_eq!(resumed.verdict.k, 1, "fresh engine restarted the stream");
+}

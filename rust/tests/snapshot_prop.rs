@@ -1,0 +1,142 @@
+//! Property: checkpoint/restore is invisible. For EVERY prefix length
+//! of a random stream, snapshotting after the prefix, restoring into a
+//! fresh engine, and feeding the remainder yields verdicts identical to
+//! the uninterrupted run — for the software, RTL, and single-member
+//! ensemble engines. This is the failover correctness property at the
+//! engine level; `failover_e2e` proves the same through the service.
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{CombinerKind, EnsembleConfig};
+use teda_fpga::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine};
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::propkit::{forall, Gen};
+
+/// NaN-safe verdict equality (the RTL ζ₁ is NaN by design): identical
+/// bit patterns, not IEEE `==`.
+fn assert_verdicts_eq(
+    a: &BTreeMap<(u64, u64), EngineVerdict>,
+    b: &BTreeMap<(u64, u64), EngineVerdict>,
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}: verdict count");
+    for (key, va) in a {
+        let vb = b.get(key).unwrap_or_else(|| panic!("{ctx}: missing {key:?}"));
+        assert_eq!(va.k, vb.k, "{ctx} {key:?}");
+        assert_eq!(va.outlier, vb.outlier, "{ctx} {key:?}");
+        assert_eq!(
+            va.zeta.to_bits(),
+            vb.zeta.to_bits(),
+            "{ctx} {key:?}: zeta {} vs {}",
+            va.zeta,
+            vb.zeta
+        );
+        assert_eq!(
+            va.threshold.to_bits(),
+            vb.threshold.to_bits(),
+            "{ctx} {key:?}"
+        );
+        assert_eq!(
+            va.eccentricity.to_bits(),
+            vb.eccentricity.to_bits(),
+            "{ctx} {key:?}"
+        );
+    }
+}
+
+fn collect(
+    map: &mut BTreeMap<(u64, u64), EngineVerdict>,
+    verdicts: Vec<EngineVerdict>,
+) {
+    for v in verdicts {
+        let key = (v.stream_id, v.seq);
+        assert!(map.insert(key, v).is_none(), "duplicate verdict {key:?}");
+    }
+}
+
+/// The property itself, generic over an engine constructor.
+fn snapshot_at_every_prefix_is_invisible(
+    g: &mut Gen,
+    make: &dyn Fn() -> Box<dyn Engine>,
+    label: &str,
+) {
+    let sid = g.u64_below(1000);
+    let len = g.usize_in(4, 28);
+    let samples: Vec<Sample> = (0..len)
+        .map(|seq| Sample {
+            stream_id: sid,
+            seq: seq as u64,
+            values: vec![g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0)],
+        })
+        .collect();
+
+    // Uninterrupted oracle.
+    let mut oracle = make();
+    let mut full = BTreeMap::new();
+    for s in &samples {
+        collect(&mut full, oracle.ingest(s).unwrap());
+    }
+    collect(&mut full, oracle.flush().unwrap());
+    assert_eq!(full.len(), len, "{label}: every sample classified");
+
+    for cut in 0..len {
+        let mut live = make();
+        let mut got = BTreeMap::new();
+        for s in &samples[..cut] {
+            collect(&mut got, live.ingest(s).unwrap());
+        }
+        let mut restored = make();
+        if let Some(snap) = live.snapshot(sid) {
+            restored.restore(sid, snap).unwrap();
+        }
+        for s in &samples[cut..] {
+            collect(&mut got, restored.ingest(s).unwrap());
+        }
+        collect(&mut got, restored.flush().unwrap());
+        assert_verdicts_eq(&got, &full, &format!("{label} cut={cut}"));
+    }
+}
+
+#[test]
+fn prop_software_snapshot_restore_at_every_prefix() {
+    forall("software snapshot ≡ uninterrupted", 24, |g| {
+        let m = g.f64_in(1.5, 4.5);
+        snapshot_at_every_prefix_is_invisible(
+            g,
+            &move || Box::new(SoftwareEngine::new(2, m)),
+            "software",
+        );
+    });
+}
+
+#[test]
+fn prop_rtl_snapshot_restore_at_every_prefix() {
+    forall("rtl snapshot ≡ uninterrupted", 12, |g| {
+        let m = g.f64_in(1.5, 4.5);
+        snapshot_at_every_prefix_is_invisible(
+            g,
+            &move || Box::new(RtlEngine::new(2, m)),
+            "rtl",
+        );
+    });
+}
+
+#[test]
+fn prop_single_member_ensemble_snapshot_restore_at_every_prefix() {
+    forall("ensemble snapshot ≡ uninterrupted", 12, |g| {
+        let m = g.f64_in(1.5, 4.5);
+        // Adaptive combiner so per-stream learned weights are part of
+        // what the snapshot must carry.
+        let cfg = EnsembleConfig::from_member_list(
+            &format!("teda:m={m}"),
+            CombinerKind::Adaptive,
+        )
+        .unwrap();
+        snapshot_at_every_prefix_is_invisible(
+            g,
+            &move || Box::new(EnsembleEngine::new(&cfg, 2).unwrap()),
+            "ensemble",
+        );
+    });
+}
