@@ -1,0 +1,221 @@
+//! Durable checkpoint persistence: snapshot size per engine kind, and
+//! the encode / decode / restore latencies a failover actually pays.
+//!
+//! Emits `BENCH_persist.json` at the repository root. The XLA row is
+//! codec-only (a synthetic carry + buffered chunks — the AOT artifacts
+//! are not required to measure the persistence layer).
+//!
+//! Run: `cargo bench --bench persist`
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{CombinerKind, EnsembleConfig, Json};
+use teda_fpga::coordinator::StateCheckpoint;
+use teda_fpga::engine::{
+    Engine, RtlEngine, Snapshot, SoftwareEngine, XlaSnapshot,
+};
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::persist::{codec, CheckpointStore, FileStore};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+/// Samples folded into each benchmarked snapshot.
+const WARM_SAMPLES: u64 = 1_000;
+
+fn feed(engine: &mut dyn Engine, sid: u64) -> StateCheckpoint {
+    let mut rng = SplitMix64::new(sid ^ 0x7EDA);
+    for seq in 0..WARM_SAMPLES {
+        engine
+            .ingest(&Sample {
+                stream_id: sid,
+                seq,
+                values: vec![rng.normal(), rng.normal()],
+            })
+            .unwrap();
+    }
+    StateCheckpoint {
+        stream_id: sid,
+        seq: WARM_SAMPLES - 1,
+        snapshot: engine.snapshot(sid).unwrap(),
+    }
+}
+
+/// `(label, checkpoint, fresh-engine constructor for restore timing)`.
+type Case = (
+    &'static str,
+    StateCheckpoint,
+    Option<Box<dyn Fn() -> Box<dyn Engine>>>,
+);
+
+fn cases() -> Vec<Case> {
+    let ens_cfg = EnsembleConfig::from_member_list(
+        "teda:m=3+rtl:m=1.5+msigma:m=3+zscore:m=3,w=64",
+        CombinerKind::Adaptive,
+    )
+    .unwrap();
+    let ens_cfg2 = ens_cfg.clone();
+    vec![
+        (
+            "software",
+            feed(&mut SoftwareEngine::new(2, 3.0), 1),
+            Some(Box::new(|| {
+                Box::new(SoftwareEngine::new(2, 3.0)) as Box<dyn Engine>
+            })),
+        ),
+        (
+            "rtl",
+            feed(&mut RtlEngine::new(2, 3.0), 2),
+            Some(Box::new(|| {
+                Box::new(RtlEngine::new(2, 3.0)) as Box<dyn Engine>
+            })),
+        ),
+        (
+            "ensemble",
+            feed(&mut EnsembleEngine::new(&ens_cfg, 2).unwrap(), 3),
+            Some(Box::new(move || {
+                Box::new(EnsembleEngine::new(&ens_cfg2, 2).unwrap())
+                    as Box<dyn Engine>
+            })),
+        ),
+        (
+            "xla(codec-only)",
+            StateCheckpoint {
+                stream_id: 4,
+                seq: WARM_SAMPLES - 1,
+                snapshot: Snapshot::Xla(XlaSnapshot {
+                    mu: vec![0.1, -0.1],
+                    var: 0.5,
+                    k: 960.0,
+                    m: 3.0,
+                    // One queued chunk + a partial buffer, the typical
+                    // mid-stream shape for a (T=32, N=2) variant.
+                    chunks: vec![(960, vec![0.25; 64])],
+                    buf: vec![0.5; 16],
+                    seq_base: 992,
+                }),
+                // No engine restore without artifacts.
+            },
+            None,
+        ),
+    ]
+}
+
+fn main() {
+    println!(
+        "== checkpoint persistence (snapshot after {WARM_SAMPLES} samples, \
+         N=2) ==\n"
+    );
+    let mut results = Vec::new();
+    for (label, cp, make_engine) in cases() {
+        let encoded = codec::encode(&cp);
+        let bytes = encoded.len();
+
+        let enc = Bench::new(format!("encode_{label}"))
+            .iters(200)
+            .run(|| {
+                black_box(codec::encode(black_box(&cp)));
+            });
+        let dec = Bench::new(format!("decode_{label}"))
+            .iters(200)
+            .run(|| {
+                black_box(codec::decode(black_box(&encoded)).unwrap());
+            });
+        let restore_ns = make_engine.map(|make| {
+            let report = Bench::new(format!("restore_{label}"))
+                .iters(100)
+                .run(|| {
+                    let mut eng = make();
+                    let decoded =
+                        codec::decode(black_box(&encoded)).unwrap();
+                    eng.restore(decoded.stream_id, decoded.snapshot)
+                        .unwrap();
+                    black_box(eng.active_streams());
+                });
+            report.mean.as_nanos() as f64
+        });
+
+        println!(
+            "{label:<16} {bytes:>6} B  encode {:>8.0} ns  decode {:>8.0} \
+             ns  decode+restore {}",
+            enc.mean.as_nanos() as f64,
+            dec.mean.as_nanos() as f64,
+            match restore_ns {
+                Some(ns) => format!("{ns:>8.0} ns"),
+                None => "      n/a".into(),
+            }
+        );
+
+        let mut row = BTreeMap::new();
+        row.insert("engine".to_string(), Json::Str(label.to_string()));
+        row.insert("snapshot_bytes".to_string(), Json::Num(bytes as f64));
+        row.insert(
+            "encode_ns".to_string(),
+            Json::Num((enc.mean.as_nanos() as f64 * 10.0).round() / 10.0),
+        );
+        row.insert(
+            "decode_ns".to_string(),
+            Json::Num((dec.mean.as_nanos() as f64 * 10.0).round() / 10.0),
+        );
+        row.insert(
+            "decode_restore_ns".to_string(),
+            match restore_ns {
+                Some(ns) => Json::Num((ns * 10.0).round() / 10.0),
+                None => Json::Null,
+            },
+        );
+        results.push(Json::Obj(row));
+    }
+
+    // Durable round trip: FileStore put (encode + temp write + rename +
+    // retention) and latest (scan + read + decode) for a software
+    // checkpoint — the cold-start restore latency a recovery pays per
+    // stream.
+    let cp = feed(&mut SoftwareEngine::new(2, 3.0), 9);
+    let root = teda_fpga::util::unique_temp_dir("bench-persist");
+    let store = FileStore::open(&root, 4).unwrap();
+    let put = Bench::new("file_put").iters(200).run(|| {
+        store.put(black_box(&cp)).unwrap();
+    });
+    let get = Bench::new("file_latest").iters(200).run(|| {
+        black_box(store.latest(cp.stream_id).unwrap().unwrap());
+    });
+    std::fs::remove_dir_all(&root).unwrap();
+    println!(
+        "file store       put {:>8.0} ns  latest {:>8.0} ns",
+        put.mean.as_nanos() as f64,
+        get.mean.as_nanos() as f64
+    );
+    let mut row = BTreeMap::new();
+    row.insert("engine".to_string(), Json::Str("file-store".to_string()));
+    row.insert(
+        "put_ns".to_string(),
+        Json::Num((put.mean.as_nanos() as f64 * 10.0).round() / 10.0),
+    );
+    row.insert(
+        "latest_ns".to_string(),
+        Json::Num((get.mean.as_nanos() as f64 * 10.0).round() / 10.0),
+    );
+    results.push(Json::Obj(row));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("persist".to_string()));
+    doc.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "one stream checkpointed after {WARM_SAMPLES} samples, N=2; \
+             ensemble = teda+rtl+msigma+zscore(adaptive)"
+        )),
+    );
+    doc.insert("results".to_string(), Json::Arr(results));
+    let json = Json::Obj(doc).to_string_compact();
+
+    // Always the repository root (one level above the cargo manifest),
+    // matching the other BENCH_*.json emitters.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent")
+        .join("BENCH_persist.json");
+    std::fs::write(&path, json + "\n").expect("write BENCH_persist.json");
+    println!("wrote {}", path.display());
+}

@@ -33,6 +33,26 @@ impl MSigmaDetector {
         self.k
     }
 
+    /// Raw state `(m, k, mean, m2)` for the persistence codec.
+    pub fn parts(&self) -> (f64, u64, &[f64], &[f64]) {
+        (self.m, self.k, &self.mean, &self.m2)
+    }
+
+    /// Rebuild from raw parts (the codec's decode path). Returns
+    /// `None` when the parts are inconsistent — corrupt input must
+    /// become an error, not a detector with impossible state.
+    pub fn from_parts(
+        m: f64,
+        k: u64,
+        mean: Vec<f64>,
+        m2: Vec<f64>,
+    ) -> Option<Self> {
+        if !(m > 0.0) || mean.is_empty() || mean.len() != m2.len() {
+            return None;
+        }
+        Some(MSigmaDetector { m, k, mean, m2 })
+    }
+
     /// Per-feature standard deviation estimate.
     pub fn sigma(&self) -> Vec<f64> {
         if self.k < 2 {

@@ -36,6 +36,41 @@ impl SlidingZScore {
     pub fn fill(&self) -> usize {
         self.buf.len()
     }
+
+    /// Raw state `(m, window, buf, sum, sumsq)` for the persistence
+    /// codec (buffer rows oldest-first).
+    pub fn parts(&self) -> (f64, usize, &VecDeque<Vec<f64>>, &[f64], &[f64])
+    {
+        (self.m, self.window, &self.buf, &self.sum, &self.sumsq)
+    }
+
+    /// Rebuild from raw parts (the codec's decode path). Returns
+    /// `None` when the parts are inconsistent — corrupt input must
+    /// become an error, not a detector with impossible state.
+    pub fn from_parts(
+        m: f64,
+        window: usize,
+        buf: Vec<Vec<f64>>,
+        sum: Vec<f64>,
+        sumsq: Vec<f64>,
+    ) -> Option<Self> {
+        if !(m > 0.0)
+            || window < 2
+            || sum.is_empty()
+            || sum.len() != sumsq.len()
+            || buf.len() > window
+            || buf.iter().any(|row| row.len() != sum.len())
+        {
+            return None;
+        }
+        Some(SlidingZScore {
+            m,
+            window,
+            buf: buf.into(),
+            sum,
+            sumsq,
+        })
+    }
 }
 
 impl AnomalyDetector for SlidingZScore {

@@ -81,6 +81,17 @@ pub struct ServiceConfig {
     /// mid-sequence on a fresh worker (failover). TOML/JSON:
     /// `checkpoint.restore`, CLI: `--restore`.
     pub restore_on_resume: bool,
+    /// Durable checkpoint store directory (`None` = in-memory only;
+    /// checkpoints then die with the process). TOML/JSON:
+    /// `checkpoint.dir`, CLI: `--checkpoint-dir`.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Keep-last-K retention per stream in the durable store (≥ 1).
+    /// TOML/JSON: `checkpoint.keep`.
+    pub checkpoint_keep: usize,
+    /// Evict a stream's engine + checkpoint state after it has been
+    /// idle for this many samples processed on its worker (0 = never).
+    /// TOML/JSON: `checkpoint.evict_after`, CLI: `--evict-after`.
+    pub evict_after: u64,
     /// RNG seed for anything stochastic in the service (workload gen).
     pub seed: u64,
     /// Ensemble member roster + combiner (used when `engine = ensemble`).
@@ -102,6 +113,9 @@ impl Default for ServiceConfig {
             artifact_dir: PathBuf::from("artifacts"),
             checkpoint_every: 0,
             restore_on_resume: false,
+            checkpoint_dir: None,
+            checkpoint_keep: 4,
+            evict_after: 0,
             seed: 0x7EDA, // "TEDA"
             ensemble: EnsembleConfig::default(),
         }
@@ -151,6 +165,15 @@ impl ServiceConfig {
         }
         if let Some(v) = doc.bool_("checkpoint.restore") {
             cfg.restore_on_resume = v;
+        }
+        if let Some(v) = doc.str_("checkpoint.dir") {
+            cfg.checkpoint_dir = Some(PathBuf::from(v));
+        }
+        if let Some(v) = doc.usize_("checkpoint.keep") {
+            cfg.checkpoint_keep = v;
+        }
+        if let Some(v) = doc.u64_("checkpoint.evict_after") {
+            cfg.evict_after = v;
         }
         if let Some(v) = doc.u64_("service.seed") {
             cfg.seed = v;
@@ -208,6 +231,18 @@ impl ServiceConfig {
             if let Some(v) = checkpoint.get("restore").and_then(Json::as_bool)
             {
                 cfg.restore_on_resume = v;
+            }
+            if let Some(v) = checkpoint.get("dir").and_then(Json::as_str) {
+                cfg.checkpoint_dir = Some(PathBuf::from(v));
+            }
+            if let Some(v) = checkpoint.get("keep").and_then(Json::as_usize)
+            {
+                cfg.checkpoint_keep = v;
+            }
+            if let Some(v) =
+                checkpoint.get("evict_after").and_then(Json::as_u64)
+            {
+                cfg.evict_after = v;
             }
         }
         if let Some(batcher) = doc.get("batcher") {
@@ -267,6 +302,12 @@ impl ServiceConfig {
         if self.batch_max_streams == 0 || self.chunk_t == 0 {
             return Err(Error::Config(
                 "batcher dimensions must be > 0".into(),
+            ));
+        }
+        if self.checkpoint_keep == 0 {
+            return Err(Error::Config(
+                "checkpoint.keep must be > 0 (keep-last-K retention)"
+                    .into(),
             ));
         }
         if self.engine == EngineKind::Ensemble {
@@ -414,6 +455,9 @@ mod tests {
             [checkpoint]
             interval = 7
             restore = true
+            dir = "/var/lib/teda/ckpt"
+            keep = 2
+            evict_after = 5000
             [batcher]
             max_streams = 8
             chunk_t = 16
@@ -428,7 +472,9 @@ mod tests {
             "name": "fused",
             "engine": {"kind": "ensemble", "n_features": 4, "m": 2.5},
             "service": {"workers": 2, "queue_capacity": 99, "seed": 123},
-            "checkpoint": {"interval": 7, "restore": true},
+            "checkpoint": {"interval": 7, "restore": true,
+                           "dir": "/var/lib/teda/ckpt", "keep": 2,
+                           "evict_after": 5000},
             "batcher": {"max_streams": 8, "chunk_t": 16, "linger_us": 42},
             "artifacts": {"dir": "/opt/a"},
             "ensemble": {"combiner": "adaptive",
@@ -442,7 +488,22 @@ mod tests {
         assert_eq!(a.batch_linger_us, 42);
         assert_eq!(a.checkpoint_every, 7);
         assert!(a.restore_on_resume);
+        assert_eq!(
+            a.checkpoint_dir,
+            Some(PathBuf::from("/var/lib/teda/ckpt"))
+        );
+        assert_eq!(a.checkpoint_keep, 2);
+        assert_eq!(a.evict_after, 5000);
         assert_eq!(a.m, 2.5);
+    }
+
+    #[test]
+    fn checkpoint_dir_defaults_off_and_keep_must_be_positive() {
+        let cfg = ServiceConfig::default();
+        assert!(cfg.checkpoint_dir.is_none());
+        assert_eq!(cfg.evict_after, 0);
+        assert!(ServiceConfig::from_toml("[checkpoint]\nkeep = 0\n")
+            .is_err());
     }
 
     #[test]

@@ -23,7 +23,14 @@
 //!   counters, RTL register files, XLA carries, or whole ensembles with
 //!   per-stream combiner weights — published every
 //!   `checkpoint.interval` samples and restored on stream resume for
-//!   recovery/migration (`checkpoint.restore`).
+//!   recovery/migration (`checkpoint.restore`). With `checkpoint.dir`
+//!   set, every publish is also written through to a durable
+//!   [`crate::persist::FileStore`], and
+//!   [`Service::start_from_store`] cold-starts a new process from the
+//!   newest valid on-disk checkpoint per stream — failover survives
+//!   full-process death. `checkpoint.evict_after` drops idle streams
+//!   (engine state + checkpoints, memory and disk) so a long-running
+//!   service does not accumulate finished streams forever.
 //! - **Backpressure**: all queues are bounded; a full worker queue
 //!   blocks the router (and ultimately the source), never drops.
 

@@ -10,6 +10,7 @@ use crate::coordinator::{Router, StateCheckpoint, StateManager};
 use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine};
 use crate::ensemble::EnsembleEngine;
 use crate::metrics::{EnsembleMetrics, ServiceMetrics};
+use crate::persist::{CheckpointStore, FileStore};
 use crate::runtime::XlaRuntime;
 use crate::stream::{bounded, Receiver, Sample, Sender};
 use crate::{Error, Result};
@@ -101,10 +102,66 @@ fn submit_inner(
     }
 }
 
+/// Worker-side checkpoint/eviction knobs, lifted from [`ServiceConfig`].
+#[derive(Clone, Copy)]
+struct CheckpointPolicy {
+    /// Publish a snapshot every N samples per stream (0 = off).
+    every: u64,
+    /// Restore the newest checkpoint when a stream resumes mid-sequence.
+    restore_on_resume: bool,
+    /// Evict a stream idle for N worker-processed samples (0 = never).
+    evict_after: u64,
+}
+
+impl CheckpointPolicy {
+    fn from_cfg(cfg: &ServiceConfig) -> Self {
+        CheckpointPolicy {
+            every: cfg.checkpoint_every,
+            restore_on_resume: cfg.restore_on_resume,
+            evict_after: cfg.evict_after,
+        }
+    }
+}
+
 impl Service {
     /// Start workers per the config, with a fresh checkpoint store.
+    /// When `checkpoint.dir` is configured, a durable [`FileStore`] is
+    /// opened there and every published checkpoint is written through
+    /// (but nothing is loaded back — cold starts are fresh; use
+    /// [`Service::start_from_store`] to recover).
+    ///
+    /// Directory lifecycle is the operator's: a fresh start against a
+    /// directory holding an older run's checkpoints appends to that
+    /// history, and a later recovery picks the highest watermark per
+    /// stream across both. That is correct when stream sequence
+    /// numbers are globally consistent (the system's contract); to
+    /// deliberately abandon a history, point at a new directory or
+    /// clear the old one first.
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
-        Self::start_with_state(cfg, Arc::new(StateManager::new()))
+        let state_mgr = match &cfg.checkpoint_dir {
+            Some(dir) => {
+                let store = FileStore::open(dir, cfg.checkpoint_keep)?;
+                Arc::new(StateManager::with_store(Arc::new(store)))
+            }
+            None => Arc::new(StateManager::new()),
+        };
+        Self::start_with_state(cfg, state_mgr)
+    }
+
+    /// Cold-start from a durable checkpoint store — the full-process-
+    /// death recovery path: the newest *valid* checkpoint of every
+    /// stream in the store is loaded (corrupt/truncated tails are
+    /// skipped in favour of earlier records), then workers start
+    /// against the recovered [`StateManager`] with write-through to
+    /// the same store. Enable `checkpoint.restore` so resuming streams
+    /// actually adopt the recovered snapshots.
+    pub fn start_from_store(
+        cfg: ServiceConfig,
+        store: Arc<dyn CheckpointStore>,
+    ) -> Result<Service> {
+        let state_mgr = Arc::new(StateManager::with_store(store));
+        state_mgr.recover()?;
+        Self::start_with_state(cfg, state_mgr)
     }
 
     /// Start workers against an existing checkpoint store — the
@@ -189,8 +246,7 @@ impl Service {
                             res_tx,
                             metrics,
                             state_mgr,
-                            cfg.checkpoint_every,
-                            cfg.restore_on_resume,
+                            CheckpointPolicy::from_cfg(&cfg),
                         )
                     })
                     .map_err(|e| Error::io("spawn worker", e))?,
@@ -326,15 +382,51 @@ impl Service {
     }
 }
 
+/// Drop every stream idle for ≥ `evict_after` worker samples: engine
+/// state, in-memory checkpoint, durable checkpoints, and the worker's
+/// bookkeeping go together, so a re-appearing stream id starts fresh
+/// instead of resurrecting stale state. Scans once per `evict_after`
+/// ticks to keep the hot path O(1).
 #[allow(clippy::too_many_arguments)]
+fn evict_idle_streams(
+    engine: &mut dyn Engine,
+    state_mgr: &StateManager,
+    metrics: &ServiceMetrics,
+    evict_after: u64,
+    tick: u64,
+    last_seen: &mut HashMap<u64, u64>,
+    seen: &mut HashSet<u64>,
+    restored_at: &mut HashMap<u64, u64>,
+    inflight: &mut HashMap<(u64, u64), Instant>,
+) {
+    if evict_after == 0 || tick == 0 || tick % evict_after != 0 {
+        return;
+    }
+    let idle: Vec<u64> = last_seen
+        .iter()
+        .filter(|(_, &at)| tick - at >= evict_after)
+        .map(|(&sid, _)| sid)
+        .collect();
+    for sid in idle {
+        engine.evict(sid);
+        state_mgr.evict(sid);
+        seen.remove(&sid);
+        restored_at.remove(&sid);
+        last_seen.remove(&sid);
+        // The engine discarded the stream's in-flight verdicts; their
+        // latency records would otherwise leak forever.
+        inflight.retain(|(s, _), _| *s != sid);
+        metrics.stream_evictions.inc();
+    }
+}
+
 fn worker_loop(
     rx: Receiver<Job>,
     engine: &mut dyn Engine,
     res_tx: Sender<Vec<Classified>>,
     metrics: Arc<ServiceMetrics>,
     state_mgr: Arc<StateManager>,
-    checkpoint_every: u64,
-    restore_on_resume: bool,
+    policy: CheckpointPolicy,
 ) -> Result<()> {
     // submit-time of every in-flight sample, for latency accounting.
     let mut inflight: HashMap<(u64, u64), Instant> = HashMap::new();
@@ -346,6 +438,10 @@ fn worker_loop(
     // upstream that replays from the watermark *inclusively* stays
     // exactly-once instead of double-counting (or, worse, restarting).
     let mut restored_at: HashMap<u64, u64> = HashMap::new();
+    // Idle-stream eviction bookkeeping: samples processed by this
+    // worker, and the tick each stream last appeared at.
+    let mut tick: u64 = 0;
+    let mut last_seen: HashMap<u64, u64> = HashMap::new();
     // One burst send per engine call: metrics are batched too (counter
     // adds are cheap but the channel lock is not).
     let emit = |verdicts: Vec<EngineVerdict>,
@@ -392,10 +488,13 @@ fn worker_loop(
                    inflight: &mut HashMap<(u64, u64), Instant>,
                    seen: &mut HashSet<u64>,
                    restored_at: &mut HashMap<u64, u64>,
+                   tick: u64,
+                   last_seen: &mut HashMap<u64, u64>,
                    out: &mut Vec<EngineVerdict>|
      -> Result<()> {
         let (sid, seq) = (sample.stream_id, sample.seq);
-        if seen.insert(sid) && restore_on_resume && seq > 0 {
+        last_seen.insert(sid, tick);
+        if seen.insert(sid) && policy.restore_on_resume && seq > 0 {
             // First sample of a mid-stream resume: adopt the newest
             // checkpoint. The upstream replays at-least-once from the
             // watermark (inclusively or after it); either way the
@@ -417,7 +516,7 @@ fn worker_loop(
         }
         inflight.insert((sid, seq), t0);
         out.extend(engine.ingest(&sample)?);
-        if checkpoint_every > 0 && (seq + 1) % checkpoint_every == 0 {
+        if policy.every > 0 && (seq + 1) % policy.every == 0 {
             if let Some(snapshot) = engine.snapshot(sid) {
                 state_mgr.publish(StateCheckpoint {
                     stream_id: sid,
@@ -433,6 +532,7 @@ fn worker_loop(
         match job {
             Job::Sample(sample, t0) => {
                 let mut verdicts = Vec::new();
+                tick += 1;
                 process(
                     &mut *engine,
                     sample,
@@ -440,14 +540,28 @@ fn worker_loop(
                     &mut inflight,
                     &mut seen,
                     &mut restored_at,
+                    tick,
+                    &mut last_seen,
                     &mut verdicts,
                 )?;
+                evict_idle_streams(
+                    &mut *engine,
+                    &state_mgr,
+                    &metrics,
+                    policy.evict_after,
+                    tick,
+                    &mut last_seen,
+                    &mut seen,
+                    &mut restored_at,
+                    &mut inflight,
+                );
                 emit(verdicts, &mut inflight)?;
             }
             Job::Batch(samples, t0) => {
                 // Accumulate the whole burst's verdicts and emit once.
                 let mut all = Vec::with_capacity(samples.len());
                 for sample in samples {
+                    tick += 1;
                     process(
                         &mut *engine,
                         sample,
@@ -455,8 +569,21 @@ fn worker_loop(
                         &mut inflight,
                         &mut seen,
                         &mut restored_at,
+                        tick,
+                        &mut last_seen,
                         &mut all,
                     )?;
+                    evict_idle_streams(
+                        &mut *engine,
+                        &state_mgr,
+                        &metrics,
+                        policy.evict_after,
+                        tick,
+                        &mut last_seen,
+                        &mut seen,
+                        &mut restored_at,
+                        &mut inflight,
+                    );
                 }
                 emit(all, &mut inflight)?;
             }
@@ -634,6 +761,98 @@ mod tests {
     fn non_ensemble_service_has_no_ensemble_metrics() {
         let svc = Service::start(base_cfg(EngineKind::Software, 1)).unwrap();
         assert!(svc.ensemble_metrics().is_none());
+        svc.finish().unwrap();
+    }
+
+    #[test]
+    fn idle_streams_are_evicted_everywhere_and_restart_fresh() {
+        // Single worker so the eviction tick is deterministic. Stream 0
+        // goes idle while stream 1 keeps flowing; after `evict_after`
+        // idle ticks, stream 0's state must vanish from the engine, the
+        // StateManager AND the durable store — and its id re-appearing
+        // must start a fresh stream (k = 1), not resurrect stale state.
+        let store = Arc::new(crate::persist::MemoryStore::new());
+        let mut cfg = base_cfg(EngineKind::Software, 1);
+        cfg.checkpoint_every = 10;
+        cfg.restore_on_resume = true;
+        cfg.evict_after = 40;
+        let svc = Service::start_from_store(cfg, store.clone()).unwrap();
+        let mgr = svc.state_manager();
+        let metrics = svc.metrics();
+        for seq in 0..20u64 {
+            svc.submit(Sample { stream_id: 0, seq, values: vec![0.1, 0.2] })
+                .unwrap();
+        }
+        for seq in 0..100u64 {
+            svc.submit(Sample { stream_id: 1, seq, values: vec![0.3, 0.4] })
+                .unwrap();
+        }
+        // Stream 0 re-appears mid-sequence AFTER its eviction: with no
+        // checkpoint left to restore, it must restart at k = 1.
+        svc.submit(Sample { stream_id: 0, seq: 50, values: vec![0.1, 0.2] })
+            .unwrap();
+        let out = svc.finish().unwrap();
+        assert_eq!(metrics.stream_evictions.get(), 1);
+        assert!(mgr.latest(0).is_none(), "in-memory checkpoint evicted");
+        assert_eq!(store.records_for(0), 0, "durable checkpoints evicted");
+        assert!(mgr.latest(1).is_some(), "live stream untouched");
+        let reborn = out
+            .iter()
+            .find(|c| c.verdict.stream_id == 0 && c.verdict.seq == 50)
+            .expect("re-appearing stream classified");
+        assert_eq!(reborn.verdict.k, 1, "evicted stream must start fresh");
+    }
+
+    #[test]
+    fn eviction_disabled_by_default() {
+        let mut cfg = base_cfg(EngineKind::Software, 1);
+        cfg.checkpoint_every = 10;
+        let svc = Service::start(cfg).unwrap();
+        let mgr = svc.state_manager();
+        let metrics = svc.metrics();
+        for seq in 0..10u64 {
+            svc.submit(Sample { stream_id: 0, seq, values: vec![0.1, 0.2] })
+                .unwrap();
+        }
+        for seq in 0..500u64 {
+            svc.submit(Sample { stream_id: 1, seq, values: vec![0.3, 0.4] })
+                .unwrap();
+        }
+        svc.finish().unwrap();
+        assert_eq!(metrics.stream_evictions.get(), 0);
+        assert!(mgr.latest(0).is_some());
+    }
+
+    #[test]
+    fn start_from_store_recovers_checkpoints() {
+        let store = Arc::new(crate::persist::MemoryStore::new());
+        let mut cfg = base_cfg(EngineKind::Software, 2);
+        cfg.checkpoint_every = 10;
+        cfg.restore_on_resume = true;
+        // Incarnation 1 publishes durably, then is dropped entirely.
+        {
+            let svc =
+                Service::start_from_store(cfg.clone(), store.clone())
+                    .unwrap();
+            for seq in 0..20u64 {
+                for sid in 0..3u64 {
+                    svc.submit(Sample {
+                        stream_id: sid,
+                        seq,
+                        values: vec![0.2, 0.8],
+                    })
+                    .unwrap();
+                }
+            }
+            svc.abort().unwrap();
+        }
+        // Incarnation 2 recovers all three streams from the store.
+        let svc = Service::start_from_store(cfg, store).unwrap();
+        let mgr = svc.state_manager();
+        assert_eq!(mgr.len(), 3);
+        for sid in 0..3u64 {
+            assert_eq!(mgr.latest(sid).unwrap().seq, 19);
+        }
         svc.finish().unwrap();
     }
 

@@ -1,9 +1,12 @@
 //! Per-stream state checkpointing (recovery / migration support).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::engine::Snapshot;
+use crate::persist::CheckpointStore;
+use crate::{Error, Result};
 
 /// One checkpoint of a stream's complete detector state — whatever the
 /// backing engine is (software counters, RTL register file, XLA carry,
@@ -24,9 +27,34 @@ pub struct StateCheckpoint {
 /// new worker restores the newest checkpoint and re-requests samples
 /// after `seq` from the source (at-least-once upstream, exactly-once
 /// detector state).
-#[derive(Debug, Default)]
+///
+/// With an attached durable [`CheckpointStore`] every accepted publish
+/// is also written through (and every eviction propagated), so a
+/// full-process death can be recovered by opening the same store and
+/// calling [`StateManager::recover`] — that is what
+/// `Service::start_from_store` does.
+#[derive(Default)]
 pub struct StateManager {
     store: Mutex<HashMap<u64, StateCheckpoint>>,
+    /// Optional durable write-through backend.
+    durable: Option<Arc<dyn CheckpointStore>>,
+    /// Durable writes/evictions that failed (publishing stays
+    /// non-blocking for the hot path; failures are observable here
+    /// instead of wedging the worker).
+    persist_errors: AtomicU64,
+}
+
+impl std::fmt::Debug for StateManager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StateManager")
+            .field("streams", &self.len())
+            .field(
+                "durable",
+                &self.durable.as_ref().map(|s| s.name()),
+            )
+            .field("persist_errors", &self.persist_errors())
+            .finish()
+    }
 }
 
 impl StateManager {
@@ -34,13 +62,45 @@ impl StateManager {
         Self::default()
     }
 
+    /// A manager that writes every accepted checkpoint through to a
+    /// durable backend.
+    pub fn with_store(durable: Arc<dyn CheckpointStore>) -> Self {
+        StateManager { durable: Some(durable), ..Self::default() }
+    }
+
+    /// The attached durable backend, if any.
+    pub fn durable_store(&self) -> Option<Arc<dyn CheckpointStore>> {
+        self.durable.clone()
+    }
+
+    /// Durable writes/evictions that failed so far.
+    pub fn persist_errors(&self) -> u64 {
+        self.persist_errors.load(Ordering::Relaxed)
+    }
+
     /// Publish (overwrites an older checkpoint for the stream).
     pub fn publish(&self, cp: StateCheckpoint) {
-        let mut store = self.store.lock().unwrap();
-        match store.get(&cp.stream_id) {
-            Some(prev) if prev.seq >= cp.seq => {} // stale, ignore
-            _ => {
-                store.insert(cp.stream_id, cp);
+        // Clone only when a durable backend will actually consume it —
+        // ensemble snapshots (member states, window buffers, open
+        // quorums) are not cheap to deep-copy on every interval.
+        let to_persist = self.durable.is_some().then(|| cp.clone());
+        let accepted = {
+            let mut store = self.store.lock().unwrap();
+            match store.get(&cp.stream_id) {
+                Some(prev) if prev.seq >= cp.seq => false, // stale, ignore
+                _ => {
+                    store.insert(cp.stream_id, cp);
+                    true
+                }
+            }
+        };
+        // Durable write-through happens OUTSIDE the map lock: file I/O
+        // must not serialize every other worker's publishes.
+        if let (true, Some(cp), Some(durable)) =
+            (accepted, to_persist, &self.durable)
+        {
+            if durable.put(&cp).is_err() {
+                self.persist_errors.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -50,9 +110,39 @@ impl StateManager {
         self.store.lock().unwrap().get(&stream_id).cloned()
     }
 
-    /// Remove a finished stream's checkpoint.
+    /// Remove a finished stream's checkpoint (from the durable backend
+    /// too, when one is attached).
     pub fn evict(&self, stream_id: u64) -> Option<StateCheckpoint> {
-        self.store.lock().unwrap().remove(&stream_id)
+        let removed = self.store.lock().unwrap().remove(&stream_id);
+        if let Some(durable) = &self.durable {
+            if durable.evict(stream_id).is_err() {
+                self.persist_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        removed
+    }
+
+    /// Cold-start recovery: load the newest *valid* checkpoint of every
+    /// stream in the durable backend into the in-memory map, skipping
+    /// corrupt/truncated tails (the backend falls back to the newest
+    /// record that still decodes). Returns the number of streams
+    /// recovered. Errors only on store-level failures (unreadable
+    /// directory), never on individual corrupt records.
+    pub fn recover(&self) -> Result<usize> {
+        let durable = self.durable.as_ref().ok_or_else(|| {
+            Error::Persist(
+                "recover() needs a durable store (StateManager::with_store)"
+                    .into(),
+            )
+        })?;
+        let mut recovered = 0;
+        for stream_id in durable.streams()? {
+            if let Some(cp) = durable.latest(stream_id)? {
+                self.store.lock().unwrap().insert(stream_id, cp);
+                recovered += 1;
+            }
+        }
+        Ok(recovered)
     }
 
     /// Number of checkpointed streams.
@@ -153,5 +243,52 @@ mod tests {
         assert!(mgr.evict(3).is_some());
         assert!(mgr.is_empty());
         assert!(mgr.latest(3).is_none());
+    }
+
+    #[test]
+    fn publish_writes_through_to_the_durable_store() {
+        let store = Arc::new(crate::persist::MemoryStore::new());
+        let mgr = StateManager::with_store(store.clone());
+        mgr.publish(checkpoint(1, 9));
+        mgr.publish(checkpoint(1, 19));
+        mgr.publish(checkpoint(1, 4)); // stale — must NOT reach the store
+        assert_eq!(store.records_for(1), 2);
+        assert_eq!(store.latest(1).unwrap().unwrap().seq, 19);
+        assert_eq!(mgr.persist_errors(), 0);
+    }
+
+    #[test]
+    fn evict_propagates_to_the_durable_store() {
+        let store = Arc::new(crate::persist::MemoryStore::new());
+        let mgr = StateManager::with_store(store.clone());
+        mgr.publish(checkpoint(7, 5));
+        assert!(mgr.evict(7).is_some());
+        assert!(store.latest(7).unwrap().is_none());
+        assert!(store.streams().unwrap().is_empty());
+    }
+
+    #[test]
+    fn recover_loads_the_newest_checkpoint_per_stream() {
+        let store = Arc::new(crate::persist::MemoryStore::new());
+        {
+            // "First process": publishes, then dies (dropped).
+            let mgr = StateManager::with_store(store.clone());
+            mgr.publish(checkpoint(1, 19));
+            mgr.publish(checkpoint(1, 39));
+            mgr.publish(checkpoint(2, 9));
+        }
+        // "Second process": empty manager over the same store.
+        let mgr = StateManager::with_store(store);
+        assert!(mgr.is_empty());
+        assert_eq!(mgr.recover().unwrap(), 2);
+        assert_eq!(mgr.latest(1).unwrap().seq, 39);
+        assert_eq!(mgr.latest(2).unwrap().seq, 9);
+        // The recovered snapshot is byte-for-byte the published one.
+        assert_eq!(mgr.latest(1).unwrap(), checkpoint(1, 39));
+    }
+
+    #[test]
+    fn recover_without_a_store_is_an_error() {
+        assert!(StateManager::new().recover().is_err());
     }
 }

@@ -124,6 +124,13 @@ pub trait Engine {
     /// stream; samples with `seq` greater than the snapshot's watermark
     /// are then re-fed by the at-least-once upstream.
     fn restore(&mut self, stream_id: u64, snapshot: Snapshot) -> Result<()>;
+
+    /// Drop ALL state for one finished stream (the coordinator's
+    /// eviction policy). A no-op for unknown streams. Any in-flight
+    /// verdicts for the stream are discarded with it — callers evict
+    /// only streams they consider finished. If the same stream id
+    /// reappears later it starts fresh at `k = 1`.
+    fn evict(&mut self, stream_id: u64);
 }
 
 #[cfg(test)]

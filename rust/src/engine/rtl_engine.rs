@@ -94,6 +94,12 @@ impl Engine for RtlEngine {
         self.streams.insert(stream_id, rtl);
         Ok(())
     }
+
+    fn evict(&mut self, stream_id: u64) {
+        // The pipeline goes with the stream — its ≤ LATENCY in-flight
+        // verdicts are dropped, as documented on `Engine::evict`.
+        self.streams.remove(&stream_id);
+    }
 }
 
 #[cfg(test)]

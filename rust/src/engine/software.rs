@@ -84,6 +84,10 @@ impl Engine for SoftwareEngine {
         det.restore(snap);
         Ok(())
     }
+
+    fn evict(&mut self, stream_id: u64) {
+        self.streams.remove(&stream_id);
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +152,27 @@ mod tests {
             a.detector(1).unwrap().n_outliers(),
             b.detector(1).unwrap().n_outliers()
         );
+    }
+
+    #[test]
+    fn evict_drops_the_stream_and_restarts_fresh() {
+        let mut eng = SoftwareEngine::new(2, 3.0);
+        let samples = interleaved(2, 30, 2, 19);
+        for s in &samples {
+            eng.ingest(s).unwrap();
+        }
+        assert_eq!(eng.active_streams(), 2);
+        eng.evict(0);
+        eng.evict(99); // unknown stream: no-op
+        assert_eq!(eng.active_streams(), 1);
+        assert!(eng.snapshot(0).is_none());
+        // Re-appearing id starts a fresh stream.
+        let v = eng
+            .ingest(&Sample { stream_id: 0, seq: 50, values: vec![0.1, 0.2] })
+            .unwrap();
+        assert_eq!(v[0].k, 1);
+        // The surviving stream kept its state.
+        assert!(eng.detector(1).unwrap().k() >= 30);
     }
 
     #[test]

@@ -341,6 +341,12 @@ impl Engine for XlaEngine {
         );
         Ok(())
     }
+
+    fn evict(&mut self, stream_id: u64) {
+        // Unexecuted chunks leave the ready queue with the stream.
+        self.streams.remove(&stream_id);
+        self.ready.retain(|&id| id != stream_id);
+    }
 }
 
 #[cfg(test)]

@@ -217,6 +217,19 @@ impl EnsembleMember {
         }
     }
 
+    /// Drop this member's state for one finished stream.
+    pub fn evict(&mut self, stream_id: u64) {
+        match &mut self.imp {
+            MemberImpl::Engine(eng) => eng.evict(stream_id),
+            MemberImpl::MSigma(streams) => {
+                streams.remove(&stream_id);
+            }
+            MemberImpl::ZScore(streams) => {
+                streams.remove(&stream_id);
+            }
+        }
+    }
+
     fn account(&mut self, t0: Instant, votes: &[MemberVote]) {
         self.stats.busy_ns += t0.elapsed().as_nanos() as u64;
         self.stats.votes += votes.len() as u64;

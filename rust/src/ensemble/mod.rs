@@ -414,6 +414,16 @@ impl Engine for EnsembleEngine {
         self.seen.insert(stream_id);
         Ok(())
     }
+
+    fn evict(&mut self, stream_id: u64) {
+        for member in &mut self.members {
+            member.evict(stream_id);
+        }
+        self.combiner.evict_stream(stream_id);
+        // Open quorums die with the stream (they could never complete).
+        self.pending.retain(|(sid, _), _| *sid != stream_id);
+        self.seen.remove(&stream_id);
+    }
 }
 
 #[cfg(test)]
@@ -478,6 +488,45 @@ mod tests {
             assert_eq!(v.seq, *seq);
             assert_eq!(v.k, seq + 1);
         }
+    }
+
+    #[test]
+    fn evict_drops_members_weights_and_quorums() {
+        use crate::stream::Sample;
+        // Adaptive combiner + mixed latency: stream 0 accumulates
+        // learned weights, member state AND an open quorum (the RTL
+        // member is 2 samples behind). Eviction must clear all three,
+        // and a re-appearing stream 0 must start fresh.
+        let mut ens = ensemble("teda+rtl:m=1.5", CombinerKind::Adaptive);
+        let samples = interleaved(2, 30, 2, 41);
+        for s in &samples {
+            ens.ingest(s).unwrap();
+        }
+        assert_eq!(ens.active_streams(), 2);
+        assert!(ens
+            .snapshot(0)
+            .is_some_and(|s| matches!(s, Snapshot::Ensemble(_))));
+        ens.evict(0);
+        assert_eq!(ens.active_streams(), 1);
+        assert!(ens.snapshot(0).is_none(), "evicted stream has no state");
+        // Learned per-stream weights reset to the spec weights.
+        assert_eq!(ens.stream_weights(0), ens.combiner_weights());
+        // Re-appearing stream id starts fresh: after one new sample,
+        // the software member's recurrence is back at k = 1 instead of
+        // resuming the evicted detector.
+        ens.ingest(&Sample { stream_id: 0, seq: 60, values: vec![0.1, 0.2] })
+            .unwrap();
+        let Some(Snapshot::Ensemble(snap)) = ens.snapshot(0) else {
+            panic!("re-appearing stream has ensemble state again")
+        };
+        let MemberSnapshot::Engine(Snapshot::Software(det)) =
+            &snap.members[0]
+        else {
+            panic!("first member is software TEDA")
+        };
+        assert_eq!(det.state.k, 1, "evicted stream must start fresh");
+        // The surviving stream was untouched by the eviction.
+        assert!(ens.snapshot(1).is_some());
     }
 
     #[test]

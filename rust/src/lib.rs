@@ -20,6 +20,9 @@
 //!   artifact (L1/L2 live in `python/compile/`).
 //! - [`stream`] / [`coordinator`] — the L3 streaming service: sources,
 //!   backpressure, routing, dynamic batching, per-stream state.
+//! - [`persist`] — durable checkpoint store: versioned binary codec +
+//!   atomic-rename file backend, so failover survives full-process
+//!   death (`Service::start_from_store`).
 //! - [`baselines`] — m-sigma and sliding z-score detectors for comparison.
 //! - [`metrics`], [`config`], [`util`] — ops surface and support kit.
 //!
@@ -44,6 +47,7 @@ pub mod damadics;
 pub mod engine;
 pub mod ensemble;
 pub mod metrics;
+pub mod persist;
 pub mod rtl;
 pub mod runtime;
 pub mod stream;
@@ -70,6 +74,9 @@ pub enum Error {
     Stream(String),
     /// RTL netlist construction or simulation errors.
     Rtl(String),
+    /// Checkpoint persistence: corrupt/truncated records, foreign
+    /// store directories, unsupported format versions.
+    Persist(String),
     /// I/O with context.
     Io {
         context: String,
@@ -85,6 +92,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact: {m}"),
             Error::Stream(m) => write!(f, "stream: {m}"),
             Error::Rtl(m) => write!(f, "rtl: {m}"),
+            Error::Persist(m) => write!(f, "persist: {m}"),
             Error::Io { context, source } => {
                 write!(f, "io: {context}: {source}")
             }

@@ -5,6 +5,7 @@
 //! teda-fpga serve    [--config FILE] [--engine software|rtl|xla|ensemble]
 //!                    [--workers N] [--streams S] [--samples K] [--seed X]
 //!                    [--checkpoint-interval N] [--restore]
+//!                    [--checkpoint-dir DIR] [--recover] [--evict-after N]
 //! teda-fpga detect   [--item 1..7] [--m 3.0] [--engine ...] [--csv OUT]
 //! teda-fpga synth    [--n-features N] [--netlist]
 //! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
@@ -74,6 +75,7 @@ USAGE:
                      [--workers N] [--streams S] [--samples K] [--seed X]
                      [--members LIST] [--combiner KIND]
                      [--checkpoint-interval N] [--restore]
+                     [--checkpoint-dir DIR] [--recover] [--evict-after N]
   teda-fpga detect   [--item 1..7] [--m 3.0]
                      [--engine software|rtl|ensemble] [--csv OUT]
                      [--members LIST] [--combiner KIND]
@@ -85,7 +87,10 @@ USAGE:
 
   LIST is `+`-separated member specs, e.g. 'teda+teda:m=2.5+zscore:m=3,w=64'
   (kinds: teda|rtl|msigma|zscore; params: m=, w=, weight=).
-  KIND is majority|weighted-score|any-of|all-of|adaptive.";
+  KIND is majority|weighted-score|any-of|all-of|adaptive.
+  --checkpoint-dir persists checkpoints durably (atomic-rename files);
+  --recover cold-starts from that dir after a process death (implies
+  --restore); --evict-after drops idle streams after N samples.";
 
 type CliError = Box<dyn std::error::Error>;
 
@@ -206,6 +211,15 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     if flags.has("restore") {
         cfg.restore_on_resume = true;
     }
+    if let Some(dir) = flags.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.into());
+    }
+    cfg.evict_after = flags.parse_as("evict-after", cfg.evict_after)?;
+    if flags.has("recover") {
+        // Recovered checkpoints are useless unless resuming streams
+        // adopt them.
+        cfg.restore_on_resume = true;
+    }
     let streams: u64 = flags.parse_as("streams", 16u64)?;
     let samples: usize = flags.parse_as("samples", 10_000usize)?;
 
@@ -214,7 +228,26 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         cfg.engine, cfg.workers
     );
     let t0 = std::time::Instant::now();
-    let svc = Service::start(cfg.clone())?;
+    let svc = if flags.has("recover") {
+        let dir = cfg.checkpoint_dir.clone().ok_or(
+            "--recover needs --checkpoint-dir (or checkpoint.dir in the \
+             config file)",
+        )?;
+        let store = teda_fpga::persist::FileStore::open(
+            &dir,
+            cfg.checkpoint_keep,
+        )?;
+        let svc =
+            Service::start_from_store(cfg.clone(), std::sync::Arc::new(store))?;
+        println!(
+            "recovered {} stream checkpoints from {}",
+            svc.state_manager().len(),
+            dir.display()
+        );
+        svc
+    } else {
+        Service::start(cfg.clone())?
+    };
     let mut sources: Vec<SyntheticSource> = (0..streams)
         .map(|sid| {
             SyntheticSource::new(sid, cfg.n_features, samples, cfg.seed)
@@ -244,11 +277,22 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     }
     if cfg.checkpoint_every > 0 {
         println!(
-            "checkpoints: {} streams (interval {} samples, restore {})",
+            "checkpoints: {} streams (interval {} samples, restore {}, \
+             durable {})",
             state_mgr.len(),
             cfg.checkpoint_every,
-            if cfg.restore_on_resume { "on" } else { "off" }
+            if cfg.restore_on_resume { "on" } else { "off" },
+            match &cfg.checkpoint_dir {
+                Some(dir) => dir.display().to_string(),
+                None => "off".into(),
+            }
         );
+        if state_mgr.persist_errors() > 0 {
+            eprintln!(
+                "warning: {} checkpoint persist errors",
+                state_mgr.persist_errors()
+            );
+        }
     }
     println!(
         "processed {} samples in {:.3}s — {:.0} samples/s end-to-end",

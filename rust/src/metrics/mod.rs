@@ -140,6 +140,9 @@ pub struct ServiceMetrics {
     /// Re-fed samples dropped because a restored snapshot already
     /// covered them (the at-least-once replay window).
     pub replay_skipped: Counter,
+    /// Streams evicted by the idle-stream policy (engine state and
+    /// checkpoints — in-memory and durable — dropped together).
+    pub stream_evictions: Counter,
     /// Per-sample end-to-end latency (submit → verdict).
     pub latency: Histogram,
     /// Per-chunk execution time (XLA engine).
@@ -162,6 +165,7 @@ impl ServiceMetrics {
              backpressure      {}\n\
              stream_restores   {}\n\
              replay_skipped    {}\n\
+             stream_evictions  {}\n\
              latency           {}\n\
              chunk_time        {}\n",
             self.samples_in.get(),
@@ -172,6 +176,7 @@ impl ServiceMetrics {
             self.backpressure_events.get(),
             self.stream_restores.get(),
             self.replay_skipped.get(),
+            self.stream_evictions.get(),
             self.latency.summary(),
             self.chunk_time.summary(),
         )

@@ -1,0 +1,297 @@
+//! Atomic-rename file backend for the checkpoint store.
+//!
+//! On-disk layout:
+//!
+//! ```text
+//! <root>/MANIFEST                  "teda-checkpoint-store v1"
+//! <root>/<stream_id>/<seq>.ckpt    one codec record per checkpoint
+//! ```
+//!
+//! `<seq>` is zero-padded to 20 digits so lexicographic directory
+//! order equals numeric seq order. Writes go to a dot-prefixed temp
+//! file in the same directory and are published with `rename(2)` —
+//! atomic on POSIX — so a crash mid-write leaves either the previous
+//! checkpoint set intact or a stray temp file that is ignored (and
+//! reclaimed on the next write), never a half-written `.ckpt`.
+//! Retention keeps the newest K records per stream.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::StateCheckpoint;
+use crate::persist::{codec, CheckpointStore};
+use crate::{Error, Result};
+
+/// First line of the `MANIFEST` tag file.
+const MANIFEST_TAG: &str = "teda-checkpoint-store v1";
+
+/// Durable [`CheckpointStore`] over a directory tree.
+#[derive(Debug)]
+pub struct FileStore {
+    root: PathBuf,
+    /// Newest records kept per stream (≥ 1).
+    keep: usize,
+}
+
+impl FileStore {
+    /// Open (creating if needed) a checkpoint store rooted at `root`,
+    /// retaining the newest `keep` records per stream.
+    ///
+    /// Refuses to open a directory whose `MANIFEST` identifies a
+    /// different format — overwriting an unrelated directory's files
+    /// would be worse than failing.
+    pub fn open(root: impl Into<PathBuf>, keep: usize) -> Result<FileStore> {
+        let root = root.into();
+        fs::create_dir_all(&root)
+            .map_err(|e| Error::io(format!("creating {}", root.display()), e))?;
+        let manifest = root.join("MANIFEST");
+        match fs::read_to_string(&manifest) {
+            Ok(text) => {
+                if text.lines().next() != Some(MANIFEST_TAG) {
+                    return Err(Error::Persist(format!(
+                        "{} is not a teda checkpoint store (MANIFEST says \
+                         {:?})",
+                        root.display(),
+                        text.lines().next().unwrap_or("")
+                    )));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                write_atomic(
+                    &root,
+                    &manifest,
+                    format!("{MANIFEST_TAG}\n").as_bytes(),
+                )?;
+            }
+            Err(e) => {
+                return Err(Error::io(
+                    format!("reading {}", manifest.display()),
+                    e,
+                ))
+            }
+        }
+        Ok(FileStore { root, keep: keep.max(1) })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn stream_dir(&self, stream_id: u64) -> PathBuf {
+        self.root.join(stream_id.to_string())
+    }
+
+    /// `(seq, path)` of every `.ckpt` in a stream dir, ascending seq.
+    /// Files that do not parse as `<u64>.ckpt` are ignored (temp files,
+    /// foreign debris).
+    fn records(&self, stream_id: u64) -> Result<Vec<(u64, PathBuf)>> {
+        let dir = self.stream_dir(stream_id);
+        let entries = match fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Vec::new())
+            }
+            Err(e) => {
+                return Err(Error::io(
+                    format!("listing {}", dir.display()),
+                    e,
+                ))
+            }
+        };
+        let mut out = Vec::new();
+        for entry in entries {
+            let entry = entry
+                .map_err(|e| Error::io(format!("listing {}", dir.display()), e))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".ckpt") else { continue };
+            let Ok(seq) = stem.parse::<u64>() else { continue };
+            out.push((seq, entry.path()));
+        }
+        out.sort_unstable_by_key(|(seq, _)| *seq);
+        Ok(out)
+    }
+}
+
+impl CheckpointStore for FileStore {
+    fn name(&self) -> &'static str {
+        "file"
+    }
+
+    fn put(&self, cp: &StateCheckpoint) -> Result<()> {
+        let dir = self.stream_dir(cp.stream_id);
+        fs::create_dir_all(&dir)
+            .map_err(|e| Error::io(format!("creating {}", dir.display()), e))?;
+        let path = dir.join(format!("{:020}.ckpt", cp.seq));
+        write_atomic(&dir, &path, &codec::encode(cp))?;
+        // Retention: drop the oldest records beyond keep-last-K.
+        let records = self.records(cp.stream_id)?;
+        if records.len() > self.keep {
+            for (_, path) in &records[..records.len() - self.keep] {
+                // Best-effort: a failed unlink costs disk, not safety.
+                let _ = fs::remove_file(path);
+            }
+        }
+        Ok(())
+    }
+
+    fn latest(&self, stream_id: u64) -> Result<Option<StateCheckpoint>> {
+        for (seq, path) in self.records(stream_id)?.iter().rev() {
+            let Ok(bytes) = fs::read(path) else { continue };
+            match codec::decode(&bytes) {
+                // A record must also agree with its own location — a
+                // file copied under the wrong name is corruption too.
+                Ok(cp) if cp.stream_id == stream_id && cp.seq == *seq => {
+                    return Ok(Some(cp));
+                }
+                _ => continue, // corrupt/truncated → try the next-newest
+            }
+        }
+        Ok(None)
+    }
+
+    fn streams(&self) -> Result<Vec<u64>> {
+        let entries = fs::read_dir(&self.root).map_err(|e| {
+            Error::io(format!("listing {}", self.root.display()), e)
+        })?;
+        let mut ids = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| {
+                Error::io(format!("listing {}", self.root.display()), e)
+            })?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Ok(id) = name.parse::<u64>() {
+                if entry.path().is_dir() {
+                    ids.push(id);
+                }
+            }
+        }
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    fn evict(&self, stream_id: u64) -> Result<()> {
+        let dir = self.stream_dir(stream_id);
+        match fs::remove_dir_all(&dir) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(Error::io(format!("evicting {}", dir.display()), e))
+            }
+        }
+    }
+}
+
+/// Write `bytes` to `path` via a temp file in `dir` + atomic rename.
+fn write_atomic(dir: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    let file_name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| Error::Persist(format!("bad path {}", path.display())))?;
+    // Dot prefix keeps in-progress writes invisible to `records()`.
+    let tmp = dir.join(format!(".tmp-{file_name}"));
+    fs::write(&tmp, bytes)
+        .map_err(|e| Error::io(format!("writing {}", tmp.display()), e))?;
+    fs::rename(&tmp, path).map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        Error::io(
+            format!("publishing {} -> {}", tmp.display(), path.display()),
+            e,
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Snapshot;
+    use crate::teda::TedaDetector;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        crate::util::unique_temp_dir(&format!("filestore-{tag}"))
+    }
+
+    fn cp(sid: u64, seq: u64) -> StateCheckpoint {
+        let mut det = TedaDetector::new(2, 3.0);
+        for i in 0..=seq {
+            det.step(&[i as f64 * 0.1, 0.4]);
+        }
+        StateCheckpoint {
+            stream_id: sid,
+            seq,
+            snapshot: Snapshot::Software(det.snapshot()),
+        }
+    }
+
+    #[test]
+    fn put_latest_roundtrip_across_reopen() {
+        let root = tmp_root("roundtrip");
+        {
+            let store = FileStore::open(&root, 4).unwrap();
+            store.put(&cp(3, 19)).unwrap();
+            store.put(&cp(3, 39)).unwrap();
+            store.put(&cp(8, 9)).unwrap();
+        }
+        // "Process death": a brand-new store handle over the same dir.
+        let store = FileStore::open(&root, 4).unwrap();
+        assert_eq!(store.streams().unwrap(), vec![3, 8]);
+        assert_eq!(store.latest(3).unwrap().unwrap(), cp(3, 39));
+        assert_eq!(store.latest(8).unwrap().unwrap().seq, 9);
+        assert!(store.latest(99).unwrap().is_none());
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn retention_keeps_newest_k() {
+        let root = tmp_root("retention");
+        let store = FileStore::open(&root, 2).unwrap();
+        for seq in [9, 19, 29, 39] {
+            store.put(&cp(1, seq)).unwrap();
+        }
+        let files = store.records(1).unwrap();
+        assert_eq!(
+            files.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+            vec![29, 39]
+        );
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn evict_removes_the_stream_dir() {
+        let root = tmp_root("evict");
+        let store = FileStore::open(&root, 4).unwrap();
+        store.put(&cp(1, 5)).unwrap();
+        store.evict(1).unwrap();
+        assert!(store.latest(1).unwrap().is_none());
+        assert!(store.streams().unwrap().is_empty());
+        store.evict(1).unwrap(); // idempotent
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn foreign_manifest_is_refused() {
+        let root = tmp_root("foreign");
+        fs::create_dir_all(&root).unwrap();
+        fs::write(root.join("MANIFEST"), "something else entirely\n")
+            .unwrap();
+        assert!(FileStore::open(&root, 4).is_err());
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn stray_temp_files_are_invisible() {
+        let root = tmp_root("stray");
+        let store = FileStore::open(&root, 4).unwrap();
+        store.put(&cp(1, 9)).unwrap();
+        // Simulate a crash mid-write: a temp file that never renamed.
+        fs::write(
+            store.stream_dir(1).join(".tmp-00000000000000000019.ckpt"),
+            b"half-written",
+        )
+        .unwrap();
+        assert_eq!(store.latest(1).unwrap().unwrap().seq, 9);
+        fs::remove_dir_all(&root).unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Durable checkpoint store — failover that survives full-process death.
+//!
+//! PR 3's engine-agnostic [`Snapshot`](crate::engine::Snapshot) only
+//! survives *worker* death: the checkpoints live in the dying process's
+//! [`StateManager`](crate::coordinator::StateManager). This module adds
+//! the persistence layer underneath it:
+//!
+//! - [`codec`] — a dependency-free, versioned binary format (magic,
+//!   format version, per-record CRC-32) covering every snapshot
+//!   variant; corrupt input decodes to a clean error, never a panic or
+//!   a silently wrong state.
+//! - [`CheckpointStore`] — the pluggable storage surface.
+//! - [`MemoryStore`] — in-process backend (tests, single-process
+//!   deployments). Stores *encoded* records so it exercises exactly
+//!   the same codec path as the durable backend.
+//! - [`FileStore`] — atomic-rename file backend:
+//!   `dir/<stream_id>/<seq>.ckpt` plus a `MANIFEST` tag, write-temp-
+//!   then-rename so a crash mid-write never corrupts an existing
+//!   checkpoint, keep-last-K retention per stream.
+//!
+//! Recovery contract: [`CheckpointStore::latest`] returns the newest
+//! checkpoint that *decodes and verifies*; truncated or bit-flipped
+//! tails are skipped in favour of the newest still-valid predecessor.
+//! `StateManager::recover` builds on that to cold-start a whole
+//! service from disk (`Service::start_from_store`).
+
+pub mod codec;
+
+mod file;
+
+pub use file::FileStore;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::coordinator::StateCheckpoint;
+use crate::Result;
+
+/// Pluggable durable storage for per-stream checkpoints.
+///
+/// Implementations must be safe to share across worker threads (the
+/// coordinator publishes from every shard). `put` durability is
+/// backend-defined: the file backend is crash-atomic per record.
+pub trait CheckpointStore: Send + Sync {
+    /// Backend label for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Persist one checkpoint. Retention (keep-last-K per stream) is
+    /// applied by the backend; older records beyond K are dropped.
+    fn put(&self, cp: &StateCheckpoint) -> Result<()>;
+
+    /// Newest checkpoint for `stream_id` that decodes and verifies.
+    /// Corrupt/truncated records are skipped (newest first), falling
+    /// back to the newest still-valid earlier checkpoint; `None` when
+    /// no valid record exists.
+    fn latest(&self, stream_id: u64) -> Result<Option<StateCheckpoint>>;
+
+    /// Every stream id with at least one stored record (valid or not).
+    fn streams(&self) -> Result<Vec<u64>>;
+
+    /// Drop every checkpoint of one stream (eviction).
+    fn evict(&self, stream_id: u64) -> Result<()>;
+}
+
+/// In-memory [`CheckpointStore`]: encoded records in a per-stream ring.
+///
+/// Round-trips every checkpoint through [`codec`] on the way in *and*
+/// out, so tests running against `MemoryStore` exercise the same
+/// serialization path as production running against [`FileStore`].
+#[derive(Debug, Default)]
+pub struct MemoryStore {
+    /// Per stream: (seq, encoded record), ascending by insertion.
+    records: Mutex<HashMap<u64, Vec<(u64, Vec<u8>)>>>,
+    /// Keep-last-K per stream (0 = unlimited).
+    keep: usize,
+}
+
+impl MemoryStore {
+    /// Unlimited retention.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Keep only the newest `keep` records per stream.
+    pub fn with_keep(keep: usize) -> Self {
+        MemoryStore { records: Mutex::new(HashMap::new()), keep }
+    }
+
+    /// Number of records currently held for one stream.
+    pub fn records_for(&self, stream_id: u64) -> usize {
+        self.records
+            .lock()
+            .unwrap()
+            .get(&stream_id)
+            .map_or(0, Vec::len)
+    }
+}
+
+impl CheckpointStore for MemoryStore {
+    fn name(&self) -> &'static str {
+        "memory"
+    }
+
+    fn put(&self, cp: &StateCheckpoint) -> Result<()> {
+        let encoded = codec::encode(cp);
+        let mut records = self.records.lock().unwrap();
+        let ring = records.entry(cp.stream_id).or_default();
+        // Keep the ring sorted by seq so "newest" is the tail.
+        let at = ring.partition_point(|(seq, _)| *seq <= cp.seq);
+        ring.insert(at, (cp.seq, encoded));
+        if self.keep > 0 && ring.len() > self.keep {
+            let drop = ring.len() - self.keep;
+            ring.drain(0..drop);
+        }
+        Ok(())
+    }
+
+    fn latest(&self, stream_id: u64) -> Result<Option<StateCheckpoint>> {
+        let records = self.records.lock().unwrap();
+        let Some(ring) = records.get(&stream_id) else {
+            return Ok(None);
+        };
+        // Newest first; skip anything that fails to decode.
+        for (_, bytes) in ring.iter().rev() {
+            if let Ok(cp) = codec::decode(bytes) {
+                if cp.stream_id == stream_id {
+                    return Ok(Some(cp));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn streams(&self) -> Result<Vec<u64>> {
+        let mut ids: Vec<u64> =
+            self.records.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        Ok(ids)
+    }
+
+    fn evict(&self, stream_id: u64) -> Result<()> {
+        self.records.lock().unwrap().remove(&stream_id);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::Snapshot;
+    use crate::teda::TedaDetector;
+
+    fn cp(sid: u64, seq: u64) -> StateCheckpoint {
+        let mut det = TedaDetector::new(2, 3.0);
+        for i in 0..=seq {
+            det.step(&[i as f64 * 0.2, 0.5]);
+        }
+        StateCheckpoint {
+            stream_id: sid,
+            seq,
+            snapshot: Snapshot::Software(det.snapshot()),
+        }
+    }
+
+    #[test]
+    fn memory_store_roundtrip_and_latest() {
+        let store = MemoryStore::new();
+        store.put(&cp(1, 9)).unwrap();
+        store.put(&cp(1, 19)).unwrap();
+        store.put(&cp(2, 4)).unwrap();
+        assert_eq!(store.streams().unwrap(), vec![1, 2]);
+        let got = store.latest(1).unwrap().unwrap();
+        assert_eq!(got, cp(1, 19));
+        assert!(store.latest(99).unwrap().is_none());
+    }
+
+    #[test]
+    fn memory_store_keeps_last_k() {
+        let store = MemoryStore::with_keep(2);
+        for seq in [9, 19, 29, 39] {
+            store.put(&cp(1, seq)).unwrap();
+        }
+        assert_eq!(store.records_for(1), 2);
+        assert_eq!(store.latest(1).unwrap().unwrap().seq, 39);
+    }
+
+    #[test]
+    fn memory_store_evicts() {
+        let store = MemoryStore::new();
+        store.put(&cp(5, 0)).unwrap();
+        store.evict(5).unwrap();
+        assert!(store.latest(5).unwrap().is_none());
+        assert!(store.streams().unwrap().is_empty());
+    }
+
+    #[test]
+    fn out_of_order_put_still_returns_newest() {
+        let store = MemoryStore::new();
+        store.put(&cp(1, 39)).unwrap();
+        store.put(&cp(1, 19)).unwrap(); // late arrival of an older record
+        assert_eq!(store.latest(1).unwrap().unwrap().seq, 39);
+    }
+}

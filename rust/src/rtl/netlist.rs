@@ -78,6 +78,30 @@ pub struct RegFile {
     cycles: u64,
 }
 
+impl RegFile {
+    /// Rebuild a register file from its raw parts (the persistence
+    /// codec's decode path). Shape validation happens when the file is
+    /// loaded into a netlist ([`Netlist::load_state`]).
+    pub fn from_parts(regs: Vec<f32>, counter: u64, cycles: u64) -> Self {
+        RegFile { regs, counter, cycles }
+    }
+
+    /// Latched register values, in component order.
+    pub fn regs(&self) -> &[f32] {
+        &self.regs
+    }
+
+    /// Sample counter (pre-increment view).
+    pub fn counter(&self) -> u64 {
+        self.counter
+    }
+
+    /// Cycles simulated when the state was captured.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
 /// A complete netlist plus simulation state.
 #[derive(Debug, Clone)]
 pub struct Netlist {

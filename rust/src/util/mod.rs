@@ -8,3 +8,18 @@
 pub mod benchkit;
 pub mod prng;
 pub mod propkit;
+
+/// A unique, not-yet-created directory under the system temp dir —
+/// shared by the persistence tests and benches so the uniqueness
+/// scheme (tag + pid + wall-clock nanos) lives in exactly one place.
+/// The caller owns the directory's lifecycle (creation and cleanup).
+pub fn unique_temp_dir(tag: &str) -> std::path::PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .expect("system clock before 1970")
+        .as_nanos();
+    std::env::temp_dir().join(format!(
+        "teda-{tag}-{}-{nanos}",
+        std::process::id()
+    ))
+}

@@ -7,12 +7,15 @@
 //! fusion quorums) and adaptive per-stream weights.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 use teda_fpga::config::{
     CombinerKind, EngineKind, EnsembleConfig, ServiceConfig,
 };
 use teda_fpga::coordinator::Service;
 use teda_fpga::engine::EngineVerdict;
+use teda_fpga::persist::FileStore;
 use teda_fpga::stream::Sample;
 use teda_fpga::util::prng::SplitMix64;
 
@@ -216,6 +219,127 @@ fn inclusive_replay_from_the_watermark_stays_exactly_once() {
         assert_eq!((a.k, a.outlier), (b.k, b.outlier), "{key:?}");
         assert_eq!(a.zeta.to_bits(), b.zeta.to_bits(), "{key:?}");
     }
+}
+
+// ------------------------------------------------ full-process death
+
+fn tmp_ckpt_dir(tag: &str) -> PathBuf {
+    teda_fpga::util::unique_temp_dir(&format!("failover-{tag}"))
+}
+
+/// Like [`run_with_failover`], but NOTHING survives in memory between
+/// the incarnations: incarnation 1 writes checkpoints through to a
+/// durable [`FileStore`], dies via `abort()`, and every in-process
+/// handle (service, `StateManager`, store) is dropped. Incarnation 2 is
+/// built from the directory alone via [`Service::start_from_store`] —
+/// exactly what a restarted process with `--recover` does.
+fn run_with_process_death(
+    engine: EngineKind,
+) -> BTreeMap<(u64, u64), EngineVerdict> {
+    let dir = tmp_ckpt_dir(&engine.to_string());
+    let mut map = BTreeMap::new();
+    {
+        let mut c1 = cfg(engine);
+        c1.checkpoint_dir = Some(dir.clone());
+        let svc1 = Service::start(c1).unwrap();
+        submit_range(&svc1, 0, KILL_AT + 1);
+        index(svc1.abort().unwrap(), &mut map);
+        // Scope end: the dead process's entire memory is gone.
+    }
+    let mut c2 = cfg(engine);
+    c2.checkpoint_dir = Some(dir.clone());
+    let store = FileStore::open(&dir, c2.checkpoint_keep).unwrap();
+    let svc2 = Service::start_from_store(c2, Arc::new(store)).unwrap();
+    let state = svc2.state_manager();
+    // Cold-start recovery found every stream's on-disk watermark.
+    for sid in 0..STREAMS {
+        let cp = state.latest(sid).unwrap_or_else(|| {
+            panic!("stream {sid} not recovered from disk")
+        });
+        assert_eq!(cp.seq, RESUME_FROM - 1, "stream {sid} watermark");
+    }
+    submit_range(&svc2, RESUME_FROM, PER_STREAM);
+    index(svc2.finish().unwrap(), &mut map);
+    assert_eq!(state.persist_errors(), 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+    map
+}
+
+fn assert_process_death_invisible(engine: EngineKind) {
+    let full = run_uninterrupted(engine);
+    let merged = run_with_process_death(engine);
+    assert_eq!(
+        merged.len(),
+        full.len(),
+        "{engine}: process death lost or duplicated verdicts"
+    );
+    for (key, a) in &full {
+        let b = &merged[key];
+        assert_eq!(a.k, b.k, "{engine} {key:?}");
+        assert_eq!(a.outlier, b.outlier, "{engine} {key:?}");
+        assert_eq!(
+            a.zeta.to_bits(),
+            b.zeta.to_bits(),
+            "{engine} {key:?}: zeta {} vs {}",
+            a.zeta,
+            b.zeta
+        );
+        assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+    }
+}
+
+#[test]
+fn software_survives_full_process_death() {
+    assert_process_death_invisible(EngineKind::Software);
+}
+
+#[test]
+fn rtl_survives_full_process_death() {
+    assert_process_death_invisible(EngineKind::Rtl);
+}
+
+#[test]
+fn ensemble_survives_full_process_death() {
+    assert_process_death_invisible(EngineKind::Ensemble);
+}
+
+#[test]
+fn xla_survives_full_process_death() {
+    if !artifacts_present() {
+        eprintln!("artifacts missing — skipping XLA process-death e2e");
+        return;
+    }
+    assert_process_death_invisible(EngineKind::Xla);
+}
+
+#[test]
+fn without_recover_the_restarted_process_diverges() {
+    // Control experiment: the checkpoints ARE on disk, but a restarted
+    // process that does not cold-start from the store silently restarts
+    // every stream at k = 1 — the gap `--recover` exists to close.
+    let dir = tmp_ckpt_dir("control");
+    {
+        let mut c1 = cfg(EngineKind::Software);
+        c1.checkpoint_dir = Some(dir.clone());
+        let svc1 = Service::start(c1).unwrap();
+        submit_range(&svc1, 0, KILL_AT + 1);
+        svc1.abort().unwrap();
+    }
+    let mut c2 = cfg(EngineKind::Software);
+    c2.checkpoint_dir = Some(dir.clone());
+    c2.restore_on_resume = false;
+    let svc2 = Service::start(c2).unwrap(); // plain start: no recover
+    submit_range(&svc2, RESUME_FROM, PER_STREAM);
+    let out = svc2.finish().unwrap();
+    let resumed = out
+        .iter()
+        .find(|c| c.verdict.seq == RESUME_FROM)
+        .expect("resumed verdicts exist");
+    assert_eq!(
+        resumed.verdict.k, 1,
+        "un-recovered process restarted the stream"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

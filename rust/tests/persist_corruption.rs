@@ -1,0 +1,315 @@
+//! Corruption battery for the durable checkpoint store.
+//!
+//! The recovery contract under attack: PRNG-driven bit flips,
+//! truncations, zero-length files, and garbage records must ALWAYS
+//! yield a clean decode error — never a panic, never a silently wrong
+//! state — and `recover()` must fall back to the newest still-valid
+//! earlier checkpoint when the tail of a stream's history is damaged.
+
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use teda_fpga::config::{CombinerKind, EnsembleConfig};
+use teda_fpga::coordinator::{StateCheckpoint, StateManager};
+use teda_fpga::engine::{Engine, RtlEngine, SoftwareEngine};
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::persist::{codec, CheckpointStore, FileStore};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+
+fn tmp_root(tag: &str) -> PathBuf {
+    teda_fpga::util::unique_temp_dir(&format!("corruption-{tag}"))
+}
+
+/// A checkpoint with real (non-trivial) state from `engine`, fed
+/// `upto + 1` samples of stream `sid`.
+fn checkpoint_from(
+    engine: &mut dyn Engine,
+    sid: u64,
+    upto: u64,
+) -> StateCheckpoint {
+    let mut rng = SplitMix64::new(sid ^ 0xC0FFEE);
+    for seq in 0..=upto {
+        engine
+            .ingest(&Sample {
+                stream_id: sid,
+                seq,
+                values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+            })
+            .unwrap();
+    }
+    StateCheckpoint {
+        stream_id: sid,
+        seq: upto,
+        snapshot: engine.snapshot(sid).unwrap(),
+    }
+}
+
+/// Encoded records covering every snapshot family (XLA synthetically —
+/// the codec must not depend on AOT artifacts being present).
+fn sample_records() -> Vec<(&'static str, Vec<u8>)> {
+    let cfg = EnsembleConfig::from_member_list(
+        "teda:m=3+rtl:m=2+msigma:m=3+zscore:m=3,w=8",
+        CombinerKind::Adaptive,
+    )
+    .unwrap();
+    vec![
+        (
+            "software",
+            codec::encode(&checkpoint_from(
+                &mut SoftwareEngine::new(2, 3.0),
+                1,
+                40,
+            )),
+        ),
+        (
+            "rtl",
+            codec::encode(&checkpoint_from(
+                &mut RtlEngine::new(2, 3.0),
+                2,
+                40,
+            )),
+        ),
+        (
+            "ensemble",
+            codec::encode(&checkpoint_from(
+                &mut EnsembleEngine::new(&cfg, 2).unwrap(),
+                3,
+                40,
+            )),
+        ),
+        (
+            "xla",
+            codec::encode(&StateCheckpoint {
+                stream_id: 4,
+                seq: 40,
+                snapshot: teda_fpga::engine::Snapshot::Xla(
+                    teda_fpga::engine::XlaSnapshot {
+                        mu: vec![0.5, -0.5],
+                        var: 0.25,
+                        k: 32.0,
+                        m: 3.0,
+                        chunks: vec![
+                            (32, vec![0.1; 16]),
+                            (40, vec![0.2; 16]),
+                        ],
+                        buf: vec![1.5, -1.5],
+                        seq_base: 48,
+                    },
+                ),
+            }),
+        ),
+    ]
+}
+
+#[test]
+fn single_bit_flips_never_decode() {
+    // Any single-bit flip lands in the header (magic/version/flags/
+    // length/CRC — all strictly validated) or in the payload (CRC
+    // mismatch). Either way: a clean error. 256 PRNG-chosen positions
+    // per snapshot family.
+    let mut rng = SplitMix64::new(0xB17F11B5);
+    for (label, good) in sample_records() {
+        assert!(codec::decode(&good).is_ok(), "{label}: pristine record");
+        for trial in 0..256 {
+            let mut bad = good.clone();
+            let bit = rng.next_u64() as usize % (bad.len() * 8);
+            bad[bit / 8] ^= 1 << (bit % 8);
+            let res = codec::decode(&bad);
+            assert!(
+                res.is_err(),
+                "{label} trial {trial}: flipped bit {bit} still decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_bit_corruption_never_decodes_or_lies() {
+    // Heavier damage: 2..=64 flipped bits per trial. Decoding may in
+    // principle survive only if the record is bit-identical to the
+    // original — anything else must be an error (a decode that
+    // succeeded with DIFFERENT bytes yet equal content is fine; one
+    // with different content is the catastrophic "silently wrong
+    // state" and fails the assert).
+    let mut rng = SplitMix64::new(0x5EED);
+    for (label, good) in sample_records() {
+        let original = codec::decode(&good).unwrap();
+        for trial in 0..128 {
+            let mut bad = good.clone();
+            let flips = 2 + (rng.next_u64() % 63) as usize;
+            for _ in 0..flips {
+                let bit = rng.next_u64() as usize % (bad.len() * 8);
+                bad[bit / 8] ^= 1 << (bit % 8);
+            }
+            if bad == good {
+                continue; // flips cancelled out
+            }
+            match codec::decode(&bad) {
+                Err(_) => {}
+                Ok(cp) => assert_eq!(
+                    cp, original,
+                    "{label} trial {trial}: corrupt record decoded to \
+                     DIFFERENT state"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_a_clean_error() {
+    for (label, good) in sample_records() {
+        for cut in 0..good.len() {
+            assert!(
+                codec::decode(&good[..cut]).is_err(),
+                "{label}: truncation to {cut}/{} bytes decoded",
+                cut,
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_length_and_garbage_records_are_clean_errors() {
+    assert!(codec::decode(&[]).is_err());
+    let mut rng = SplitMix64::new(7);
+    for len in [1usize, 7, 19, 20, 21, 64, 1024] {
+        let garbage: Vec<u8> =
+            (0..len).map(|_| rng.next_u64() as u8).collect();
+        assert!(
+            codec::decode(&garbage).is_err(),
+            "{len} bytes of garbage decoded"
+        );
+    }
+}
+
+/// Write a valid two-checkpoint history for stream `sid`, then damage
+/// the newest on-disk record with `damage`.
+fn store_with_damaged_tail(
+    tag: &str,
+    damage: impl Fn(&PathBuf),
+) -> (PathBuf, FileStore) {
+    let root = tmp_root(tag);
+    let store = FileStore::open(&root, 4).unwrap();
+    let mut eng = SoftwareEngine::new(2, 3.0);
+    let older = checkpoint_from(&mut eng, 5, 19); // seqs 0..=19
+    store.put(&older).unwrap();
+    // Continue the SAME engine to seq 39 for the newer checkpoint.
+    let mut rng = SplitMix64::new(99);
+    for seq in 20..=39u64 {
+        eng.ingest(&Sample {
+            stream_id: 5,
+            seq,
+            values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+        })
+        .unwrap();
+    }
+    store
+        .put(&StateCheckpoint {
+            stream_id: 5,
+            seq: 39,
+            snapshot: eng.snapshot(5).unwrap(),
+        })
+        .unwrap();
+    let newest = root.join("5").join(format!("{:020}.ckpt", 39));
+    assert!(newest.exists());
+    damage(&newest);
+    (root, store)
+}
+
+#[test]
+fn recovery_falls_back_past_a_bit_flipped_tail() {
+    let (root, store) = store_with_damaged_tail("bitflip", |path| {
+        let mut bytes = fs::read(path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        fs::write(path, bytes).unwrap();
+    });
+    assert_eq!(
+        store.latest(5).unwrap().unwrap().seq,
+        19,
+        "latest() must skip the corrupt tail"
+    );
+    let mgr = StateManager::with_store(Arc::new(store));
+    assert_eq!(mgr.recover().unwrap(), 1);
+    assert_eq!(mgr.latest(5).unwrap().seq, 19);
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn recovery_falls_back_past_a_truncated_tail() {
+    let (root, store) = store_with_damaged_tail("truncate", |path| {
+        let bytes = fs::read(path).unwrap();
+        fs::write(path, &bytes[..bytes.len() / 3]).unwrap();
+    });
+    assert_eq!(store.latest(5).unwrap().unwrap().seq, 19);
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn recovery_falls_back_past_a_zero_length_tail() {
+    let (root, store) = store_with_damaged_tail("zerolen", |path| {
+        fs::write(path, b"").unwrap();
+    });
+    assert_eq!(store.latest(5).unwrap().unwrap().seq, 19);
+    let mgr = StateManager::with_store(Arc::new(store));
+    assert_eq!(mgr.recover().unwrap(), 1);
+    assert_eq!(mgr.latest(5).unwrap().seq, 19);
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn all_checkpoints_corrupt_means_no_recovery_not_a_wrong_one() {
+    let root = tmp_root("all-bad");
+    let store = FileStore::open(&root, 4).unwrap();
+    store
+        .put(&checkpoint_from(&mut SoftwareEngine::new(2, 3.0), 9, 19))
+        .unwrap();
+    let path = root.join("9").join(format!("{:020}.ckpt", 19));
+    fs::write(&path, b"not a checkpoint at all").unwrap();
+    assert!(store.latest(9).unwrap().is_none());
+    let mgr = StateManager::with_store(Arc::new(store));
+    assert_eq!(mgr.recover().unwrap(), 0, "nothing valid → nothing loaded");
+    assert!(mgr.latest(9).is_none());
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn record_under_a_wrong_filename_is_treated_as_corrupt() {
+    // A checkpoint copied to another stream's directory (or renamed to
+    // a different seq) must not be loaded: the payload's identity wins.
+    let root = tmp_root("misfiled");
+    let store = FileStore::open(&root, 4).unwrap();
+    store
+        .put(&checkpoint_from(&mut SoftwareEngine::new(2, 3.0), 1, 19))
+        .unwrap();
+    // Copy stream 1's record into stream 2's directory.
+    let src = root.join("1").join(format!("{:020}.ckpt", 19));
+    fs::create_dir_all(root.join("2")).unwrap();
+    fs::copy(&src, root.join("2").join(format!("{:020}.ckpt", 19)))
+        .unwrap();
+    // And to a wrong seq within its own stream.
+    fs::copy(&src, root.join("1").join(format!("{:020}.ckpt", 99)))
+        .unwrap();
+    assert!(store.latest(2).unwrap().is_none());
+    assert_eq!(store.latest(1).unwrap().unwrap().seq, 19);
+    fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn decoded_checkpoint_restores_into_a_live_engine() {
+    // End of the chain: a record that survives decode actually drives
+    // an engine — decode is not just structural equality.
+    let mut live = SoftwareEngine::new(2, 3.0);
+    let cp = checkpoint_from(&mut live, 7, 30);
+    let decoded = codec::decode(&codec::encode(&cp)).unwrap();
+    let mut restored = SoftwareEngine::new(2, 3.0);
+    restored.restore(7, decoded.snapshot).unwrap();
+    let probe = Sample { stream_id: 7, seq: 31, values: vec![0.9, -0.9] };
+    assert_eq!(
+        live.ingest(&probe).unwrap(),
+        restored.ingest(&probe).unwrap()
+    );
+}
