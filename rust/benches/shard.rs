@@ -1,0 +1,197 @@
+//! Elastic sharding: routing cost, live-migration latency, and
+//! steady-state service throughput before/after a rebalance.
+//!
+//! Emits `BENCH_shard.json` at the repository root and appends the run
+//! to the cumulative `BENCH_trend.json` (per-PR perf trajectory).
+//!
+//! Run: `cargo bench --bench shard`
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{EngineKind, Json, ServiceConfig, ShardingConfig};
+use teda_fpga::coordinator::{Service, ShardTable};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const STREAMS: u64 = 64;
+const WORKERS: usize = 4;
+/// Samples per stream folded in before migrations are measured (warm
+/// engine state makes the seal/restore path carry real snapshots).
+const WARM: u64 = 500;
+/// Samples per throughput measurement burst.
+const BURST: usize = 8_192;
+
+fn cfg() -> ServiceConfig {
+    ServiceConfig {
+        engine: EngineKind::Software,
+        workers: WORKERS,
+        n_features: 2,
+        queue_capacity: 4096,
+        sharding: ShardingConfig { virtual_shards: 256, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn burst(rng: &mut SplitMix64, seq: &mut u64) -> Vec<Sample> {
+    let mut out = Vec::with_capacity(BURST);
+    for _ in 0..BURST / STREAMS as usize {
+        for sid in 0..STREAMS {
+            out.push(Sample {
+                stream_id: sid,
+                seq: *seq,
+                values: vec![rng.normal(), rng.normal()],
+            });
+        }
+        *seq += 1;
+    }
+    out
+}
+
+/// Measure end-to-end throughput: submit a burst, drain all verdicts.
+fn throughput(svc: &Service, rng: &mut SplitMix64, seq: &mut u64) -> f64 {
+    let report = Bench::new("service_throughput")
+        .iters(30)
+        .units(BURST as u64, "samples")
+        .run(|| {
+            svc.submit_batch(burst(rng, seq)).unwrap();
+            let mut got = 0usize;
+            while got < BURST {
+                let drained = svc.poll_results().len();
+                got += drained;
+                if drained == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+    report.throughput
+}
+
+fn num(v: f64) -> Json {
+    Json::Num((v * 10.0).round() / 10.0)
+}
+
+fn main() {
+    println!(
+        "== elastic sharding ({STREAMS} streams, {WORKERS} workers, 256 \
+         virtual shards) ==\n"
+    );
+    let mut results = Vec::new();
+
+    // 1. Pure routing: table snapshot + hash + lookup.
+    let table = ShardTable::new_uniform(256, WORKERS);
+    let route = Bench::new("route")
+        .iters(200)
+        .units(10_000, "routes")
+        .run(|| {
+            let mut acc = 0usize;
+            for sid in 0..10_000u64 {
+                acc += table.route(black_box(sid)).0;
+            }
+            black_box(acc);
+        });
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str("route_ns".into()));
+    row.insert("value".into(), num(route.ns_per_unit));
+    results.push(Json::Obj(row));
+
+    // 2. Live service: warm up, measure steady-state throughput,
+    //    migrate half the shard space back and forth (timed), then
+    //    measure throughput again after a scale-out rebalance.
+    let svc = Service::start(cfg()).unwrap();
+    let mut rng = SplitMix64::new(0x7EDA);
+    let mut seq = 0u64;
+    let warm_bursts = WARM / (BURST as u64 / STREAMS);
+    for _ in 0..warm_bursts {
+        svc.submit_batch(burst(&mut rng, &mut seq)).unwrap();
+    }
+    // Fully drain the warmup so every measured iteration starts from a
+    // verdict-balanced service.
+    let mut pending = warm_bursts as usize * BURST;
+    while pending > 0 {
+        let drained = svc.poll_results().len();
+        pending -= drained;
+        if drained == 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    let before = throughput(&svc, &mut rng, &mut seq);
+    println!("\nsteady-state before rebalance: {before:.0} samples/s");
+
+    // Migration latency: move worker 0's shards to worker 1 and back —
+    // each iteration is two full seal → barrier → adopt handoffs over
+    // real resident stream state.
+    let shards0 = svc.table().shards_on(0);
+    let mig = Bench::new("migrate_roundtrip").iters(40).run(|| {
+        let moves_away: Vec<(u32, usize)> =
+            shards0.iter().map(|&s| (s, 1)).collect();
+        svc.migrate_shards(&moves_away).unwrap();
+        let moves_back: Vec<(u32, usize)> =
+            shards0.iter().map(|&s| (s, 0)).collect();
+        svc.migrate_shards(&moves_back).unwrap();
+    });
+    let migration_ns = mig.mean.as_nanos() as f64 / 2.0; // per one-way move
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str("migration_ns".into()));
+    row.insert("value".into(), num(migration_ns));
+    row.insert(
+        "shards_per_move".into(),
+        Json::Num(shards0.len() as f64),
+    );
+    results.push(Json::Obj(row));
+
+    // Scale out + rebalance, then re-measure steady state.
+    svc.scale_to(WORKERS * 2).unwrap();
+    let after = throughput(&svc, &mut rng, &mut seq);
+    println!(
+        "steady-state after scale_to({}): {after:.0} samples/s",
+        WORKERS * 2
+    );
+    let metrics = svc.metrics();
+    let migrations = metrics.migrations.get();
+    let streams_moved = metrics.streams_migrated.get();
+    let p99_migration = metrics.migration_time.quantile(0.99);
+    svc.finish().unwrap();
+
+    for (metric, value) in [
+        ("throughput_before_sps", before),
+        ("throughput_after_rebalance_sps", after),
+        ("migration_p99_ns", p99_migration as f64),
+        ("migrations_total", migrations as f64),
+        ("streams_migrated_total", streams_moved as f64),
+    ] {
+        let mut row = BTreeMap::new();
+        row.insert("metric".into(), Json::Str(metric.into()));
+        row.insert("value".into(), num(value));
+        results.push(Json::Obj(row));
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("shard".into()));
+    doc.insert(
+        "workload".into(),
+        Json::Str(format!(
+            "{STREAMS} streams × software engine, {WORKERS}→{} workers, \
+             256 virtual shards, bursts of {BURST}",
+            WORKERS * 2
+        )),
+    );
+    doc.insert("results".into(), Json::Arr(results));
+    let json = Json::Obj(doc);
+
+    // Always the repository root (one level above the cargo manifest),
+    // matching the other BENCH_*.json emitters.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent");
+    let path = root.join("BENCH_shard.json");
+    std::fs::write(&path, json.to_string_compact() + "\n")
+        .expect("write BENCH_shard.json");
+    println!("wrote {}", path.display());
+    match teda_fpga::util::benchkit::append_trend(root, "shard", &json) {
+        Ok(true) => println!("appended run to BENCH_trend.json"),
+        Ok(false) => println!("BENCH_trend.json already has this run"),
+        Err(e) => eprintln!("warning: trend append failed: {e}"),
+    }
+}

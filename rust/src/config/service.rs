@@ -46,6 +46,36 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// Elastic-sharding knobs (`[sharding]` in TOML, `"sharding"` in JSON).
+///
+/// `virtual_shards` is fixed for the lifetime of a service (it defines
+/// the immutable stream → shard hash); the other two drive the
+/// rebalancer that moves shards *between* workers at runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardingConfig {
+    /// Number of virtual shards stream ids hash onto. TOML/JSON:
+    /// `sharding.virtual_shards`, CLI: `--virtual-shards`.
+    pub virtual_shards: u32,
+    /// Samples between automatic rebalance checks in `serve`
+    /// (0 = automatic rebalancing off). TOML/JSON:
+    /// `sharding.rebalance_interval`, CLI: `--rebalance-interval`.
+    pub rebalance_interval: u64,
+    /// A rebalance triggers when the most-loaded worker carries more
+    /// than `imbalance_threshold ×` the mean worker load (> 1.0).
+    /// TOML/JSON: `sharding.imbalance_threshold`.
+    pub imbalance_threshold: f64,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig {
+            virtual_shards: crate::coordinator::DEFAULT_VIRTUAL_SHARDS,
+            rebalance_interval: 0,
+            imbalance_threshold: 1.5,
+        }
+    }
+}
+
 /// Full coordinator/service configuration.
 ///
 /// Built from a TOML file ([`ServiceConfig::from_toml`]) or defaults +
@@ -94,6 +124,8 @@ pub struct ServiceConfig {
     pub evict_after: u64,
     /// RNG seed for anything stochastic in the service (workload gen).
     pub seed: u64,
+    /// Elastic sharding: virtual shard count + rebalancer knobs.
+    pub sharding: ShardingConfig,
     /// Ensemble member roster + combiner (used when `engine = ensemble`).
     pub ensemble: EnsembleConfig,
 }
@@ -117,6 +149,7 @@ impl Default for ServiceConfig {
             checkpoint_keep: 4,
             evict_after: 0,
             seed: 0x7EDA, // "TEDA"
+            sharding: ShardingConfig::default(),
             ensemble: EnsembleConfig::default(),
         }
     }
@@ -177,6 +210,20 @@ impl ServiceConfig {
         }
         if let Some(v) = doc.u64_("service.seed") {
             cfg.seed = v;
+        }
+        if let Some(v) = doc.u64_("sharding.virtual_shards") {
+            cfg.sharding.virtual_shards =
+                u32::try_from(v).map_err(|_| {
+                    Error::Config(format!(
+                        "sharding.virtual_shards {v} exceeds u32"
+                    ))
+                })?;
+        }
+        if let Some(v) = doc.u64_("sharding.rebalance_interval") {
+            cfg.sharding.rebalance_interval = v;
+        }
+        if let Some(v) = doc.f64_("sharding.imbalance_threshold") {
+            cfg.sharding.imbalance_threshold = v;
         }
         cfg.ensemble.apply_toml(&doc)?;
         cfg.validate()?;
@@ -245,6 +292,28 @@ impl ServiceConfig {
                 cfg.evict_after = v;
             }
         }
+        if let Some(sharding) = doc.get("sharding") {
+            if let Some(v) =
+                sharding.get("virtual_shards").and_then(Json::as_u64)
+            {
+                cfg.sharding.virtual_shards =
+                    u32::try_from(v).map_err(|_| {
+                        Error::Config(format!(
+                            "sharding.virtual_shards {v} exceeds u32"
+                        ))
+                    })?;
+            }
+            if let Some(v) =
+                sharding.get("rebalance_interval").and_then(Json::as_u64)
+            {
+                cfg.sharding.rebalance_interval = v;
+            }
+            if let Some(v) =
+                sharding.get("imbalance_threshold").and_then(Json::as_f64)
+            {
+                cfg.sharding.imbalance_threshold = v;
+            }
+        }
         if let Some(batcher) = doc.get("batcher") {
             if let Some(v) =
                 batcher.get("max_streams").and_then(Json::as_usize)
@@ -307,6 +376,22 @@ impl ServiceConfig {
         if self.checkpoint_keep == 0 {
             return Err(Error::Config(
                 "checkpoint.keep must be > 0 (keep-last-K retention)"
+                    .into(),
+            ));
+        }
+        if self.sharding.virtual_shards == 0 {
+            return Err(Error::Config(
+                "sharding.virtual_shards must be > 0".into(),
+            ));
+        }
+        // NaN must be rejected explicitly: it slips through any plain
+        // comparison and would defeat every downstream threshold
+        // check, migrating on each rebalance pass.
+        let threshold = self.sharding.imbalance_threshold;
+        if threshold.is_nan() || threshold <= 1.0 {
+            return Err(Error::Config(
+                "sharding.imbalance_threshold must be > 1.0 (1.0 would \
+                 rebalance forever)"
                     .into(),
             ));
         }
@@ -527,6 +612,92 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.checkpoint_every, 11);
         assert!(cfg.restore_on_resume);
+    }
+
+    #[test]
+    fn sharding_section_roundtrips_in_toml_and_json() {
+        // Mirrors the [ensemble]/[checkpoint] round-trip tests: the same
+        // non-default values through both hand-written parsers must land
+        // on the same typed config.
+        let toml = r#"
+            [sharding]
+            virtual_shards = 64
+            rebalance_interval = 5000
+            imbalance_threshold = 2.25
+        "#;
+        let json = r#"{
+            "sharding": {"virtual_shards": 64,
+                         "rebalance_interval": 5000,
+                         "imbalance_threshold": 2.25}
+        }"#;
+        let a = ServiceConfig::from_toml(toml).unwrap();
+        let b = ServiceConfig::from_json(json).unwrap();
+        assert_eq!(a, b);
+        // And the values really landed (not both defaulted).
+        assert_eq!(a.sharding.virtual_shards, 64);
+        assert_eq!(a.sharding.rebalance_interval, 5000);
+        assert_eq!(a.sharding.imbalance_threshold, 2.25);
+    }
+
+    #[test]
+    fn sharding_defaults_and_partial_sections() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(
+            cfg.sharding.virtual_shards,
+            crate::coordinator::DEFAULT_VIRTUAL_SHARDS
+        );
+        assert_eq!(cfg.sharding.rebalance_interval, 0, "auto off");
+        assert_eq!(cfg.sharding.imbalance_threshold, 1.5);
+        // A partial section keeps the other defaults.
+        let cfg = ServiceConfig::from_toml(
+            "[sharding]\nvirtual_shards = 32\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.sharding.virtual_shards, 32);
+        assert_eq!(cfg.sharding.imbalance_threshold, 1.5);
+        let cfg = ServiceConfig::from_json(
+            r#"{"sharding": {"rebalance_interval": 9}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sharding.rebalance_interval, 9);
+        assert_eq!(
+            cfg.sharding.virtual_shards,
+            crate::coordinator::DEFAULT_VIRTUAL_SHARDS
+        );
+    }
+
+    #[test]
+    fn invalid_sharding_rejected() {
+        assert!(ServiceConfig::from_toml(
+            "[sharding]\nvirtual_shards = 0\n"
+        )
+        .is_err());
+        // Out-of-u32-range values error instead of silently wrapping.
+        assert!(ServiceConfig::from_toml(
+            "[sharding]\nvirtual_shards = 4294967552\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"sharding": {"virtual_shards": 4294967296}}"#
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[sharding]\nimbalance_threshold = 1.0\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"sharding": {"virtual_shards": 0}}"#
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"sharding": {"imbalance_threshold": 0.5}}"#
+        )
+        .is_err());
+        // NaN would defeat every threshold comparison downstream.
+        assert!(ServiceConfig::from_toml(
+            "[sharding]\nimbalance_threshold = nan\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -3,41 +3,54 @@
 //! Topology (vLLM-router-shaped, adapted to detection streams):
 //!
 //! ```text
-//!                  ┌────────────┐   bounded queues    ┌──────────┐
-//!  sources ──────▶ │   Router   │ ──────────────────▶ │ Worker 0 │──┐
-//!  (submit)        │ fnv1a(sid) │ ──────────────────▶ │ Worker 1 │──┼─▶ results
-//!                  └────────────┘        ...          └──────────┘  │   channel
-//!                        │                                          │
-//!                        └─ backpressure: send blocks when full ◀───┘
+//!                ┌───────────────┐   bounded queues    ┌──────────┐
+//!  sources ────▶ │   ShardMap    │ ──────────────────▶ │ Worker 0 │──┐
+//!  (submit)      │ sid→shard→wkr │ ──────────────────▶ │ Worker 1 │──┼─▶ results
+//!                │  (epoch N)    │        ...          └──────────┘  │   channel
+//!                └───────────────┘                            ▲      │
+//!                        ▲            seal ─▶ snapshots ──────┘      │
+//!                   rebalancer        (migration protocol)          ◀┘
 //! ```
 //!
-//! - **Router** ([`Router`]): stable hash of the stream id → worker
-//!   index, so one stream's samples always land on the same worker and
-//!   per-stream ordering is preserved end-to-end.
+//! - **Shard map** ([`ShardMap`] / [`ShardTable`]): stream ids hash to
+//!   a fixed number of virtual shards ([`shard_of`]); an epoch-numbered
+//!   shard → worker table — swapped atomically behind an `Arc` — maps
+//!   shards to workers. One stream's samples always land on the shard's
+//!   *current* worker, so per-stream ordering is preserved end-to-end,
+//!   and the table can change while serving.
 //! - **Workers** ([`Service`]): each owns one [`crate::engine::Engine`]
-//!   (software / RTL / XLA per config) and processes its queue in
-//!   arrival order. The XLA engine performs dynamic batching internally
-//!   (S×T chunks); `min_ready` is the service's batching knob.
+//!   (software / RTL / XLA / ensemble per config) and processes its
+//!   queue in arrival order. The XLA engine performs dynamic batching
+//!   internally (S×T chunks); `min_ready` is the service's batching
+//!   knob. Worker loops are panic-guarded: a dying engine reports
+//!   *which* worker failed (`worker_panics` metric) instead of taking
+//!   the service down anonymously.
+//! - **Rebalancer** ([`Service::migrate_shards`],
+//!   [`Service::maybe_rebalance`], [`Service::scale_to`]): moves
+//!   shards between workers live via a seal → adopt protocol — the old
+//!   worker drains, snapshots every resident stream at its exact
+//!   watermark ([`crate::engine::Snapshot`], encoded through the
+//!   persist codec as the wire format), the new worker restores and
+//!   replays any samples that outran their state through the inclusive-
+//!   watermark dedup. Verdicts are bit-identical to an unmigrated run.
+//!   `scale_to` adds or retires whole workers with the same protocol.
 //! - **State manager** ([`StateManager`]): periodic per-stream,
-//!   engine-agnostic [`crate::engine::Snapshot`] checkpoints — software
-//!   counters, RTL register files, XLA carries, or whole ensembles with
-//!   per-stream combiner weights — published every
+//!   engine-agnostic snapshot checkpoints published every
 //!   `checkpoint.interval` samples and restored on stream resume for
-//!   recovery/migration (`checkpoint.restore`). With `checkpoint.dir`
-//!   set, every publish is also written through to a durable
-//!   [`crate::persist::FileStore`], and
-//!   [`Service::start_from_store`] cold-starts a new process from the
-//!   newest valid on-disk checkpoint per stream — failover survives
-//!   full-process death. `checkpoint.evict_after` drops idle streams
-//!   (engine state + checkpoints, memory and disk) so a long-running
-//!   service does not accumulate finished streams forever.
+//!   recovery (`checkpoint.restore`); with `checkpoint.dir` set they
+//!   are written through to a durable [`crate::persist::FileStore`]
+//!   and [`Service::start_from_store`] cold-starts a new process from
+//!   disk. Migration seals publish through the same path, so failover
+//!   and rebalancing agree on watermarks.
 //! - **Backpressure**: all queues are bounded; a full worker queue
 //!   blocks the router (and ultimately the source), never drops.
 
-mod router;
 mod service;
+mod shard_map;
 mod state_mgr;
 
-pub use router::Router;
 pub use service::{Classified, Service, ServiceHandle};
+pub use shard_map::{
+    shard_of, ShardMap, ShardTable, DEFAULT_VIRTUAL_SHARDS,
+};
 pub use state_mgr::{StateCheckpoint, StateManager};

@@ -1,16 +1,22 @@
-//! The service: worker threads + router + result collection.
+//! The service: worker threads + versioned shard map + result
+//! collection, with live shard migration and runtime worker scaling.
 
-use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::{EngineKind, ServiceConfig};
-use crate::coordinator::{Router, StateCheckpoint, StateManager};
-use crate::engine::{Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine};
+use crate::coordinator::{
+    shard_of, ShardMap, ShardTable, StateCheckpoint, StateManager,
+};
+use crate::engine::{
+    Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine,
+};
 use crate::ensemble::EnsembleEngine;
-use crate::metrics::{EnsembleMetrics, ServiceMetrics};
-use crate::persist::{CheckpointStore, FileStore};
+use crate::metrics::{EnsembleMetrics, ServiceMetrics, ShardMetrics};
+use crate::persist::{codec, CheckpointStore, FileStore};
 use crate::runtime::XlaRuntime;
 use crate::stream::{bounded, Receiver, Sample, Sender};
 use crate::{Error, Result};
@@ -23,11 +29,50 @@ pub struct Classified {
     pub latency_ns: u64,
 }
 
+/// A sample that reached a worker no longer owning its shard, carrying
+/// its original submit time so re-routing keeps latency accounting
+/// honest.
+type Stray = (Sample, Instant);
+
+/// A worker thread's join handle (None once joined).
+type WorkerHandle = JoinHandle<Result<()>>;
+
+/// One sealed shard set leaving its old worker: every resident stream,
+/// snapshotted at its exact watermark and encoded through the persist
+/// codec (the migration wire format — what would cross the network in a
+/// multi-process deployment).
+struct SealBundle {
+    /// Encoded [`StateCheckpoint`]s, one per resident stream.
+    records: Vec<Vec<u8>>,
+}
+
 enum Job {
+    /// A sample plus its submit time. The shard-map epoch it was
+    /// routed under is consumed at submit time (one table snapshot per
+    /// route); the worker does not need it back: ownership is tracked
+    /// by the owned/pending shard sets, which change strictly in queue
+    /// order (Seal removes, Adopt adds), so a sample routed under a
+    /// stale epoch is detected as "not owned here" and forwarded for
+    /// re-routing rather than misprocessed.
     Sample(Sample, Instant),
     /// Amortizes channel synchronization: one lock per burst instead of
     /// one per sample (see EXPERIMENTS.md §Perf).
     Batch(Vec<Sample>, Instant),
+    /// Migration step 2 (old worker): snapshot + evict every resident
+    /// stream of these shards, stop owning them, reply with the
+    /// encoded bundle.
+    Seal { shards: Vec<u32>, reply: Sender<SealBundle> },
+    /// Migration step 1 (new worker): samples for these shards may
+    /// arrive before their state does — stash them until Adopt.
+    Expect { shards: Vec<u32> },
+    /// Migration step 3 (new worker): restore the sealed streams, take
+    /// ownership, then replay the stash in (stream, seq) order through
+    /// the inclusive-watermark dedup.
+    Adopt { shards: Vec<u32>, records: Vec<Vec<u8>> },
+    /// Scale-down: final flush (sent only after every shard has been
+    /// migrated off this worker; the thread exits when its queue
+    /// closes, so stragglers still get stray-forwarded).
+    Retire,
     /// Force pending batches out (end of input).
     Flush,
     /// Die immediately WITHOUT flushing — crash simulation for failover
@@ -39,29 +84,51 @@ enum Job {
 /// A running service instance.
 pub struct Service {
     cfg: ServiceConfig,
-    router: Router,
-    senders: Vec<Sender<Job>>,
-    workers: Vec<JoinHandle<Result<()>>>,
+    /// Versioned stream → shard → worker routing, shared with every
+    /// submit handle; migrations install successor tables (epoch + 1).
+    shard_map: Arc<ShardMap>,
+    /// Worker input queues, index-aligned with the shard table. Shared
+    /// (not cloned) with every [`ServiceHandle`] so scaling is visible
+    /// to all submitters immediately.
+    senders: Arc<Mutex<Vec<Sender<Job>>>>,
+    workers: Mutex<Vec<Option<WorkerHandle>>>,
     /// Verdicts travel in bursts (one Vec per processed job) to keep
     /// channel synchronization off the per-sample path.
     results_rx: Receiver<Vec<Classified>>,
+    /// Kept so `scale_to` can hand the results channel to new workers;
+    /// dropped at stop so the drain observes closure.
+    res_tx: Sender<Vec<Classified>>,
+    /// Mis-routed samples forwarded by workers for re-routing.
+    stray_rx: Receiver<Stray>,
+    stray_tx: Sender<Stray>,
     metrics: Arc<ServiceMetrics>,
+    shard_metrics: Arc<ShardMetrics>,
     /// Per-member counters, present when the engine is an ensemble.
     ensemble_metrics: Option<Arc<EnsembleMetrics>>,
     state_mgr: Arc<StateManager>,
+    /// Strays that could not be re-routed (their worker's queue was
+    /// closed mid-drain); retried on every subsequent drain so no
+    /// sample is ever silently discarded.
+    parked: Mutex<Vec<Stray>>,
+    /// Serializes migrate / scale / rebalance operations.
+    rebalance_lock: Mutex<()>,
+    /// Shard sample counts at the last `maybe_rebalance` check (the
+    /// rebalancer acts on load deltas, not lifetime totals).
+    last_shard_counts: Mutex<Vec<u64>>,
 }
 
-/// Cheap clonable submit-side handle.
+/// Cheap clonable submit-side handle. Shares the live shard map and
+/// sender registry, so routing follows migrations and worker scaling.
 pub struct ServiceHandle {
-    router: Router,
-    senders: Vec<Sender<Job>>,
+    shard_map: Arc<ShardMap>,
+    senders: Arc<Mutex<Vec<Sender<Job>>>>,
     metrics: Arc<ServiceMetrics>,
 }
 
 impl Clone for ServiceHandle {
     fn clone(&self) -> Self {
         ServiceHandle {
-            router: self.router.clone(),
+            shard_map: self.shard_map.clone(),
             senders: self.senders.clone(),
             metrics: self.metrics.clone(),
         }
@@ -71,34 +138,64 @@ impl Clone for ServiceHandle {
 impl ServiceHandle {
     /// Submit one sample (blocks under backpressure).
     pub fn submit(&self, sample: Sample) -> Result<()> {
-        submit_inner(&self.router, &self.senders, &self.metrics, sample)
+        submit_inner(
+            &self.shard_map,
+            &self.senders,
+            &self.metrics,
+            sample,
+            Instant::now(),
+            true,
+        )
     }
 }
 
-/// Shared submit path: non-blocking fast path, blocking (counted)
-/// backpressure path when the worker queue is full.
+/// Shared submit path: route via the current shard table, non-blocking
+/// fast path, blocking (counted) backpressure path when the worker
+/// queue is full. Retries with a fresh table snapshot when the routed
+/// worker no longer exists (shrink in progress).
 fn submit_inner(
-    router: &Router,
-    senders: &[Sender<Job>],
+    shard_map: &ShardMap,
+    senders: &Mutex<Vec<Sender<Job>>>,
     metrics: &ServiceMetrics,
     sample: Sample,
+    t0: Instant,
+    count_in: bool,
 ) -> Result<()> {
-    let w = router.route(sample.stream_id);
-    let job = Job::Sample(sample, Instant::now());
-    match senders[w].try_send(job) {
-        Ok(None) => {
-            metrics.samples_in.inc();
-            Ok(())
-        }
-        Ok(Some(job)) => {
-            metrics.backpressure_events.inc();
-            senders[w]
-                .send(job)
-                .map_err(|_| Error::Stream("worker queue closed".into()))?;
-            metrics.samples_in.inc();
-            Ok(())
-        }
-        Err(_) => Err(Error::Stream("worker queue closed".into())),
+    loop {
+        let table = shard_map.snapshot();
+        let (w, _shard) = table.route(sample.stream_id);
+        let tx = {
+            let g = senders.lock().unwrap();
+            if g.is_empty() {
+                return Err(Error::Stream("service stopped".into()));
+            }
+            g.get(w).cloned()
+        };
+        let Some(tx) = tx else {
+            // The table routed to a worker the registry no longer has:
+            // a shrink landed between our snapshot and the lookup. The
+            // next snapshot already reflects it.
+            continue;
+        };
+        let job = Job::Sample(sample, t0);
+        return match tx.try_send(job) {
+            Ok(None) => {
+                if count_in {
+                    metrics.samples_in.inc();
+                }
+                Ok(())
+            }
+            Ok(Some(job)) => {
+                metrics.backpressure_events.inc();
+                tx.send(job)
+                    .map_err(|_| Error::Stream("worker queue closed".into()))?;
+                if count_in {
+                    metrics.samples_in.inc();
+                }
+                Ok(())
+            }
+            Err(_) => Err(Error::Stream("worker queue closed".into())),
+        };
     }
 }
 
@@ -121,6 +218,107 @@ impl CheckpointPolicy {
             evict_after: cfg.evict_after,
         }
     }
+}
+
+/// Construct the configured engine. PJRT handles are not Send (the xla
+/// crate wraps an Rc), so this runs *inside* each worker thread.
+fn build_engine(
+    cfg: &ServiceConfig,
+    ens_metrics: Option<Arc<EnsembleMetrics>>,
+) -> Result<Box<dyn Engine>> {
+    Ok(match cfg.engine {
+        EngineKind::Software => {
+            Box::new(SoftwareEngine::new(cfg.n_features, cfg.m))
+        }
+        EngineKind::Rtl => Box::new(RtlEngine::new(cfg.n_features, cfg.m)),
+        EngineKind::Xla => {
+            let rt = XlaRuntime::new(&cfg.artifact_dir)?;
+            Box::new(
+                XlaEngine::new(
+                    &rt,
+                    cfg.n_features,
+                    cfg.batch_max_streams * cfg.chunk_t,
+                )?
+                // Wait for a full batch of stream chunks before
+                // dispatching: padding lanes cost as much as real ones
+                // (27× per-sample difference — see the `batcher`
+                // bench); stragglers are handled by Flush.
+                .with_min_ready(cfg.batch_max_streams),
+            )
+        }
+        EngineKind::Ensemble => {
+            let mut eng = EnsembleEngine::new(&cfg.ensemble, cfg.n_features)?;
+            if let Some(em) = ens_metrics {
+                eng = eng.with_metrics(em);
+            }
+            Box::new(eng)
+        }
+    })
+}
+
+/// Spawn one worker thread. The worker loop is guarded by
+/// `catch_unwind`: a panicking engine takes down its own worker only,
+/// bumps `worker_panics`, and surfaces as *that worker's* error when
+/// the service drains — never as an anonymous join failure.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    widx: usize,
+    cfg: &ServiceConfig,
+    owned: HashSet<u32>,
+    rx: Receiver<Job>,
+    res_tx: Sender<Vec<Classified>>,
+    stray_tx: Sender<Stray>,
+    metrics: Arc<ServiceMetrics>,
+    shard_metrics: Arc<ShardMetrics>,
+    ens_metrics: Option<Arc<EnsembleMetrics>>,
+    state_mgr: Arc<StateManager>,
+) -> Result<WorkerHandle> {
+    let cfg = cfg.clone();
+    std::thread::Builder::new()
+        .name(format!("teda-worker-{widx}"))
+        .spawn(move || {
+            let panic_metrics = metrics.clone();
+            let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+                let mut engine = build_engine(&cfg, ens_metrics)?;
+                let mut worker = Worker {
+                    widx,
+                    virtual_shards: cfg.sharding.virtual_shards,
+                    policy: CheckpointPolicy::from_cfg(&cfg),
+                    res_tx,
+                    stray_tx,
+                    metrics,
+                    shard_metrics,
+                    state_mgr,
+                    owned,
+                    pending: HashSet::new(),
+                    stash: Vec::new(),
+                    inflight: HashMap::new(),
+                    seen: HashSet::new(),
+                    restored_at: HashMap::new(),
+                    last_seen: HashMap::new(),
+                    last_seq: HashMap::new(),
+                    tick: 0,
+                };
+                worker.run(rx, engine.as_mut())
+            }));
+            match outcome {
+                Ok(result) => result,
+                Err(payload) => {
+                    panic_metrics.worker_panics.inc();
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| {
+                            payload.downcast_ref::<String>().cloned()
+                        })
+                        .unwrap_or_else(|| "non-string panic".into());
+                    Err(Error::Stream(format!(
+                        "worker {widx} panicked: {msg}"
+                    )))
+                }
+            }
+        })
+        .map_err(|e| Error::io("spawn worker", e))
 }
 
 impl Service {
@@ -175,93 +373,58 @@ impl Service {
     ) -> Result<Service> {
         cfg.validate()?;
         let metrics = ServiceMetrics::new();
+        let shard_metrics = ShardMetrics::new(cfg.sharding.virtual_shards);
         // Ensemble runs get one shared per-member counter bundle: every
         // worker shard's EnsembleEngine adds into the same atomics.
         let ensemble_metrics = (cfg.engine == EngineKind::Ensemble)
             .then(|| EnsembleMetrics::new(cfg.ensemble.labels()));
-        let router = Router::new(cfg.workers);
+        let table =
+            ShardTable::new_uniform(cfg.sharding.virtual_shards, cfg.workers);
         // Results flow on an unbounded channel: a worker must never
         // block on its own consumer (the submitter only drains results
         // after submission, so a bounded results path could deadlock the
         // whole pipeline: worker→results full→worker stalls→queues
-        // fill→submit blocks).
+        // fill→submit blocks). Strays are unbounded for the same
+        // reason.
         let (res_tx, res_rx) = crate::stream::unbounded::<Vec<Classified>>();
+        let (stray_tx, stray_rx) = crate::stream::unbounded::<Stray>();
 
-        // PJRT handles are not Send (the xla crate wraps an Rc), so each
-        // worker constructs its own engine — including its own PJRT
-        // runtime — inside its thread.
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         for widx in 0..cfg.workers {
             let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
             senders.push(tx);
-            let res_tx = res_tx.clone();
-            let metrics = metrics.clone();
-            let ens_metrics = ensemble_metrics.clone();
-            let state_mgr = state_mgr.clone();
-            let cfg = cfg.clone();
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("teda-worker-{widx}"))
-                    .spawn(move || {
-                        let mut engine: Box<dyn Engine> = match cfg.engine {
-                            EngineKind::Software => Box::new(
-                                SoftwareEngine::new(cfg.n_features, cfg.m),
-                            ),
-                            EngineKind::Rtl => Box::new(RtlEngine::new(
-                                cfg.n_features,
-                                cfg.m,
-                            )),
-                            EngineKind::Xla => {
-                                let rt = XlaRuntime::new(&cfg.artifact_dir)?;
-                                Box::new(
-                                    XlaEngine::new(
-                                        &rt,
-                                        cfg.n_features,
-                                        cfg.batch_max_streams * cfg.chunk_t,
-                                    )?
-                                    // Wait for a full batch of stream
-                                    // chunks before dispatching: padding
-                                    // lanes cost as much as real ones
-                                    // (27× per-sample difference — see
-                                    // the `batcher` bench); stragglers
-                                    // are handled by Flush.
-                                    .with_min_ready(cfg.batch_max_streams),
-                                )
-                            }
-                            EngineKind::Ensemble => {
-                                let mut eng = EnsembleEngine::new(
-                                    &cfg.ensemble,
-                                    cfg.n_features,
-                                )?;
-                                if let Some(em) = ens_metrics {
-                                    eng = eng.with_metrics(em);
-                                }
-                                Box::new(eng)
-                            }
-                        };
-                        worker_loop(
-                            rx,
-                            engine.as_mut(),
-                            res_tx,
-                            metrics,
-                            state_mgr,
-                            CheckpointPolicy::from_cfg(&cfg),
-                        )
-                    })
-                    .map_err(|e| Error::io("spawn worker", e))?,
-            );
+            workers.push(Some(spawn_worker(
+                widx,
+                &cfg,
+                table.shards_on(widx).into_iter().collect(),
+                rx,
+                res_tx.clone(),
+                stray_tx.clone(),
+                metrics.clone(),
+                shard_metrics.clone(),
+                ensemble_metrics.clone(),
+                state_mgr.clone(),
+            )?));
         }
-        drop(res_tx); // collectors see closure once workers finish
+        metrics.epoch.set(table.epoch());
+        metrics.workers_active.set(cfg.workers as u64);
         Ok(Service {
             cfg,
-            router,
-            senders,
-            workers,
+            shard_map: Arc::new(ShardMap::new(table)),
+            senders: Arc::new(Mutex::new(senders)),
+            workers: Mutex::new(workers),
             results_rx: res_rx,
+            res_tx,
+            stray_rx,
+            stray_tx,
             metrics,
+            shard_metrics,
             ensemble_metrics,
             state_mgr,
+            parked: Mutex::new(Vec::new()),
+            rebalance_lock: Mutex::new(()),
+            last_shard_counts: Mutex::new(Vec::new()),
         })
     }
 
@@ -275,6 +438,11 @@ impl Service {
         self.metrics.clone()
     }
 
+    /// Shared per-shard load stats.
+    pub fn shard_metrics(&self) -> Arc<ShardMetrics> {
+        self.shard_metrics.clone()
+    }
+
     /// Shared per-member ensemble counters (ensemble engine only).
     pub fn ensemble_metrics(&self) -> Option<Arc<EnsembleMetrics>> {
         self.ensemble_metrics.clone()
@@ -285,10 +453,32 @@ impl Service {
         self.state_mgr.clone()
     }
 
+    /// The live shard map (diagnostics / external rebalancers).
+    pub fn shard_map(&self) -> Arc<ShardMap> {
+        self.shard_map.clone()
+    }
+
+    /// Consistent snapshot of the current shard → worker table.
+    pub fn table(&self) -> Arc<ShardTable> {
+        self.shard_map.snapshot()
+    }
+
+    /// Live worker count.
+    pub fn workers(&self) -> usize {
+        self.senders.lock().unwrap().len()
+    }
+
     /// Submit one sample, blocking when the worker queue is full
     /// (backpressure; the block is counted in metrics).
     pub fn submit(&self, sample: Sample) -> Result<()> {
-        submit_inner(&self.router, &self.senders, &self.metrics, sample)
+        submit_inner(
+            &self.shard_map,
+            &self.senders,
+            &self.metrics,
+            sample,
+            Instant::now(),
+            true,
+        )
     }
 
     /// Submit a burst of samples: routed per stream, but enqueued as one
@@ -297,21 +487,43 @@ impl Service {
     /// EXPERIMENTS.md §Perf).
     pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
         let now = Instant::now();
-        let n = samples.len() as u64;
+        let table = self.shard_map.snapshot();
         let mut per_worker: Vec<Vec<Sample>> =
-            (0..self.senders.len()).map(|_| Vec::new()).collect();
+            (0..table.workers()).map(|_| Vec::new()).collect();
         for s in samples {
-            per_worker[self.router.route(s.stream_id)].push(s);
+            per_worker[table.route(s.stream_id).0].push(s);
         }
         for (w, batch) in per_worker.into_iter().enumerate() {
             if batch.is_empty() {
                 continue;
             }
-            match self.senders[w].try_send(Job::Batch(batch, now)) {
+            let tx = self.senders.lock().unwrap().get(w).cloned();
+            let Some(tx) = tx else {
+                // Routed against a table that shrank under us: fall
+                // back to per-sample routing with a fresh snapshot
+                // (each sample counts itself in).
+                for s in batch {
+                    submit_inner(
+                        &self.shard_map,
+                        &self.senders,
+                        &self.metrics,
+                        s,
+                        now,
+                        true,
+                    )?;
+                }
+                continue;
+            };
+            // Count per delivered batch, not once at the end: a
+            // mid-loop failure (dead worker) must not leave already-
+            // delivered samples uncounted (verdicts_out would exceed
+            // samples_in exactly when the counters matter most).
+            let delivered = batch.len() as u64;
+            match tx.try_send(Job::Batch(batch, now)) {
                 Ok(None) => {}
                 Ok(Some(job)) => {
                     self.metrics.backpressure_events.inc();
-                    self.senders[w].send(job).map_err(|_| {
+                    tx.send(job).map_err(|_| {
                         Error::Stream("worker queue closed".into())
                     })?;
                 }
@@ -319,22 +531,31 @@ impl Service {
                     return Err(Error::Stream("worker queue closed".into()))
                 }
             }
+            self.metrics.samples_in.add(delivered);
         }
-        self.metrics.samples_in.add(n);
         Ok(())
     }
 
     /// Clonable submit-side handle for multi-threaded sources.
     pub fn handle(&self) -> ServiceHandle {
         ServiceHandle {
-            router: self.router.clone(),
+            shard_map: self.shard_map.clone(),
             senders: self.senders.clone(),
             metrics: self.metrics.clone(),
         }
     }
 
-    /// Drain any verdicts already available without blocking.
+    /// Drain any verdicts already available without blocking (also
+    /// re-routes any stray samples forwarded during migrations —
+    /// unless a migration is running right now, in which case stray
+    /// handling is left to the migration's own ordered drain: pulling
+    /// a stray out from under the seal → drain → adopt sequence could
+    /// re-deliver it after the Adopt and lose its verdict to the
+    /// watermark guard).
     pub fn poll_results(&self) -> Vec<Classified> {
+        if let Ok(_guard) = self.rebalance_lock.try_lock() {
+            let _ = self.drain_strays();
+        }
         let mut out = Vec::new();
         while let Ok(Some(burst)) = self.results_rx.try_recv() {
             out.extend(burst);
@@ -342,10 +563,410 @@ impl Service {
         out
     }
 
+    /// Re-route every stray sample currently queued (samples that
+    /// reached a worker after it sealed their shard), plus any strays
+    /// parked by an earlier failed drain. Returns how many were
+    /// re-routed. Resubmitted strays cannot stray again: the current
+    /// table routes them to the worker whose Adopt for the shard is
+    /// already queued ahead of them. On a re-route failure (a dead
+    /// worker's queue) the affected samples are parked — not lost —
+    /// and retried on the next drain.
+    ///
+    /// MUST only run while `rebalance_lock` is held (all callers:
+    /// migrate_set/scale_to under the lock, stop's quiesce takes it,
+    /// poll_results try-locks it) — a concurrent drain could steal a
+    /// stray from under a migration's ordered stray-before-Adopt
+    /// sequence and re-deliver it too late.
+    fn drain_strays(&self) -> Result<usize> {
+        let mut pending: Vec<Stray> =
+            std::mem::take(&mut *self.parked.lock().unwrap());
+        while let Ok(Some(stray)) = self.stray_rx.try_recv() {
+            pending.push(stray);
+        }
+        let mut n = 0;
+        let mut rest = pending.into_iter();
+        while let Some((sample, t0)) = rest.next() {
+            let backup = (sample.clone(), t0);
+            // Counted into samples_in at the original submit.
+            if let Err(e) = submit_inner(
+                &self.shard_map,
+                &self.senders,
+                &self.metrics,
+                sample,
+                t0,
+                false,
+            ) {
+                let mut parked = self.parked.lock().unwrap();
+                parked.push(backup);
+                parked.extend(rest);
+                return Err(e);
+            }
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Settle all in-flight routing: rendezvous with every worker (an
+    /// empty Seal answers only after the worker has processed its whole
+    /// backlog, forwarding any strays), then re-route the strays; loop
+    /// until a full round surfaces none. After this, no sample is
+    /// parked in the stray channel — which is what lets `finish` flush
+    /// without losing late-rerouted verdicts.
+    fn quiesce(&self) -> Result<()> {
+        loop {
+            let txs: Vec<Sender<Job>> =
+                self.senders.lock().unwrap().clone();
+            let mut replies = Vec::with_capacity(txs.len());
+            for tx in &txs {
+                let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
+                // A dead worker's queue fails the send; its own error
+                // is reported at join, so just skip the rendezvous.
+                if tx
+                    .send(Job::Seal { shards: Vec::new(), reply: reply_tx })
+                    .is_ok()
+                {
+                    replies.push(reply_rx);
+                }
+            }
+            for reply in replies {
+                let _ = reply.recv();
+            }
+            if self.drain_strays()? == 0 {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Move virtual shards to explicit target workers, live. Each
+    /// (current-owner → target) group runs the full seal → adopt
+    /// protocol; verdicts for streams of the moved shards continue
+    /// bit-identically on the new worker.
+    pub fn migrate_shards(&self, moves: &[(u32, usize)]) -> Result<()> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let workers = self.workers();
+        let table = self.shard_map.snapshot();
+        for &(shard, to) in moves {
+            if shard >= table.virtual_shards() {
+                return Err(Error::Stream(format!(
+                    "no shard {shard} (virtual_shards = {})",
+                    table.virtual_shards()
+                )));
+            }
+            if to >= workers {
+                return Err(Error::Stream(format!(
+                    "no worker {to} ({workers} live)"
+                )));
+            }
+        }
+        self.migrate_grouped(&table, moves, workers)
+    }
+
+    /// Check per-shard load since the last check and, when the hottest
+    /// worker exceeds `imbalance_threshold ×` the mean, migrate its
+    /// hottest shards to the coolest worker. Returns the moves made
+    /// (empty when balanced). Call this periodically from the serving
+    /// loop (`sharding.rebalance_interval` is the suggested cadence).
+    pub fn maybe_rebalance(&self) -> Result<Vec<(u32, usize)>> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let counts = self.shard_metrics.sample_counts();
+        let delta: Vec<u64> = {
+            let mut last = self.last_shard_counts.lock().unwrap();
+            if last.len() != counts.len() {
+                *last = vec![0; counts.len()];
+            }
+            let d = counts
+                .iter()
+                .zip(last.iter())
+                .map(|(c, l)| c.saturating_sub(*l))
+                .collect();
+            *last = counts;
+            d
+        };
+        let table = self.shard_map.snapshot();
+        let workers = table.workers();
+        if workers < 2 {
+            return Ok(Vec::new());
+        }
+        let mut load = vec![0u64; workers];
+        for (s, d) in delta.iter().enumerate() {
+            load[table.worker_of(s as u32)] += d;
+        }
+        let total: u64 = load.iter().sum();
+        if total == 0 {
+            return Ok(Vec::new());
+        }
+        let avg = total as f64 / workers as f64;
+        let donor = (0..workers).max_by_key(|&w| (load[w], w)).unwrap();
+        if (load[donor] as f64) <= avg * self.cfg.sharding.imbalance_threshold
+        {
+            return Ok(Vec::new());
+        }
+        let recipient = (0..workers)
+            .min_by_key(|&w| (load[w], w))
+            .unwrap();
+        if donor == recipient {
+            return Ok(Vec::new());
+        }
+        // Donor's shards, hottest first; move while it narrows the gap,
+        // always leaving the donor at least one shard.
+        let mut donor_shards: Vec<(u32, u64)> = table
+            .shards_on(donor)
+            .into_iter()
+            .map(|s| (s, delta[s as usize]))
+            .collect();
+        donor_shards.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut donor_load = load[donor];
+        let mut recip_load = load[recipient];
+        let mut moves: Vec<(u32, usize)> = Vec::new();
+        for (shard, l) in &donor_shards {
+            if *l == 0 || moves.len() + 1 >= donor_shards.len() {
+                break;
+            }
+            if donor_load - l < recip_load + l {
+                // Moving this shard would just swap who is overloaded.
+                continue;
+            }
+            moves.push((*shard, recipient));
+            donor_load -= l;
+            recip_load += l;
+            if (donor_load as f64) <= avg {
+                break;
+            }
+        }
+        if moves.is_empty() {
+            return Ok(Vec::new());
+        }
+        let shards: Vec<u32> = moves.iter().map(|&(s, _)| s).collect();
+        self.migrate_set(donor, recipient, &shards, workers)?;
+        Ok(moves)
+    }
+
+    /// Resize the worker pool live. Growing spawns workers
+    /// `cur..n` and migrates a minimal, balanced set of shards onto
+    /// them; shrinking migrates every shard off workers `n..cur`, sends
+    /// them `Retire`, and joins their threads. Stream verdicts continue
+    /// bit-identically across either direction.
+    pub fn scale_to(&self, n: usize) -> Result<()> {
+        if n == 0 {
+            return Err(Error::Config("cannot scale to 0 workers".into()));
+        }
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let cur = self.workers();
+        if n == cur {
+            return Ok(());
+        }
+        let result = if n > cur {
+            self.grow_to(cur, n)
+        } else {
+            self.shrink_to(cur, n)
+        };
+        // Track the registry even when a resize fails midway (a dead
+        // worker aborting one migration group): the gauge must agree
+        // with `workers()` and the installed table, not with the
+        // intended target.
+        self.metrics.workers_active.set(self.workers() as u64);
+        result
+    }
+
+    /// Scale-up half of [`Service::scale_to`] (rebalance lock held).
+    fn grow_to(&self, cur: usize, n: usize) -> Result<()> {
+        // Register the new workers BEFORE any table routes to them.
+        for widx in cur..n {
+            let (tx, rx) = bounded::<Job>(self.cfg.queue_capacity);
+            let handle = spawn_worker(
+                widx,
+                &self.cfg,
+                HashSet::new(),
+                rx,
+                self.res_tx.clone(),
+                self.stray_tx.clone(),
+                self.metrics.clone(),
+                self.shard_metrics.clone(),
+                self.ensemble_metrics.clone(),
+                self.state_mgr.clone(),
+            )?;
+            self.senders.lock().unwrap().push(tx);
+            self.workers.lock().unwrap().push(Some(handle));
+        }
+        let table = self.shard_map.snapshot();
+        let moves = table.rebalance_moves(n);
+        if moves.is_empty() {
+            self.install(table.with_workers(n)?)
+        } else {
+            self.migrate_grouped(&table, &moves, n)
+        }
+    }
+
+    /// Scale-down half of [`Service::scale_to`] (rebalance lock held).
+    fn shrink_to(&self, cur: usize, n: usize) -> Result<()> {
+        // Empty the retiring workers first (targets all < n).
+        let table = self.shard_map.snapshot();
+        let moves = table.rebalance_moves(n);
+        self.migrate_grouped(&table, &moves, cur)?;
+        self.install(self.shard_map.snapshot().with_workers(n)?)?;
+        // Late strays routed under pre-shrink tables may still sit
+        // queued — re-route them before the retired queues close.
+        self.drain_strays()?;
+        let retired: Vec<Sender<Job>> =
+            self.senders.lock().unwrap().split_off(n);
+        for tx in &retired {
+            let _ = tx.send(Job::Retire);
+        }
+        drop(retired); // queues close; Retire is their last job
+        let tail: Vec<Option<WorkerHandle>> =
+            self.workers.lock().unwrap().split_off(n);
+        for (i, handle) in tail.into_iter().enumerate() {
+            let Some(handle) = handle else { continue };
+            match handle.join() {
+                Ok(result) => result?,
+                Err(_) => {
+                    return Err(Error::Stream(format!(
+                        "worker {} died at retirement",
+                        n + i
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn install(&self, table: ShardTable) -> Result<()> {
+        let installed = self.shard_map.install(table)?;
+        self.metrics.epoch.set(installed.epoch());
+        Ok(())
+    }
+
+    /// Run one migration per (from, to) group of a move list computed
+    /// against `table`.
+    fn migrate_grouped(
+        &self,
+        table: &ShardTable,
+        moves: &[(u32, usize)],
+        workers: usize,
+    ) -> Result<()> {
+        let mut groups: BTreeMap<(usize, usize), Vec<u32>> = BTreeMap::new();
+        for &(shard, to) in moves {
+            let from = table.worker_of(shard);
+            if from != to {
+                groups.entry((from, to)).or_default().push(shard);
+            }
+        }
+        for ((from, to), shards) in groups {
+            self.migrate_set(from, to, &shards, workers)?;
+        }
+        Ok(())
+    }
+
+    /// The migration protocol for one shard set, `from` → `to`:
+    ///
+    /// 1. `Expect` to the new worker — samples for these shards that
+    ///    outrun their state get stashed, not misprocessed.
+    /// 2. Install the successor table (epoch + 1): new submissions now
+    ///    route to the new worker.
+    /// 3. `Seal` to the old worker: it finishes everything already
+    ///    queued (drain), snapshots every resident stream of the shards
+    ///    at its exact watermark, evicts them, disowns the shards, and
+    ///    replies with the codec-encoded bundle. Samples that raced in
+    ///    behind the seal are forwarded as strays and re-routed here,
+    ///    landing in the new worker's queue *before* the Adopt.
+    /// 4. `Adopt` to the new worker: restore each stream, take
+    ///    ownership, replay the stash in (stream, seq) order through
+    ///    the inclusive-watermark dedup — verdicts are bit-identical
+    ///    to an unmigrated run.
+    fn migrate_set(
+        &self,
+        from: usize,
+        to: usize,
+        shards: &[u32],
+        workers: usize,
+    ) -> Result<()> {
+        if shards.is_empty() || from == to {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let (from_tx, to_tx) = {
+            let g = self.senders.lock().unwrap();
+            match (g.get(from).cloned(), g.get(to).cloned()) {
+                (Some(f), Some(t)) => (f, t),
+                _ => {
+                    return Err(Error::Stream(format!(
+                        "migration {from} → {to} names a dead worker"
+                    )))
+                }
+            }
+        };
+        to_tx
+            .send(Job::Expect { shards: shards.to_vec() })
+            .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
+        let table = self.shard_map.snapshot();
+        let moves: Vec<(u32, usize)> =
+            shards.iter().map(|&s| (s, to)).collect();
+        self.install(table.with_moves(&moves, workers)?)?;
+        // From here on the table already routes the shards to `to`:
+        // any failure on the `from` side (a dead worker) must still
+        // deliver an Adopt — with whatever records were salvaged — so
+        // `to` takes ownership instead of stashing samples forever.
+        // Unsealed state is lost exactly as a worker crash loses it;
+        // resuming streams go through the normal checkpoint-restore
+        // path.
+        let seal = (|| -> Result<Vec<Vec<u8>>> {
+            let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
+            from_tx
+                .send(Job::Seal { shards: shards.to_vec(), reply: reply_tx })
+                .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
+            let bundle = reply_rx.recv().map_err(|_| {
+                Error::Stream(format!("worker {from} died mid-migration"))
+            })?;
+            // Barrier round: a submitter that routed under the old
+            // table may have enqueued samples behind the Seal while
+            // the old worker drained. An empty Seal is a pure
+            // rendezvous — when it answers, every such sample has been
+            // dequeued and forwarded as a stray, so the drain below
+            // catches them all and the Adopt's stash replay can sort
+            // them back into per-stream seq order.
+            let (barrier_tx, barrier_rx) = bounded::<SealBundle>(1);
+            from_tx
+                .send(Job::Seal { shards: Vec::new(), reply: barrier_tx })
+                .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
+            barrier_rx.recv().map_err(|_| {
+                Error::Stream(format!("worker {from} died mid-migration"))
+            })?;
+            Ok(bundle.records)
+        })();
+        let (records, seal_err) = match seal {
+            Ok(records) => (records, None),
+            Err(e) => (Vec::new(), Some(e)),
+        };
+        let n_streams = records.len() as u64;
+        // Strays forwarded up to the barrier must precede the Adopt in
+        // the new worker's queue so the stash replay sees them.
+        let drain_err = self.drain_strays().err();
+        to_tx
+            .send(Job::Adopt { shards: shards.to_vec(), records })
+            .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
+        if let Some(e) = seal_err.or(drain_err) {
+            return Err(e);
+        }
+        self.metrics.migrations.inc();
+        self.metrics.shards_moved.add(shards.len() as u64);
+        self.metrics.streams_migrated.add(n_streams);
+        self.metrics
+            .migration_time
+            .record(t0.elapsed().as_nanos() as u64);
+        // Re-baseline the rebalancer's load deltas: the seal drain just
+        // attributed the donor's queued backlog to shards that now map
+        // to the new owner — without a fresh snapshot the next
+        // `maybe_rebalance` would read that backlog as load on the new
+        // worker and ping-pong the shard straight back.
+        *self.last_shard_counts.lock().unwrap() =
+            self.shard_metrics.sample_counts();
+        Ok(())
+    }
+
     /// Finish: flush engines, stop workers, and return every remaining
     /// verdict (in addition to whatever `poll_results` already handed out).
     pub fn finish(self) -> Result<Vec<Classified>> {
-        self.stop(|| Job::Flush, "flush")
+        self.stop(|| Job::Flush, true)
     }
 
     /// Crash simulation: stop every worker WITHOUT flushing, abandoning
@@ -354,99 +975,368 @@ impl Service {
     /// shared [`StateManager`] (and whatever checkpoints it holds)
     /// survives — pass it to [`Service::start_with_state`] to failover.
     pub fn abort(self) -> Result<Vec<Classified>> {
-        self.stop(|| Job::Abort, "abort")
+        self.stop(|| Job::Abort, false)
     }
 
-    /// Shared shutdown sequence: send `last_job` to every worker, close
-    /// the queues, drain the results channel, join the workers.
+    /// Shared shutdown sequence: re-route strays (flush path), send
+    /// `last_job` to every worker, close the queues, drain the results
+    /// channel, join the workers. A worker that died reports *which*
+    /// worker and why (its panic message), not a bare join error.
     fn stop(
         self,
         last_job: impl Fn() -> Job,
-        what: &str,
+        reroute_strays: bool,
     ) -> Result<Vec<Classified>> {
-        for tx in &self.senders {
-            tx.send(last_job()).map_err(|_| {
-                Error::Stream(format!("worker gone at {what}"))
-            })?;
+        // A failed quiesce (a dead worker) must not abort the
+        // shutdown: keep going so the workers are joined and the
+        // dead one's own, more precise error can surface instead.
+        // The rebalance lock serializes the final stray drain against
+        // any in-flight migration (drain_strays' contract).
+        let quiesce_err = if reroute_strays {
+            let _guard = self.rebalance_lock.lock().unwrap();
+            self.quiesce().err()
+        } else {
+            None
+        };
+        {
+            let mut g = self.senders.lock().unwrap();
+            for tx in g.iter() {
+                // A dead worker's queue is already closed; its error
+                // surfaces at join below.
+                let _ = tx.send(last_job());
+            }
+            // Closes every queue even while ServiceHandles are alive
+            // (the registry is shared, not cloned).
+            g.clear();
         }
-        drop(self.senders); // workers exit after draining queues
+        drop(self.res_tx); // collectors see closure once workers finish
         let mut out = Vec::new();
         while let Ok(burst) = self.results_rx.recv() {
             out.extend(burst);
         }
-        for w in self.workers {
-            w.join()
-                .map_err(|_| Error::Stream("worker panicked".into()))??;
+        let mut first_err: Option<Error> = None;
+        for (widx, handle) in
+            self.workers.lock().unwrap().drain(..).enumerate()
+        {
+            let Some(handle) = handle else { continue };
+            let result = match handle.join() {
+                Ok(r) => r,
+                Err(_) => Err(Error::Stream(format!(
+                    "worker {widx} died: unreported panic"
+                ))),
+            };
+            if let Err(e) = result {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
         }
-        Ok(out)
+        match first_err.or(quiesce_err) {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
     }
 }
 
-/// Drop every stream idle for ≥ `evict_after` worker samples: engine
-/// state, in-memory checkpoint, durable checkpoints, and the worker's
-/// bookkeeping go together, so a re-appearing stream id starts fresh
-/// instead of resurrecting stale state. Scans once per `evict_after`
-/// ticks to keep the hot path O(1).
-#[allow(clippy::too_many_arguments)]
-fn evict_idle_streams(
-    engine: &mut dyn Engine,
-    state_mgr: &StateManager,
-    metrics: &ServiceMetrics,
-    evict_after: u64,
-    tick: u64,
-    last_seen: &mut HashMap<u64, u64>,
-    seen: &mut HashSet<u64>,
-    restored_at: &mut HashMap<u64, u64>,
-    inflight: &mut HashMap<(u64, u64), Instant>,
-) {
-    if evict_after == 0 || tick == 0 || tick % evict_after != 0 {
-        return;
-    }
-    let idle: Vec<u64> = last_seen
-        .iter()
-        .filter(|(_, &at)| tick - at >= evict_after)
-        .map(|(&sid, _)| sid)
-        .collect();
-    for sid in idle {
-        engine.evict(sid);
-        state_mgr.evict(sid);
-        seen.remove(&sid);
-        restored_at.remove(&sid);
-        last_seen.remove(&sid);
-        // The engine discarded the stream's in-flight verdicts; their
-        // latency records would otherwise leak forever.
-        inflight.retain(|(s, _), _| *s != sid);
-        metrics.stream_evictions.inc();
-    }
-}
-
-fn worker_loop(
-    rx: Receiver<Job>,
-    engine: &mut dyn Engine,
-    res_tx: Sender<Vec<Classified>>,
-    metrics: Arc<ServiceMetrics>,
-    state_mgr: Arc<StateManager>,
+/// One worker's loop state: engine-adjacent bookkeeping plus the shard
+/// sets driving the migration protocol. Ownership changes strictly in
+/// queue order (`Seal` removes, `Adopt` adds), which is what makes the
+/// protocol race-free without any cross-thread locking.
+struct Worker {
+    widx: usize,
+    virtual_shards: u32,
     policy: CheckpointPolicy,
-) -> Result<()> {
-    // submit-time of every in-flight sample, for latency accounting.
-    let mut inflight: HashMap<(u64, u64), Instant> = HashMap::new();
-    // Streams this worker has fed to its engine (restore-on-resume runs
-    // once, before a stream's first sample).
-    let mut seen: HashSet<u64> = HashSet::new();
-    // Watermark each stream was restored at: re-fed samples at or below
-    // it are already folded into the snapshot and must be dropped, so an
-    // upstream that replays from the watermark *inclusively* stays
-    // exactly-once instead of double-counting (or, worse, restarting).
-    let mut restored_at: HashMap<u64, u64> = HashMap::new();
-    // Idle-stream eviction bookkeeping: samples processed by this
-    // worker, and the tick each stream last appeared at.
-    let mut tick: u64 = 0;
-    let mut last_seen: HashMap<u64, u64> = HashMap::new();
-    // One burst send per engine call: metrics are batched too (counter
-    // adds are cheap but the channel lock is not).
-    let emit = |verdicts: Vec<EngineVerdict>,
-                inflight: &mut HashMap<(u64, u64), Instant>|
-     -> Result<()> {
+    res_tx: Sender<Vec<Classified>>,
+    stray_tx: Sender<Stray>,
+    metrics: Arc<ServiceMetrics>,
+    shard_metrics: Arc<ShardMetrics>,
+    state_mgr: Arc<StateManager>,
+    /// Shards this worker currently owns.
+    owned: HashSet<u32>,
+    /// Shards announced by `Expect` whose state has not arrived yet.
+    pending: HashSet<u32>,
+    /// Samples for pending shards, replayed in (stream, seq) order at
+    /// `Adopt`.
+    stash: Vec<(Sample, Instant)>,
+    /// submit-time of every in-flight sample, for latency accounting.
+    inflight: HashMap<(u64, u64), Instant>,
+    /// Streams this worker has fed to its engine (restore-on-resume
+    /// runs once, before a stream's first sample).
+    seen: HashSet<u64>,
+    /// Watermark each stream was restored at: re-fed samples at or
+    /// below it are already folded into the snapshot and must be
+    /// dropped, so an upstream that replays from the watermark
+    /// *inclusively* stays exactly-once instead of double-counting.
+    restored_at: HashMap<u64, u64>,
+    /// Idle-stream eviction bookkeeping: tick each stream last
+    /// appeared at.
+    last_seen: HashMap<u64, u64>,
+    /// Last sequence number folded into the engine per stream — the
+    /// exact watermark a migration seals the stream at.
+    last_seq: HashMap<u64, u64>,
+    /// Samples processed by this worker (eviction clock).
+    tick: u64,
+}
+
+impl Worker {
+    fn run(
+        &mut self,
+        rx: Receiver<Job>,
+        engine: &mut dyn Engine,
+    ) -> Result<()> {
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Sample(sample, t0) => {
+                    let mut verdicts = Vec::new();
+                    self.process(engine, sample, t0, &mut verdicts)?;
+                    self.evict_idle(engine);
+                    self.emit(verdicts)?;
+                }
+                Job::Batch(samples, t0) => {
+                    // Accumulate the whole burst's verdicts, emit once.
+                    let mut all = Vec::with_capacity(samples.len());
+                    for sample in samples {
+                        self.process(engine, sample, t0, &mut all)?;
+                        self.evict_idle(engine);
+                    }
+                    self.emit(all)?;
+                }
+                Job::Seal { shards, reply } => {
+                    self.seal(engine, &shards, &reply)?;
+                }
+                Job::Expect { shards } => {
+                    self.pending.extend(shards);
+                }
+                Job::Adopt { shards, records } => {
+                    self.adopt(engine, &shards, records)?;
+                }
+                Job::Retire => {
+                    // All shards were migrated off before retirement,
+                    // so the flush is a formality for a strictly-empty
+                    // engine. Do NOT exit yet: a submitter that cloned
+                    // this queue's sender mid-submit may still enqueue
+                    // a last sample, which must be stray-forwarded, not
+                    // dropped — the loop ends when every sender (the
+                    // registry's and any such transient clone) is gone.
+                    debug_assert!(self.owned.is_empty());
+                    let verdicts = engine.flush()?;
+                    self.emit(verdicts)?;
+                }
+                Job::Flush => {
+                    let verdicts = engine.flush()?;
+                    self.emit(verdicts)?;
+                }
+                // Crash simulation: drop everything on the floor.
+                Job::Abort => return Ok(()),
+            }
+        }
+        // Input closed: final flush for whatever is still buffered.
+        let verdicts = engine.flush()?;
+        self.emit(verdicts)?;
+        Ok(())
+    }
+
+    /// One sample through the engine: ownership check (stash or
+    /// forward when the shard is in motion), restore-on-resume before
+    /// a stream's first sample, replay-window dedup, ingest, then
+    /// periodic engine-agnostic checkpointing — identical on the
+    /// single-sample, batch, and stash-replay paths.
+    fn process(
+        &mut self,
+        engine: &mut dyn Engine,
+        sample: Sample,
+        t0: Instant,
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        let (sid, seq) = (sample.stream_id, sample.seq);
+        let shard = shard_of(sid, self.virtual_shards);
+        if !self.owned.contains(&shard) {
+            if self.pending.contains(&shard) {
+                // State is on its way (Expect seen, Adopt not yet).
+                self.stash.push((sample, t0));
+            } else {
+                // Routed under a stale table — hand it back for
+                // re-routing. Never processed here, never lost.
+                self.metrics.stray_reroutes.inc();
+                let _ = self.stray_tx.send((sample, t0));
+            }
+            return Ok(());
+        }
+        self.tick += 1;
+        self.shard_metrics.shard(shard).samples.inc();
+        self.last_seen.insert(sid, self.tick);
+        if self.seen.insert(sid) && self.policy.restore_on_resume && seq > 0
+        {
+            // First sample of a mid-stream resume: adopt the newest
+            // checkpoint. The upstream replays at-least-once from the
+            // watermark (inclusively or after it); either way the
+            // watermark filter below keeps processing exactly-once.
+            if let Some(cp) = self.state_mgr.latest(sid) {
+                engine.restore(sid, cp.snapshot)?;
+                self.metrics.stream_restores.inc();
+                self.restored_at.insert(sid, cp.seq);
+                self.last_seq.insert(sid, cp.seq);
+            }
+        }
+        if let Some(&wm) = self.restored_at.get(&sid) {
+            if seq <= wm {
+                // Already folded into the restored snapshot: dropping
+                // it (instead of re-ingesting) is what keeps the
+                // detector state exactly-once under an inclusive
+                // replay window.
+                self.metrics.replay_skipped.inc();
+                return Ok(());
+            }
+        }
+        if self.last_seq.get(&sid).is_some_and(|&last| seq <= last) {
+            // Watermark guard: a sample at or below the stream's last
+            // ingested seq can only be a duplicate or a pathologically
+            // late stray (a submitter stalled across an entire
+            // migration). Ingesting it would corrupt the order-
+            // dependent TEDA recurrence AND regress the seal
+            // watermark; dropping it keeps every other verdict exact.
+            self.metrics.stale_drops.inc();
+            return Ok(());
+        }
+        self.inflight.insert((sid, seq), t0);
+        self.last_seq.insert(sid, seq);
+        out.extend(engine.ingest(&sample)?);
+        if self.policy.every > 0 && (seq + 1) % self.policy.every == 0 {
+            if let Some(snapshot) = engine.snapshot(sid) {
+                self.state_mgr.publish(StateCheckpoint {
+                    stream_id: sid,
+                    seq,
+                    snapshot,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Migration, old-worker side: snapshot every resident stream of
+    /// the sealed shards at its exact watermark, publish the
+    /// checkpoints (failover sees the same watermark), encode them as
+    /// the wire bundle, evict the streams, and disown the shards.
+    fn seal(
+        &mut self,
+        engine: &mut dyn Engine,
+        shards: &[u32],
+        reply: &Sender<SealBundle>,
+    ) -> Result<()> {
+        let sealed: HashSet<u32> = shards.iter().copied().collect();
+        let vs = self.virtual_shards;
+        let mut sids: Vec<u64> = self
+            .last_seq
+            .keys()
+            .copied()
+            .filter(|&sid| sealed.contains(&shard_of(sid, vs)))
+            .collect();
+        sids.sort_unstable();
+        let mut records = Vec::with_capacity(sids.len());
+        for sid in sids {
+            let Some(snapshot) = engine.snapshot(sid) else { continue };
+            let cp = StateCheckpoint {
+                stream_id: sid,
+                seq: self.last_seq[&sid],
+                snapshot,
+            };
+            records.push(codec::encode(&cp));
+            self.state_mgr.publish(cp);
+            engine.evict(sid);
+            self.seen.remove(&sid);
+            self.restored_at.remove(&sid);
+            self.last_seen.remove(&sid);
+            self.last_seq.remove(&sid);
+            // In-flight verdicts migrate inside the snapshot; the new
+            // worker re-emits them (latency unknown there, reported as
+            // 0 and kept out of the histogram).
+            self.inflight.retain(|(s, _), _| *s != sid);
+        }
+        for shard in shards {
+            self.owned.remove(shard);
+        }
+        // Rebalancer gone mid-protocol (service torn down): nothing to
+        // do — the checkpoints above are already published.
+        let _ = reply.send(SealBundle { records });
+        Ok(())
+    }
+
+    /// Migration, new-worker side: decode + restore every stream of the
+    /// bundle, take ownership, then replay stashed samples in
+    /// (stream, seq) order through the inclusive-watermark dedup.
+    fn adopt(
+        &mut self,
+        engine: &mut dyn Engine,
+        shards: &[u32],
+        records: Vec<Vec<u8>>,
+    ) -> Result<()> {
+        for record in records {
+            let cp = codec::decode(&record)?;
+            let sid = cp.stream_id;
+            engine.restore(sid, cp.snapshot)?;
+            self.seen.insert(sid);
+            self.restored_at.insert(sid, cp.seq);
+            self.last_seq.insert(sid, cp.seq);
+            self.last_seen.insert(sid, self.tick);
+        }
+        for &shard in shards {
+            self.pending.remove(&shard);
+            self.owned.insert(shard);
+        }
+        // Replay whatever outran its state. Stash order is arrival
+        // order across two paths (direct post-swap submissions and
+        // re-routed strays), so sort back into per-stream seq order;
+        // the dedup drops anything the snapshots already cover.
+        let vs = self.virtual_shards;
+        let owned = &self.owned;
+        let (ready, keep): (Vec<_>, Vec<_>) = std::mem::take(&mut self.stash)
+            .into_iter()
+            .partition(|(s, _)| owned.contains(&shard_of(s.stream_id, vs)));
+        self.stash = keep;
+        let mut ready = ready;
+        ready.sort_by_key(|(s, _)| (s.stream_id, s.seq));
+        let mut verdicts = Vec::new();
+        for (sample, t0) in ready {
+            self.process(engine, sample, t0, &mut verdicts)?;
+        }
+        self.evict_idle(engine);
+        self.emit(verdicts)?;
+        Ok(())
+    }
+
+    /// Drop every stream idle for ≥ `evict_after` worker samples:
+    /// engine state, in-memory checkpoint, durable checkpoints, and the
+    /// worker's bookkeeping go together, so a re-appearing stream id
+    /// starts fresh instead of resurrecting stale state. Scans once per
+    /// `evict_after` ticks to keep the hot path O(1).
+    fn evict_idle(&mut self, engine: &mut dyn Engine) {
+        let after = self.policy.evict_after;
+        if after == 0 || self.tick == 0 || self.tick % after != 0 {
+            return;
+        }
+        let idle: Vec<u64> = self
+            .last_seen
+            .iter()
+            .filter(|(_, &at)| self.tick - at >= after)
+            .map(|(&sid, _)| sid)
+            .collect();
+        for sid in idle {
+            engine.evict(sid);
+            self.state_mgr.evict(sid);
+            self.seen.remove(&sid);
+            self.restored_at.remove(&sid);
+            self.last_seen.remove(&sid);
+            self.last_seq.remove(&sid);
+            // The engine discarded the stream's in-flight verdicts;
+            // their latency records would otherwise leak forever.
+            self.inflight.retain(|(s, _), _| *s != sid);
+            self.metrics.stream_evictions.inc();
+        }
+    }
+
+    /// One burst send per engine call: metrics are batched too (counter
+    /// adds are cheap but the channel lock is not).
+    fn emit(&mut self, verdicts: Vec<EngineVerdict>) -> Result<()> {
         if verdicts.is_empty() {
             return Ok(());
         }
@@ -454,13 +1344,18 @@ fn worker_loop(
         let mut outliers = 0u64;
         for v in verdicts {
             // Verdicts without a submit record (re-emitted in-flight
-            // work after a restore) report 0 but are NOT recorded into
-            // the histogram — fabricated 0 ns entries would drag every
-            // post-failover quantile toward zero.
-            let latency_ns = match inflight.remove(&(v.stream_id, v.seq)) {
+            // work after a restore or migration) report 0 but are NOT
+            // recorded into the histograms — fabricated 0 ns entries
+            // would drag every post-failover quantile toward zero.
+            let latency_ns = match self.inflight.remove(&(v.stream_id, v.seq))
+            {
                 Some(t) => {
                     let ns = t.elapsed().as_nanos() as u64;
-                    metrics.latency.record(ns);
+                    self.metrics.latency.record(ns);
+                    self.shard_metrics
+                        .shard(shard_of(v.stream_id, self.virtual_shards))
+                        .latency
+                        .record(ns);
                     ns
                 }
                 None => 0,
@@ -470,135 +1365,16 @@ fn worker_loop(
             }
             burst.push(Classified { verdict: v, latency_ns });
         }
-        metrics.verdicts_out.add(burst.len() as u64);
-        metrics.outliers.add(outliers);
-        res_tx
-            .send(burst)
-            .map_err(|_| Error::Stream("results channel closed".into()))?;
+        self.metrics.verdicts_out.add(burst.len() as u64);
+        self.metrics.outliers.add(outliers);
+        self.res_tx.send(burst).map_err(|_| {
+            Error::Stream(format!(
+                "worker {}: results channel closed",
+                self.widx
+            ))
+        })?;
         Ok(())
-    };
-
-    // One sample through the engine: restore-on-resume before its first
-    // sample of a stream, replay-window dedup, ingest, then periodic
-    // engine-agnostic checkpointing — identical on the single-sample
-    // and batch paths.
-    let process = |engine: &mut dyn Engine,
-                   sample: Sample,
-                   t0: Instant,
-                   inflight: &mut HashMap<(u64, u64), Instant>,
-                   seen: &mut HashSet<u64>,
-                   restored_at: &mut HashMap<u64, u64>,
-                   tick: u64,
-                   last_seen: &mut HashMap<u64, u64>,
-                   out: &mut Vec<EngineVerdict>|
-     -> Result<()> {
-        let (sid, seq) = (sample.stream_id, sample.seq);
-        last_seen.insert(sid, tick);
-        if seen.insert(sid) && policy.restore_on_resume && seq > 0 {
-            // First sample of a mid-stream resume: adopt the newest
-            // checkpoint. The upstream replays at-least-once from the
-            // watermark (inclusively or after it); either way the
-            // watermark filter below keeps processing exactly-once.
-            if let Some(cp) = state_mgr.latest(sid) {
-                engine.restore(sid, cp.snapshot)?;
-                metrics.stream_restores.inc();
-                restored_at.insert(sid, cp.seq);
-            }
-        }
-        if let Some(&wm) = restored_at.get(&sid) {
-            if seq <= wm {
-                // Already folded into the restored snapshot: dropping it
-                // (instead of re-ingesting) is what keeps the detector
-                // state exactly-once under an inclusive replay window.
-                metrics.replay_skipped.inc();
-                return Ok(());
-            }
-        }
-        inflight.insert((sid, seq), t0);
-        out.extend(engine.ingest(&sample)?);
-        if policy.every > 0 && (seq + 1) % policy.every == 0 {
-            if let Some(snapshot) = engine.snapshot(sid) {
-                state_mgr.publish(StateCheckpoint {
-                    stream_id: sid,
-                    seq,
-                    snapshot,
-                });
-            }
-        }
-        Ok(())
-    };
-
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Sample(sample, t0) => {
-                let mut verdicts = Vec::new();
-                tick += 1;
-                process(
-                    &mut *engine,
-                    sample,
-                    t0,
-                    &mut inflight,
-                    &mut seen,
-                    &mut restored_at,
-                    tick,
-                    &mut last_seen,
-                    &mut verdicts,
-                )?;
-                evict_idle_streams(
-                    &mut *engine,
-                    &state_mgr,
-                    &metrics,
-                    policy.evict_after,
-                    tick,
-                    &mut last_seen,
-                    &mut seen,
-                    &mut restored_at,
-                    &mut inflight,
-                );
-                emit(verdicts, &mut inflight)?;
-            }
-            Job::Batch(samples, t0) => {
-                // Accumulate the whole burst's verdicts and emit once.
-                let mut all = Vec::with_capacity(samples.len());
-                for sample in samples {
-                    tick += 1;
-                    process(
-                        &mut *engine,
-                        sample,
-                        t0,
-                        &mut inflight,
-                        &mut seen,
-                        &mut restored_at,
-                        tick,
-                        &mut last_seen,
-                        &mut all,
-                    )?;
-                    evict_idle_streams(
-                        &mut *engine,
-                        &state_mgr,
-                        &metrics,
-                        policy.evict_after,
-                        tick,
-                        &mut last_seen,
-                        &mut seen,
-                        &mut restored_at,
-                        &mut inflight,
-                    );
-                }
-                emit(all, &mut inflight)?;
-            }
-            Job::Flush => {
-                let verdicts = engine.flush()?;
-                emit(verdicts, &mut inflight)?;
-            }
-            // Crash simulation: drop everything on the floor, no flush.
-            Job::Abort => return Ok(()),
-        }
     }
-    // Input closed: final flush for whatever is still buffered.
-    let verdicts = engine.flush()?;
-    emit(verdicts, &mut inflight)?;
-    Ok(())
 }
 
 #[cfg(test)]
@@ -871,5 +1647,206 @@ mod tests {
         }
         let out = svc.finish().unwrap();
         assert_eq!(out.len(), 150);
+    }
+
+    // ----------------------------------------- elastic sharding units
+
+    #[test]
+    fn migrate_shards_moves_streams_and_bumps_epoch() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        let metrics = svc.metrics();
+        for seq in 0..30u64 {
+            for sid in 0..6u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.4, 0.6],
+                })
+                .unwrap();
+            }
+        }
+        // Move everything worker 0 owns to worker 1.
+        let table = svc.table();
+        let moves: Vec<(u32, usize)> =
+            table.shards_on(0).into_iter().map(|s| (s, 1)).collect();
+        svc.migrate_shards(&moves).unwrap();
+        assert!(svc.table().epoch() > 0);
+        assert!(svc.table().shards_on(0).is_empty());
+        assert_eq!(metrics.migrations.get(), 1);
+        assert_eq!(metrics.epoch.get(), svc.table().epoch());
+        // Streams keep flowing — and continue their sequence (k != 1).
+        for seq in 30..40u64 {
+            for sid in 0..6u64 {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.4, 0.6],
+                })
+                .unwrap();
+            }
+        }
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 240);
+        for c in &out {
+            assert_eq!(c.verdict.k, c.verdict.seq + 1, "migration restarted a stream");
+        }
+    }
+
+    #[test]
+    fn scale_up_and_down_keeps_every_verdict() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        let submit_range = |from: u64, to: u64| {
+            for seq in from..to {
+                for sid in 0..8u64 {
+                    svc.submit(Sample {
+                        stream_id: sid,
+                        seq,
+                        values: vec![0.2, 0.9],
+                    })
+                    .unwrap();
+                }
+            }
+        };
+        submit_range(0, 40);
+        svc.scale_to(5).unwrap();
+        assert_eq!(svc.workers(), 5);
+        assert_eq!(svc.table().workers(), 5);
+        submit_range(40, 80);
+        svc.scale_to(1).unwrap();
+        assert_eq!(svc.workers(), 1);
+        assert!(svc.table().shards_on(0).len() as u32 == svc.table().virtual_shards());
+        submit_range(80, 120);
+        let metrics = svc.metrics();
+        assert_eq!(metrics.workers_active.get(), 1);
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 8 * 120);
+        for c in &out {
+            assert_eq!(c.verdict.k, c.verdict.seq + 1);
+        }
+    }
+
+    #[test]
+    fn scale_to_same_size_is_a_noop_and_zero_is_rejected() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        svc.scale_to(2).unwrap();
+        assert_eq!(svc.table().epoch(), 0, "no-op must not bump the epoch");
+        assert!(svc.scale_to(0).is_err());
+        svc.finish().unwrap();
+    }
+
+    #[test]
+    fn maybe_rebalance_moves_hot_shards_off_the_hot_worker() {
+        // All load on the shards of one stream → one worker is hot.
+        // virtual_shards kept small so donor shard lists stay readable.
+        let mut cfg = base_cfg(EngineKind::Software, 2);
+        cfg.sharding.virtual_shards = 8;
+        let svc = Service::start(cfg).unwrap();
+        // Find streams landing on DISTINCT worker-0 shards and hammer
+        // them — load split across several shards is what the greedy
+        // mover can actually act on (a single monolithic hot shard is
+        // correctly left alone: moving it would just move the hotspot).
+        let table = svc.table();
+        let mut seen_shards = HashSet::new();
+        let hot_sids: Vec<u64> = (0..256u64)
+            .filter(|&sid| {
+                let (w, shard) = table.route(sid);
+                w == 0 && seen_shards.insert(shard)
+            })
+            .take(3)
+            .collect();
+        assert!(hot_sids.len() >= 2, "need ≥ 2 hot shards on worker 0");
+        for seq in 0..100u64 {
+            for &sid in &hot_sids {
+                svc.submit(Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.1, 0.5],
+                })
+                .unwrap();
+            }
+        }
+        let moves = svc.maybe_rebalance().unwrap();
+        assert!(!moves.is_empty(), "skewed load must trigger moves");
+        for &(_, to) in &moves {
+            assert_eq!(to, 1, "moves target the cool worker");
+        }
+        // Balanced load afterwards → second check does nothing.
+        assert!(svc.maybe_rebalance().unwrap().is_empty());
+        svc.finish().unwrap();
+    }
+
+    #[test]
+    fn out_of_order_duplicates_are_dropped_not_ingested() {
+        // The watermark guard: a sample at or below a stream's last
+        // ingested seq (duplicate or pathologically late stray) must
+        // be dropped, not folded into the order-dependent recurrence.
+        let svc = Service::start(base_cfg(EngineKind::Software, 1)).unwrap();
+        let metrics = svc.metrics();
+        for seq in 0..5u64 {
+            svc.submit(Sample { stream_id: 0, seq, values: vec![0.1, 0.2] })
+                .unwrap();
+        }
+        // Replay seq 2 out of order.
+        svc.submit(Sample { stream_id: 0, seq: 2, values: vec![9.9, 9.9] })
+            .unwrap();
+        svc.submit(Sample { stream_id: 0, seq: 5, values: vec![0.1, 0.2] })
+            .unwrap();
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 6, "duplicate must not produce a verdict");
+        assert_eq!(metrics.stale_drops.get(), 1);
+        for c in &out {
+            assert_eq!(c.verdict.k, c.verdict.seq + 1, "state uncorrupted");
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_counted_and_named_at_drain() {
+        // A malformed sample (wrong feature dimension) panics the TEDA
+        // recurrence inside worker 0. The guard must count it, keep the
+        // process alive, and report the worker index at finish.
+        let svc = Service::start(base_cfg(EngineKind::Software, 1)).unwrap();
+        let metrics = svc.metrics();
+        svc.submit(Sample { stream_id: 0, seq: 0, values: vec![0.5] })
+            .unwrap();
+        let err = svc.finish().expect_err("panicked worker must surface");
+        let msg = err.to_string();
+        assert!(msg.contains("worker 0 panicked"), "got: {msg}");
+        assert_eq!(metrics.worker_panics.get(), 1);
+    }
+
+    #[test]
+    fn handle_follows_scaling() {
+        // A handle cloned before a resize must keep routing correctly
+        // afterwards (shared registry, not a point-in-time copy).
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        let handle = svc.handle();
+        for seq in 0..10u64 {
+            for sid in 0..4u64 {
+                handle
+                    .submit(Sample {
+                        stream_id: sid,
+                        seq,
+                        values: vec![0.3, 0.3],
+                    })
+                    .unwrap();
+            }
+        }
+        svc.scale_to(4).unwrap();
+        for seq in 10..20u64 {
+            for sid in 0..4u64 {
+                handle
+                    .submit(Sample {
+                        stream_id: sid,
+                        seq,
+                        values: vec![0.3, 0.3],
+                    })
+                    .unwrap();
+            }
+        }
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 80);
+        for c in &out {
+            assert_eq!(c.verdict.k, c.verdict.seq + 1);
+        }
     }
 }

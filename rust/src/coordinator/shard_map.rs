@@ -1,0 +1,420 @@
+//! Versioned shard map — stream → virtual shard → worker routing.
+//!
+//! PRs 0–4 pinned every stream to a worker with a static
+//! `fnv1a(stream_id) % workers` at startup, so one hot shard capped the
+//! whole service and the worker count could never change while serving.
+//! This module replaces that with the classic two-level scheme:
+//!
+//! 1. `stream_id` hashes to one of a **fixed** number of virtual shards
+//!    ([`shard_of`]; the count never changes for the lifetime of a
+//!    service, so the stream → shard mapping is immutable and needs no
+//!    coordination), and
+//! 2. an **epoch-numbered** shard → worker assignment table
+//!    ([`ShardTable`]) that CAN change: migrations and worker scaling
+//!    install a successor table (epoch + 1) into the shared
+//!    [`ShardMap`], and every submitter picks it up on its next route.
+//!
+//! Readers take an `Arc` snapshot ([`ShardMap::snapshot`]) — routing
+//! decisions within one operation are made against one consistent
+//! epoch, and a snapshot held across a swap is *detectably* stale (its
+//! epoch lags), which is what the coordinator's stray-sample forwarding
+//! keys off.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::propkit::fnv1a;
+use crate::{Error, Result};
+
+/// Default virtual shard count: enough granularity to balance hundreds
+/// of workers, small enough that per-shard gauges stay cheap.
+pub const DEFAULT_VIRTUAL_SHARDS: u32 = 256;
+
+/// Immutable stream → virtual shard mapping (FNV-1a over the
+/// little-endian stream id, like the old router, then mod the fixed
+/// shard count). Deterministic across runs and processes, so
+/// checkpoints and shard diagnostics agree between incarnations.
+#[inline]
+pub fn shard_of(stream_id: u64, virtual_shards: u32) -> u32 {
+    debug_assert!(virtual_shards > 0);
+    (fnv1a(&stream_id.to_le_bytes()) % virtual_shards as u64) as u32
+}
+
+/// One epoch of the shard → worker assignment.
+///
+/// Tables are immutable once built; mutation is modeled as building a
+/// successor (epoch + 1) via [`ShardTable::with_moves`] /
+/// [`ShardTable::with_workers`] and installing it into the shared
+/// [`ShardMap`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTable {
+    epoch: u64,
+    /// Worker index per shard (`assignment[shard] = worker`).
+    assignment: Vec<u32>,
+    workers: usize,
+}
+
+impl ShardTable {
+    /// Epoch-0 table spreading shards round-robin across `workers`.
+    ///
+    /// # Panics
+    /// Panics when `virtual_shards == 0` or `workers == 0`.
+    pub fn new_uniform(virtual_shards: u32, workers: usize) -> Self {
+        assert!(virtual_shards > 0, "need at least one virtual shard");
+        assert!(workers > 0, "need at least one worker");
+        ShardTable {
+            epoch: 0,
+            assignment: (0..virtual_shards)
+                .map(|s| (s as usize % workers) as u32)
+                .collect(),
+            workers,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn virtual_shards(&self) -> u32 {
+        self.assignment.len() as u32
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Worker currently owning a shard.
+    #[inline]
+    pub fn worker_of(&self, shard: u32) -> usize {
+        self.assignment[shard as usize] as usize
+    }
+
+    /// Virtual shard of a stream (table-local shard count).
+    #[inline]
+    pub fn shard_of(&self, stream_id: u64) -> u32 {
+        shard_of(stream_id, self.virtual_shards())
+    }
+
+    /// Full route: `(worker, shard)` for a stream.
+    #[inline]
+    pub fn route(&self, stream_id: u64) -> (usize, u32) {
+        let shard = self.shard_of(stream_id);
+        (self.worker_of(shard), shard)
+    }
+
+    /// Shards owned by one worker, ascending.
+    pub fn shards_on(&self, worker: usize) -> Vec<u32> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &w)| w as usize == worker)
+            .map(|(s, _)| s as u32)
+            .collect()
+    }
+
+    /// Shards per worker.
+    pub fn shard_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workers];
+        for &w in &self.assignment {
+            counts[w as usize] += 1;
+        }
+        counts
+    }
+
+    /// Distribution diagnostic: per-WORKER stream counts for a set of
+    /// ids (the old `Router::load`).
+    pub fn load(&self, stream_ids: impl Iterator<Item = u64>) -> Vec<usize> {
+        let mut counts = vec![0usize; self.workers];
+        for sid in stream_ids {
+            counts[self.route(sid).0] += 1;
+        }
+        counts
+    }
+
+    /// Per-SHARD stream counts for a set of ids.
+    pub fn shard_load(
+        &self,
+        stream_ids: impl Iterator<Item = u64>,
+    ) -> Vec<usize> {
+        let mut counts = vec![0usize; self.assignment.len()];
+        for sid in stream_ids {
+            counts[self.shard_of(sid) as usize] += 1;
+        }
+        counts
+    }
+
+    /// Successor table (epoch + 1) with `moves` applied and the worker
+    /// count set to `workers` (≥ every move target + 1; pass the
+    /// current count for plain migrations).
+    pub fn with_moves(
+        &self,
+        moves: &[(u32, usize)],
+        workers: usize,
+    ) -> Result<ShardTable> {
+        if workers == 0 {
+            return Err(Error::Stream("shard table needs ≥ 1 worker".into()));
+        }
+        let mut assignment = self.assignment.clone();
+        for &(shard, to) in moves {
+            let slot = assignment.get_mut(shard as usize).ok_or_else(|| {
+                Error::Stream(format!(
+                    "shard {shard} out of range (virtual_shards = {})",
+                    self.assignment.len()
+                ))
+            })?;
+            if to >= workers {
+                return Err(Error::Stream(format!(
+                    "shard {shard} → worker {to}, but only {workers} \
+                     workers exist"
+                )));
+            }
+            *slot = to as u32;
+        }
+        if let Some(&w) = assignment.iter().find(|&&w| w as usize >= workers)
+        {
+            return Err(Error::Stream(format!(
+                "worker {w} still owns shards but the table is shrinking \
+                 to {workers} workers — migrate its shards first"
+            )));
+        }
+        Ok(ShardTable { epoch: self.epoch + 1, assignment, workers })
+    }
+
+    /// Successor table (epoch + 1) that only changes the worker count.
+    /// Shrinking requires every retired worker to be shard-free.
+    pub fn with_workers(&self, workers: usize) -> Result<ShardTable> {
+        self.with_moves(&[], workers)
+    }
+
+    /// Minimal-movement rebalance onto `new_workers` workers: shards on
+    /// retired workers (index ≥ `new_workers`) all move; surviving
+    /// workers then donate their surplus to whoever is below the
+    /// balanced share. Returns the move list (may be empty) —
+    /// deterministic, so two incarnations plan identically.
+    pub fn rebalance_moves(&self, new_workers: usize) -> Vec<(u32, usize)> {
+        if new_workers == 0 {
+            return Vec::new();
+        }
+        let vs = self.assignment.len();
+        let base = vs / new_workers;
+        let extra = vs % new_workers; // workers 0..extra get base + 1
+        let target =
+            |w: usize| if w < extra { base + 1 } else { base };
+        let mut counts = vec![0usize; new_workers];
+        // Shards stranded on retired workers move unconditionally.
+        let mut homeless: Vec<u32> = Vec::new();
+        for (s, &w) in self.assignment.iter().enumerate() {
+            if (w as usize) < new_workers {
+                counts[w as usize] += 1;
+            } else {
+                homeless.push(s as u32);
+            }
+        }
+        // Surviving workers donate their surplus (highest shard ids
+        // first — any choice works; this one is deterministic).
+        for w in 0..new_workers.min(self.workers) {
+            let mut surplus = counts[w].saturating_sub(target(w));
+            if surplus == 0 {
+                continue;
+            }
+            for (s, &owner) in self.assignment.iter().enumerate().rev() {
+                if surplus == 0 {
+                    break;
+                }
+                if owner as usize == w {
+                    homeless.push(s as u32);
+                    counts[w] -= 1;
+                    surplus -= 1;
+                }
+            }
+        }
+        homeless.sort_unstable();
+        // Hand the pool to whoever is below target, lowest index first.
+        let mut moves = Vec::with_capacity(homeless.len());
+        let mut next = 0usize;
+        for shard in homeless {
+            while counts[next] >= target(next) {
+                next = (next + 1) % new_workers;
+            }
+            counts[next] += 1;
+            moves.push((shard, next));
+        }
+        // Drop no-op moves (a "homeless" shard can land back home when
+        // the donor was only just above target).
+        moves
+            .into_iter()
+            .filter(|&(s, to)| self.assignment[s as usize] as usize != to)
+            .collect()
+    }
+}
+
+/// The shared, swappable routing state: submitters and workers hold an
+/// `Arc<ShardMap>` and take [`ShardMap::snapshot`] per operation; the
+/// rebalancer installs successor tables with [`ShardMap::install`].
+#[derive(Debug)]
+pub struct ShardMap {
+    current: Mutex<Arc<ShardTable>>,
+}
+
+impl ShardMap {
+    pub fn new(table: ShardTable) -> Self {
+        ShardMap { current: Mutex::new(Arc::new(table)) }
+    }
+
+    /// Cheap consistent snapshot of the current table.
+    pub fn snapshot(&self) -> Arc<ShardTable> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Current epoch.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// Install a successor table. The epoch must strictly advance —
+    /// concurrent rebalancers racing each other is a bug, not a merge.
+    pub fn install(&self, table: ShardTable) -> Result<Arc<ShardTable>> {
+        let mut cur = self.current.lock().unwrap();
+        if table.epoch <= cur.epoch {
+            return Err(Error::Stream(format!(
+                "shard map epoch must advance (current {}, offered {})",
+                cur.epoch, table.epoch
+            )));
+        }
+        let table = Arc::new(table);
+        *cur = table.clone();
+        Ok(table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for sid in 0..1000u64 {
+            assert_eq!(shard_of(sid, 256), shard_of(sid, 256));
+            assert!(shard_of(sid, 256) < 256);
+            assert!(shard_of(sid, 7) < 7);
+        }
+    }
+
+    #[test]
+    fn uniform_table_routes_stably_and_covers_all_workers() {
+        let t = ShardTable::new_uniform(256, 4);
+        assert_eq!(t.epoch(), 0);
+        assert_eq!(t.workers(), 4);
+        assert_eq!(t.shard_counts(), vec![64; 4]);
+        for sid in 0..100u64 {
+            assert_eq!(t.route(sid), t.route(sid));
+            assert!(t.route(sid).0 < 4);
+        }
+    }
+
+    #[test]
+    fn stream_distribution_roughly_uniform() {
+        let t = ShardTable::new_uniform(256, 8);
+        let load = t.load(0..8000);
+        // each worker should get 1000 ± 35%
+        for (w, &c) in load.iter().enumerate() {
+            assert!(c > 650 && c < 1350, "worker {w}: {c}");
+        }
+        assert_eq!(t.shard_load(0..8000).iter().sum::<usize>(), 8000);
+    }
+
+    #[test]
+    fn single_worker_takes_all() {
+        let t = ShardTable::new_uniform(16, 1);
+        assert_eq!(t.load(0..50), vec![50]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_rejected() {
+        ShardTable::new_uniform(16, 0);
+    }
+
+    #[test]
+    fn moves_advance_the_epoch_and_reroute() {
+        let t = ShardTable::new_uniform(8, 2);
+        let shard = t.shard_of(42);
+        let old_worker = t.worker_of(shard);
+        let to = 1 - old_worker;
+        let t2 = t.with_moves(&[(shard, to)], 2).unwrap();
+        assert_eq!(t2.epoch(), 1);
+        assert_eq!(t2.worker_of(shard), to);
+        assert_eq!(t2.route(42).0, to);
+        // Everything else is untouched.
+        for s in 0..8u32 {
+            if s != shard {
+                assert_eq!(t2.worker_of(s), t.worker_of(s));
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_moves_rejected() {
+        let t = ShardTable::new_uniform(8, 2);
+        assert!(t.with_moves(&[(99, 0)], 2).is_err()); // no such shard
+        assert!(t.with_moves(&[(0, 5)], 2).is_err()); // no such worker
+        // Shrinking under a still-loaded worker is rejected.
+        assert!(t.with_workers(1).is_err());
+        assert!(t.with_workers(0).is_err());
+    }
+
+    #[test]
+    fn rebalance_moves_grow_is_minimal_and_balanced() {
+        let t = ShardTable::new_uniform(256, 4);
+        let moves = t.rebalance_moves(8);
+        // Growing 4 → 8 must move exactly half the shards.
+        assert_eq!(moves.len(), 128);
+        let t2 = t.with_moves(&moves, 8).unwrap();
+        assert_eq!(t2.shard_counts(), vec![32; 8]);
+        // And only to the new workers (no churn among survivors).
+        for &(_, to) in &moves {
+            assert!(to >= 4, "grow moved a shard between survivors");
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_shrink_empties_retired_workers() {
+        let t = ShardTable::new_uniform(256, 8);
+        let moves = t.rebalance_moves(3);
+        let t2 = t.with_moves(&moves, 3).unwrap();
+        let counts = t2.shard_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 256);
+        assert!(counts.iter().all(|&c| c == 85 || c == 86), "{counts:?}");
+    }
+
+    #[test]
+    fn rebalance_moves_noop_when_already_balanced() {
+        let t = ShardTable::new_uniform(256, 4);
+        assert!(t.rebalance_moves(4).is_empty());
+    }
+
+    #[test]
+    fn rebalance_handles_non_dividing_counts() {
+        let t = ShardTable::new_uniform(10, 3);
+        let moves = t.rebalance_moves(4);
+        let t2 = t.with_moves(&moves, 4).unwrap();
+        let counts = t2.shard_counts();
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| c == 2 || c == 3), "{counts:?}");
+    }
+
+    #[test]
+    fn map_snapshot_and_install() {
+        let map = ShardMap::new(ShardTable::new_uniform(8, 2));
+        let snap0 = map.snapshot();
+        assert_eq!(snap0.epoch(), 0);
+        let t1 = snap0.with_moves(&[(0, 1)], 2).unwrap();
+        map.install(t1).unwrap();
+        assert_eq!(map.epoch(), 1);
+        // The old snapshot is stale but still readable (and detectably
+        // behind).
+        assert!(snap0.epoch() < map.epoch());
+        // Epochs must strictly advance.
+        let stale = snap0.with_moves(&[(1, 1)], 2).unwrap(); // epoch 1 again
+        assert!(map.install(stale).is_err());
+    }
+}

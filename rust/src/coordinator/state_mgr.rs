@@ -145,6 +145,16 @@ impl StateManager {
         Ok(recovered)
     }
 
+    /// Checkpointed stream ids, ascending (diagnostics — e.g. the
+    /// `rebalance` smoke reports which streams hold seal/periodic
+    /// watermarks after a churn run).
+    pub fn stream_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> =
+            self.store.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Number of checkpointed streams.
     pub fn len(&self) -> usize {
         self.store.lock().unwrap().len()
@@ -233,6 +243,15 @@ mod tests {
         // Counter equality holds after the tail too.
         assert_eq!(restored.n_outliers(), full.n_outliers());
         assert_eq!(restored.k(), full.k());
+    }
+
+    #[test]
+    fn stream_ids_sorted() {
+        let mgr = StateManager::new();
+        mgr.publish(checkpoint(9, 1));
+        mgr.publish(checkpoint(2, 1));
+        mgr.publish(checkpoint(5, 1));
+        assert_eq!(mgr.stream_ids(), vec![2, 5, 9]);
     }
 
     #[test]

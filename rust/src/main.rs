@@ -3,13 +3,20 @@
 //!
 //! ```text
 //! teda-fpga serve    [--config FILE] [--engine software|rtl|xla|ensemble]
-//!                    [--workers N] [--streams S] [--samples K] [--seed X]
+//!                    [--workers N] [--workers-max N] [--streams S]
+//!                    [--samples K] [--seed X]
+//!                    [--virtual-shards V] [--rebalance-interval N]
 //!                    [--checkpoint-interval N] [--restore]
 //!                    [--checkpoint-dir DIR] [--recover] [--evict-after N]
+//! teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
+//!                    [--streams S] [--full]
+//! teda-fpga rebalance [--engine ...] [--workers N] [--streams S]
+//!                    [--samples K] [--seed X]
 //! teda-fpga detect   [--item 1..7] [--m 3.0] [--engine ...] [--csv OUT]
 //! teda-fpga synth    [--n-features N] [--netlist]
 //! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
 //! teda-fpga ensemble [--members LIST] [--combiner KIND] [--item 1..7]
+//! teda-fpga bench-trend [--root DIR]
 //! teda-fpga doctor
 //! ```
 //!
@@ -20,7 +27,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use teda_fpga::config::{CombinerKind, EngineKind, EnsembleConfig, ServiceConfig};
-use teda_fpga::coordinator::Service;
+use teda_fpga::coordinator::{Service, ShardTable};
 use teda_fpga::damadics::{
     actuator1_schedule, evaluate_detection, fault_catalog, schedule_item,
     ActuatorSim,
@@ -30,6 +37,7 @@ use teda_fpga::ensemble::{EnsembleEngine, PartitionPlan};
 use teda_fpga::rtl::TedaRtl;
 use teda_fpga::stream::{ReplaySource, Sample, StreamSource, SyntheticSource};
 use teda_fpga::synth::{critical_path, OccupationReport, PipelineTiming, Virtex6};
+use teda_fpga::util::prng::SplitMix64;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,10 +54,13 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&flags),
+        "shards" => cmd_shards(&flags),
+        "rebalance" => cmd_rebalance(&flags),
         "detect" => cmd_detect(&flags),
         "synth" => cmd_synth(&flags),
         "damadics" => cmd_damadics(&flags),
         "ensemble" => cmd_ensemble(&flags),
+        "bench-trend" => cmd_bench_trend(&flags),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!("{}", USAGE);
@@ -72,10 +83,16 @@ teda-fpga — TEDA streaming anomaly detection (paper reproduction)
 USAGE:
   teda-fpga serve    [--config FILE(.toml|.json)]
                      [--engine software|rtl|xla|ensemble]
-                     [--workers N] [--streams S] [--samples K] [--seed X]
+                     [--workers N] [--workers-max N]
+                     [--streams S] [--samples K] [--seed X]
+                     [--virtual-shards V] [--rebalance-interval N]
                      [--members LIST] [--combiner KIND]
                      [--checkpoint-interval N] [--restore]
                      [--checkpoint-dir DIR] [--recover] [--evict-after N]
+  teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
+                     [--streams S] [--full]
+  teda-fpga rebalance [--engine software|rtl|ensemble] [--workers N]
+                     [--streams S] [--samples K] [--seed X]
   teda-fpga detect   [--item 1..7] [--m 3.0]
                      [--engine software|rtl|ensemble] [--csv OUT]
                      [--members LIST] [--combiner KIND]
@@ -83,6 +100,7 @@ USAGE:
   teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I] [--seed X]
   teda-fpga ensemble [--members LIST] [--combiner KIND] [--workers N]
                      [--n-features N] [--item 1..7] [--seed X]
+  teda-fpga bench-trend [--root DIR]
   teda-fpga doctor
 
   LIST is `+`-separated member specs, e.g. 'teda+teda:m=2.5+zscore:m=3,w=64'
@@ -90,7 +108,15 @@ USAGE:
   KIND is majority|weighted-score|any-of|all-of|adaptive.
   --checkpoint-dir persists checkpoints durably (atomic-rename files);
   --recover cold-starts from that dir after a process death (implies
-  --restore); --evict-after drops idle streams after N samples.";
+  --restore); --evict-after drops idle streams after N samples.
+  --workers-max N lets serve scale the worker pool up live mid-run
+  (demo trigger: the resize fires once at the halfway sample — a
+  production driver would key this off backpressure instead);
+  --rebalance-interval N rebalances hot shards every N samples.
+  `shards` prints the shard→worker table; `rebalance` is a live-
+  migration smoke: it forces mid-stream shard moves + a worker resize
+  and asserts verdict parity against an undisturbed run.
+  `bench-trend` folds BENCH_*.json into the cumulative BENCH_trend.json.";
 
 type CliError = Box<dyn std::error::Error>;
 
@@ -220,6 +246,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         // adopt them.
         cfg.restore_on_resume = true;
     }
+    cfg.sharding.virtual_shards =
+        flags.parse_as("virtual-shards", cfg.sharding.virtual_shards)?;
+    cfg.sharding.rebalance_interval = flags
+        .parse_as("rebalance-interval", cfg.sharding.rebalance_interval)?;
+    let workers_max: usize = flags.parse_as("workers-max", cfg.workers)?;
+    if workers_max < cfg.workers {
+        return Err("--workers-max must be ≥ --workers".into());
+    }
     let streams: u64 = flags.parse_as("streams", 16u64)?;
     let samples: usize = flags.parse_as("samples", 10_000usize)?;
 
@@ -254,16 +288,46 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
                 .with_outliers(0.001)
         })
         .collect();
+    let rebalance_every = cfg.sharding.rebalance_interval;
+    let mut submitted: u64 = 0;
+    let mut next_rebalance = rebalance_every;
+    let mut round: usize = 0;
     loop {
         let mut any = false;
         for src in &mut sources {
             if let Some(s) = src.next_sample() {
                 svc.submit(s)?;
+                submitted += 1;
                 any = true;
             }
         }
         if !any {
             break;
+        }
+        round += 1;
+        // Live worker scaling: grow to --workers-max at the halfway
+        // point (a deterministic mid-run resize the smoke tests lean
+        // on; a production driver would key this off backpressure).
+        if workers_max > svc.workers() && round == samples / 2 {
+            svc.scale_to(workers_max)?;
+            println!(
+                "scaled to {} workers at sample {} (epoch {})",
+                workers_max,
+                submitted,
+                svc.table().epoch()
+            );
+        }
+        if rebalance_every > 0 && submitted >= next_rebalance {
+            next_rebalance += rebalance_every;
+            let moves = svc.maybe_rebalance()?;
+            if !moves.is_empty() {
+                println!(
+                    "rebalanced {} shard(s) at sample {} (epoch {})",
+                    moves.len(),
+                    submitted,
+                    svc.table().epoch()
+                );
+            }
         }
     }
     let metrics = svc.metrics();
@@ -300,6 +364,236 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         dt.as_secs_f64(),
         out.len() as f64 / dt.as_secs_f64()
     );
+    Ok(())
+}
+
+/// `teda-fpga shards` — shard-map diagnostic: the shard → worker
+/// table, per-shard/per-worker stream counts for a synthetic id range
+/// (what `Router::load` used to report), and the epoch.
+fn cmd_shards(flags: &Flags) -> Result<(), CliError> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ServiceConfig::load(path)?,
+        None => ServiceConfig::default(),
+    };
+    cfg.workers = flags.parse_as("workers", cfg.workers)?;
+    cfg.sharding.virtual_shards =
+        flags.parse_as("virtual-shards", cfg.sharding.virtual_shards)?;
+    cfg.validate()?; // clean CLI error instead of a construction panic
+    let streams: u64 = flags.parse_as("streams", 16u64)?;
+    let table =
+        ShardTable::new_uniform(cfg.sharding.virtual_shards, cfg.workers);
+    println!(
+        "shard map: {} virtual shards × {} workers, epoch {}",
+        table.virtual_shards(),
+        table.workers(),
+        table.epoch()
+    );
+    let per_worker = table.load(0..streams);
+    let per_shard = table.shard_load(0..streams);
+    let shard_counts = table.shard_counts();
+    println!("\n  worker  shards  streams (of {streams})");
+    for (w, (&shards, &strms)) in
+        shard_counts.iter().zip(per_worker.iter()).enumerate()
+    {
+        println!("  {w:>6}  {shards:>6}  {strms:>7}");
+    }
+    if flags.has("full") {
+        println!("\n  shard → worker   streams");
+        for shard in 0..table.virtual_shards() {
+            println!(
+                "  {shard:>5} → {:>6}   {:>7}",
+                table.worker_of(shard),
+                per_shard[shard as usize]
+            );
+        }
+    } else {
+        let occupied =
+            per_shard.iter().filter(|&&c| c > 0).count();
+        println!(
+            "\n  {occupied} of {} shards occupied (--full for the whole \
+             table)",
+            table.virtual_shards()
+        );
+    }
+    Ok(())
+}
+
+/// `teda-fpga rebalance` — the rebalance-under-churn smoke: run the
+/// same deterministic workload twice, once undisturbed and once with
+/// forced mid-stream shard migrations plus a live worker resize, and
+/// fail unless the verdicts match bit-for-bit.
+fn cmd_rebalance(flags: &Flags) -> Result<(), CliError> {
+    let engine: EngineKind =
+        flags.get("engine").unwrap_or("software").parse()?;
+    let workers: usize = flags.parse_as("workers", 3usize)?;
+    let streams: u64 = flags.parse_as("streams", 8u64)?;
+    let samples: u64 = flags.parse_as("samples", 3000u64)?;
+    let seed: u64 = flags.parse_as("seed", 0x7EDAu64)?;
+    if workers < 2 {
+        return Err("rebalance needs --workers ≥ 2".into());
+    }
+    let cfg = ServiceConfig {
+        engine,
+        workers,
+        n_features: 2,
+        queue_capacity: 1024,
+        ..Default::default()
+    };
+    let sample = |sid: u64, seq: u64| {
+        let mut rng = SplitMix64::new(seed ^ sid.wrapping_mul(0x9E37) ^ seq);
+        Sample {
+            stream_id: sid,
+            seq,
+            values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+        }
+    };
+    type VerdictMap =
+        std::collections::BTreeMap<(u64, u64), teda_fpga::engine::EngineVerdict>;
+    let index = |out: Vec<teda_fpga::coordinator::Classified>| -> Result<VerdictMap, CliError> {
+        let mut map = VerdictMap::new();
+        for c in out {
+            let key = (c.verdict.stream_id, c.verdict.seq);
+            if let Some(prev) = map.get(&key) {
+                // Replay duplicates are only legal as identical
+                // re-derivations — contradictory ones are a bug the
+                // smoke must catch, not mask by overwrite.
+                if prev.k != c.verdict.k
+                    || prev.outlier != c.verdict.outlier
+                    || prev.zeta.to_bits() != c.verdict.zeta.to_bits()
+                {
+                    return Err(format!(
+                        "contradictory duplicate verdicts at {key:?}"
+                    )
+                    .into());
+                }
+            } else {
+                map.insert(key, c.verdict);
+            }
+        }
+        Ok(map)
+    };
+
+    println!(
+        "rebalance smoke: {streams} streams × {samples} samples, {engine} \
+         engine, {workers} workers"
+    );
+    // Undisturbed reference run.
+    let svc = Service::start(cfg.clone())?;
+    for seq in 0..samples {
+        for sid in 0..streams {
+            svc.submit(sample(sid, seq))?;
+        }
+    }
+    let reference = index(svc.finish()?)?;
+
+    // Churn run: migrate all of worker 0's shards away at 1/3, scale
+    // the pool up at 1/2, back down at 3/4.
+    let svc = Service::start(cfg)?;
+    for seq in 0..samples {
+        for sid in 0..streams {
+            svc.submit(sample(sid, seq))?;
+        }
+        if seq == samples / 3 {
+            let moves: Vec<(u32, usize)> = svc
+                .table()
+                .shards_on(0)
+                .into_iter()
+                .map(|s| (s, workers - 1))
+                .collect();
+            svc.migrate_shards(&moves)?;
+            println!(
+                "  seq {seq}: migrated {} shards 0 → {} (epoch {})",
+                moves.len(),
+                workers - 1,
+                svc.table().epoch()
+            );
+        }
+        if seq == samples / 2 {
+            svc.scale_to(workers + 1)?;
+            println!(
+                "  seq {seq}: scaled to {} workers (epoch {})",
+                workers + 1,
+                svc.table().epoch()
+            );
+        }
+        if seq == samples * 3 / 4 {
+            svc.scale_to(workers)?;
+            println!(
+                "  seq {seq}: scaled back to {workers} workers (epoch {})",
+                svc.table().epoch()
+            );
+        }
+    }
+    let metrics = svc.metrics();
+    let state = svc.state_manager();
+    let churned = index(svc.finish()?)?;
+
+    if metrics.migrations.get() == 0 {
+        return Err("churn run performed no migrations".into());
+    }
+    // Every migrated stream left a seal watermark behind.
+    let checkpointed = state.stream_ids();
+    if checkpointed.is_empty() {
+        return Err("migrations published no seal watermarks".into());
+    }
+    if churned.len() != reference.len() {
+        return Err(format!(
+            "verdict count diverged: {} churned vs {} reference",
+            churned.len(),
+            reference.len()
+        )
+        .into());
+    }
+    for (key, a) in &reference {
+        let Some(b) = churned.get(key) else {
+            return Err(format!("verdict missing at {key:?}").into());
+        };
+        if a.k != b.k
+            || a.outlier != b.outlier
+            || a.zeta.to_bits() != b.zeta.to_bits()
+            || a.threshold.to_bits() != b.threshold.to_bits()
+        {
+            return Err(format!(
+                "verdict diverged at {key:?}: {a:?} vs {b:?}"
+            )
+            .into());
+        }
+    }
+    println!(
+        "  parity OK: {} verdicts bit-identical across {} migrations \
+         ({} streams handed over, {} strays re-routed, {} seal \
+         watermarks published)",
+        churned.len(),
+        metrics.migrations.get(),
+        metrics.streams_migrated.get(),
+        metrics.stray_reroutes.get(),
+        checkpointed.len(),
+    );
+    Ok(())
+}
+
+/// `teda-fpga bench-trend` — fold every `BENCH_*.json` at the repo
+/// root into the cumulative `BENCH_trend.json` (CI runs this after its
+/// bench step so per-PR perf trajectory accumulates).
+fn cmd_bench_trend(flags: &Flags) -> Result<(), CliError> {
+    let root = match flags.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .ok_or("cargo manifest dir has no parent")?
+            .to_path_buf(),
+    };
+    let updated = teda_fpga::util::benchkit::sync_trend(&root)?;
+    if updated.is_empty() {
+        println!("BENCH_trend.json already up to date in {}", root.display());
+    } else {
+        println!(
+            "appended {} bench result(s) to {}: {}",
+            updated.len(),
+            root.join("BENCH_trend.json").display(),
+            updated.join(", ")
+        );
+    }
     Ok(())
 }
 

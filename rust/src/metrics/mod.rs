@@ -31,6 +31,27 @@ impl Counter {
     }
 }
 
+/// Last-value gauge (epoch numbers, live worker counts...).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
 /// Log₂-bucketed histogram for nanosecond latencies.
 ///
 /// Buckets: `[2^i, 2^{i+1})` for i in 0..=63; recording is one atomic
@@ -143,10 +164,35 @@ pub struct ServiceMetrics {
     /// Streams evicted by the idle-stream policy (engine state and
     /// checkpoints — in-memory and durable — dropped together).
     pub stream_evictions: Counter,
+    /// Shard migrations completed (one per seal → adopt handoff).
+    pub migrations: Counter,
+    /// Virtual shards moved across all migrations.
+    pub shards_moved: Counter,
+    /// Streams handed between workers inside migrations (snapshot →
+    /// codec → restore).
+    pub streams_migrated: Counter,
+    /// Samples that reached a worker no longer owning their shard and
+    /// were forwarded back for re-routing (stale routing snapshots
+    /// during a migration — re-processed, never lost).
+    pub stray_reroutes: Counter,
+    /// Samples dropped by the per-stream watermark guard (at or below
+    /// the last ingested seq: duplicates, or strays from a submitter
+    /// that stalled across a whole migration). Protects the order-
+    /// dependent recurrence from out-of-order ingestion.
+    pub stale_drops: Counter,
+    /// Worker threads that died by panic (guarded by `catch_unwind`;
+    /// the panic surfaces as that worker's error at drain).
+    pub worker_panics: Counter,
+    /// Current shard-map epoch (bumps once per installed table).
+    pub epoch: Gauge,
+    /// Live worker threads (tracks `scale_to`).
+    pub workers_active: Gauge,
     /// Per-sample end-to-end latency (submit → verdict).
     pub latency: Histogram,
     /// Per-chunk execution time (XLA engine).
     pub chunk_time: Histogram,
+    /// Wall time of one whole shard migration (seal → adopt).
+    pub migration_time: Histogram,
 }
 
 impl ServiceMetrics {
@@ -166,8 +212,17 @@ impl ServiceMetrics {
              stream_restores   {}\n\
              replay_skipped    {}\n\
              stream_evictions  {}\n\
+             migrations        {}\n\
+             shards_moved      {}\n\
+             streams_migrated  {}\n\
+             stray_reroutes    {}\n\
+             stale_drops       {}\n\
+             worker_panics     {}\n\
+             epoch             {}\n\
+             workers_active    {}\n\
              latency           {}\n\
-             chunk_time        {}\n",
+             chunk_time        {}\n\
+             migration_time    {}\n",
             self.samples_in.get(),
             self.verdicts_out.get(),
             self.outliers.get(),
@@ -177,9 +232,87 @@ impl ServiceMetrics {
             self.stream_restores.get(),
             self.replay_skipped.get(),
             self.stream_evictions.get(),
+            self.migrations.get(),
+            self.shards_moved.get(),
+            self.streams_migrated.get(),
+            self.stray_reroutes.get(),
+            self.stale_drops.get(),
+            self.worker_panics.get(),
+            self.epoch.get(),
+            self.workers_active.get(),
             self.latency.summary(),
             self.chunk_time.summary(),
+            self.migration_time.summary(),
         )
+    }
+}
+
+/// Per-virtual-shard load tracking: sample counts plus an end-to-end
+/// latency histogram per shard, so the rebalancer can find hot shards
+/// (by volume or by p99) without touching any worker state.
+#[derive(Debug)]
+pub struct ShardStat {
+    /// Samples processed for streams of this shard.
+    pub samples: Counter,
+    /// End-to-end latency of this shard's verdicts.
+    pub latency: Histogram,
+}
+
+/// One [`ShardStat`] per virtual shard, shared by every worker.
+#[derive(Debug)]
+pub struct ShardMetrics {
+    shards: Vec<ShardStat>,
+}
+
+impl ShardMetrics {
+    pub fn new(virtual_shards: u32) -> Arc<Self> {
+        Arc::new(ShardMetrics {
+            shards: (0..virtual_shards)
+                .map(|_| ShardStat {
+                    samples: Counter::new(),
+                    latency: Histogram::new(),
+                })
+                .collect(),
+        })
+    }
+
+    /// Number of virtual shards tracked.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Stats of one shard.
+    #[inline]
+    pub fn shard(&self, shard: u32) -> &ShardStat {
+        &self.shards[shard as usize]
+    }
+
+    /// Point-in-time sample counts per shard (the rebalancer diffs two
+    /// of these to get load-since-last-check).
+    pub fn sample_counts(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.samples.get()).collect()
+    }
+
+    /// The `top` hottest shards by sample count, as
+    /// `(shard, samples, p99_ns)`, hottest first. Shards with zero
+    /// samples are omitted.
+    pub fn hottest(&self, top: usize) -> Vec<(u32, u64, u64)> {
+        let mut rows: Vec<(u32, u64, u64)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.samples.get() > 0)
+            .map(|(i, s)| {
+                (i as u32, s.samples.get(), s.latency.quantile(0.99))
+            })
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        rows.truncate(top);
+        rows
     }
 }
 
@@ -337,8 +470,40 @@ mod tests {
         let m = ServiceMetrics::new();
         m.samples_in.add(10);
         m.latency.record(1234);
+        m.epoch.set(3);
+        m.workers_active.set(5);
         let s = m.render();
         assert!(s.contains("samples_in        10"));
         assert!(s.contains("latency"));
+        assert!(s.contains("epoch             3"));
+        assert!(s.contains("workers_active    5"));
+        assert!(s.contains("migrations        0"));
+    }
+
+    #[test]
+    fn gauge_holds_last_value() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn shard_metrics_track_and_rank() {
+        let sm = ShardMetrics::new(8);
+        assert_eq!(sm.len(), 8);
+        sm.shard(2).samples.add(100);
+        sm.shard(2).latency.record(5_000);
+        sm.shard(5).samples.add(40);
+        sm.shard(5).latency.record(9_000);
+        let counts = sm.sample_counts();
+        assert_eq!(counts[2], 100);
+        assert_eq!(counts[5], 40);
+        let hot = sm.hottest(10);
+        assert_eq!(hot.len(), 2, "zero-sample shards omitted");
+        assert_eq!(hot[0].0, 2, "hottest first");
+        assert!(hot[0].2 > 0, "p99 populated");
+        assert_eq!(hot[1].0, 5);
     }
 }

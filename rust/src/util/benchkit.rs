@@ -7,7 +7,11 @@
 //! throughput. A `black_box` re-export prevents the optimizer from
 //! deleting the measured work.
 
+use std::io;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::config::Json;
 
 /// Re-export of the standard black box.
 pub use std::hint::black_box;
@@ -133,6 +137,110 @@ impl std::fmt::Display for BenchReport {
     }
 }
 
+/// Append one bench run's result document to the cumulative
+/// `BENCH_trend.json` at the repository root, so per-PR performance
+/// trajectory stays visible (ROADMAP follow-up).
+///
+/// The trend file is an object keyed by bench name, each holding an
+/// append-only array of `{"run": N, "results": <doc>}` entries.
+/// Appending the exact same document twice in a row is a no-op, which
+/// makes `sync_trend` idempotent when a bench already self-appended.
+/// Returns whether a new entry was written.
+pub fn append_trend(
+    repo_root: &Path,
+    bench: &str,
+    results: &Json,
+) -> io::Result<bool> {
+    let path = repo_root.join("BENCH_trend.json");
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => Json::parse(&text).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: {e}", path.display()),
+            )
+        })?,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            Json::Obj(Default::default())
+        }
+        Err(e) => return Err(e),
+    };
+    let Json::Obj(map) = &mut root else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{} is not a JSON object", path.display()),
+        ));
+    };
+    let runs = map
+        .entry(bench.to_string())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    let Json::Arr(runs) = runs else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("trend entry '{bench}' is not an array"),
+        ));
+    };
+    if runs.last().and_then(|e| e.get("results")) == Some(results) {
+        return Ok(false); // identical re-run: keep the file stable
+    }
+    let mut entry = std::collections::BTreeMap::new();
+    entry.insert("run".to_string(), Json::Num((runs.len() + 1) as f64));
+    entry.insert("results".to_string(), results.clone());
+    runs.push(Json::Obj(entry));
+    write_atomic(&path, &(root.to_string_compact() + "\n"))?;
+    Ok(true)
+}
+
+/// Fold every `BENCH_*.json` at the repository root (except the trend
+/// file itself) into `BENCH_trend.json`. Returns the bench names that
+/// gained a new entry — the `teda-fpga bench-trend` subcommand CI runs
+/// after its bench step.
+pub fn sync_trend(repo_root: &Path) -> io::Result<Vec<String>> {
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(repo_root)? {
+        let path = entry?.path();
+        let Some(fname) = path.file_name().and_then(|f| f.to_str()) else {
+            continue;
+        };
+        let Some(bench) = fname
+            .strip_prefix("BENCH_")
+            .and_then(|r| r.strip_suffix(".json"))
+        else {
+            continue;
+        };
+        if bench == "trend" {
+            continue;
+        }
+        names.push(bench.to_string());
+    }
+    names.sort_unstable(); // deterministic append order
+    let mut updated = Vec::new();
+    for bench in names {
+        let path = repo_root.join(format!("BENCH_{bench}.json"));
+        let text = std::fs::read_to_string(&path)?;
+        let doc = Json::parse(&text).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("BENCH_{bench}.json: {e}"),
+            )
+        })?;
+        if append_trend(repo_root, &bench, &doc)? {
+            updated.push(bench);
+        }
+    }
+    Ok(updated)
+}
+
+/// Write-temp-then-rename so a crash mid-write never truncates the
+/// cumulative history. (A sibling of `persist::file`'s checkpoint
+/// writer; kept separate because that one lives in the crate-`Error`
+/// domain with store-specific temp naming, while this is plain
+/// `io::Result` for a dev-tooling file.)
+fn write_atomic(path: &Path, text: &str) -> io::Result<()> {
+    let tmp: PathBuf = path.with_extension("json.tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
 /// Format a nanosecond quantity with an adaptive unit (for tables).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -162,6 +270,53 @@ mod tests {
         assert!(r.min <= r.p50 && r.p50 <= r.p95 && r.p95 <= r.max);
         assert!(r.throughput > 0.0);
         assert_eq!(r.unit, "ops");
+    }
+
+    #[test]
+    fn trend_appends_and_dedupes() {
+        let root = crate::util::unique_temp_dir("benchkit-trend");
+        std::fs::create_dir_all(&root).unwrap();
+        let doc = Json::parse(r#"{"bench":"x","results":[{"ns":1}]}"#)
+            .unwrap();
+        assert!(append_trend(&root, "x", &doc).unwrap());
+        // Identical re-append is a no-op...
+        assert!(!append_trend(&root, "x", &doc).unwrap());
+        // ...a changed run appends with the next run index.
+        let doc2 = Json::parse(r#"{"bench":"x","results":[{"ns":2}]}"#)
+            .unwrap();
+        assert!(append_trend(&root, "x", &doc2).unwrap());
+        let trend = Json::parse(
+            &std::fs::read_to_string(root.join("BENCH_trend.json")).unwrap(),
+        )
+        .unwrap();
+        let runs = trend.get("x").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("run").and_then(Json::as_u64), Some(1));
+        assert_eq!(runs[1].get("run").and_then(Json::as_u64), Some(2));
+        assert_eq!(runs[1].get("results"), Some(&doc2));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn sync_trend_folds_bench_files() {
+        let root = crate::util::unique_temp_dir("benchkit-sync");
+        std::fs::create_dir_all(&root).unwrap();
+        std::fs::write(root.join("BENCH_alpha.json"), r#"{"a":1}"#).unwrap();
+        std::fs::write(root.join("BENCH_beta.json"), r#"{"b":2}"#).unwrap();
+        std::fs::write(root.join("unrelated.txt"), "x").unwrap();
+        let updated = sync_trend(&root).unwrap();
+        assert_eq!(updated, vec!["alpha".to_string(), "beta".to_string()]);
+        // Re-sync without new results: nothing appended, trend file
+        // itself is skipped as an input.
+        assert!(sync_trend(&root).unwrap().is_empty());
+        let trend = Json::parse(
+            &std::fs::read_to_string(root.join("BENCH_trend.json")).unwrap(),
+        )
+        .unwrap();
+        assert!(trend.get("alpha").is_some());
+        assert!(trend.get("beta").is_some());
+        assert!(trend.get("trend").is_none());
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]
