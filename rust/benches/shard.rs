@@ -9,7 +9,7 @@
 use std::collections::BTreeMap;
 
 use teda_fpga::config::{EngineKind, Json, ServiceConfig, ShardingConfig};
-use teda_fpga::coordinator::{Service, ShardTable};
+use teda_fpga::coordinator::{Service, ShardMap, ShardTable};
 use teda_fpga::stream::Sample;
 use teda_fpga::util::benchkit::{black_box, Bench};
 use teda_fpga::util::prng::SplitMix64;
@@ -95,6 +95,25 @@ fn main() {
     row.insert("value".into(), num(route.ns_per_unit));
     results.push(Json::Obj(row));
 
+    // 1b. Routing through the live shard map: one atomic pointer load
+    //     per route (the lock-free steady-state submit path) + hash +
+    //     lookup — what every submit actually pays.
+    let map = ShardMap::new(ShardTable::new_uniform(256, WORKERS));
+    let route_snap = Bench::new("route_snapshot")
+        .iters(200)
+        .units(10_000, "routes")
+        .run(|| {
+            let mut acc = 0usize;
+            for sid in 0..10_000u64 {
+                acc += map.load().route(black_box(sid)).0;
+            }
+            black_box(acc);
+        });
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str("route_snapshot_ns".into()));
+    row.insert("value".into(), num(route_snap.ns_per_unit));
+    results.push(Json::Obj(row));
+
     // 2. Live service: warm up, measure steady-state throughput,
     //    migrate half the shard space back and forth (timed), then
     //    measure throughput again after a scale-out rebalance.
@@ -116,8 +135,31 @@ fn main() {
         }
     }
 
+    // Per-sample submit path for contrast with the batched one (the
+    // batching win is the ratio of these two).
+    let single = Bench::new("service_throughput_single")
+        .iters(10)
+        .units(BURST as u64, "samples")
+        .run(|| {
+            for s in burst(&mut rng, &mut seq) {
+                svc.submit(s).unwrap();
+            }
+            let mut got = 0usize;
+            while got < BURST {
+                let drained = svc.poll_results().len();
+                got += drained;
+                if drained == 0 {
+                    std::thread::yield_now();
+                }
+            }
+        });
+    println!(
+        "\nsteady-state single-submit: {:.0} samples/s",
+        single.throughput
+    );
+
     let before = throughput(&svc, &mut rng, &mut seq);
-    println!("\nsteady-state before rebalance: {before:.0} samples/s");
+    println!("steady-state before rebalance: {before:.0} samples/s");
 
     // Migration latency: move worker 0's shards to worker 1 and back —
     // each iteration is two full seal → barrier → adopt handoffs over
@@ -135,10 +177,7 @@ fn main() {
     let mut row = BTreeMap::new();
     row.insert("metric".into(), Json::Str("migration_ns".into()));
     row.insert("value".into(), num(migration_ns));
-    row.insert(
-        "shards_per_move".into(),
-        Json::Num(shards0.len() as f64),
-    );
+    row.insert("shards_per_move".into(), Json::Num(shards0.len() as f64));
     results.push(Json::Obj(row));
 
     // Scale out + rebalance, then re-measure steady state.
@@ -155,6 +194,7 @@ fn main() {
     svc.finish().unwrap();
 
     for (metric, value) in [
+        ("throughput_single_sps", single.throughput),
         ("throughput_before_sps", before),
         ("throughput_after_rebalance_sps", after),
         ("migration_p99_ns", p99_migration as f64),

@@ -42,9 +42,21 @@
 //!   and [`Service::start_from_store`] cold-starts a new process from
 //!   disk. Migration seals publish through the same path, so failover
 //!   and rebalancing agree on watermarks.
+//! - **Lock-free ingest** ([`ring`] / [`senders`]): the steady-state
+//!   submit path takes **zero mutexes** — routing is one atomic load
+//!   of the epoch-stamped [`ShardTable`] snapshot, the worker lookup is
+//!   one atomic load of the matching epoch-stamped sender table, and
+//!   the enqueue is an SPSC ring publish (two atomic ops) for the
+//!   worker's claimant producer, with a bounded control channel for
+//!   everyone else. Batched submission
+//!   ([`Service::submit_batch`] / [`ServiceHandle::submit_batch`])
+//!   amortizes all of it to one ring/channel operation per worker per
+//!   burst.
 //! - **Backpressure**: all queues are bounded; a full worker queue
 //!   blocks the router (and ultimately the source), never drops.
 
+pub mod ring;
+pub mod senders;
 mod service;
 mod shard_map;
 mod state_mgr;

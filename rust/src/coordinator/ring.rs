@@ -1,0 +1,386 @@
+//! Bounded single-producer/single-consumer ring buffer — the
+//! zero-mutex data plane between a submitter thread and its worker.
+//!
+//! Design (ISSUE 6 tentpole, part 3): the common deployment shape is
+//! one ingest thread feeding each worker, so the hot path should be a
+//! wait-free array write, not a Mutex+Condvar rendezvous. The ring
+//! keeps the *channel semantics* the coordinator already relies on by
+//! sitting in front of the bounded control channel, never replacing
+//! it:
+//!
+//! * **Sticky producer claim.** The first thread to push becomes the
+//!   ring's sole producer ([`SpscRing::try_push`] claims via a
+//!   compare-exchange on a per-thread token, then sticks). Every other
+//!   thread is diverted to the worker's control channel. The claim is
+//!   what upholds the per-stream ordering contract: a single external
+//!   producer for a stream either always rings (order = ring order) or
+//!   always channels (order = channel FIFO); it is never split across
+//!   both queues with older items trapped behind newer ones.
+//! * **Counted backpressure.** A full ring returns the value to the
+//!   caller (like `try_send`), so the service can count the event and
+//!   spin-wait exactly as the blocking channel send would.
+//! * **Close protocol.** [`SpscRing::close`] (idempotent, any thread)
+//!   marks the ring closed and then waits out any in-flight push, so
+//!   after it returns the consumer's final drain observes every item
+//!   that will ever be published. A producer that loses the race sees
+//!   `Closed` and falls back to the control channel, whose own closure
+//!   reports the error properly.
+//!
+//! Memory ordering: `tail` is published with `Release` and read by the
+//! consumer with `Acquire` (and vice versa for `head`), the classic
+//! Lamport SPSC scheme. The close/pushing handshake uses `SeqCst` so
+//! the store-buffer interleaving ("both sides miss each other") is
+//! impossible.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Claim slot value meaning "no producer yet".
+const FREE: u64 = 0;
+/// Claim slot value meaning "ring closed, claims impossible".
+const CLOSED: u64 = u64::MAX;
+
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TOKEN: u64 = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's ring-claim token: process-unique, never `FREE` or
+/// `CLOSED`. Cheap after first use (a thread-local read).
+pub fn thread_token() -> u64 {
+    TOKEN.with(|t| *t)
+}
+
+/// Outcome of a [`SpscRing::try_push`]. Every non-`Pushed` variant
+/// returns the value so the caller can re-route it.
+#[derive(Debug)]
+pub enum PushOutcome<T> {
+    /// Published; the consumer will see it.
+    Pushed,
+    /// Ring at capacity — retry or divert (backpressure).
+    Full(T),
+    /// Ring closed — divert to the control channel.
+    Closed(T),
+    /// Another thread holds the producer claim — divert.
+    NoClaim(T),
+}
+
+/// Pad the cursors to (at least) a cache line each so producer and
+/// consumer do not false-share.
+#[repr(align(64))]
+struct CachePadded<T>(T);
+
+/// The ring. `T: Send` is required to move values across the
+/// producer/consumer thread boundary; the `UnsafeCell` slots are safe
+/// because the head/tail cursors give each slot a unique owner at any
+/// instant (producer between reserve and publish, consumer between
+/// observe and release).
+pub struct SpscRing<T> {
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+    cap: usize,
+    /// Consumer cursor: next slot to pop. Written only by the consumer.
+    head: CachePadded<AtomicUsize>,
+    /// Producer cursor: next slot to fill. Written only by the
+    /// claimant.
+    tail: CachePadded<AtomicUsize>,
+    /// Sticky producer claim: `FREE`, a thread token, or `CLOSED`.
+    claimant: AtomicU64,
+    /// True while the claimant is inside the push window (reserve →
+    /// publish). `close` spins this out so no item is published after
+    /// the final drain.
+    pushing: AtomicBool,
+    closed: AtomicBool,
+}
+
+// SAFETY: values of T only move across threads (producer writes,
+// consumer reads), which is exactly what `T: Send` licenses. The
+// cursor protocol ensures no slot is accessed by both sides at once.
+unsafe impl<T: Send> Send for SpscRing<T> {}
+unsafe impl<T: Send> Sync for SpscRing<T> {}
+
+impl<T> SpscRing<T> {
+    /// A ring holding up to `cap` items (≥ 1).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "ring capacity must be >= 1");
+        let slots = (0..cap)
+            .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        SpscRing {
+            slots,
+            cap,
+            head: CachePadded(AtomicUsize::new(0)),
+            tail: CachePadded(AtomicUsize::new(0)),
+            claimant: AtomicU64::new(FREE),
+            pushing: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Racy item count (diagnostics).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.0.load(Ordering::Acquire);
+        let head = self.head.0.load(Ordering::Acquire);
+        tail.wrapping_sub(head)
+    }
+
+    /// Racy emptiness check — used by the worker park predicate, whose
+    /// doorbell re-check protocol tolerates the race.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Attempt to publish `value` as the producer identified by
+    /// `token` (from [`thread_token`]). Claims the ring on first use;
+    /// after a claim succeeds the same thread keeps it until close.
+    pub fn try_push(&self, token: u64, value: T) -> PushOutcome<T> {
+        let holder = self.claimant.load(Ordering::Acquire);
+        let claimed = holder == token
+            || (holder == FREE
+                && self
+                    .claimant
+                    .compare_exchange(
+                        FREE,
+                        token,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok());
+        if !claimed {
+            return PushOutcome::NoClaim(value);
+        }
+        // Push window: once `pushing` is up, `close` waits for us. The
+        // re-check of `closed` inside the window closes the race where
+        // close lands between the claim check and the publish.
+        self.pushing.store(true, Ordering::SeqCst);
+        if self.closed.load(Ordering::SeqCst) {
+            self.pushing.store(false, Ordering::Release);
+            return PushOutcome::Closed(value);
+        }
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        let head = self.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) >= self.cap {
+            self.pushing.store(false, Ordering::Release);
+            return PushOutcome::Full(value);
+        }
+        // SAFETY: slot `tail % cap` is outside the consumer's visible
+        // range until the tail store below publishes it.
+        unsafe {
+            (*self.slots[tail % self.cap].get()).write(value);
+        }
+        self.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        self.pushing.store(false, Ordering::Release);
+        PushOutcome::Pushed
+    }
+
+    /// Pop the oldest item. Consumer side only — exactly one thread
+    /// (the worker) may call this.
+    pub fn pop(&self) -> Option<T> {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        // SAFETY: the producer published slot `head % cap` via the
+        // Release store of `tail` we just Acquired, and will not touch
+        // it again until the head store below recycles it.
+        let value = unsafe {
+            (*self.slots[head % self.cap].get()).assume_init_read()
+        };
+        self.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Some(value)
+    }
+
+    /// Close the ring: no item is published after this returns, so a
+    /// follow-up [`SpscRing::pop`] drain is complete. Items already
+    /// published remain poppable. Idempotent; callable from any
+    /// thread (worker exit, service stop, panic cleanup).
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.claimant.store(CLOSED, Ordering::SeqCst);
+        // Wait out an in-flight push: it either saw `closed` and
+        // aborted, or its publish completes before `pushing` drops.
+        while self.pushing.load(Ordering::SeqCst) {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+impl<T> Drop for SpscRing<T> {
+    fn drop(&mut self) {
+        // Drop any items never popped (e.g. abort paths).
+        while self.pop().is_some() {}
+    }
+}
+
+impl<T> std::fmt::Debug for SpscRing<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpscRing")
+            .field("cap", &self.cap)
+            .field("len", &self.len())
+            .field("closed", &self.is_closed())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    fn push_ok<T>(ring: &SpscRing<T>, token: u64, v: T) {
+        match ring.try_push(token, v) {
+            PushOutcome::Pushed => {}
+            other => panic!("expected Pushed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tokens_are_unique_per_thread_and_stable() {
+        let a = thread_token();
+        assert_eq!(a, thread_token());
+        let b = thread::spawn(thread_token).join().unwrap();
+        assert_ne!(a, b);
+        assert_ne!(a, FREE);
+        assert_ne!(a, CLOSED);
+    }
+
+    #[test]
+    fn wraparound_preserves_fifo() {
+        // Capacity 4, 100 items: the cursors wrap many times and every
+        // item must come out once, in order.
+        let ring = SpscRing::new(4);
+        let tok = thread_token();
+        let mut next_pop = 0u64;
+        for i in 0..100u64 {
+            push_ok(&ring, tok, i);
+            if ring.len() == 4 {
+                for _ in 0..4 {
+                    assert_eq!(ring.pop(), Some(next_pop));
+                    next_pop += 1;
+                }
+            }
+        }
+        while let Some(v) = ring.pop() {
+            assert_eq!(v, next_pop);
+            next_pop += 1;
+        }
+        assert_eq!(next_pop, 100);
+    }
+
+    #[test]
+    fn full_ring_returns_the_value() {
+        let ring = SpscRing::new(2);
+        let tok = thread_token();
+        push_ok(&ring, tok, 1);
+        push_ok(&ring, tok, 2);
+        match ring.try_push(tok, 3) {
+            PushOutcome::Full(v) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(ring.pop(), Some(1));
+        push_ok(&ring, tok, 3); // slot freed
+        assert_eq!(ring.pop(), Some(2));
+        assert_eq!(ring.pop(), Some(3));
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn second_producer_is_diverted() {
+        let ring = SpscRing::new(8);
+        let tok = thread_token();
+        push_ok(&ring, tok, 1u32);
+        match ring.try_push(tok + 1, 2) {
+            PushOutcome::NoClaim(v) => assert_eq!(v, 2),
+            other => panic!("expected NoClaim, got {other:?}"),
+        }
+        // The claimant itself keeps pushing fine.
+        push_ok(&ring, tok, 3);
+    }
+
+    #[test]
+    fn close_rejects_pushes_and_claims_but_drains() {
+        let ring = SpscRing::new(8);
+        let tok = thread_token();
+        push_ok(&ring, tok, 1u32);
+        push_ok(&ring, tok, 2);
+        ring.close();
+        ring.close(); // idempotent
+        match ring.try_push(tok, 3) {
+            PushOutcome::NoClaim(v) | PushOutcome::Closed(v) => {
+                assert_eq!(v, 3);
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(ring.pop(), Some(1));
+        assert_eq!(ring.pop(), Some(2));
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn cross_thread_transfer_is_complete_and_ordered() {
+        const N: u64 = 100_000;
+        let ring = Arc::new(SpscRing::new(64));
+        let producer = {
+            let ring = ring.clone();
+            thread::spawn(move || {
+                let tok = thread_token();
+                let mut backoffs = 0u64;
+                for i in 0..N {
+                    let mut v = i;
+                    loop {
+                        match ring.try_push(tok, v) {
+                            PushOutcome::Pushed => break,
+                            PushOutcome::Full(back) => {
+                                v = back;
+                                backoffs += 1;
+                                thread::yield_now();
+                            }
+                            other => panic!("unexpected {other:?}"),
+                        }
+                    }
+                }
+                backoffs
+            })
+        };
+        let mut got = 0u64;
+        while got < N {
+            if let Some(v) = ring.pop() {
+                assert_eq!(v, got, "out of order");
+                got += 1;
+            } else {
+                thread::yield_now();
+            }
+        }
+        // A 64-slot ring carrying 100k items must have hit Full at
+        // least occasionally OR the consumer kept pace — either way
+        // the count above is the real assertion; just join here.
+        let _ = producer.join().unwrap();
+        assert_eq!(ring.pop(), None);
+    }
+
+    #[test]
+    fn drop_releases_unpopped_items() {
+        let sentinel = Arc::new(());
+        {
+            let ring = SpscRing::new(8);
+            let tok = thread_token();
+            for _ in 0..5 {
+                push_ok(&ring, tok, sentinel.clone());
+            }
+            assert_eq!(Arc::strong_count(&sentinel), 6);
+        }
+        assert_eq!(Arc::strong_count(&sentinel), 1);
+    }
+}

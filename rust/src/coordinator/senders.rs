@@ -1,0 +1,394 @@
+//! Epoch-versioned, lock-free sender registry (ISSUE 6 tentpole,
+//! part 2) — replaces the old `Arc<Mutex<Vec<Sender<Job>>>>` that
+//! every submit had to lock.
+//!
+//! A [`SenderTable`] is an immutable vec of per-worker
+//! [`WorkerSlot`]s, stamped with the routing epoch it corresponds to.
+//! The [`SenderRegistry`] publishes the current table through a
+//! [`Swap`] — submitters reach it with **one atomic pointer load**
+//! ([`SenderRegistry::load`]); the shared table IS the submit-side
+//! cache, and "revalidation" is the writer restamping a successor
+//! table whenever the routing epoch moves (scale/migration). A
+//! submitter that observes `sender_table.epoch() != shard_table.epoch()`
+//! has hit the (microseconds-wide) install window; it counts a
+//! route-epoch miss and proceeds — the worst case is a stray sample,
+//! which the coordinator's stray re-routing already handles.
+//!
+//! Each [`WorkerSlot`] carries the worker's two ingress queues — the
+//! SPSC data ring ([`SpscRing`]) and the bounded control channel — and
+//! the [`Doorbell`] that lets the worker sleep without a Condvar on
+//! the producers' fast path (one `SeqCst` load per enqueue; the
+//! producer only takes the doorbell mutex when the worker is actually
+//! parked).
+
+use std::sync::atomic::{fence, AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::ring::{PushOutcome, SpscRing};
+use crate::stream::{bounded, Receiver, SendError, Sender};
+use crate::util::swap::Swap;
+
+const RUNNING: u32 = 0;
+const PARKED: u32 = 1;
+
+/// How long a parked worker naps before re-checking its queues even
+/// without a doorbell ring — a safety net, not the wake mechanism.
+const PARK_NAP: Duration = Duration::from_millis(10);
+
+/// Worker sleep/wake rendezvous. Producers pay one atomic load when
+/// the worker is awake (the steady state); the mutex+condvar are only
+/// touched around actual parking.
+#[derive(Debug)]
+pub struct Doorbell {
+    state: AtomicU32,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for Doorbell {
+    fn default() -> Self {
+        Doorbell {
+            state: AtomicU32::new(RUNNING),
+            mu: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl Doorbell {
+    /// Wake the worker if it is parked (or about to park). Producer
+    /// side; call *after* publishing work.
+    pub fn notify(&self) {
+        // The fence orders our work-publication before the state load,
+        // pairing with the parker's SeqCst state store before its
+        // idle check: one of the two sides must see the other.
+        fence(Ordering::SeqCst);
+        if self.state.load(Ordering::SeqCst) == PARKED {
+            let _guard = self.mu.lock().unwrap();
+            self.state.store(RUNNING, Ordering::SeqCst);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Park while `idle()` holds and nobody rings. Worker side. The
+    /// re-check of `idle` after announcing PARKED (and periodically on
+    /// the nap timeout) makes a lost wakeup cost at most one nap.
+    pub fn park_while<F: Fn() -> bool>(&self, idle: F) {
+        self.state.store(PARKED, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        let mut guard = self.mu.lock().unwrap();
+        while self.state.load(Ordering::SeqCst) == PARKED && idle() {
+            let (g, _) = self.cv.wait_timeout(guard, PARK_NAP).unwrap();
+            guard = g;
+        }
+        drop(guard);
+        self.state.store(RUNNING, Ordering::SeqCst);
+    }
+}
+
+/// One worker's ingress: the SPSC data ring (fast path), the bounded
+/// control channel (strays, migration control, diverted producers),
+/// and the doorbell. Immutable once built; shared via `Arc` between
+/// the sender table, the service, and the worker thread.
+#[derive(Debug)]
+pub struct WorkerSlot<T> {
+    ring: SpscRing<T>,
+    ctl: Sender<T>,
+    doorbell: Doorbell,
+}
+
+impl<T: Send> WorkerSlot<T> {
+    /// Build a slot plus the worker-side receiving end of its control
+    /// channel. Ring and channel each get `cap` slots.
+    pub fn with_capacity(cap: usize) -> (Arc<Self>, Receiver<T>) {
+        let (ctl, rx) = bounded(cap);
+        let slot = Arc::new(WorkerSlot {
+            ring: SpscRing::new(cap),
+            ctl,
+            doorbell: Doorbell::default(),
+        });
+        (slot, rx)
+    }
+
+    /// Fast-path publish to the data ring (claims on first use). Rings
+    /// the doorbell on success; every other outcome hands the value
+    /// back for the caller to divert or retry.
+    pub fn try_push(&self, token: u64, value: T) -> PushOutcome<T> {
+        let outcome = self.ring.try_push(token, value);
+        if matches!(outcome, PushOutcome::Pushed) {
+            self.doorbell.notify();
+        }
+        outcome
+    }
+
+    /// Blocking control-channel send + doorbell.
+    pub fn send_ctl(&self, value: T) -> Result<(), SendError> {
+        self.ctl.send(value)?;
+        self.doorbell.notify();
+        Ok(())
+    }
+
+    /// Non-blocking control-channel send + doorbell (value back when
+    /// full, like `Sender::try_send`).
+    pub fn try_send_ctl(&self, value: T) -> Result<Option<T>, SendError> {
+        match self.ctl.try_send(value)? {
+            Some(back) => Ok(Some(back)),
+            None => {
+                self.doorbell.notify();
+                Ok(None)
+            }
+        }
+    }
+
+    /// Blocking control-channel send that hands the value back on
+    /// closure (instead of dropping it) + doorbell.
+    pub fn send_ctl_reclaim(&self, value: T) -> Result<(), T> {
+        self.ctl.send_reclaim(value)?;
+        self.doorbell.notify();
+        Ok(())
+    }
+
+    /// Whether the control channel is at capacity (racy; backpressure
+    /// accounting).
+    pub fn ctl_is_full(&self) -> bool {
+        self.ctl.is_full()
+    }
+
+    /// Consumer-side ring pop (worker thread only).
+    pub fn pop_ring(&self) -> Option<T> {
+        self.ring.pop()
+    }
+
+    pub fn ring_is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Ring the doorbell without sending (used by closers).
+    pub fn notify(&self) {
+        self.doorbell.notify();
+    }
+
+    /// Park until the given receiver or the ring has work, or either
+    /// closes. Worker side; `rx` must be this slot's receiver.
+    pub fn park(&self, rx: &Receiver<T>) {
+        self.doorbell.park_while(|| {
+            self.ring.is_empty() && rx.is_empty() && !rx.is_closed()
+        });
+    }
+
+    /// Close just the ring (worker exit path: the control channel's
+    /// closure is what *triggered* the exit, or remains open so
+    /// producers get a proper error from it).
+    pub fn close_ring(&self) {
+        self.ring.close();
+    }
+
+    /// Full ingress shutdown: control channel and ring both refuse new
+    /// work; the worker drains what is buffered and exits. Idempotent.
+    pub fn close(&self) {
+        self.ctl.close();
+        self.ring.close();
+        self.doorbell.notify();
+    }
+}
+
+/// Immutable worker-indexed slot table, stamped with the routing epoch
+/// it was installed against.
+#[derive(Debug)]
+pub struct SenderTable<T> {
+    epoch: u64,
+    slots: Vec<Arc<WorkerSlot<T>>>,
+}
+
+impl<T> SenderTable<T> {
+    pub fn new(slots: Vec<Arc<WorkerSlot<T>>>, epoch: u64) -> Self {
+        SenderTable { epoch, slots }
+    }
+
+    /// Routing epoch this table was stamped for.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn get(&self, worker: usize) -> Option<&Arc<WorkerSlot<T>>> {
+        self.slots.get(worker)
+    }
+
+    pub fn slots(&self) -> &[Arc<WorkerSlot<T>>] {
+        &self.slots
+    }
+}
+
+/// The shared publication point: one [`Swap`] cell over
+/// [`SenderTable`]s. Writers (scale/migration/stop) serialize on the
+/// swap's writer lock; readers never lock.
+#[derive(Debug)]
+pub struct SenderRegistry<T> {
+    swap: Swap<SenderTable<T>>,
+}
+
+impl<T> SenderRegistry<T> {
+    pub fn new(slots: Vec<Arc<WorkerSlot<T>>>, epoch: u64) -> Self {
+        SenderRegistry {
+            swap: Swap::new(Arc::new(SenderTable::new(slots, epoch))),
+        }
+    }
+
+    /// The current table: a single atomic load, no lock, no refcount.
+    #[inline]
+    pub fn load(&self) -> &SenderTable<T> {
+        self.swap.load()
+    }
+
+    /// Owned handle for control-plane work that outlives a borrow.
+    pub fn snapshot(&self) -> Arc<SenderTable<T>> {
+        self.swap.snapshot()
+    }
+
+    /// Append a worker slot (scale-up). Keeps the current epoch stamp;
+    /// the follow-up table install calls [`SenderRegistry::restamp`].
+    pub fn push(&self, slot: Arc<WorkerSlot<T>>) {
+        self.swap.store_with(|cur| {
+            let mut slots = cur.slots.clone();
+            slots.push(slot);
+            SenderTable::new(slots, cur.epoch)
+        });
+    }
+
+    /// Drop workers `n..` (scale-down), restamping with the epoch of
+    /// the already-installed shrunken routing table. Returns the
+    /// retired slots so the caller can send Retire and close them.
+    pub fn truncate(&self, n: usize, epoch: u64) -> Vec<Arc<WorkerSlot<T>>> {
+        let mut retired = Vec::new();
+        self.swap.store_with(|cur| {
+            let mut slots = cur.slots.clone();
+            retired = slots.split_off(n.min(slots.len()));
+            SenderTable::new(slots, epoch)
+        });
+        retired
+    }
+
+    /// Re-publish the same slots under a new routing epoch — the
+    /// "cache invalidation" step every table install performs.
+    pub fn restamp(&self, epoch: u64) {
+        self.swap.store_with(|cur| {
+            SenderTable::new(cur.slots.clone(), epoch)
+        });
+    }
+
+    /// Publish an empty table (service stop): every subsequent submit
+    /// observes `is_empty` and reports the service as stopped.
+    pub fn clear(&self) {
+        self.swap
+            .store_with(|cur| SenderTable::new(Vec::new(), cur.epoch));
+    }
+}
+
+impl<T> Swap<SenderTable<T>> {
+    /// Writer-side helper: derive and install a successor table.
+    fn store_with<F>(&self, f: F)
+    where
+        F: FnOnce(&SenderTable<T>) -> SenderTable<T>,
+    {
+        let _ = self.rcu::<std::convert::Infallible, _>(|cur| {
+            Ok(Arc::new(f(cur)))
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+    use std::time::Instant;
+
+    #[test]
+    fn registry_push_truncate_restamp_follow_epochs() {
+        let (s0, _r0) = WorkerSlot::<u64>::with_capacity(4);
+        let reg = SenderRegistry::new(vec![s0], 0);
+        assert_eq!(reg.load().epoch(), 0);
+        assert_eq!(reg.load().len(), 1);
+
+        let (s1, _r1) = WorkerSlot::<u64>::with_capacity(4);
+        reg.push(s1);
+        assert_eq!(reg.load().len(), 2);
+        assert_eq!(reg.load().epoch(), 0, "push keeps the stamp");
+
+        reg.restamp(3);
+        assert_eq!(reg.load().epoch(), 3);
+        assert_eq!(reg.load().len(), 2);
+
+        let retired = reg.truncate(1, 4);
+        assert_eq!(retired.len(), 1);
+        assert_eq!(reg.load().len(), 1);
+        assert_eq!(reg.load().epoch(), 4);
+
+        reg.clear();
+        assert!(reg.load().is_empty());
+    }
+
+    #[test]
+    fn slot_ring_then_ctl_paths_deliver() {
+        let (slot, rx) = WorkerSlot::<u64>::with_capacity(4);
+        let tok = crate::coordinator::ring::thread_token();
+        assert!(matches!(slot.try_push(tok, 1), PushOutcome::Pushed));
+        slot.send_ctl(2).unwrap();
+        assert_eq!(rx.try_recv().unwrap(), Some(2));
+        assert_eq!(slot.pop_ring(), Some(1));
+        assert_eq!(slot.pop_ring(), None);
+    }
+
+    #[test]
+    fn slot_close_errors_both_planes() {
+        let (slot, rx) = WorkerSlot::<u64>::with_capacity(4);
+        let tok = crate::coordinator::ring::thread_token();
+        slot.close();
+        assert!(matches!(
+            slot.try_push(tok, 1),
+            PushOutcome::Closed(_) | PushOutcome::NoClaim(_)
+        ));
+        assert_eq!(slot.send_ctl(2), Err(SendError));
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn doorbell_wakes_a_parked_thread_promptly() {
+        let bell = Arc::new(Doorbell::default());
+        let idle = Arc::new(AtomicBool::new(true));
+        let parker = {
+            let bell = bell.clone();
+            let idle = idle.clone();
+            thread::spawn(move || {
+                let t0 = Instant::now();
+                bell.park_while(|| idle.load(Ordering::SeqCst));
+                t0.elapsed()
+            })
+        };
+        thread::sleep(Duration::from_millis(30));
+        idle.store(false, Ordering::SeqCst);
+        bell.notify();
+        let parked_for = parker.join().unwrap();
+        assert!(
+            parked_for >= Duration::from_millis(20),
+            "parked only {parked_for:?}"
+        );
+    }
+
+    #[test]
+    fn doorbell_park_skips_when_not_idle() {
+        let bell = Doorbell::default();
+        let t0 = Instant::now();
+        bell.park_while(|| false);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+}

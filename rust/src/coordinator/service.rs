@@ -8,6 +8,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::{EngineKind, ServiceConfig};
+use crate::coordinator::ring::{thread_token, PushOutcome};
+use crate::coordinator::senders::{SenderRegistry, WorkerSlot};
 use crate::coordinator::{
     shard_of, ShardMap, ShardTable, StateCheckpoint, StateManager,
 };
@@ -55,9 +57,14 @@ enum Job {
     /// stale epoch is detected as "not owned here" and forwarded for
     /// re-routing rather than misprocessed.
     Sample(Sample, Instant),
-    /// Amortizes channel synchronization: one lock per burst instead of
-    /// one per sample (see EXPERIMENTS.md §Perf).
+    /// Amortizes queue synchronization: one ring/channel operation per
+    /// burst instead of one per sample (see EXPERIMENTS.md §Perf).
     Batch(Vec<Sample>, Instant),
+    /// A batch of re-routed strays, each with its original submit time
+    /// (latency accounting stays honest across re-routes). Travels on
+    /// the CONTROL channel only: strays must stay FIFO with the
+    /// migration control jobs (before their shard's Adopt).
+    Replay(Vec<Stray>),
     /// Migration step 2 (old worker): snapshot + evict every resident
     /// stream of these shards, stop owning them, reply with the
     /// encoded bundle.
@@ -87,10 +94,12 @@ pub struct Service {
     /// Versioned stream → shard → worker routing, shared with every
     /// submit handle; migrations install successor tables (epoch + 1).
     shard_map: Arc<ShardMap>,
-    /// Worker input queues, index-aligned with the shard table. Shared
-    /// (not cloned) with every [`ServiceHandle`] so scaling is visible
-    /// to all submitters immediately.
-    senders: Arc<Mutex<Vec<Sender<Job>>>>,
+    /// Worker ingress slots (SPSC data ring + control channel per
+    /// worker), index-aligned with the shard table and published
+    /// lock-free through the epoch-versioned registry. Shared (not
+    /// cloned) with every [`ServiceHandle`] so scaling is visible to
+    /// all submitters immediately.
+    senders: Arc<SenderRegistry<Job>>,
     workers: Mutex<Vec<Option<WorkerHandle>>>,
     /// Verdicts travel in bursts (one Vec per processed job) to keep
     /// channel synchronization off the per-sample path.
@@ -121,7 +130,7 @@ pub struct Service {
 /// sender registry, so routing follows migrations and worker scaling.
 pub struct ServiceHandle {
     shard_map: Arc<ShardMap>,
-    senders: Arc<Mutex<Vec<Sender<Job>>>>,
+    senders: Arc<SenderRegistry<Job>>,
     metrics: Arc<ServiceMetrics>,
 }
 
@@ -147,56 +156,183 @@ impl ServiceHandle {
             true,
         )
     }
+
+    /// Submit a burst of samples through the shared batched core: one
+    /// ring/channel operation per routed worker per burst (identical
+    /// semantics to [`Service::submit_batch`]).
+    pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
+        submit_batch_inner(
+            &self.shard_map,
+            &self.senders,
+            &self.metrics,
+            samples,
+        )
+    }
 }
 
-/// Shared submit path: route via the current shard table, non-blocking
-/// fast path, blocking (counted) backpressure path when the worker
-/// queue is full. Retries with a fresh table snapshot when the routed
-/// worker no longer exists (shrink in progress).
+/// Zero-mutex data-plane enqueue (the steady-state hot path): SPSC
+/// ring publish when this thread holds the worker's ring claim —
+/// claiming on first contact — and the bounded control channel
+/// otherwise. A full ring is the counted backpressure path: stay on
+/// the ring (switching queues mid-stream would reorder) and spin-yield
+/// until a slot frees or the ring closes. Hands the job back on
+/// closure so the caller can retry under a fresh route instead of
+/// losing samples.
+fn enqueue_data(
+    slot: &WorkerSlot<Job>,
+    metrics: &ServiceMetrics,
+    job: Job,
+) -> std::result::Result<(), Job> {
+    let job = match slot.try_push(thread_token(), job) {
+        PushOutcome::Pushed => return Ok(()),
+        PushOutcome::Full(job) => {
+            metrics.ring_full_events.inc();
+            metrics.backpressure_events.inc();
+            let mut job = job;
+            loop {
+                // The consumer cannot be parked while its ring is
+                // full, but ring the doorbell anyway: it is one load
+                // and closes the tiny pre-park race window for free.
+                slot.notify();
+                std::thread::yield_now();
+                match slot.try_push(thread_token(), job) {
+                    PushOutcome::Pushed => return Ok(()),
+                    PushOutcome::Full(back) => job = back,
+                    PushOutcome::Closed(back)
+                    | PushOutcome::NoClaim(back) => break back,
+                }
+            }
+        }
+        PushOutcome::Closed(job) | PushOutcome::NoClaim(job) => job,
+    };
+    // Control-channel plane: producers without the ring claim, and the
+    // closed-ring fallback. Blocking when full (counted), value back
+    // on closure.
+    if slot.ctl_is_full() {
+        metrics.backpressure_events.inc();
+    }
+    slot.send_ctl_reclaim(job)
+}
+
+/// Shared single-sample submit path: route via the current shard table
+/// (one atomic load), enqueue via [`enqueue_data`]. When the routed
+/// worker's queues are closed the route is retried under a fresh
+/// table — a resize in flight — and only reported as an error when a
+/// repeat attempt under an unchanged epoch fails again (a genuinely
+/// dead worker).
 fn submit_inner(
     shard_map: &ShardMap,
-    senders: &Mutex<Vec<Sender<Job>>>,
+    senders: &SenderRegistry<Job>,
     metrics: &ServiceMetrics,
     sample: Sample,
     t0: Instant,
     count_in: bool,
 ) -> Result<()> {
+    let mut sample = sample;
+    let mut failed_at: Option<u64> = None;
     loop {
-        let table = shard_map.snapshot();
+        let table = shard_map.load();
+        let slots = senders.load();
+        if slots.is_empty() {
+            return Err(Error::Stream("service stopped".into()));
+        }
+        if slots.epoch() != table.epoch() {
+            // The install window between a shard-table swap and its
+            // sender-table restamp. Proceeding is safe (worst case a
+            // stray, which re-routing handles); count the miss.
+            metrics.route_epoch_misses.inc();
+        }
+        let epoch = table.epoch();
         let (w, _shard) = table.route(sample.stream_id);
-        let tx = {
-            let g = senders.lock().unwrap();
-            if g.is_empty() {
-                return Err(Error::Stream("service stopped".into()));
+        let enq = match slots.get(w) {
+            Some(slot) => {
+                enqueue_data(slot, metrics, Job::Sample(sample, t0))
             }
-            g.get(w).cloned()
+            // The table routed to a worker the registry no longer
+            // has: a shrink landed between the two loads. Retry.
+            None => Err(Job::Sample(sample, t0)),
         };
-        let Some(tx) = tx else {
-            // The table routed to a worker the registry no longer has:
-            // a shrink landed between our snapshot and the lookup. The
-            // next snapshot already reflects it.
-            continue;
-        };
-        let job = Job::Sample(sample, t0);
-        return match tx.try_send(job) {
-            Ok(None) => {
+        match enq {
+            Ok(()) => {
                 if count_in {
                     metrics.samples_in.inc();
                 }
-                Ok(())
+                return Ok(());
             }
-            Ok(Some(job)) => {
-                metrics.backpressure_events.inc();
-                tx.send(job)
-                    .map_err(|_| Error::Stream("worker queue closed".into()))?;
-                if count_in {
-                    metrics.samples_in.inc();
+            Err(Job::Sample(back, _)) => {
+                if failed_at == Some(epoch)
+                    && epoch == shard_map.load().epoch()
+                {
+                    return Err(Error::Stream("worker queue closed".into()));
                 }
-                Ok(())
+                failed_at = Some(epoch);
+                sample = back;
+                std::thread::yield_now();
             }
-            Err(_) => Err(Error::Stream("worker queue closed".into())),
-        };
+            Err(_) => unreachable!("submit_inner only enqueues Sample"),
+        }
     }
+}
+
+/// The shared batched submit core (ISSUE 6 tentpole, part 4): group a
+/// burst by routed worker under ONE routing snapshot, then perform one
+/// ring/channel operation per worker — routing and wakeup costs
+/// amortize across the burst. Falls back to per-sample submission
+/// (which retries under fresh routes) for any group whose worker
+/// closed underneath us.
+fn submit_batch_inner(
+    shard_map: &ShardMap,
+    senders: &SenderRegistry<Job>,
+    metrics: &ServiceMetrics,
+    samples: Vec<Sample>,
+) -> Result<()> {
+    if samples.is_empty() {
+        return Ok(());
+    }
+    let now = Instant::now();
+    let table = shard_map.load();
+    let slots = senders.load();
+    if slots.is_empty() {
+        return Err(Error::Stream("service stopped".into()));
+    }
+    if slots.epoch() != table.epoch() {
+        metrics.route_epoch_misses.inc();
+    }
+    let mut per_worker: Vec<Vec<Sample>> =
+        (0..table.workers()).map(|_| Vec::new()).collect();
+    for s in samples {
+        per_worker[table.route(s.stream_id).0].push(s);
+    }
+    for (w, batch) in per_worker.into_iter().enumerate() {
+        if batch.is_empty() {
+            continue;
+        }
+        // Count per delivered batch, not once at the end: a mid-loop
+        // failure (dead worker) must not leave already-delivered
+        // samples uncounted (verdicts_out would exceed samples_in
+        // exactly when the counters matter most).
+        let delivered = batch.len() as u64;
+        metrics.batch_sizes.record(delivered);
+        let enq = match slots.get(w) {
+            Some(slot) => {
+                enqueue_data(slot, metrics, Job::Batch(batch, now))
+            }
+            None => Err(Job::Batch(batch, now)),
+        };
+        match enq {
+            Ok(()) => metrics.samples_in.add(delivered),
+            Err(Job::Batch(batch, t0)) => {
+                // Routed against a table that resized under us: fall
+                // back to per-sample routing with fresh snapshots
+                // (each sample counts itself in).
+                for s in batch {
+                    submit_inner(shard_map, senders, metrics, s, t0, true)?;
+                }
+            }
+            Err(_) => unreachable!("batch core only enqueues Batch"),
+        }
+    }
+    Ok(())
 }
 
 /// Worker-side checkpoint/eviction knobs, lifted from [`ServiceConfig`].
@@ -265,6 +401,7 @@ fn spawn_worker(
     widx: usize,
     cfg: &ServiceConfig,
     owned: HashSet<u32>,
+    slot: Arc<WorkerSlot<Job>>,
     rx: Receiver<Job>,
     res_tx: Sender<Vec<Classified>>,
     stray_tx: Sender<Stray>,
@@ -299,8 +436,13 @@ fn spawn_worker(
                     last_seq: HashMap::new(),
                     tick: 0,
                 };
-                worker.run(rx, engine.as_mut())
+                worker.run(rx, &slot, engine.as_mut())
             }));
+            // Close the ring on EVERY exit — normal return, error, or
+            // panic — so a producer blocked on a full ring unblocks
+            // into the control channel's proper closed error instead
+            // of spinning forever against a dead consumer.
+            slot.close_ring();
             match outcome {
                 Ok(result) => result,
                 Err(payload) => {
@@ -389,15 +531,16 @@ impl Service {
         let (res_tx, res_rx) = crate::stream::unbounded::<Vec<Classified>>();
         let (stray_tx, stray_rx) = crate::stream::unbounded::<Stray>();
 
-        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut slots = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         for widx in 0..cfg.workers {
-            let (tx, rx) = bounded::<Job>(cfg.queue_capacity);
-            senders.push(tx);
+            let (slot, rx) = WorkerSlot::with_capacity(cfg.queue_capacity);
+            slots.push(slot.clone());
             workers.push(Some(spawn_worker(
                 widx,
                 &cfg,
                 table.shards_on(widx).into_iter().collect(),
+                slot,
                 rx,
                 res_tx.clone(),
                 stray_tx.clone(),
@@ -409,10 +552,11 @@ impl Service {
         }
         metrics.epoch.set(table.epoch());
         metrics.workers_active.set(cfg.workers as u64);
+        let epoch = table.epoch();
         Ok(Service {
             cfg,
             shard_map: Arc::new(ShardMap::new(table)),
-            senders: Arc::new(Mutex::new(senders)),
+            senders: Arc::new(SenderRegistry::new(slots, epoch)),
             workers: Mutex::new(workers),
             results_rx: res_rx,
             res_tx,
@@ -465,7 +609,7 @@ impl Service {
 
     /// Live worker count.
     pub fn workers(&self) -> usize {
-        self.senders.lock().unwrap().len()
+        self.senders.load().len()
     }
 
     /// Submit one sample, blocking when the worker queue is full
@@ -482,58 +626,16 @@ impl Service {
     }
 
     /// Submit a burst of samples: routed per stream, but enqueued as one
-    /// job per worker — one channel synchronization per burst per worker
-    /// instead of one per sample (the L3 hot-path optimization;
+    /// job per worker — one ring/channel synchronization per burst per
+    /// worker instead of one per sample (the L3 hot-path optimization;
     /// EXPERIMENTS.md §Perf).
     pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
-        let now = Instant::now();
-        let table = self.shard_map.snapshot();
-        let mut per_worker: Vec<Vec<Sample>> =
-            (0..table.workers()).map(|_| Vec::new()).collect();
-        for s in samples {
-            per_worker[table.route(s.stream_id).0].push(s);
-        }
-        for (w, batch) in per_worker.into_iter().enumerate() {
-            if batch.is_empty() {
-                continue;
-            }
-            let tx = self.senders.lock().unwrap().get(w).cloned();
-            let Some(tx) = tx else {
-                // Routed against a table that shrank under us: fall
-                // back to per-sample routing with a fresh snapshot
-                // (each sample counts itself in).
-                for s in batch {
-                    submit_inner(
-                        &self.shard_map,
-                        &self.senders,
-                        &self.metrics,
-                        s,
-                        now,
-                        true,
-                    )?;
-                }
-                continue;
-            };
-            // Count per delivered batch, not once at the end: a
-            // mid-loop failure (dead worker) must not leave already-
-            // delivered samples uncounted (verdicts_out would exceed
-            // samples_in exactly when the counters matter most).
-            let delivered = batch.len() as u64;
-            match tx.try_send(Job::Batch(batch, now)) {
-                Ok(None) => {}
-                Ok(Some(job)) => {
-                    self.metrics.backpressure_events.inc();
-                    tx.send(job).map_err(|_| {
-                        Error::Stream("worker queue closed".into())
-                    })?;
-                }
-                Err(_) => {
-                    return Err(Error::Stream("worker queue closed".into()))
-                }
-            }
-            self.metrics.samples_in.add(delivered);
-        }
-        Ok(())
+        submit_batch_inner(
+            &self.shard_map,
+            &self.senders,
+            &self.metrics,
+            samples,
+        )
     }
 
     /// Clonable submit-side handle for multi-threaded sources.
@@ -580,28 +682,52 @@ impl Service {
     fn drain_strays(&self) -> Result<usize> {
         let mut pending: Vec<Stray> =
             std::mem::take(&mut *self.parked.lock().unwrap());
+        // Strays resubmitted here were parked by an earlier failed
+        // drain — count the re-attempts (satellite f).
+        self.metrics.parked_retries.add(pending.len() as u64);
         while let Ok(Some(stray)) = self.stray_rx.try_recv() {
             pending.push(stray);
         }
+        if pending.is_empty() {
+            return Ok(0);
+        }
+        // Batched re-delivery: group by routed worker under one
+        // routing snapshot and hand each worker ONE Job::Replay on its
+        // control channel — Replay must ride the control plane to stay
+        // FIFO with the migration control traffic (the Adopt already
+        // queued ahead of it is what guarantees a resubmitted stray
+        // cannot stray again). Original submit Instants travel with
+        // each stray; samples_in was counted at the original submit.
+        let table = self.shard_map.load();
+        let slots = self.senders.load();
+        let mut per_worker: BTreeMap<usize, Vec<Stray>> = BTreeMap::new();
+        for stray in pending {
+            let (w, _shard) = table.route(stray.0.stream_id);
+            per_worker.entry(w).or_default().push(stray);
+        }
         let mut n = 0;
-        let mut rest = pending.into_iter();
-        while let Some((sample, t0)) = rest.next() {
-            let backup = (sample.clone(), t0);
-            // Counted into samples_in at the original submit.
-            if let Err(e) = submit_inner(
-                &self.shard_map,
-                &self.senders,
-                &self.metrics,
-                sample,
-                t0,
-                false,
-            ) {
-                let mut parked = self.parked.lock().unwrap();
-                parked.push(backup);
-                parked.extend(rest);
-                return Err(e);
+        let mut failed: Vec<Stray> = Vec::new();
+        for (w, strays) in per_worker {
+            let count = strays.len();
+            let undelivered = match slots.get(w) {
+                Some(slot) => match slot.send_ctl_reclaim(Job::Replay(strays)) {
+                    Ok(()) => None,
+                    Err(Job::Replay(back)) => Some(back),
+                    Err(_) => unreachable!("reclaim returns what was sent"),
+                },
+                None => Some(strays),
+            };
+            match undelivered {
+                None => n += count,
+                Some(back) => failed.extend(back),
             }
-            n += 1;
+        }
+        if !failed.is_empty() {
+            let n_failed = failed.len();
+            self.parked.lock().unwrap().extend(failed);
+            return Err(Error::Stream(format!(
+                "{n_failed} strays re-parked: target worker queue closed"
+            )));
         }
         Ok(n)
     }
@@ -614,15 +740,17 @@ impl Service {
     /// without losing late-rerouted verdicts.
     fn quiesce(&self) -> Result<()> {
         loop {
-            let txs: Vec<Sender<Job>> =
-                self.senders.lock().unwrap().clone();
-            let mut replies = Vec::with_capacity(txs.len());
-            for tx in &txs {
+            let slots = self.senders.snapshot();
+            let mut replies = Vec::with_capacity(slots.len());
+            for slot in slots.slots() {
                 let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
                 // A dead worker's queue fails the send; its own error
                 // is reported at join, so just skip the rendezvous.
-                if tx
-                    .send(Job::Seal { shards: Vec::new(), reply: reply_tx })
+                // (An empty Seal drains the worker's ring before
+                // answering, so the rendezvous still means "backlog
+                // processed" across both queue planes.)
+                if slot
+                    .send_ctl(Job::Seal { shards: Vec::new(), reply: reply_tx })
                     .is_ok()
                 {
                     replies.push(reply_rx);
@@ -772,11 +900,13 @@ impl Service {
     fn grow_to(&self, cur: usize, n: usize) -> Result<()> {
         // Register the new workers BEFORE any table routes to them.
         for widx in cur..n {
-            let (tx, rx) = bounded::<Job>(self.cfg.queue_capacity);
+            let (slot, rx) =
+                WorkerSlot::with_capacity(self.cfg.queue_capacity);
             let handle = spawn_worker(
                 widx,
                 &self.cfg,
                 HashSet::new(),
+                slot.clone(),
                 rx,
                 self.res_tx.clone(),
                 self.stray_tx.clone(),
@@ -785,7 +915,7 @@ impl Service {
                 self.ensemble_metrics.clone(),
                 self.state_mgr.clone(),
             )?;
-            self.senders.lock().unwrap().push(tx);
+            self.senders.push(slot);
             self.workers.lock().unwrap().push(Some(handle));
         }
         let table = self.shard_map.snapshot();
@@ -807,12 +937,15 @@ impl Service {
         // Late strays routed under pre-shrink tables may still sit
         // queued — re-route them before the retired queues close.
         self.drain_strays()?;
-        let retired: Vec<Sender<Job>> =
-            self.senders.lock().unwrap().split_off(n);
-        for tx in &retired {
-            let _ = tx.send(Job::Retire);
+        let retired = self.senders.truncate(n, self.shard_map.epoch());
+        for slot in &retired {
+            let _ = slot.send_ctl(Job::Retire);
+            // Explicit close: Senders retained by old tables would
+            // otherwise keep the queue open forever. Retire is already
+            // buffered — the worker still receives it, then sees the
+            // closure.
+            slot.close();
         }
-        drop(retired); // queues close; Retire is their last job
         let tail: Vec<Option<WorkerHandle>> =
             self.workers.lock().unwrap().split_off(n);
         for (i, handle) in tail.into_iter().enumerate() {
@@ -833,6 +966,10 @@ impl Service {
     fn install(&self, table: ShardTable) -> Result<()> {
         let installed = self.shard_map.install(table)?;
         self.metrics.epoch.set(installed.epoch());
+        // Sender-cache invalidation: stamp the sender table with the
+        // routing epoch so submitters stop counting
+        // `route_epoch_misses` once the pair agrees again.
+        self.senders.restamp(installed.epoch());
         Ok(())
     }
 
@@ -884,19 +1021,17 @@ impl Service {
             return Ok(());
         }
         let t0 = Instant::now();
-        let (from_tx, to_tx) = {
-            let g = self.senders.lock().unwrap();
-            match (g.get(from).cloned(), g.get(to).cloned()) {
-                (Some(f), Some(t)) => (f, t),
-                _ => {
-                    return Err(Error::Stream(format!(
-                        "migration {from} → {to} names a dead worker"
-                    )))
-                }
+        let slots = self.senders.snapshot();
+        let (from_tx, to_tx) = match (slots.get(from), slots.get(to)) {
+            (Some(f), Some(t)) => (f.clone(), t.clone()),
+            _ => {
+                return Err(Error::Stream(format!(
+                    "migration {from} → {to} names a dead worker"
+                )))
             }
         };
         to_tx
-            .send(Job::Expect { shards: shards.to_vec() })
+            .send_ctl(Job::Expect { shards: shards.to_vec() })
             .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
         let table = self.shard_map.snapshot();
         let moves: Vec<(u32, usize)> =
@@ -912,7 +1047,10 @@ impl Service {
         let seal = (|| -> Result<Vec<Vec<u8>>> {
             let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
             from_tx
-                .send(Job::Seal { shards: shards.to_vec(), reply: reply_tx })
+                .send_ctl(Job::Seal {
+                    shards: shards.to_vec(),
+                    reply: reply_tx,
+                })
                 .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
             let bundle = reply_rx.recv().map_err(|_| {
                 Error::Stream(format!("worker {from} died mid-migration"))
@@ -926,7 +1064,7 @@ impl Service {
             // them back into per-stream seq order.
             let (barrier_tx, barrier_rx) = bounded::<SealBundle>(1);
             from_tx
-                .send(Job::Seal { shards: Vec::new(), reply: barrier_tx })
+                .send_ctl(Job::Seal { shards: Vec::new(), reply: barrier_tx })
                 .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
             barrier_rx.recv().map_err(|_| {
                 Error::Stream(format!("worker {from} died mid-migration"))
@@ -942,7 +1080,7 @@ impl Service {
         // the new worker's queue so the stash replay sees them.
         let drain_err = self.drain_strays().err();
         to_tx
-            .send(Job::Adopt { shards: shards.to_vec(), records })
+            .send_ctl(Job::Adopt { shards: shards.to_vec(), records })
             .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
         if let Some(e) = seal_err.or(drain_err) {
             return Err(e);
@@ -998,16 +1136,19 @@ impl Service {
         } else {
             None
         };
-        {
-            let mut g = self.senders.lock().unwrap();
-            for tx in g.iter() {
-                // A dead worker's queue is already closed; its error
-                // surfaces at join below.
-                let _ = tx.send(last_job());
-            }
-            // Closes every queue even while ServiceHandles are alive
-            // (the registry is shared, not cloned).
-            g.clear();
+        let slots = self.senders.snapshot();
+        for slot in slots.slots() {
+            // A dead worker's queue is already closed; its error
+            // surfaces at join below.
+            let _ = slot.send_ctl(last_job());
+        }
+        // Empty the shared registry first so ServiceHandles observe
+        // "service stopped", then close every queue explicitly —
+        // retained tables hold Sender clones, so drop alone would
+        // never close them.
+        self.senders.clear();
+        for slot in slots.slots() {
+            slot.close();
         }
         drop(self.res_tx); // collectors see closure once workers finish
         let mut out = Vec::new();
@@ -1078,62 +1219,145 @@ struct Worker {
     tick: u64,
 }
 
+/// What the worker loop does after handling one job.
+enum Flow {
+    Continue,
+    Exit,
+}
+
 impl Worker {
+    /// Two-plane consumption discipline: exhaust the CONTROL channel
+    /// before each single ring pop. Control items (migration protocol,
+    /// diverted data from non-claimant producers, stray Replays) are
+    /// always at least as old as anything on the ring — the ring
+    /// claimant is a single thread, and a stream's samples switch
+    /// planes only across a claim change — so channel-first preserves
+    /// the per-stream order the protocol depends on. Residual
+    /// cross-thread same-stream handoffs fall to the watermark guard,
+    /// counted in `stale_drops` (documented contract: one submitting
+    /// thread per stream).
     fn run(
         &mut self,
         rx: Receiver<Job>,
+        slot: &WorkerSlot<Job>,
         engine: &mut dyn Engine,
     ) -> Result<()> {
-        while let Ok(job) = rx.recv() {
-            match job {
-                Job::Sample(sample, t0) => {
-                    let mut verdicts = Vec::new();
-                    self.process(engine, sample, t0, &mut verdicts)?;
-                    self.evict_idle(engine);
-                    self.emit(verdicts)?;
-                }
-                Job::Batch(samples, t0) => {
-                    // Accumulate the whole burst's verdicts, emit once.
-                    let mut all = Vec::with_capacity(samples.len());
-                    for sample in samples {
-                        self.process(engine, sample, t0, &mut all)?;
-                        self.evict_idle(engine);
+        'live: loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(Some(job)) => {
+                        if let Flow::Exit = self.handle(engine, slot, job)? {
+                            slot.close_ring();
+                            return Ok(());
+                        }
                     }
-                    self.emit(all)?;
+                    Ok(None) => break,
+                    Err(_) => break 'live,
                 }
-                Job::Seal { shards, reply } => {
-                    self.seal(engine, &shards, &reply)?;
-                }
-                Job::Expect { shards } => {
-                    self.pending.extend(shards);
-                }
-                Job::Adopt { shards, records } => {
-                    self.adopt(engine, &shards, records)?;
-                }
-                Job::Retire => {
-                    // All shards were migrated off before retirement,
-                    // so the flush is a formality for a strictly-empty
-                    // engine. Do NOT exit yet: a submitter that cloned
-                    // this queue's sender mid-submit may still enqueue
-                    // a last sample, which must be stray-forwarded, not
-                    // dropped — the loop ends when every sender (the
-                    // registry's and any such transient clone) is gone.
-                    debug_assert!(self.owned.is_empty());
-                    let verdicts = engine.flush()?;
-                    self.emit(verdicts)?;
-                }
-                Job::Flush => {
-                    let verdicts = engine.flush()?;
-                    self.emit(verdicts)?;
-                }
-                // Crash simulation: drop everything on the floor.
-                Job::Abort => return Ok(()),
             }
+            if let Some(job) = slot.pop_ring() {
+                if let Flow::Exit = self.handle(engine, slot, job)? {
+                    slot.close_ring();
+                    return Ok(());
+                }
+                continue;
+            }
+            // Both planes empty: park on the doorbell (re-checks
+            // emptiness under the lock; producers notify after every
+            // publish).
+            slot.park(&rx);
         }
-        // Input closed: final flush for whatever is still buffered.
+        // Control channel closed (the service's explicit close): stop
+        // accepting ring pushes, then drain what already landed —
+        // producers racing the closure must not lose samples.
+        slot.close_ring();
+        while let Some(job) = slot.pop_ring() {
+            self.handle(engine, slot, job)?;
+        }
+        // Final flush for whatever is still buffered.
         let verdicts = engine.flush()?;
         self.emit(verdicts)?;
         Ok(())
+    }
+
+    /// Dispatch one job. Returns whether the loop continues.
+    fn handle(
+        &mut self,
+        engine: &mut dyn Engine,
+        slot: &WorkerSlot<Job>,
+        job: Job,
+    ) -> Result<Flow> {
+        match job {
+            Job::Sample(sample, t0) => {
+                let mut verdicts = Vec::new();
+                self.process(engine, sample, t0, &mut verdicts)?;
+                self.evict_idle(engine);
+                self.emit(verdicts)?;
+            }
+            Job::Batch(samples, t0) => {
+                // Accumulate the whole burst's verdicts, emit once.
+                let mut all = Vec::with_capacity(samples.len());
+                for sample in samples {
+                    self.process(engine, sample, t0, &mut all)?;
+                    self.evict_idle(engine);
+                }
+                self.emit(all)?;
+            }
+            Job::Replay(strays) => {
+                // Batched stray re-delivery: same as Batch, but every
+                // stray carries its ORIGINAL submit time.
+                let mut all = Vec::with_capacity(strays.len());
+                for (sample, t0) in strays {
+                    self.process(engine, sample, t0, &mut all)?;
+                    self.evict_idle(engine);
+                }
+                self.emit(all)?;
+            }
+            Job::Seal { shards, reply } => {
+                // The seal's backlog barrier spans BOTH queue planes:
+                // drain the ring first so "the Seal answered" keeps
+                // meaning "everything enqueued before it is processed
+                // or stray-forwarded". Only data jobs can be on the
+                // ring, so this cannot recurse into another Seal.
+                while let Some(data) = slot.pop_ring() {
+                    self.handle(engine, slot, data)?;
+                }
+                self.seal(engine, &shards, &reply)?;
+            }
+            Job::Expect { shards } => {
+                self.pending.extend(shards);
+            }
+            Job::Adopt { shards, records } => {
+                self.adopt(engine, &shards, records)?;
+            }
+            Job::Retire => {
+                // All shards were migrated off before retirement, so
+                // the flush is a formality for a strictly-empty
+                // engine. Do NOT exit yet: a submitter may still land
+                // a last sample on either plane, which must be stray-
+                // forwarded, not dropped — the loop ends when the
+                // service explicitly closes this worker's queues.
+                debug_assert!(self.owned.is_empty());
+                let verdicts = engine.flush()?;
+                self.emit(verdicts)?;
+            }
+            Job::Flush => {
+                let verdicts = engine.flush()?;
+                self.emit(verdicts)?;
+            }
+            // Crash simulation: abandon engine state without flushing.
+            // The backlog already delivered to this worker (its ring)
+            // is still processed first — identical to the single-queue
+            // semantics where Abort queued strictly behind it — so
+            // only un-flushed engine state dies with the worker.
+            Job::Abort => {
+                while let Some(data) = slot.pop_ring() {
+                    self.handle(engine, slot, data)?;
+                }
+                return Ok(Flow::Exit);
+            }
+        }
+        Ok(Flow::Continue)
     }
 
     /// One sample through the engine: ownership check (stash or
@@ -1848,5 +2072,53 @@ mod tests {
         for c in &out {
             assert_eq!(c.verdict.k, c.verdict.seq + 1);
         }
+    }
+
+    #[test]
+    fn handle_submit_batch_counts_and_delivers() {
+        let svc = Service::start(base_cfg(EngineKind::Software, 3)).unwrap();
+        let handle = svc.handle();
+        let metrics = svc.metrics();
+        for seq in 0..50u64 {
+            let burst: Vec<Sample> = (0..8u64)
+                .map(|sid| Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.2, 0.7],
+                })
+                .collect();
+            handle.submit_batch(burst).unwrap();
+        }
+        handle.submit_batch(Vec::new()).unwrap(); // empty burst is a no-op
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 400);
+        assert_eq!(metrics.samples_in.get(), 400);
+        assert!(metrics.batch_sizes.count() > 0);
+        for c in &out {
+            assert_eq!(c.verdict.k, c.verdict.seq + 1);
+        }
+    }
+
+    #[test]
+    fn stale_sender_table_is_detected_and_counted() {
+        // White-box: install a successor routing table WITHOUT the
+        // restamp that Service::install performs, recreating the
+        // (normally microseconds-wide) window where the sender table
+        // lags the shard table. Submits must count the miss and still
+        // deliver; the restamp ends the miss-counting.
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        let metrics = svc.metrics();
+        let identity = svc.table().with_moves(&[], 2).unwrap(); // epoch + 1
+        svc.shard_map.install(identity).unwrap();
+        svc.submit(Sample { stream_id: 7, seq: 0, values: vec![0.1, 0.9] })
+            .unwrap();
+        assert!(metrics.route_epoch_misses.get() >= 1);
+        svc.senders.restamp(svc.shard_map.epoch());
+        let before = metrics.route_epoch_misses.get();
+        svc.submit(Sample { stream_id: 7, seq: 1, values: vec![0.1, 0.9] })
+            .unwrap();
+        assert_eq!(metrics.route_epoch_misses.get(), before);
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 2, "misses must not lose samples");
     }
 }

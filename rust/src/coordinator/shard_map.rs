@@ -14,15 +14,17 @@
 //!    install a successor table (epoch + 1) into the shared
 //!    [`ShardMap`], and every submitter picks it up on its next route.
 //!
-//! Readers take an `Arc` snapshot ([`ShardMap::snapshot`]) — routing
-//! decisions within one operation are made against one consistent
-//! epoch, and a snapshot held across a swap is *detectably* stale (its
-//! epoch lags), which is what the coordinator's stray-sample forwarding
-//! keys off.
+//! Readers route against [`ShardMap::load`] — since ISSUE 6 a **single
+//! atomic pointer load** (the hand-rolled arc-swap in
+//! [`crate::util::swap::Swap`]), so the steady-state submit path takes
+//! no lock at all. A borrow or [`ShardMap::snapshot`] held across a
+//! swap is *detectably* stale (its epoch lags), which is what the
+//! coordinator's stray-sample forwarding keys off.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::util::propkit::fnv1a;
+use crate::util::swap::Swap;
 use crate::{Error, Result};
 
 /// Default virtual shard count: enough granularity to balance hundreds
@@ -248,41 +250,52 @@ impl ShardTable {
 }
 
 /// The shared, swappable routing state: submitters and workers hold an
-/// `Arc<ShardMap>` and take [`ShardMap::snapshot`] per operation; the
-/// rebalancer installs successor tables with [`ShardMap::install`].
+/// `Arc<ShardMap>` and route against [`ShardMap::load`] (one atomic
+/// load) or take an owned [`ShardMap::snapshot`]; the rebalancer
+/// installs successor tables with [`ShardMap::install`], still
+/// strictly epoch-ordered (the check runs under the swap's writer
+/// lock, which only installers touch).
 #[derive(Debug)]
 pub struct ShardMap {
-    current: Mutex<Arc<ShardTable>>,
+    current: Swap<ShardTable>,
 }
 
 impl ShardMap {
     pub fn new(table: ShardTable) -> Self {
-        ShardMap { current: Mutex::new(Arc::new(table)) }
+        ShardMap { current: Swap::new(Arc::new(table)) }
     }
 
-    /// Cheap consistent snapshot of the current table.
+    /// The current table as a borrow — the zero-overhead hot path for
+    /// routing. The borrow stays readable across concurrent installs
+    /// (retention in [`Swap`]) but its epoch then lags.
+    #[inline]
+    pub fn load(&self) -> &ShardTable {
+        self.current.load()
+    }
+
+    /// Owned consistent snapshot of the current table (lock-free: one
+    /// pointer load + refcount bump).
     pub fn snapshot(&self) -> Arc<ShardTable> {
-        self.current.lock().unwrap().clone()
+        self.current.snapshot()
     }
 
     /// Current epoch.
     pub fn epoch(&self) -> u64 {
-        self.snapshot().epoch
+        self.load().epoch
     }
 
     /// Install a successor table. The epoch must strictly advance —
     /// concurrent rebalancers racing each other is a bug, not a merge.
     pub fn install(&self, table: ShardTable) -> Result<Arc<ShardTable>> {
-        let mut cur = self.current.lock().unwrap();
-        if table.epoch <= cur.epoch {
-            return Err(Error::Stream(format!(
-                "shard map epoch must advance (current {}, offered {})",
-                cur.epoch, table.epoch
-            )));
-        }
-        let table = Arc::new(table);
-        *cur = table.clone();
-        Ok(table)
+        self.current.rcu(|cur| {
+            if table.epoch <= cur.epoch {
+                return Err(Error::Stream(format!(
+                    "shard map epoch must advance (current {}, offered {})",
+                    cur.epoch, table.epoch
+                )));
+            }
+            Ok(Arc::new(table))
+        })
     }
 }
 
@@ -416,5 +429,25 @@ mod tests {
         // Epochs must strictly advance.
         let stale = snap0.with_moves(&[(1, 1)], 2).unwrap(); // epoch 1 again
         assert!(map.install(stale).is_err());
+    }
+
+    #[test]
+    fn load_borrow_survives_install_and_lags_detectably() {
+        // The lock-free read path: a borrow taken before an install
+        // stays readable (arc-swap retention) and is detectably stale,
+        // while fresh loads see the new epoch immediately.
+        let map = ShardMap::new(ShardTable::new_uniform(8, 2));
+        let before = map.load();
+        assert_eq!(before.epoch(), 0);
+        let t1 = before.with_workers(3).unwrap();
+        map.install(t1).unwrap();
+        assert_eq!(before.epoch(), 0, "old borrow unchanged");
+        assert_eq!(map.load().epoch(), 1);
+        assert_eq!(map.load().workers(), 3);
+        // Routing through the borrow still works (stale but coherent).
+        for sid in 0..50u64 {
+            assert!(before.route(sid).0 < 2);
+            assert!(map.load().route(sid).0 < 3);
+        }
     }
 }

@@ -17,6 +17,7 @@
 //! teda-fpga damadics [--catalog] [--schedule] [--csv OUT --item I]
 //! teda-fpga ensemble [--members LIST] [--combiner KIND] [--item 1..7]
 //! teda-fpga bench-trend [--root DIR]
+//! teda-fpga bench-gate  [--root DIR] [--max-regress 0.20]
 //! teda-fpga doctor
 //! ```
 //!
@@ -26,7 +27,9 @@
 use std::collections::HashMap;
 use std::process::ExitCode;
 
-use teda_fpga::config::{CombinerKind, EngineKind, EnsembleConfig, ServiceConfig};
+use teda_fpga::config::{
+    CombinerKind, EngineKind, EnsembleConfig, Json, ServiceConfig,
+};
 use teda_fpga::coordinator::{Service, ShardTable};
 use teda_fpga::damadics::{
     actuator1_schedule, evaluate_detection, fault_catalog, schedule_item,
@@ -61,6 +64,7 @@ fn main() -> ExitCode {
         "damadics" => cmd_damadics(&flags),
         "ensemble" => cmd_ensemble(&flags),
         "bench-trend" => cmd_bench_trend(&flags),
+        "bench-gate" => cmd_bench_gate(&flags),
         "doctor" => cmd_doctor(),
         "help" | "--help" | "-h" => {
             println!("{}", USAGE);
@@ -101,6 +105,7 @@ USAGE:
   teda-fpga ensemble [--members LIST] [--combiner KIND] [--workers N]
                      [--n-features N] [--item 1..7] [--seed X]
   teda-fpga bench-trend [--root DIR]
+  teda-fpga bench-gate  [--root DIR] [--max-regress 0.20]
   teda-fpga doctor
 
   LIST is `+`-separated member specs, e.g. 'teda+teda:m=2.5+zscore:m=3,w=64'
@@ -116,7 +121,10 @@ USAGE:
   `shards` prints the shard→worker table; `rebalance` is a live-
   migration smoke: it forces mid-stream shard moves + a worker resize
   and asserts verdict parity against an undisturbed run.
-  `bench-trend` folds BENCH_*.json into the cumulative BENCH_trend.json.";
+  `bench-trend` folds BENCH_*.json into the cumulative BENCH_trend.json;
+  `bench-gate` compares a fresh BENCH_shard.json against the previous
+  trend entry and fails on a routing/throughput regression beyond
+  --max-regress (default 20%).";
 
 type CliError = Box<dyn std::error::Error>;
 
@@ -289,21 +297,25 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         })
         .collect();
     let rebalance_every = cfg.sharding.rebalance_interval;
+    let handle = svc.handle();
     let mut submitted: u64 = 0;
     let mut next_rebalance = rebalance_every;
     let mut round: usize = 0;
     loop {
-        let mut any = false;
+        // One batched submit per round: the whole cross-stream burst
+        // is routed under a single snapshot and enqueued with one
+        // ring/channel operation per worker.
+        let mut round_burst = Vec::with_capacity(sources.len());
         for src in &mut sources {
             if let Some(s) = src.next_sample() {
-                svc.submit(s)?;
-                submitted += 1;
-                any = true;
+                round_burst.push(s);
             }
         }
-        if !any {
+        if round_burst.is_empty() {
             break;
         }
+        submitted += round_burst.len() as u64;
+        handle.submit_batch(round_burst)?;
         round += 1;
         // Live worker scaling: grow to --workers-max at the halfway
         // point (a deterministic mid-run resize the smoke tests lean
@@ -597,6 +609,146 @@ fn cmd_bench_trend(flags: &Flags) -> Result<(), CliError> {
     Ok(())
 }
 
+/// Pull `{"metric": .., "value": ..}` rows out of a bench result doc.
+fn metric_map(doc: &Json) -> HashMap<String, f64> {
+    let mut map = HashMap::new();
+    if let Some(rows) = doc.get("results").and_then(Json::as_arr) {
+        for row in rows {
+            if let (Some(name), Some(v)) = (
+                row.get("metric").and_then(Json::as_str),
+                row.get("value").and_then(Json::as_f64),
+            ) {
+                map.insert(name.to_string(), v);
+            }
+        }
+    }
+    map
+}
+
+/// `teda-fpga bench-gate` — the CI perf regression gate: compare a
+/// freshly emitted `BENCH_shard.json` against the most recent
+/// *different* entry in the committed `BENCH_trend.json` (the fresh
+/// run usually self-appended as the tail) and fail when routing
+/// latency or throughput regressed beyond `--max-regress`. Counter
+/// metrics (migration totals) are informational and never gate. A
+/// missing trend or metric passes with a notice — the gate only bites
+/// once a baseline exists to compare against.
+fn cmd_bench_gate(flags: &Flags) -> Result<(), CliError> {
+    let root = match flags.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .ok_or("cargo manifest dir has no parent")?
+            .to_path_buf(),
+    };
+    let max_regress: f64 = flags.parse_as("max-regress", 0.20f64)?;
+    if !(0.0..1.0).contains(&max_regress) {
+        return Err("--max-regress must be in [0, 1)".into());
+    }
+    let fresh_path = root.join("BENCH_shard.json");
+    let fresh_text = std::fs::read_to_string(&fresh_path).map_err(|e| {
+        format!(
+            "{}: {e} (run `cargo bench --bench shard` first)",
+            fresh_path.display()
+        )
+    })?;
+    let fresh = Json::parse(&fresh_text)
+        .map_err(|e| format!("{}: {e}", fresh_path.display()))?;
+    let current = metric_map(&fresh);
+    if current.is_empty() {
+        return Err("BENCH_shard.json emitted no metric rows — the bench \
+                    is broken, not merely slow"
+            .into());
+    }
+    let trend_path = root.join("BENCH_trend.json");
+    let trend_text = match std::fs::read_to_string(&trend_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "bench-gate: no {} — pass with notice (no baseline yet)",
+                trend_path.display()
+            );
+            return Ok(());
+        }
+    };
+    let trend = Json::parse(&trend_text)
+        .map_err(|e| format!("{}: {e}", trend_path.display()))?;
+    let baseline = trend
+        .get("shard")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .rev()
+        .filter_map(|entry| entry.get("results"))
+        .find(|doc| **doc != fresh)
+        .map(metric_map);
+    let Some(baseline) = baseline else {
+        println!(
+            "bench-gate: no prior shard baseline in {} — pass with notice",
+            trend_path.display()
+        );
+        return Ok(());
+    };
+    const LOWER_BETTER: [&str; 4] = [
+        "route_ns",
+        "route_snapshot_ns",
+        "migration_ns",
+        "migration_p99_ns",
+    ];
+    const HIGHER_BETTER: [&str; 3] = [
+        "throughput_single_sps",
+        "throughput_before_sps",
+        "throughput_after_rebalance_sps",
+    ];
+    println!("bench-gate: max regression {:.0}%", max_regress * 100.0);
+    let mut checked = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    let gated = LOWER_BETTER
+        .iter()
+        .map(|&n| (n, true))
+        .chain(HIGHER_BETTER.iter().map(|&n| (n, false)));
+    for (name, lower_better) in gated {
+        let (Some(&cur), Some(&base)) =
+            (current.get(name), baseline.get(name))
+        else {
+            println!("  {name:<32} no baseline — skipped");
+            continue;
+        };
+        checked += 1;
+        // Regression fraction, positive = worse.
+        let regress = if lower_better {
+            cur / base - 1.0
+        } else {
+            1.0 - cur / base
+        };
+        let delta_pct = (cur / base - 1.0) * 100.0;
+        println!("  {name:<32} {base:>14.1} → {cur:>14.1}  ({delta_pct:+.1}%)");
+        if base > 0.0 && regress > max_regress {
+            failures.push(format!(
+                "{name}: {base:.1} → {cur:.1} ({delta_pct:+.1}%, limit \
+                 ±{:.0}%)",
+                max_regress * 100.0
+            ));
+        }
+    }
+    if checked == 0 {
+        println!("bench-gate: no comparable metrics — pass with notice");
+        return Ok(());
+    }
+    if !failures.is_empty() {
+        return Err(format!(
+            "perf regression gate failed:\n  {}",
+            failures.join("\n  ")
+        )
+        .into());
+    }
+    println!(
+        "bench-gate OK: {checked} metric(s) within {:.0}% of baseline",
+        max_regress * 100.0
+    );
+    Ok(())
+}
+
 fn cmd_detect(flags: &Flags) -> Result<(), CliError> {
     let item: u32 = flags.parse_as("item", 1u32)?;
     let m: f64 = flags.parse_as("m", 3.0f64)?;
@@ -609,30 +761,13 @@ fn cmd_detect(flags: &Flags) -> Result<(), CliError> {
         event.fault, event.description, event.start, event.end
     );
     let trace = ActuatorSim::with_seed(seed).generate_day(Some(&event));
-    let outlier_flags: Vec<bool> = match engine {
-        "software" => {
-            let mut det = teda_fpga::teda::TedaDetector::new(2, m);
-            trace.samples.iter().map(|s| det.step(s).outlier).collect()
-        }
-        "rtl" => {
-            let mut rtl = TedaRtl::new(2, m as f32)?;
-            let s32: Vec<Vec<f32>> = trace
-                .samples
-                .iter()
-                .map(|s| s.iter().map(|&v| v as f32).collect())
-                .collect();
-            rtl.run(&s32)?.into_iter().map(|v| v.outlier).collect()
-        }
-        "ensemble" => {
-            let ecfg =
-                ensemble_from_flags(flags, EnsembleConfig::default())?;
-            println!(
-                "ensemble: [{}] via {}",
-                ecfg.labels().join(", "),
-                ecfg.combiner
-            );
-            run_ensemble_over_trace(&ecfg, &trace.samples, 2)?
-        }
+    // Every detect engine runs through the same service ingest path
+    // (1 worker, batched submits) that `serve` uses — the CLI exercises
+    // the production hot path instead of a per-engine side door.
+    let kind = match engine {
+        "software" => EngineKind::Software,
+        "rtl" => EngineKind::Rtl,
+        "ensemble" => EngineKind::Ensemble,
         other => {
             return Err(format!(
                 "detect supports software|rtl|ensemble, got {other}"
@@ -640,6 +775,39 @@ fn cmd_detect(flags: &Flags) -> Result<(), CliError> {
             .into())
         }
     };
+    let mut cfg = ServiceConfig {
+        engine: kind,
+        workers: 1,
+        n_features: 2,
+        m,
+        ..Default::default()
+    };
+    if kind == EngineKind::Ensemble {
+        cfg.ensemble = ensemble_from_flags(flags, EnsembleConfig::default())?;
+        println!(
+            "ensemble: [{}] via {}",
+            cfg.ensemble.labels().join(", "),
+            cfg.ensemble.combiner
+        );
+    }
+    let svc = Service::start(cfg)?;
+    let handle = svc.handle();
+    for (base, chunk) in trace.samples.chunks(256).enumerate() {
+        let batch: Vec<Sample> = chunk
+            .iter()
+            .enumerate()
+            .map(|(i, values)| Sample {
+                stream_id: 0,
+                seq: (base * 256 + i) as u64,
+                values: values.clone(),
+            })
+            .collect();
+        handle.submit_batch(batch)?;
+    }
+    let mut outlier_flags = vec![false; trace.samples.len()];
+    for c in svc.finish()? {
+        outlier_flags[c.verdict.seq as usize] = c.verdict.outlier;
+    }
     let report = evaluate_detection(&outlier_flags, &event, 1000);
     println!(
         "detected={} latency={:?} hits={}/{} false_alarm_rate={:.5}",

@@ -183,6 +183,16 @@ pub struct ServiceMetrics {
     /// Worker threads that died by panic (guarded by `catch_unwind`;
     /// the panic surfaces as that worker's error at drain).
     pub worker_panics: Counter,
+    /// Submits that observed a sender table stamped for an older
+    /// routing epoch (the microseconds-wide install window between a
+    /// shard-table swap and its sender-table restamp).
+    pub route_epoch_misses: Counter,
+    /// Data-ring pushes that found the SPSC ring full and entered the
+    /// counted backpressure spin (also counted in `backpressure`).
+    pub ring_full_events: Counter,
+    /// Previously-parked strays re-attempted by a later drain (stuck
+    /// strays are observable here rather than silently retried).
+    pub parked_retries: Counter,
     /// Current shard-map epoch (bumps once per installed table).
     pub epoch: Gauge,
     /// Live worker threads (tracks `scale_to`).
@@ -193,6 +203,9 @@ pub struct ServiceMetrics {
     pub chunk_time: Histogram,
     /// Wall time of one whole shard migration (seal → adopt).
     pub migration_time: Histogram,
+    /// Per-worker burst sizes seen by the batched submit core (how
+    /// well routing+wakeup costs amortize).
+    pub batch_sizes: Histogram,
 }
 
 impl ServiceMetrics {
@@ -218,11 +231,15 @@ impl ServiceMetrics {
              stray_reroutes    {}\n\
              stale_drops       {}\n\
              worker_panics     {}\n\
+             route_epoch_miss  {}\n\
+             ring_full         {}\n\
+             parked_retries    {}\n\
              epoch             {}\n\
              workers_active    {}\n\
              latency           {}\n\
              chunk_time        {}\n\
-             migration_time    {}\n",
+             migration_time    {}\n\
+             batch_sizes       {}\n",
             self.samples_in.get(),
             self.verdicts_out.get(),
             self.outliers.get(),
@@ -238,11 +255,15 @@ impl ServiceMetrics {
             self.stray_reroutes.get(),
             self.stale_drops.get(),
             self.worker_panics.get(),
+            self.route_epoch_misses.get(),
+            self.ring_full_events.get(),
+            self.parked_retries.get(),
             self.epoch.get(),
             self.workers_active.get(),
             self.latency.summary(),
             self.chunk_time.summary(),
             self.migration_time.summary(),
+            self.batch_sizes.summary(),
         )
     }
 }
@@ -472,12 +493,20 @@ mod tests {
         m.latency.record(1234);
         m.epoch.set(3);
         m.workers_active.set(5);
+        m.route_epoch_misses.inc();
+        m.ring_full_events.add(2);
+        m.parked_retries.add(4);
+        m.batch_sizes.record(8);
         let s = m.render();
         assert!(s.contains("samples_in        10"));
         assert!(s.contains("latency"));
         assert!(s.contains("epoch             3"));
         assert!(s.contains("workers_active    5"));
         assert!(s.contains("migrations        0"));
+        assert!(s.contains("route_epoch_miss  1"));
+        assert!(s.contains("ring_full         2"));
+        assert!(s.contains("parked_retries    4"));
+        assert!(s.contains("batch_sizes"));
     }
 
     #[test]

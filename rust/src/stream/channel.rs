@@ -1,14 +1,21 @@
 //! Bounded MPMC channel (Mutex + Condvar), the backpressure primitive.
+//!
+//! Closure happens two ways: implicitly when one side's handles all
+//! drop (the original contract), or explicitly via [`Sender::close`] —
+//! needed since the lock-free sender registry retains `Sender` clones
+//! for the life of the service, so closure-by-last-drop alone can no
+//! longer signal worker retirement. A closed channel still delivers
+//! everything already buffered before `recv` starts erroring.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Error: channel closed (no receivers remain).
+/// Error: channel closed (explicitly, or no receivers remain).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SendError;
 
-/// Error: channel closed (no senders remain) and empty.
+/// Error: channel closed (explicitly, or no senders remain) and empty.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RecvError;
 
@@ -23,6 +30,7 @@ struct State<T> {
     buf: VecDeque<T>,
     senders: usize,
     receivers: usize,
+    closed: bool,
 }
 
 /// Sending half (clonable).
@@ -52,6 +60,7 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
             buf: VecDeque::with_capacity(cap.min(1024)),
             senders: 1,
             receivers: 1,
+            closed: false,
         }),
         not_full: Condvar::new(),
         not_empty: Condvar::new(),
@@ -61,11 +70,13 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
 }
 
 impl<T> Sender<T> {
-    /// Blocking send; returns Err when every receiver is gone.
+    /// Blocking send; returns Err when the channel is closed or every
+    /// receiver is gone (a blocked send also unblocks with Err on
+    /// [`Sender::close`]).
     pub fn send(&self, value: T) -> Result<(), SendError> {
         let mut st = self.shared.q.lock().unwrap();
         loop {
-            if st.receivers == 0 {
+            if st.receivers == 0 || st.closed {
                 return Err(SendError);
             }
             if st.buf.len() < self.shared.cap {
@@ -82,7 +93,7 @@ impl<T> Sender<T> {
     /// event and fall back to a blocking [`Sender::send`].
     pub fn try_send(&self, value: T) -> Result<Option<T>, SendError> {
         let mut st = self.shared.q.lock().unwrap();
-        if st.receivers == 0 {
+        if st.receivers == 0 || st.closed {
             return Err(SendError);
         }
         if st.buf.len() < self.shared.cap {
@@ -92,6 +103,40 @@ impl<T> Sender<T> {
         } else {
             Ok(Some(value))
         }
+    }
+
+    /// Blocking send that hands the value back on closure instead of
+    /// dropping it — the submit retry path re-routes the job under a
+    /// fresh table rather than losing it.
+    pub fn send_reclaim(&self, value: T) -> Result<(), T> {
+        let mut st = self.shared.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 || st.closed {
+                return Err(value);
+            }
+            if st.buf.len() < self.shared.cap {
+                st.buf.push_back(value);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Whether the queue is currently at capacity (racy; used for
+    /// backpressure accounting before a blocking send).
+    pub fn is_full(&self) -> bool {
+        self.shared.q.lock().unwrap().buf.len() >= self.shared.cap
+    }
+
+    /// Explicitly close the channel from the sending side: subsequent
+    /// sends error immediately, receivers drain what is already
+    /// buffered and then see [`RecvError`]. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.shared.q.lock().unwrap();
+        st.closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
     }
 
     /// Current queue depth (diagnostics only; racy by nature).
@@ -124,8 +169,8 @@ impl<T> Drop for Sender<T> {
 }
 
 impl<T> Receiver<T> {
-    /// Blocking receive; returns Err when all senders are gone AND the
-    /// buffer is drained.
+    /// Blocking receive; returns Err when the channel is closed (all
+    /// senders gone, or explicit close) AND the buffer is drained.
     pub fn recv(&self) -> Result<T, RecvError> {
         let mut st = self.shared.q.lock().unwrap();
         loop {
@@ -133,7 +178,7 @@ impl<T> Receiver<T> {
                 self.shared.not_full.notify_one();
                 return Ok(v);
             }
-            if st.senders == 0 {
+            if st.senders == 0 || st.closed {
                 return Err(RecvError);
             }
             st = self.shared.not_empty.wait(st).unwrap();
@@ -149,7 +194,7 @@ impl<T> Receiver<T> {
                 self.shared.not_full.notify_one();
                 return Ok(Some(v));
             }
-            if st.senders == 0 {
+            if st.senders == 0 || st.closed {
                 return Err(RecvError);
             }
             let now = std::time::Instant::now();
@@ -163,7 +208,7 @@ impl<T> Receiver<T> {
                 .unwrap();
             st = guard;
             if res.timed_out() && st.buf.is_empty() {
-                if st.senders == 0 {
+                if st.senders == 0 || st.closed {
                     return Err(RecvError);
                 }
                 return Ok(None);
@@ -178,10 +223,23 @@ impl<T> Receiver<T> {
             self.shared.not_full.notify_one();
             return Ok(Some(v));
         }
-        if st.senders == 0 {
+        if st.senders == 0 || st.closed {
             return Err(RecvError);
         }
         Ok(None)
+    }
+
+    /// Whether the buffer is currently empty (racy; used by the worker
+    /// park predicate together with the doorbell's re-check protocol).
+    pub fn is_empty(&self) -> bool {
+        self.shared.q.lock().unwrap().buf.is_empty()
+    }
+
+    /// Whether the channel is closed (explicitly or all senders gone).
+    /// Buffered items may still be pending even when true.
+    pub fn is_closed(&self) -> bool {
+        let st = self.shared.q.lock().unwrap();
+        st.senders == 0 || st.closed
     }
 }
 
@@ -297,6 +355,55 @@ mod tests {
         assert_eq!(all.len(), 4000);
         all.dedup();
         assert_eq!(all.len(), 4000, "duplicate deliveries");
+    }
+
+    #[test]
+    fn send_reclaim_returns_the_value_on_closure() {
+        let (tx, rx) = bounded::<u32>(2);
+        assert_eq!(tx.send_reclaim(1), Ok(()));
+        tx.close();
+        assert_eq!(tx.send_reclaim(2), Err(2));
+        drop(rx);
+        assert_eq!(tx.send_reclaim(3), Err(3));
+    }
+
+    #[test]
+    fn explicit_close_delivers_buffered_then_errors() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.close();
+        // New sends fail immediately even though receivers exist...
+        assert_eq!(tx.send(3), Err(SendError));
+        assert_eq!(tx.try_send(3), Err(SendError));
+        // ...but the backlog still drains in order before RecvError.
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert!(rx.recv().is_err());
+        assert!(rx.try_recv().is_err());
+        assert!(rx.is_closed());
+    }
+
+    #[test]
+    fn close_unblocks_a_blocked_sender() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let tx2 = tx.clone();
+        let t = thread::spawn(move || tx2.send(2)); // blocks: full
+        thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert_eq!(t.join().unwrap(), Err(SendError));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn close_unblocks_a_blocked_receiver() {
+        let (tx, rx) = bounded::<u32>(1);
+        let t = thread::spawn(move || rx.recv());
+        thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert!(t.join().unwrap().is_err());
     }
 
     #[test]

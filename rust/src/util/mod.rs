@@ -8,6 +8,7 @@
 pub mod benchkit;
 pub mod prng;
 pub mod propkit;
+pub mod swap;
 
 /// A unique, not-yet-created directory under the system temp dir —
 /// shared by the persistence tests and benches so the uniqueness
