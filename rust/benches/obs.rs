@@ -1,0 +1,170 @@
+//! Observability-plane overhead: flight-recorder event cost (enabled
+//! and gated off), stage-histogram record cost, Prometheus text
+//! rendering, and full scrape round-trip latency.
+//!
+//! These numbers bound what the coordinator pays for ISSUE 7's
+//! instrumentation — the recorder/histogram costs are the per-event
+//! prices the hot path quotes, and the scrape side shows the metrics
+//! endpoint is cheap enough to poll at 1 Hz without touching workers.
+//!
+//! Emits `BENCH_obs.json` at the repository root and appends the run
+//! to the cumulative `BENCH_trend.json` (per-PR perf trajectory).
+//!
+//! Run: `cargo bench --bench obs`
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use teda_fpga::config::Json;
+use teda_fpga::metrics::{Histogram, ServiceMetrics};
+use teda_fpga::obs::prometheus::render_prometheus;
+use teda_fpga::obs::recorder::{record, recorder, EventKind};
+use teda_fpga::obs::MetricsServer;
+use teda_fpga::util::benchkit::{black_box, Bench};
+
+/// Events / histogram samples per measured iteration.
+const OPS: u64 = 100_000;
+/// Scrapes per measured iteration.
+const SCRAPES: u64 = 50;
+
+fn num(v: f64) -> Json {
+    Json::Num((v * 10.0).round() / 10.0)
+}
+
+fn row(results: &mut Vec<Json>, metric: &str, value: f64) {
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str(metric.into()));
+    row.insert("value".into(), num(value));
+    results.push(Json::Obj(row));
+}
+
+/// One blocking HTTP GET against the metrics endpoint; returns the
+/// body length (sanity-checked by the caller).
+fn scrape(addr: std::net::SocketAddr) -> usize {
+    let mut conn = TcpStream::connect(addr).expect("connect scrape");
+    conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: b\r\n\r\n")
+        .expect("send scrape");
+    let mut body = String::new();
+    conn.read_to_string(&mut body).expect("read scrape");
+    body.len()
+}
+
+fn main() {
+    println!("== observability plane ({OPS} ops/iter) ==\n");
+    let mut results = Vec::new();
+
+    // 1. Flight recorder, enabled: the seqlock ring push every journaled
+    //    coordinator event pays (clock read + 3 atomic stores).
+    recorder().configure(true, 4096);
+    let rec = Bench::new("event_record")
+        .iters(50)
+        .units(OPS, "events")
+        .run(|| {
+            for i in 0..OPS {
+                record(
+                    EventKind::Dequeue,
+                    black_box(i),
+                    (i % 256) as u32,
+                    (i % 4) as u32,
+                );
+            }
+        });
+    row(&mut results, "event_record_ns", rec.ns_per_unit);
+
+    // 2. Flight recorder, disabled: the one relaxed load the gate costs
+    //    when tracing is off (`obs.recorder = false`).
+    recorder().set_enabled(false);
+    let rec_off = Bench::new("event_record_disabled")
+        .iters(50)
+        .units(OPS, "events")
+        .run(|| {
+            for i in 0..OPS {
+                record(
+                    EventKind::Dequeue,
+                    black_box(i),
+                    (i % 256) as u32,
+                    (i % 4) as u32,
+                );
+            }
+        });
+    row(&mut results, "event_record_disabled_ns", rec_off.ns_per_unit);
+    recorder().set_enabled(true);
+
+    // 3. Stage histogram record: what queue_wait/engine_time/emit_time
+    //    add per observation (log2 bucket index + 2 relaxed adds).
+    let hist = Histogram::new();
+    let h = Bench::new("hist_record")
+        .iters(50)
+        .units(OPS, "records")
+        .run(|| {
+            for i in 0..OPS {
+                hist.record(black_box(i * 37 + 1));
+            }
+        });
+    row(&mut results, "hist_record_ns", h.ns_per_unit);
+
+    // 4. Prometheus text rendering over a fully populated registry.
+    let metrics = ServiceMetrics::new();
+    metrics.samples_in.add(1_000_000);
+    metrics.verdicts_out.add(1_000_000);
+    for i in 0..10_000u64 {
+        metrics.latency.record(i * 100 + 1);
+        metrics.queue_wait.record(i * 10 + 1);
+        metrics.engine_time.record(i * 50 + 1);
+        metrics.emit_time.record(i * 5 + 1);
+    }
+    let render = Bench::new("prometheus_render")
+        .iters(50)
+        .units(100, "renders")
+        .run(|| {
+            for _ in 0..100 {
+                black_box(render_prometheus(&metrics, None));
+            }
+        });
+    row(&mut results, "prometheus_render_ns", render.ns_per_unit);
+
+    // 5. Full scrape round trip: TCP connect + GET + render + read, the
+    //    latency a Prometheus poller actually observes.
+    let srv = MetricsServer::start("127.0.0.1:0", metrics.clone(), None)
+        .expect("start metrics server");
+    let addr = srv.local_addr();
+    assert!(scrape(addr) > 0, "scrape returned an empty response");
+    let sc = Bench::new("scrape")
+        .iters(20)
+        .units(SCRAPES, "scrapes")
+        .run(|| {
+            for _ in 0..SCRAPES {
+                black_box(scrape(addr));
+            }
+        });
+    row(&mut results, "scrape_ns", sc.ns_per_unit);
+    drop(srv);
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("obs".into()));
+    doc.insert(
+        "workload".into(),
+        Json::Str(format!(
+            "{OPS} recorder/histogram ops per iter, 4096-slot journals, \
+             {SCRAPES} scrapes per iter over loopback"
+        )),
+    );
+    doc.insert("results".into(), Json::Arr(results));
+    let json = Json::Obj(doc);
+
+    // Always the repository root (one level above the cargo manifest),
+    // matching the other BENCH_*.json emitters.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent");
+    let path = root.join("BENCH_obs.json");
+    std::fs::write(&path, json.to_string_compact() + "\n")
+        .expect("write BENCH_obs.json");
+    println!("wrote {}", path.display());
+    match teda_fpga::util::benchkit::append_trend(root, "obs", &json) {
+        Ok(true) => println!("appended run to BENCH_trend.json"),
+        Ok(false) => println!("BENCH_trend.json already has this run"),
+        Err(e) => eprintln!("warning: trend append failed: {e}"),
+    }
+}

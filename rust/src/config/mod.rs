@@ -11,5 +11,5 @@ pub mod toml;
 
 pub use ensemble::{CombinerKind, EnsembleConfig, MemberKind, MemberSpec};
 pub use json::Json;
-pub use service::{EngineKind, ServiceConfig, ShardingConfig};
+pub use service::{EngineKind, ObsConfig, ServiceConfig, ShardingConfig};
 pub use toml::TomlDoc;

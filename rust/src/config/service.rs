@@ -76,6 +76,30 @@ impl Default for ShardingConfig {
     }
 }
 
+/// Observability knobs (`[obs]` in TOML, `"obs"` in JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Bind address for the scrape endpoint (`/metrics`, `/`, `/trace`)
+    /// in `serve` (`None` = no endpoint). TOML/JSON: `obs.metrics_addr`,
+    /// CLI: `--metrics-addr`.
+    pub metrics_addr: Option<String>,
+    /// Flight recorder master switch. TOML/JSON: `obs.recorder`.
+    pub recorder: bool,
+    /// Per-thread flight-recorder journal capacity in events (rounded
+    /// up to a power of two). TOML/JSON: `obs.recorder_capacity`.
+    pub recorder_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            metrics_addr: None,
+            recorder: true,
+            recorder_capacity: 4096,
+        }
+    }
+}
+
 /// Full coordinator/service configuration.
 ///
 /// Built from a TOML file ([`ServiceConfig::from_toml`]) or defaults +
@@ -126,6 +150,8 @@ pub struct ServiceConfig {
     pub seed: u64,
     /// Elastic sharding: virtual shard count + rebalancer knobs.
     pub sharding: ShardingConfig,
+    /// Observability: scrape endpoint + flight recorder knobs.
+    pub obs: ObsConfig,
     /// Ensemble member roster + combiner (used when `engine = ensemble`).
     pub ensemble: EnsembleConfig,
 }
@@ -150,6 +176,7 @@ impl Default for ServiceConfig {
             evict_after: 0,
             seed: 0x7EDA, // "TEDA"
             sharding: ShardingConfig::default(),
+            obs: ObsConfig::default(),
             ensemble: EnsembleConfig::default(),
         }
     }
@@ -224,6 +251,15 @@ impl ServiceConfig {
         }
         if let Some(v) = doc.f64_("sharding.imbalance_threshold") {
             cfg.sharding.imbalance_threshold = v;
+        }
+        if let Some(v) = doc.str_("obs.metrics_addr") {
+            cfg.obs.metrics_addr = Some(v.to_string());
+        }
+        if let Some(v) = doc.bool_("obs.recorder") {
+            cfg.obs.recorder = v;
+        }
+        if let Some(v) = doc.usize_("obs.recorder_capacity") {
+            cfg.obs.recorder_capacity = v;
         }
         cfg.ensemble.apply_toml(&doc)?;
         cfg.validate()?;
@@ -314,6 +350,19 @@ impl ServiceConfig {
                 cfg.sharding.imbalance_threshold = v;
             }
         }
+        if let Some(obs) = doc.get("obs") {
+            if let Some(v) = obs.get("metrics_addr").and_then(Json::as_str) {
+                cfg.obs.metrics_addr = Some(v.to_string());
+            }
+            if let Some(v) = obs.get("recorder").and_then(Json::as_bool) {
+                cfg.obs.recorder = v;
+            }
+            if let Some(v) =
+                obs.get("recorder_capacity").and_then(Json::as_usize)
+            {
+                cfg.obs.recorder_capacity = v;
+            }
+        }
         if let Some(batcher) = doc.get("batcher") {
             if let Some(v) =
                 batcher.get("max_streams").and_then(Json::as_usize)
@@ -394,6 +443,18 @@ impl ServiceConfig {
                  rebalance forever)"
                     .into(),
             ));
+        }
+        if self.obs.recorder_capacity == 0 {
+            return Err(Error::Config(
+                "obs.recorder_capacity must be > 0".into(),
+            ));
+        }
+        if let Some(addr) = &self.obs.metrics_addr {
+            if !addr.contains(':') {
+                return Err(Error::Config(format!(
+                    "obs.metrics_addr '{addr}' must be host:port"
+                )));
+            }
         }
         if self.engine == EngineKind::Ensemble {
             self.ensemble.validate()?;
@@ -549,6 +610,10 @@ mod tests {
             linger_us = 42
             [artifacts]
             dir = "/opt/a"
+            [obs]
+            metrics_addr = "127.0.0.1:9464"
+            recorder = false
+            recorder_capacity = 512
             [ensemble]
             combiner = "adaptive"
             members = ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]
@@ -562,6 +627,8 @@ mod tests {
                            "evict_after": 5000},
             "batcher": {"max_streams": 8, "chunk_t": 16, "linger_us": 42},
             "artifacts": {"dir": "/opt/a"},
+            "obs": {"metrics_addr": "127.0.0.1:9464",
+                    "recorder": false, "recorder_capacity": 512},
             "ensemble": {"combiner": "adaptive",
                          "members": ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]}
         }"#;
@@ -580,6 +647,49 @@ mod tests {
         assert_eq!(a.checkpoint_keep, 2);
         assert_eq!(a.evict_after, 5000);
         assert_eq!(a.m, 2.5);
+        assert_eq!(a.obs.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
+        assert!(!a.obs.recorder);
+        assert_eq!(a.obs.recorder_capacity, 512);
+    }
+
+    #[test]
+    fn obs_section_defaults_and_partials() {
+        let cfg = ServiceConfig::default();
+        assert!(cfg.obs.metrics_addr.is_none(), "no endpoint by default");
+        assert!(cfg.obs.recorder, "recorder on by default");
+        assert_eq!(cfg.obs.recorder_capacity, 4096);
+        // A partial section keeps the other defaults.
+        let cfg = ServiceConfig::from_toml(
+            "[obs]\nmetrics_addr = \"0.0.0.0:9464\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.metrics_addr.as_deref(), Some("0.0.0.0:9464"));
+        assert!(cfg.obs.recorder);
+        assert_eq!(cfg.obs.recorder_capacity, 4096);
+        let cfg = ServiceConfig::from_json(
+            r#"{"obs": {"recorder": false}}"#,
+        )
+        .unwrap();
+        assert!(!cfg.obs.recorder);
+        assert!(cfg.obs.metrics_addr.is_none());
+    }
+
+    #[test]
+    fn invalid_obs_rejected() {
+        assert!(ServiceConfig::from_toml(
+            "[obs]\nrecorder_capacity = 0\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"obs": {"recorder_capacity": 0}}"#
+        )
+        .is_err());
+        // An address without a port would only fail at bind time deep
+        // inside serve; reject it at parse time instead.
+        assert!(ServiceConfig::from_toml(
+            "[obs]\nmetrics_addr = \"localhost\"\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -54,6 +54,13 @@
 //!   burst.
 //! - **Backpressure**: all queues are bounded; a full worker queue
 //!   blocks the router (and ultimately the source), never drops.
+//! - **Observability** ([`crate::obs`]): the coordinator journals its
+//!   control-flow events (routing retries, ring stalls, seal/adopt,
+//!   checkpoints, epoch swaps, panics) into the flight recorder, stamps
+//!   every job at submit so verdict latency decomposes into
+//!   queue-wait / engine / emit stage histograms, and feeds the
+//!   rebalancer *windowed* per-shard deltas ([`crate::obs::ShardWindow`])
+//!   instead of lifetime counters.
 
 pub mod ring;
 pub mod senders;

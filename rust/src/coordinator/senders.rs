@@ -26,6 +26,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::ring::{PushOutcome, SpscRing};
+use crate::obs::recorder::{record, EventKind, NO_WORKER};
 use crate::stream::{bounded, Receiver, SendError, Sender};
 use crate::util::swap::Swap;
 
@@ -164,6 +165,12 @@ impl<T: Send> WorkerSlot<T> {
         self.ring.is_empty()
     }
 
+    /// Racy occupancy of the data ring — an observability gauge (queue
+    /// depth per worker), not a synchronization primitive.
+    pub fn queue_depth(&self) -> usize {
+        self.ring.len()
+    }
+
     /// Ring the doorbell without sending (used by closers).
     pub fn notify(&self) {
         self.doorbell.notify();
@@ -283,6 +290,7 @@ impl<T> SenderRegistry<T> {
         self.swap.store_with(|cur| {
             SenderTable::new(cur.slots.clone(), epoch)
         });
+        record(EventKind::EpochSwap, epoch, 0, NO_WORKER);
     }
 
     /// Publish an empty table (service stop): every subsequent submit

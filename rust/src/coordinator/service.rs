@@ -18,6 +18,8 @@ use crate::engine::{
 };
 use crate::ensemble::EnsembleEngine;
 use crate::metrics::{EnsembleMetrics, ServiceMetrics, ShardMetrics};
+use crate::obs::recorder::{record, EventKind};
+use crate::obs::window::{MetricsWindow, ShardWindow};
 use crate::persist::{codec, CheckpointStore, FileStore};
 use crate::runtime::XlaRuntime;
 use crate::stream::{bounded, Receiver, Sample, Sender};
@@ -121,9 +123,10 @@ pub struct Service {
     parked: Mutex<Vec<Stray>>,
     /// Serializes migrate / scale / rebalance operations.
     rebalance_lock: Mutex<()>,
-    /// Shard sample counts at the last `maybe_rebalance` check (the
-    /// rebalancer acts on load deltas, not lifetime totals).
-    last_shard_counts: Mutex<Vec<u64>>,
+    /// Per-shard windowed activity (sample deltas + windowed p99) since
+    /// the last `maybe_rebalance` check — the rebalancer acts on recent
+    /// load, not lifetime totals.
+    shard_window: Mutex<ShardWindow>,
 }
 
 /// Cheap clonable submit-side handle. Shares the live shard map and
@@ -181,13 +184,28 @@ impl ServiceHandle {
 fn enqueue_data(
     slot: &WorkerSlot<Job>,
     metrics: &ServiceMetrics,
+    w: usize,
     job: Job,
 ) -> std::result::Result<(), Job> {
+    // Flight-recorder discipline (the hot-path contract, see
+    // `crate::obs`): the per-sample fast path records NOTHING; the
+    // batched path records one event per worker burst; anomalies
+    // (ring-full stalls) record unconditionally.
+    let (trace, n) = match &job {
+        Job::Batch(batch, _) => (true, batch.len() as u64),
+        _ => (false, 1),
+    };
     let job = match slot.try_push(thread_token(), job) {
-        PushOutcome::Pushed => return Ok(()),
+        PushOutcome::Pushed => {
+            if trace {
+                record(EventKind::RingPush, n, 0, w as u32);
+            }
+            return Ok(());
+        }
         PushOutcome::Full(job) => {
             metrics.ring_full_events.inc();
             metrics.backpressure_events.inc();
+            record(EventKind::RingFull, n, 0, w as u32);
             let mut job = job;
             loop {
                 // The consumer cannot be parked while its ring is
@@ -196,7 +214,12 @@ fn enqueue_data(
                 slot.notify();
                 std::thread::yield_now();
                 match slot.try_push(thread_token(), job) {
-                    PushOutcome::Pushed => return Ok(()),
+                    PushOutcome::Pushed => {
+                        if trace {
+                            record(EventKind::RingPush, n, 0, w as u32);
+                        }
+                        return Ok(());
+                    }
                     PushOutcome::Full(back) => job = back,
                     PushOutcome::Closed(back)
                     | PushOutcome::NoClaim(back) => break back,
@@ -211,7 +234,11 @@ fn enqueue_data(
     if slot.ctl_is_full() {
         metrics.backpressure_events.inc();
     }
-    slot.send_ctl_reclaim(job)
+    let sent = slot.send_ctl_reclaim(job);
+    if sent.is_ok() && trace {
+        record(EventKind::CtlPush, n, 0, w as u32);
+    }
+    sent
 }
 
 /// Shared single-sample submit path: route via the current shard table
@@ -243,10 +270,10 @@ fn submit_inner(
             metrics.route_epoch_misses.inc();
         }
         let epoch = table.epoch();
-        let (w, _shard) = table.route(sample.stream_id);
+        let (w, shard) = table.route(sample.stream_id);
         let enq = match slots.get(w) {
             Some(slot) => {
-                enqueue_data(slot, metrics, Job::Sample(sample, t0))
+                enqueue_data(slot, metrics, w, Job::Sample(sample, t0))
             }
             // The table routed to a worker the registry no longer
             // has: a shrink landed between the two loads. Retry.
@@ -265,6 +292,9 @@ fn submit_inner(
                 {
                     return Err(Error::Stream("worker queue closed".into()));
                 }
+                // Off the fast path already (a resize in flight):
+                // journal the retried route for the postmortem trail.
+                record(EventKind::Route, back.stream_id, shard, w as u32);
                 failed_at = Some(epoch);
                 sample = back;
                 std::thread::yield_now();
@@ -313,9 +343,10 @@ fn submit_batch_inner(
         // exactly when the counters matter most).
         let delivered = batch.len() as u64;
         metrics.batch_sizes.record(delivered);
+        record(EventKind::Submit, delivered, 0, w as u32);
         let enq = match slots.get(w) {
             Some(slot) => {
-                enqueue_data(slot, metrics, Job::Batch(batch, now))
+                enqueue_data(slot, metrics, w, Job::Batch(batch, now))
             }
             None => Err(Job::Batch(batch, now)),
         };
@@ -454,6 +485,16 @@ fn spawn_worker(
                             payload.downcast_ref::<String>().cloned()
                         })
                         .unwrap_or_else(|| "non-string panic".into());
+                    // Postmortem: journal the death, then dump the
+                    // merged recorder tail — the last events leading
+                    // up to the panic, not just a counter bump.
+                    record(EventKind::WorkerPanic, 0, 0, widx as u32);
+                    if crate::obs::recorder().is_enabled() {
+                        eprintln!(
+                            "worker {widx} panicked: {msg}\n{}",
+                            crate::obs::recorder().render_tail(64)
+                        );
+                    }
                     Err(Error::Stream(format!(
                         "worker {widx} panicked: {msg}"
                     )))
@@ -553,6 +594,8 @@ impl Service {
         metrics.epoch.set(table.epoch());
         metrics.workers_active.set(cfg.workers as u64);
         let epoch = table.epoch();
+        let shard_window =
+            ShardWindow::new(cfg.sharding.virtual_shards as usize);
         Ok(Service {
             cfg,
             shard_map: Arc::new(ShardMap::new(table)),
@@ -568,7 +611,7 @@ impl Service {
             state_mgr,
             parked: Mutex::new(Vec::new()),
             rebalance_lock: Mutex::new(()),
-            last_shard_counts: Mutex::new(Vec::new()),
+            shard_window: Mutex::new(shard_window),
         })
     }
 
@@ -590,6 +633,25 @@ impl Service {
     /// Shared per-member ensemble counters (ensemble engine only).
     pub fn ensemble_metrics(&self) -> Option<Arc<EnsembleMetrics>> {
         self.ensemble_metrics.clone()
+    }
+
+    /// A fresh rolling delta window over this service's metrics
+    /// registry (baseline = now). Tick it periodically for
+    /// rates-per-interval and windowed stage p99s — the signals the
+    /// serve loop prints and autoscaling policies consume.
+    pub fn metrics_window(&self) -> MetricsWindow {
+        MetricsWindow::new(&self.metrics)
+    }
+
+    /// Racy per-worker data-ring occupancy (diagnostics: is
+    /// backpressure building, and on which worker?).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.senders
+            .load()
+            .slots()
+            .iter()
+            .map(|s| s.queue_depth())
+            .collect()
     }
 
     /// Shared state manager (checkpoints).
@@ -796,28 +858,20 @@ impl Service {
     /// loop (`sharding.rebalance_interval` is the suggested cadence).
     pub fn maybe_rebalance(&self) -> Result<Vec<(u32, usize)>> {
         let _guard = self.rebalance_lock.lock().unwrap();
-        let counts = self.shard_metrics.sample_counts();
-        let delta: Vec<u64> = {
-            let mut last = self.last_shard_counts.lock().unwrap();
-            if last.len() != counts.len() {
-                *last = vec![0; counts.len()];
-            }
-            let d = counts
-                .iter()
-                .zip(last.iter())
-                .map(|(c, l)| c.saturating_sub(*l))
-                .collect();
-            *last = counts;
-            d
-        };
+        // Windowed per-shard activity since the last check: sample
+        // deltas drive the balance decision exactly as before, and the
+        // windowed p99 breaks ties between equally-loaded shards (move
+        // the one whose tail is hurting).
+        let delta: Vec<crate::obs::ShardDelta> =
+            self.shard_window.lock().unwrap().delta(&self.shard_metrics);
         let table = self.shard_map.snapshot();
         let workers = table.workers();
         if workers < 2 {
             return Ok(Vec::new());
         }
         let mut load = vec![0u64; workers];
-        for (s, d) in delta.iter().enumerate() {
-            load[table.worker_of(s as u32)] += d;
+        for d in &delta {
+            load[table.worker_of(d.shard)] += d.samples;
         }
         let total: u64 = load.iter().sum();
         if total == 0 {
@@ -835,18 +889,26 @@ impl Service {
         if donor == recipient {
             return Ok(Vec::new());
         }
-        // Donor's shards, hottest first; move while it narrows the gap,
-        // always leaving the donor at least one shard.
-        let mut donor_shards: Vec<(u32, u64)> = table
+        // Donor's shards, hottest first — by windowed volume, then by
+        // windowed p99 (between equally-loaded shards, prefer moving
+        // the one with the worse tail), then by shard id for
+        // determinism; move while it narrows the gap, always leaving
+        // the donor at least one shard.
+        let mut donor_shards: Vec<(u32, u64, u64)> = table
             .shards_on(donor)
             .into_iter()
-            .map(|s| (s, delta[s as usize]))
+            .map(|s| {
+                let d = &delta[s as usize];
+                (s, d.samples, d.p99_ns)
+            })
             .collect();
-        donor_shards.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        donor_shards.sort_by(|a, b| {
+            b.1.cmp(&a.1).then(b.2.cmp(&a.2)).then(a.0.cmp(&b.0))
+        });
         let mut donor_load = load[donor];
         let mut recip_load = load[recipient];
         let mut moves: Vec<(u32, usize)> = Vec::new();
-        for (shard, l) in &donor_shards {
+        for (shard, l, _p99) in &donor_shards {
             if *l == 0 || moves.len() + 1 >= donor_shards.len() {
                 break;
             }
@@ -1091,13 +1153,12 @@ impl Service {
         self.metrics
             .migration_time
             .record(t0.elapsed().as_nanos() as u64);
-        // Re-baseline the rebalancer's load deltas: the seal drain just
+        // Re-baseline the rebalancer's load window: the seal drain just
         // attributed the donor's queued backlog to shards that now map
         // to the new owner — without a fresh snapshot the next
         // `maybe_rebalance` would read that backlog as load on the new
         // worker and ping-pong the shard straight back.
-        *self.last_shard_counts.lock().unwrap() =
-            self.shard_metrics.sample_counts();
+        self.shard_window.lock().unwrap().rebaseline(&self.shard_metrics);
         Ok(())
     }
 
@@ -1265,6 +1326,7 @@ impl Worker {
             // Both planes empty: park on the doorbell (re-checks
             // emptiness under the lock; producers notify after every
             // publish).
+            record(EventKind::Park, 0, 0, self.widx as u32);
             slot.park(&rx);
         }
         // Control channel closed (the service's explicit close): stop
@@ -1276,7 +1338,7 @@ impl Worker {
         }
         // Final flush for whatever is still buffered.
         let verdicts = engine.flush()?;
-        self.emit(verdicts)?;
+        self.emit(verdicts, true)?;
         Ok(())
     }
 
@@ -1289,29 +1351,69 @@ impl Worker {
     ) -> Result<Flow> {
         match job {
             Job::Sample(sample, t0) => {
+                // Single-sample hot path: one extra clock read for the
+                // queue-wait split; engine/emit stage timing stays on
+                // the batched path only (the < 20% bench-gate budget).
+                let t_dq = Instant::now();
+                self.metrics
+                    .queue_wait
+                    .record(t_dq.saturating_duration_since(t0).as_nanos()
+                        as u64);
                 let mut verdicts = Vec::new();
                 self.process(engine, sample, t0, &mut verdicts)?;
                 self.evict_idle(engine);
-                self.emit(verdicts)?;
+                self.emit(verdicts, false)?;
             }
             Job::Batch(samples, t0) => {
                 // Accumulate the whole burst's verdicts, emit once.
+                // Stage split: the burst shares one submit time, so one
+                // queue-wait record covers it; engine time spans the
+                // whole process loop (per-burst, amortized like the
+                // queue synchronization itself).
+                let t_dq = Instant::now();
+                self.metrics
+                    .queue_wait
+                    .record(t_dq.saturating_duration_since(t0).as_nanos()
+                        as u64);
+                record(
+                    EventKind::Dequeue,
+                    samples.len() as u64,
+                    0,
+                    self.widx as u32,
+                );
                 let mut all = Vec::with_capacity(samples.len());
                 for sample in samples {
                     self.process(engine, sample, t0, &mut all)?;
                     self.evict_idle(engine);
                 }
-                self.emit(all)?;
+                self.metrics
+                    .engine_time
+                    .record(t_dq.elapsed().as_nanos() as u64);
+                self.emit(all, true)?;
             }
             Job::Replay(strays) => {
                 // Batched stray re-delivery: same as Batch, but every
-                // stray carries its ORIGINAL submit time.
+                // stray carries its ORIGINAL submit time (one
+                // queue-wait record per stray — their waits differ).
+                let t_dq = Instant::now();
+                record(
+                    EventKind::Dequeue,
+                    strays.len() as u64,
+                    0,
+                    self.widx as u32,
+                );
                 let mut all = Vec::with_capacity(strays.len());
                 for (sample, t0) in strays {
+                    self.metrics.queue_wait.record(
+                        t_dq.saturating_duration_since(t0).as_nanos() as u64,
+                    );
                     self.process(engine, sample, t0, &mut all)?;
                     self.evict_idle(engine);
                 }
-                self.emit(all)?;
+                self.metrics
+                    .engine_time
+                    .record(t_dq.elapsed().as_nanos() as u64);
+                self.emit(all, true)?;
             }
             Job::Seal { shards, reply } => {
                 // The seal's backlog barrier spans BOTH queue planes:
@@ -1339,11 +1441,11 @@ impl Worker {
                 // service explicitly closes this worker's queues.
                 debug_assert!(self.owned.is_empty());
                 let verdicts = engine.flush()?;
-                self.emit(verdicts)?;
+                self.emit(verdicts, true)?;
             }
             Job::Flush => {
                 let verdicts = engine.flush()?;
-                self.emit(verdicts)?;
+                self.emit(verdicts, true)?;
             }
             // Crash simulation: abandon engine state without flushing.
             // The backlog already delivered to this worker (its ring)
@@ -1382,6 +1484,7 @@ impl Worker {
                 // Routed under a stale table — hand it back for
                 // re-routing. Never processed here, never lost.
                 self.metrics.stray_reroutes.inc();
+                record(EventKind::Stray, sid, shard, self.widx as u32);
                 let _ = self.stray_tx.send((sample, t0));
             }
             return Ok(());
@@ -1398,6 +1501,7 @@ impl Worker {
             if let Some(cp) = self.state_mgr.latest(sid) {
                 engine.restore(sid, cp.snapshot)?;
                 self.metrics.stream_restores.inc();
+                record(EventKind::Restore, sid, shard, self.widx as u32);
                 self.restored_at.insert(sid, cp.seq);
                 self.last_seq.insert(sid, cp.seq);
             }
@@ -1479,6 +1583,12 @@ impl Worker {
         for shard in shards {
             self.owned.remove(shard);
         }
+        record(
+            EventKind::Seal,
+            records.len() as u64,
+            shards.len() as u32,
+            self.widx as u32,
+        );
         // Rebalancer gone mid-protocol (service torn down): nothing to
         // do — the checkpoints above are already published.
         let _ = reply.send(SealBundle { records });
@@ -1494,8 +1604,14 @@ impl Worker {
         shards: &[u32],
         records: Vec<Vec<u8>>,
     ) -> Result<()> {
-        for record in records {
-            let cp = codec::decode(&record)?;
+        record(
+            EventKind::Adopt,
+            records.len() as u64,
+            shards.len() as u32,
+            self.widx as u32,
+        );
+        for rec in records {
+            let cp = codec::decode(&rec)?;
             let sid = cp.stream_id;
             engine.restore(sid, cp.snapshot)?;
             self.seen.insert(sid);
@@ -1524,7 +1640,7 @@ impl Worker {
             self.process(engine, sample, t0, &mut verdicts)?;
         }
         self.evict_idle(engine);
-        self.emit(verdicts)?;
+        self.emit(verdicts, true)?;
         Ok(())
     }
 
@@ -1547,6 +1663,7 @@ impl Worker {
         for sid in idle {
             engine.evict(sid);
             self.state_mgr.evict(sid);
+            record(EventKind::Evict, sid, 0, self.widx as u32);
             self.seen.remove(&sid);
             self.restored_at.remove(&sid);
             self.last_seen.remove(&sid);
@@ -1559,11 +1676,14 @@ impl Worker {
     }
 
     /// One burst send per engine call: metrics are batched too (counter
-    /// adds are cheap but the channel lock is not).
-    fn emit(&mut self, verdicts: Vec<EngineVerdict>) -> Result<()> {
+    /// adds are cheap but the channel lock is not). `timed` records the
+    /// emit-stage duration (one clock-read pair per burst) — disabled
+    /// on the single-sample hot path by the caller.
+    fn emit(&mut self, verdicts: Vec<EngineVerdict>, timed: bool) -> Result<()> {
         if verdicts.is_empty() {
             return Ok(());
         }
+        let t_emit = timed.then(Instant::now);
         let mut burst = Vec::with_capacity(verdicts.len());
         let mut outliers = 0u64;
         for v in verdicts {
@@ -1597,6 +1717,9 @@ impl Worker {
                 self.widx
             ))
         })?;
+        if let Some(t) = t_emit {
+            self.metrics.emit_time.record(t.elapsed().as_nanos() as u64);
+        }
         Ok(())
     }
 }
@@ -1997,6 +2120,60 @@ mod tests {
         // Balanced load afterwards → second check does nothing.
         assert!(svc.maybe_rebalance().unwrap().is_empty());
         svc.finish().unwrap();
+    }
+
+    #[test]
+    fn stage_histograms_and_recorder_cover_the_batched_path() {
+        crate::obs::recorder().set_enabled(true);
+        let svc = Service::start(base_cfg(EngineKind::Software, 2)).unwrap();
+        let metrics = svc.metrics();
+        let mut window = svc.metrics_window();
+        let batch: Vec<Sample> = (0..4u64)
+            .flat_map(|sid| {
+                (0..50u64).map(move |seq| Sample {
+                    stream_id: sid,
+                    seq,
+                    values: vec![0.1, 0.2],
+                })
+            })
+            .collect();
+        svc.submit_batch(batch).unwrap();
+        assert_eq!(svc.queue_depths().len(), 2, "one depth per worker");
+        // Move every worker-0 shard so Seal/Adopt land in the journal.
+        let shards0 = svc.table().shards_on(0);
+        let moves: Vec<(u32, usize)> =
+            shards0.iter().map(|&s| (s, 1)).collect();
+        svc.migrate_shards(&moves).unwrap();
+        let out = svc.finish().unwrap();
+        assert_eq!(out.len(), 200);
+
+        // Every verdict decomposes: all three stage histograms saw the
+        // burst (queue-wait per burst, engine per burst, emit per
+        // burst — counts are per job, not per sample).
+        assert!(metrics.queue_wait.count() > 0, "queue_wait recorded");
+        assert!(metrics.engine_time.count() > 0, "engine_time recorded");
+        assert!(metrics.emit_time.count() > 0, "emit_time recorded");
+        let report = window.tick(&metrics);
+        assert_eq!(report.delta("samples_in"), 200);
+        assert_eq!(report.delta("verdicts_out"), 200);
+        assert!(report.p99("latency") > 0);
+
+        // The flight recorder journaled the batched path and the
+        // migration protocol.
+        let dump = crate::obs::recorder().dump(4096);
+        let kinds: HashSet<crate::obs::EventKind> =
+            dump.iter().map(|t| t.event.kind).collect();
+        use crate::obs::EventKind::*;
+        for want in [Submit, Dequeue, Seal, Adopt, EpochSwap] {
+            assert!(kinds.contains(&want), "recorder missing {want:?}");
+        }
+        // Seal/Adopt events carry shard counts (the dump is global and
+        // tests share the process, so assert presence, not identity).
+        assert!(
+            dump.iter()
+                .any(|t| t.event.kind == Seal && t.event.shard > 0),
+            "a non-empty Seal event is journaled"
+        );
     }
 
     #[test]

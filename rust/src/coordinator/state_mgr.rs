@@ -5,6 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::engine::Snapshot;
+use crate::obs::recorder::{record, EventKind, NO_WORKER};
 use crate::persist::CheckpointStore;
 use crate::{Error, Result};
 
@@ -84,6 +85,7 @@ impl StateManager {
         // ensemble snapshots (member states, window buffers, open
         // quorums) are not cheap to deep-copy on every interval.
         let to_persist = self.durable.is_some().then(|| cp.clone());
+        let stream_id = cp.stream_id;
         let accepted = {
             let mut store = self.store.lock().unwrap();
             match store.get(&cp.stream_id) {
@@ -94,6 +96,9 @@ impl StateManager {
                 }
             }
         };
+        if accepted {
+            record(EventKind::Snapshot, stream_id, 0, NO_WORKER);
+        }
         // Durable write-through happens OUTSIDE the map lock: file I/O
         // must not serialize every other worker's publishes.
         if let (true, Some(cp), Some(durable)) =

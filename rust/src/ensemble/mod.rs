@@ -51,6 +51,7 @@ pub use partition::{MemberFootprint, PartitionPlan};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::config::EnsembleConfig;
 use crate::engine::{Engine, EngineVerdict, Snapshot};
@@ -247,8 +248,14 @@ impl EnsembleEngine {
         (stream_id, seq): (u64, u64),
         votes: &[MemberVote],
     ) -> EngineVerdict {
+        // Fuse time is only clocked when someone will read it — the
+        // standalone (metrics-less) engine pays zero clock reads here.
+        let t_fuse = self.metrics.is_some().then(Instant::now);
         let fused = self.combiner.fuse(votes);
         if let Some(m) = &self.metrics {
+            if let Some(t) = t_fuse {
+                m.fuse_time.record(t.elapsed().as_nanos() as u64);
+            }
             m.fused_verdicts.inc();
             if fused.outlier {
                 m.fused_outliers.inc();
@@ -319,7 +326,11 @@ impl Engine for EnsembleEngine {
     fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>> {
         self.seen.insert(sample.stream_id);
         for i in 0..self.members.len() {
+            let t_vote = self.metrics.is_some().then(Instant::now);
             let votes = self.members[i].ingest(sample)?;
+            if let (Some(m), Some(t)) = (&self.metrics, t_vote) {
+                m.members[i].vote_time.record(t.elapsed().as_nanos() as u64);
+            }
             self.stage_votes(i, votes)?;
         }
         self.sync_busy_ns();
@@ -614,6 +625,11 @@ mod tests {
         assert_eq!(metrics.members[0].votes.get(), 100);
         assert_eq!(metrics.members[1].votes.get(), 100);
         assert!(metrics.members[0].busy_ns.get() > 0);
+        // Stage timing (ISSUE 7): fuse + per-member vote histograms
+        // fill whenever the counter bundle is attached.
+        assert_eq!(metrics.fuse_time.count(), 100);
+        assert_eq!(metrics.members[0].vote_time.count(), 100);
+        assert_eq!(metrics.members[1].vote_time.count(), 100);
     }
 
     #[test]

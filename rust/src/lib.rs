@@ -24,6 +24,8 @@
 //!   atomic-rename file backend, so failover survives full-process
 //!   death (`Service::start_from_store`).
 //! - [`baselines`] — m-sigma and sliding z-score detectors for comparison.
+//! - [`obs`] — observability plane: flight recorder, stage-latency
+//!   windows, Prometheus scrape endpoint.
 //! - [`metrics`], [`config`], [`util`] — ops surface and support kit.
 //!
 //! ## Quickstart
@@ -47,6 +49,7 @@ pub mod damadics;
 pub mod engine;
 pub mod ensemble;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod rtl;
 pub mod runtime;

@@ -8,6 +8,8 @@
 //!                    [--virtual-shards V] [--rebalance-interval N]
 //!                    [--checkpoint-interval N] [--restore]
 //!                    [--checkpoint-dir DIR] [--recover] [--evict-after N]
+//!                    [--metrics-addr HOST:PORT] [--trace-dump]
+//! teda-fpga trace    --addr HOST:PORT
 //! teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
 //!                    [--streams S] [--full]
 //! teda-fpga rebalance [--engine ...] [--workers N] [--streams S]
@@ -57,6 +59,7 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&flags),
         "shards" => cmd_shards(&flags),
         "rebalance" => cmd_rebalance(&flags),
         "detect" => cmd_detect(&flags),
@@ -93,6 +96,8 @@ USAGE:
                      [--members LIST] [--combiner KIND]
                      [--checkpoint-interval N] [--restore]
                      [--checkpoint-dir DIR] [--recover] [--evict-after N]
+                     [--metrics-addr HOST:PORT] [--trace-dump]
+  teda-fpga trace    --addr HOST:PORT
   teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
                      [--streams S] [--full]
   teda-fpga rebalance [--engine software|rtl|ensemble] [--workers N]
@@ -121,6 +126,10 @@ USAGE:
   `shards` prints the shard→worker table; `rebalance` is a live-
   migration smoke: it forces mid-stream shard moves + a worker resize
   and asserts verdict parity against an undisturbed run.
+  --metrics-addr exposes /metrics (Prometheus), / (human text) and
+  /trace (flight-recorder tail) while serve runs; `trace` fetches the
+  /trace tail of a running serve; --trace-dump prints the local
+  recorder tail after serve finishes.
   `bench-trend` folds BENCH_*.json into the cumulative BENCH_trend.json;
   `bench-gate` compares a fresh BENCH_shard.json against the previous
   trend entry and fails on a routing/throughput regression beyond
@@ -258,6 +267,11 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         flags.parse_as("virtual-shards", cfg.sharding.virtual_shards)?;
     cfg.sharding.rebalance_interval = flags
         .parse_as("rebalance-interval", cfg.sharding.rebalance_interval)?;
+    if let Some(addr) = flags.get("metrics-addr") {
+        cfg.obs.metrics_addr = Some(addr.to_string());
+    }
+    teda_fpga::obs::recorder()
+        .configure(cfg.obs.recorder, cfg.obs.recorder_capacity);
     let workers_max: usize = flags.parse_as("workers-max", cfg.workers)?;
     if workers_max < cfg.workers {
         return Err("--workers-max must be ≥ --workers".into());
@@ -290,6 +304,21 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     } else {
         Service::start(cfg.clone())?
     };
+    let mut metrics_server = match &cfg.obs.metrics_addr {
+        Some(addr) => {
+            let srv = teda_fpga::obs::MetricsServer::start(
+                addr,
+                svc.metrics(),
+                svc.ensemble_metrics(),
+            )?;
+            println!(
+                "metrics endpoint on http://{}/metrics (also / and /trace)",
+                srv.local_addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
     let mut sources: Vec<SyntheticSource> = (0..streams)
         .map(|sid| {
             SyntheticSource::new(sid, cfg.n_features, samples, cfg.seed)
@@ -301,6 +330,9 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     let mut submitted: u64 = 0;
     let mut next_rebalance = rebalance_every;
     let mut round: usize = 0;
+    // Windowed progress: deltas-per-interval, not lifetime counters.
+    let mut window = svc.metrics_window();
+    let report_every = (samples / 4).max(1);
     loop {
         // One batched submit per round: the whole cross-stream burst
         // is routed under a single snapshot and enqueued with one
@@ -341,12 +373,21 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
                 );
             }
         }
+        if round % report_every == 0 {
+            println!("  {}", window.tick(&svc.metrics()).render());
+        }
     }
     let metrics = svc.metrics();
     let ens_metrics = svc.ensemble_metrics();
     let state_mgr = svc.state_manager();
     let out = svc.finish()?;
     let dt = t0.elapsed();
+    if let Some(srv) = metrics_server.as_mut() {
+        srv.stop();
+    }
+    if flags.has("trace-dump") {
+        println!("{}", teda_fpga::obs::recorder().render_tail(64));
+    }
     println!("{}", metrics.render());
     if let Some(em) = ens_metrics {
         println!("{}", em.render());
@@ -377,6 +418,43 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         out.len() as f64 / dt.as_secs_f64()
     );
     Ok(())
+}
+
+/// `teda-fpga trace` — fetch and print the flight-recorder tail of a
+/// *running* serve process via its metrics endpoint. (The journal
+/// lives in the serving process; a fresh CLI process has its own,
+/// empty recorder, so this goes over HTTP on purpose.)
+fn cmd_trace(flags: &Flags) -> Result<(), CliError> {
+    let addr = flags
+        .get("addr")
+        .ok_or("trace needs --addr HOST:PORT (the serve --metrics-addr)")?;
+    print!("{}", http_get_text(addr, "/trace")?);
+    Ok(())
+}
+
+/// Minimal HTTP/1.1 GET returning the response body (dependency-free;
+/// pairs with [`teda_fpga::obs::MetricsServer`]'s one-request model).
+fn http_get_text(addr: &str, path: &str) -> Result<String, CliError> {
+    use std::io::{Read, Write};
+    let mut conn = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    conn.set_read_timeout(Some(std::time::Duration::from_secs(2)))?;
+    conn.write_all(
+        format!(
+            "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    )?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| format!("malformed HTTP response from {addr}"))?;
+    let status = head.split_whitespace().nth(1).unwrap_or("");
+    if status != "200" {
+        return Err(format!("{addr}{path} returned HTTP {status}").into());
+    }
+    Ok(body.to_string())
 }
 
 /// `teda-fpga shards` — shard-map diagnostic: the shard → worker

@@ -1,6 +1,8 @@
 //! Service metrics: lock-free counters and log-bucketed latency
-//! histograms (an HdrHistogram-flavoured fixed layout), plus a registry
-//! for rendering.
+//! histograms (an HdrHistogram-flavoured fixed layout), plus an
+//! iterable name→value registry that feeds every sink — the human
+//! `render()` text, the Prometheus exposition endpoint, and the
+//! windowed delta snapshots (`crate::obs`) — from one source of truth.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -94,6 +96,11 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of recorded values in ns.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
     /// Mean in ns (0 when empty).
     pub fn mean(&self) -> f64 {
         let c = self.count();
@@ -119,11 +126,25 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                // Bucket midpoint: 1.5 × 2^i.
-                return (1u64 << i) + (1u64 << i) / 2;
+                return bucket_midpoint(i);
             }
         }
         self.max()
+    }
+
+    /// Point-in-time copy of the bucket vector (the windowed-quantile
+    /// input: two snapshots diffed give the distribution of *only* the
+    /// interval between them).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count(),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
     }
 
     /// p50/p95/p99/max one-liner for logs.
@@ -140,72 +161,227 @@ impl Histogram {
     }
 }
 
-/// Shared metrics bundle for the coordinator service.
-#[derive(Debug, Default)]
-pub struct ServiceMetrics {
-    /// Samples accepted into the service.
-    pub samples_in: Counter,
-    /// Verdicts emitted.
-    pub verdicts_out: Counter,
-    /// Outliers flagged.
-    pub outliers: Counter,
-    /// XLA chunk executions.
-    pub chunks_executed: Counter,
-    /// Samples processed through the scalar fallback path (partial
-    /// chunks at flush).
-    pub scalar_fallback: Counter,
-    /// Times a submit blocked on a full worker queue (backpressure).
-    pub backpressure_events: Counter,
-    /// Streams restored from a checkpoint on resume (failover).
-    pub stream_restores: Counter,
-    /// Re-fed samples dropped because a restored snapshot already
-    /// covered them (the at-least-once replay window).
-    pub replay_skipped: Counter,
-    /// Streams evicted by the idle-stream policy (engine state and
-    /// checkpoints — in-memory and durable — dropped together).
-    pub stream_evictions: Counter,
-    /// Shard migrations completed (one per seal → adopt handoff).
-    pub migrations: Counter,
-    /// Virtual shards moved across all migrations.
-    pub shards_moved: Counter,
-    /// Streams handed between workers inside migrations (snapshot →
-    /// codec → restore).
-    pub streams_migrated: Counter,
-    /// Samples that reached a worker no longer owning their shard and
-    /// were forwarded back for re-routing (stale routing snapshots
-    /// during a migration — re-processed, never lost).
-    pub stray_reroutes: Counter,
-    /// Samples dropped by the per-stream watermark guard (at or below
-    /// the last ingested seq: duplicates, or strays from a submitter
-    /// that stalled across a whole migration). Protects the order-
-    /// dependent recurrence from out-of-order ingestion.
-    pub stale_drops: Counter,
-    /// Worker threads that died by panic (guarded by `catch_unwind`;
-    /// the panic surfaces as that worker's error at drain).
-    pub worker_panics: Counter,
-    /// Submits that observed a sender table stamped for an older
-    /// routing epoch (the microseconds-wide install window between a
-    /// shard-table swap and its sender-table restamp).
-    pub route_epoch_misses: Counter,
-    /// Data-ring pushes that found the SPSC ring full and entered the
-    /// counted backpressure spin (also counted in `backpressure`).
-    pub ring_full_events: Counter,
-    /// Previously-parked strays re-attempted by a later drain (stuck
-    /// strays are observable here rather than silently retried).
-    pub parked_retries: Counter,
-    /// Current shard-map epoch (bumps once per installed table).
-    pub epoch: Gauge,
-    /// Live worker threads (tracks `scale_to`).
-    pub workers_active: Gauge,
-    /// Per-sample end-to-end latency (submit → verdict).
-    pub latency: Histogram,
-    /// Per-chunk execution time (XLA engine).
-    pub chunk_time: Histogram,
-    /// Wall time of one whole shard migration (seal → adopt).
-    pub migration_time: Histogram,
-    /// Per-worker burst sizes seen by the batched submit core (how
-    /// well routing+wakeup costs amortize).
-    pub batch_sizes: Histogram,
+/// Bucket midpoint: 1.5 × 2^i.
+fn bucket_midpoint(i: usize) -> u64 {
+    (1u64 << i) + (1u64 << i) / 2
+}
+
+/// A point-in-time copy of a [`Histogram`]'s state. Two snapshots
+/// taken over an interval subtract ([`HistogramSnapshot::delta`]) into
+/// the distribution of just that window — the windowed p99 that the
+/// rebalancer and autoscaling act on, immune to lifetime-total inertia.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistogramSnapshot {
+    /// `self - earlier`, element-wise and saturating (a snapshot pair
+    /// crossing a process restart degrades to the newer snapshot
+    /// rather than underflowing).
+    pub fn delta(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                b.saturating_sub(earlier.buckets.get(i).copied().unwrap_or(0))
+            })
+            .collect();
+        HistogramSnapshot {
+            buckets,
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+        }
+    }
+
+    /// Approximate quantile from bucket midpoints (0 when empty).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return bucket_midpoint(i);
+            }
+        }
+        0
+    }
+
+    /// Mean in ns (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// A metric's current value, borrowed from its instrument. Histograms
+/// are borrowed whole so sinks can choose their own decomposition
+/// (quantile summaries, snapshots, plain counts).
+#[derive(Debug)]
+pub enum MetricValue<'a> {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(&'a Histogram),
+}
+
+/// One registry row: a stable name, a help string (the field's doc
+/// comment), and the live value.
+#[derive(Debug)]
+pub struct Metric<'a> {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub value: MetricValue<'a>,
+}
+
+/// Anything that can appear as a registry row value.
+pub trait Instrument {
+    fn metric_value(&self) -> MetricValue<'_>;
+}
+
+impl Instrument for Counter {
+    fn metric_value(&self) -> MetricValue<'_> {
+        MetricValue::Counter(self.get())
+    }
+}
+
+impl Instrument for Gauge {
+    fn metric_value(&self) -> MetricValue<'_> {
+        MetricValue::Gauge(self.get())
+    }
+}
+
+impl Instrument for Histogram {
+    fn metric_value(&self) -> MetricValue<'_> {
+        MetricValue::Histogram(self)
+    }
+}
+
+/// Declares a metrics bundle struct *and* its registry in one place,
+/// so a field can never exist without a registry row (and therefore
+/// can never silently skip a sink): the field's doc comment becomes
+/// the row's help text, its name the row's name.
+macro_rules! service_metrics {
+    (
+        $(#[doc = $sdoc:expr])*
+        pub struct $name:ident {
+            $(
+                $(#[doc = $help:expr])+
+                pub $field:ident: $ty:ident,
+            )+
+        }
+    ) => {
+        $(#[doc = $sdoc])*
+        #[derive(Debug, Default)]
+        pub struct $name {
+            $(
+                $(#[doc = $help])+
+                pub $field: $ty,
+            )+
+        }
+
+        impl $name {
+            /// Every metric as a name→value row, in declaration order.
+            /// Generated alongside the struct: complete by construction.
+            pub fn registry(&self) -> Vec<Metric<'_>> {
+                vec![
+                    $(
+                        Metric {
+                            name: stringify!($field),
+                            help: concat!($($help),+).trim_start(),
+                            value: Instrument::metric_value(&self.$field),
+                        },
+                    )+
+                ]
+            }
+        }
+    };
+}
+
+service_metrics! {
+    /// Shared metrics bundle for the coordinator service.
+    pub struct ServiceMetrics {
+        /// Samples accepted into the service.
+        pub samples_in: Counter,
+        /// Verdicts emitted.
+        pub verdicts_out: Counter,
+        /// Outliers flagged.
+        pub outliers: Counter,
+        /// XLA chunk executions.
+        pub chunks_executed: Counter,
+        /// Samples processed through the scalar fallback path (partial
+        /// chunks at flush).
+        pub scalar_fallback: Counter,
+        /// Times a submit blocked on a full worker queue (backpressure).
+        pub backpressure_events: Counter,
+        /// Streams restored from a checkpoint on resume (failover).
+        pub stream_restores: Counter,
+        /// Re-fed samples dropped because a restored snapshot already
+        /// covered them (the at-least-once replay window).
+        pub replay_skipped: Counter,
+        /// Streams evicted by the idle-stream policy (engine state and
+        /// checkpoints — in-memory and durable — dropped together).
+        pub stream_evictions: Counter,
+        /// Shard migrations completed (one per seal → adopt handoff).
+        pub migrations: Counter,
+        /// Virtual shards moved across all migrations.
+        pub shards_moved: Counter,
+        /// Streams handed between workers inside migrations (snapshot →
+        /// codec → restore).
+        pub streams_migrated: Counter,
+        /// Samples that reached a worker no longer owning their shard and
+        /// were forwarded back for re-routing (stale routing snapshots
+        /// during a migration — re-processed, never lost).
+        pub stray_reroutes: Counter,
+        /// Samples dropped by the per-stream watermark guard (at or below
+        /// the last ingested seq: duplicates, or strays from a submitter
+        /// that stalled across a whole migration). Protects the order-
+        /// dependent recurrence from out-of-order ingestion.
+        pub stale_drops: Counter,
+        /// Worker threads that died by panic (guarded by `catch_unwind`;
+        /// the panic surfaces as that worker's error at drain).
+        pub worker_panics: Counter,
+        /// Submits that observed a sender table stamped for an older
+        /// routing epoch (the microseconds-wide install window between a
+        /// shard-table swap and its sender-table restamp).
+        pub route_epoch_misses: Counter,
+        /// Data-ring pushes that found the SPSC ring full and entered the
+        /// counted backpressure spin (also counted in `backpressure`).
+        pub ring_full_events: Counter,
+        /// Previously-parked strays re-attempted by a later drain (stuck
+        /// strays are observable here rather than silently retried).
+        pub parked_retries: Counter,
+        /// Current shard-map epoch (bumps once per installed table).
+        pub epoch: Gauge,
+        /// Live worker threads (tracks `scale_to`).
+        pub workers_active: Gauge,
+        /// Per-sample end-to-end latency (submit → verdict).
+        pub latency: Histogram,
+        /// Time a sample waited in worker queues before its job was
+        /// dequeued (submit → dequeue; stage 1 of the end-to-end split).
+        pub queue_wait: Histogram,
+        /// Time inside the engine per processed job (ingest + flush;
+        /// stage 2 of the end-to-end split).
+        pub engine_time: Histogram,
+        /// Time spent publishing a burst of verdicts to the result
+        /// channel (stage 3 of the end-to-end split).
+        pub emit_time: Histogram,
+        /// Per-chunk execution time (XLA engine).
+        pub chunk_time: Histogram,
+        /// Wall time of one whole shard migration (seal → adopt).
+        pub migration_time: Histogram,
+        /// Per-worker burst sizes seen by the batched submit core (how
+        /// well routing+wakeup costs amortize).
+        pub batch_sizes: Histogram,
+    }
 }
 
 impl ServiceMetrics {
@@ -213,58 +389,21 @@ impl ServiceMetrics {
         Arc::new(Self::default())
     }
 
-    /// Multi-line human-readable report.
+    /// Multi-line human-readable report, driven by the registry (every
+    /// declared metric appears; nothing to keep in sync by hand).
     pub fn render(&self) -> String {
-        format!(
-            "samples_in        {}\n\
-             verdicts_out      {}\n\
-             outliers          {}\n\
-             chunks_executed   {}\n\
-             scalar_fallback   {}\n\
-             backpressure      {}\n\
-             stream_restores   {}\n\
-             replay_skipped    {}\n\
-             stream_evictions  {}\n\
-             migrations        {}\n\
-             shards_moved      {}\n\
-             streams_migrated  {}\n\
-             stray_reroutes    {}\n\
-             stale_drops       {}\n\
-             worker_panics     {}\n\
-             route_epoch_miss  {}\n\
-             ring_full         {}\n\
-             parked_retries    {}\n\
-             epoch             {}\n\
-             workers_active    {}\n\
-             latency           {}\n\
-             chunk_time        {}\n\
-             migration_time    {}\n\
-             batch_sizes       {}\n",
-            self.samples_in.get(),
-            self.verdicts_out.get(),
-            self.outliers.get(),
-            self.chunks_executed.get(),
-            self.scalar_fallback.get(),
-            self.backpressure_events.get(),
-            self.stream_restores.get(),
-            self.replay_skipped.get(),
-            self.stream_evictions.get(),
-            self.migrations.get(),
-            self.shards_moved.get(),
-            self.streams_migrated.get(),
-            self.stray_reroutes.get(),
-            self.stale_drops.get(),
-            self.worker_panics.get(),
-            self.route_epoch_misses.get(),
-            self.ring_full_events.get(),
-            self.parked_retries.get(),
-            self.epoch.get(),
-            self.workers_active.get(),
-            self.latency.summary(),
-            self.chunk_time.summary(),
-            self.migration_time.summary(),
-            self.batch_sizes.summary(),
-        )
+        let mut out = String::new();
+        for m in self.registry() {
+            match m.value {
+                MetricValue::Counter(v) | MetricValue::Gauge(v) => {
+                    out.push_str(&format!("{:<20}{}\n", m.name, v));
+                }
+                MetricValue::Histogram(h) => {
+                    out.push_str(&format!("{:<20}{}\n", m.name, h.summary()));
+                }
+            }
+        }
+        out
     }
 }
 
@@ -318,18 +457,25 @@ impl ShardMetrics {
         self.shards.iter().map(|s| s.samples.get()).collect()
     }
 
+    /// Point-in-time latency snapshots per shard (diffed by
+    /// `obs::ShardWindow` into windowed per-shard p99).
+    pub fn latency_snapshots(&self) -> Vec<HistogramSnapshot> {
+        self.shards.iter().map(|s| s.latency.snapshot()).collect()
+    }
+
     /// The `top` hottest shards by sample count, as
     /// `(shard, samples, p99_ns)`, hottest first. Shards with zero
-    /// samples are omitted.
+    /// samples are omitted. The counter is read exactly once per shard
+    /// so rank and reported count cannot disagree under live load.
     pub fn hottest(&self, top: usize) -> Vec<(u32, u64, u64)> {
         let mut rows: Vec<(u32, u64, u64)> = self
             .shards
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.samples.get() > 0)
             .map(|(i, s)| {
                 (i as u32, s.samples.get(), s.latency.quantile(0.99))
             })
+            .filter(|&(_, samples, _)| samples > 0)
             .collect();
         rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         rows.truncate(top);
@@ -351,6 +497,10 @@ pub struct MemberMetrics {
     pub disagreements: Counter,
     /// Wall-clock ns spent inside this member's ingest/flush calls.
     pub busy_ns: Counter,
+    /// Per-call ingest latency of this member (the stage-level view of
+    /// `busy_ns`: where the ensemble's nanoseconds go, member by
+    /// member).
+    pub vote_time: Histogram,
 }
 
 /// Ensemble-wide metrics bundle: fused totals + one row per member.
@@ -365,6 +515,9 @@ pub struct EnsembleMetrics {
     /// (a member erred or a stream ended mid-flight). Non-zero values
     /// are a warning sign: some samples were never classified.
     pub quorum_evictions: Counter,
+    /// Time to fuse one quorum of votes into a verdict (combiner call
+    /// only, excluding member ingest).
+    pub fuse_time: Histogram,
 }
 
 impl EnsembleMetrics {
@@ -379,21 +532,25 @@ impl EnsembleMetrics {
                     outliers: Counter::new(),
                     disagreements: Counter::new(),
                     busy_ns: Counter::new(),
+                    vote_time: Histogram::new(),
                 })
                 .collect(),
             fused_verdicts: Counter::new(),
             fused_outliers: Counter::new(),
             quorum_evictions: Counter::new(),
+            fuse_time: Histogram::new(),
         })
     }
 
     /// Multi-line human-readable report.
     pub fn render(&self) -> String {
         let mut out = format!(
-            "fused_verdicts    {}\nfused_outliers    {}\nquorum_evictions  {}\n",
+            "fused_verdicts    {}\nfused_outliers    {}\nquorum_evictions  {}\n\
+             fuse_time         {}\n",
             self.fused_verdicts.get(),
             self.fused_outliers.get(),
-            self.quorum_evictions.get()
+            self.quorum_evictions.get(),
+            self.fuse_time.summary(),
         );
         for m in &self.members {
             let votes = m.votes.get();
@@ -403,12 +560,14 @@ impl EnsembleMetrics {
                 100.0 * m.disagreements.get() as f64 / votes as f64
             };
             out.push_str(&format!(
-                "  {:<24} votes={} outliers={} disagree={:.1}% busy={}µs\n",
+                "  {:<24} votes={} outliers={} disagree={:.1}% busy={}µs \
+                 vote_p99={}ns\n",
                 m.label,
                 votes,
                 m.outliers.get(),
                 disagree_pct,
                 m.busy_ns.get() / 1000,
+                m.vote_time.quantile(0.99),
             ));
         }
         out
@@ -471,6 +630,88 @@ mod tests {
     }
 
     #[test]
+    fn histogram_snapshot_delta_isolates_the_window() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(1_000); // old traffic: ~1µs
+        }
+        let before = h.snapshot();
+        for _ in 0..10 {
+            h.record(1_000_000); // window traffic: ~1ms
+        }
+        let after = h.snapshot();
+        let delta = after.delta(&before);
+        assert_eq!(delta.count, 10);
+        // Lifetime p99 is still dominated by the 1µs mass, but the
+        // windowed p99 sees only the slow interval.
+        assert!(h.quantile(0.99) < 10_000);
+        assert!(delta.quantile(0.99) > 500_000, "windowed p99 sees 1ms");
+        assert!(delta.mean() > 500_000.0);
+        // Saturating: reversed operands degrade to zero, not underflow.
+        let rev = before.delta(&after);
+        assert_eq!(rev.count, 0);
+        assert_eq!(rev.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn registry_covers_every_declared_instrument() {
+        // The macro emits struct and registry from one field list, so
+        // the registry is complete by construction. Belt and braces:
+        // count instruments in the Debug representation (which is
+        // derived straight from the struct fields) and compare with
+        // the registry's per-type totals.
+        let m = ServiceMetrics::default();
+        let debug = format!("{m:?}");
+        let count = |needle: &str| debug.matches(needle).count();
+        let reg = m.registry();
+        let counters = reg
+            .iter()
+            .filter(|r| matches!(r.value, MetricValue::Counter(_)))
+            .count();
+        let gauges = reg
+            .iter()
+            .filter(|r| matches!(r.value, MetricValue::Gauge(_)))
+            .count();
+        let histograms = reg
+            .iter()
+            .filter(|r| matches!(r.value, MetricValue::Histogram(_)))
+            .count();
+        assert_eq!(counters, count("Counter {"), "counters in registry");
+        assert_eq!(gauges, count("Gauge {"), "gauges in registry");
+        assert_eq!(histograms, count("Histogram {"), "histograms in registry");
+        assert_eq!(reg.len(), counters + gauges + histograms);
+
+        // Names are unique, non-empty, and each row carries help text.
+        let mut names: Vec<&str> = reg.iter().map(|r| r.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len(), "duplicate registry names");
+        for row in &reg {
+            assert!(!row.name.is_empty());
+            assert!(!row.help.is_empty(), "{} has no help text", row.name);
+            assert!(
+                !row.help.starts_with(' '),
+                "{} help keeps its doc-comment indent",
+                row.name
+            );
+        }
+    }
+
+    #[test]
+    fn render_is_registry_driven() {
+        // Sink 1 (human text) must show every registry row.
+        let m = ServiceMetrics::default();
+        let text = m.render();
+        for row in m.registry() {
+            assert!(
+                text.lines().any(|l| l.starts_with(row.name)),
+                "render() missing {}",
+                row.name
+            );
+        }
+    }
+
+    #[test]
     fn ensemble_metrics_render_per_member() {
         let em = EnsembleMetrics::new(vec![
             "teda(m=3)".to_string(),
@@ -480,10 +721,14 @@ mod tests {
         em.members[0].votes.add(10);
         em.members[1].votes.add(10);
         em.members[1].disagreements.add(5);
+        em.members[1].vote_time.record(2_000);
+        em.fuse_time.record(500);
         let s = em.render();
         assert!(s.contains("teda(m=3)"));
         assert!(s.contains("disagree=50.0%"));
         assert!(s.contains("fused_verdicts    10"));
+        assert!(s.contains("fuse_time"));
+        assert!(s.contains("vote_p99="));
     }
 
     #[test]
@@ -491,6 +736,9 @@ mod tests {
         let m = ServiceMetrics::new();
         m.samples_in.add(10);
         m.latency.record(1234);
+        m.queue_wait.record(200);
+        m.engine_time.record(900);
+        m.emit_time.record(100);
         m.epoch.set(3);
         m.workers_active.set(5);
         m.route_epoch_misses.inc();
@@ -498,14 +746,17 @@ mod tests {
         m.parked_retries.add(4);
         m.batch_sizes.record(8);
         let s = m.render();
-        assert!(s.contains("samples_in        10"));
+        assert!(s.contains("samples_in          10"));
         assert!(s.contains("latency"));
-        assert!(s.contains("epoch             3"));
-        assert!(s.contains("workers_active    5"));
-        assert!(s.contains("migrations        0"));
-        assert!(s.contains("route_epoch_miss  1"));
-        assert!(s.contains("ring_full         2"));
-        assert!(s.contains("parked_retries    4"));
+        assert!(s.contains("queue_wait"));
+        assert!(s.contains("engine_time"));
+        assert!(s.contains("emit_time"));
+        assert!(s.contains("epoch               3"));
+        assert!(s.contains("workers_active      5"));
+        assert!(s.contains("migrations          0"));
+        assert!(s.contains("route_epoch_misses  1"));
+        assert!(s.contains("ring_full_events    2"));
+        assert!(s.contains("parked_retries      4"));
         assert!(s.contains("batch_sizes"));
     }
 
@@ -529,6 +780,9 @@ mod tests {
         let counts = sm.sample_counts();
         assert_eq!(counts[2], 100);
         assert_eq!(counts[5], 40);
+        let snaps = sm.latency_snapshots();
+        assert_eq!(snaps.len(), 8);
+        assert_eq!(snaps[2].count, 1);
         let hot = sm.hottest(10);
         assert_eq!(hot.len(), 2, "zero-sample shards omitted");
         assert_eq!(hot[0].0, 2, "hottest first");

@@ -1,0 +1,49 @@
+//! Observability plane: flight recorder, stage-level tracing support,
+//! and metric sinks.
+//!
+//! The paper's evaluation is a static table of throughput/occupation
+//! numbers; a long-running service needs the live equivalent. This
+//! module is that substrate, in three pillars, all dependency-free:
+//!
+//! 1. **Flight recorder** ([`recorder`]) — per-thread lock-free ring
+//!    journals of typed coordinator events (routing, ring pushes and
+//!    stalls, seals/adopts, checkpoints, evictions, epoch swaps,
+//!    panics), merged on demand into one nanosecond-stamped timeline.
+//!    The counters say a migration happened; the recorder shows the
+//!    seal → adopt → stray-replay order it happened in.
+//! 2. **Stage-level tracing** — the coordinator threads a submit
+//!    timestamp through every `Job` and splits the old end-to-end
+//!    latency into queue-wait / engine / emit histograms (plus
+//!    fuse/vote time for ensembles). The histograms themselves live in
+//!    [`crate::metrics`]; this module gives them windowed views.
+//! 3. **Metric sinks** — the `ServiceMetrics` registry feeds three
+//!    sinks: the human text (`render()`), the Prometheus exposition
+//!    endpoint ([`server::MetricsServer`] serving
+//!    [`prometheus::render_prometheus`]), and rolling delta windows
+//!    ([`window::MetricsWindow`], [`window::ShardWindow`]) that give
+//!    control loops rates-per-interval and windowed p99 instead of
+//!    lifetime totals.
+//!
+//! ## Hot-path discipline
+//!
+//! The recorder stays off the lock-free per-sample submit path by
+//! construction: steady-state single submits record *nothing*, the
+//! batched path records one event per worker burst, and only anomalies
+//! (ring-full stalls, routing retries) record unconditionally. The
+//! `benches/obs.rs` + bench-gate pair holds this to "< 20% regression
+//! with the recorder enabled".
+
+pub mod prometheus;
+pub mod recorder;
+pub mod server;
+pub mod window;
+
+pub use prometheus::{escape_label, render_prometheus, CONTENT_TYPE};
+pub use recorder::{
+    record, recorder, Event, EventKind, FlightRecorder, Journal,
+    TaggedEvent, NO_WORKER,
+};
+pub use server::MetricsServer;
+pub use window::{
+    MetricsWindow, ShardDelta, ShardWindow, WindowReport, WindowRow,
+};

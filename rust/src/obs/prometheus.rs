@@ -1,0 +1,293 @@
+//! Prometheus text-exposition rendering (format version 0.0.4),
+//! dependency-free.
+//!
+//! Every [`ServiceMetrics`] registry row becomes one metric family:
+//! counters and gauges verbatim, histograms as summaries (p50/p95/p99
+//! quantiles plus `_sum`/`_count` — the log₂ buckets are an internal
+//! layout, quantiles are the portable surface). Ensemble metrics, when
+//! attached, add fused totals and one `member="<label>"`-labelled
+//! series per member, with label values escaped per the exposition
+//! spec.
+
+use crate::metrics::{EnsembleMetrics, Histogram, MetricValue, ServiceMetrics};
+
+/// Content type a conforming scraper expects from `/metrics`.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Prefix applied to every exported family name.
+pub const PREFIX: &str = "teda_";
+
+const QUANTILES: [(f64, &str); 3] =
+    [(0.50, "0.5"), (0.95, "0.95"), (0.99, "0.99")];
+
+/// Escape a label *value*: `\` → `\\`, `"` → `\"`, newline → `\n`.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text: `\` → `\\`, newline → `\n` (quotes stay literal).
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn family(out: &mut String, name: &str, help: &str, kind: &str) {
+    out.push_str(&format!("# HELP {PREFIX}{name} {}\n", escape_help(help)));
+    out.push_str(&format!("# TYPE {PREFIX}{name} {kind}\n"));
+}
+
+fn summary(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    for (q, qs) in QUANTILES {
+        let sep = if labels.is_empty() { "" } else { "," };
+        out.push_str(&format!(
+            "{PREFIX}{name}{{{labels}{sep}quantile=\"{qs}\"}} {}\n",
+            h.quantile(q)
+        ));
+    }
+    let braced = if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    };
+    out.push_str(&format!("{PREFIX}{name}_sum{braced} {}\n", h.sum()));
+    out.push_str(&format!("{PREFIX}{name}_count{braced} {}\n", h.count()));
+}
+
+/// Render the full exposition body: one family per service registry
+/// row, plus the ensemble families when an ensemble is attached.
+pub fn render_prometheus(
+    service: &ServiceMetrics,
+    ensemble: Option<&EnsembleMetrics>,
+) -> String {
+    let mut out = String::with_capacity(8 * 1024);
+    for row in service.registry() {
+        match row.value {
+            MetricValue::Counter(v) => {
+                family(&mut out, row.name, row.help, "counter");
+                out.push_str(&format!("{PREFIX}{} {v}\n", row.name));
+            }
+            MetricValue::Gauge(v) => {
+                family(&mut out, row.name, row.help, "gauge");
+                out.push_str(&format!("{PREFIX}{} {v}\n", row.name));
+            }
+            MetricValue::Histogram(h) => {
+                family(&mut out, row.name, row.help, "summary");
+                summary(&mut out, row.name, "", h);
+            }
+        }
+    }
+    if let Some(em) = ensemble {
+        for (name, help, v) in [
+            (
+                "ensemble_fused_verdicts",
+                "Fused verdicts emitted.",
+                em.fused_verdicts.get(),
+            ),
+            (
+                "ensemble_fused_outliers",
+                "Fused verdicts that flagged an outlier.",
+                em.fused_outliers.get(),
+            ),
+            (
+                "ensemble_quorum_evictions",
+                "Samples evicted because their quorum never completed.",
+                em.quorum_evictions.get(),
+            ),
+        ] {
+            family(&mut out, name, help, "counter");
+            out.push_str(&format!("{PREFIX}{name} {v}\n"));
+        }
+        family(
+            &mut out,
+            "ensemble_fuse_time",
+            "Time to fuse one quorum of votes into a verdict.",
+            "summary",
+        );
+        summary(&mut out, "ensemble_fuse_time", "", &em.fuse_time);
+
+        for (name, help) in [
+            ("ensemble_member_votes", "Votes this member produced."),
+            (
+                "ensemble_member_outliers",
+                "Votes that flagged an outlier.",
+            ),
+            (
+                "ensemble_member_disagreements",
+                "Votes that disagreed with the fused verdict.",
+            ),
+            (
+                "ensemble_member_busy_ns",
+                "Wall-clock ns spent inside this member.",
+            ),
+        ] {
+            family(&mut out, name, help, "counter");
+            for m in &em.members {
+                let v = match name {
+                    "ensemble_member_votes" => m.votes.get(),
+                    "ensemble_member_outliers" => m.outliers.get(),
+                    "ensemble_member_disagreements" => m.disagreements.get(),
+                    _ => m.busy_ns.get(),
+                };
+                out.push_str(&format!(
+                    "{PREFIX}{name}{{member=\"{}\"}} {v}\n",
+                    escape_label(&m.label)
+                ));
+            }
+        }
+        family(
+            &mut out,
+            "ensemble_member_vote_time",
+            "Per-call ingest latency of this member.",
+            "summary",
+        );
+        for m in &em.members {
+            summary(
+                &mut out,
+                "ensemble_member_vote_time",
+                &format!("member=\"{}\"", escape_label(&m.label)),
+                &m.vote_time,
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Value of a sample line `want <v>` (exact series-name match).
+    fn value_of(body: &str, want: &str) -> Option<f64> {
+        body.lines().find_map(|l| {
+            let (name, v) = l.rsplit_once(' ')?;
+            (name == want).then(|| v.parse().ok())?
+        })
+    }
+
+    #[test]
+    fn every_registry_row_is_exposed_with_help_and_type() {
+        // Sink 2 (Prometheus) must show every registry row.
+        let m = ServiceMetrics::default();
+        let body = render_prometheus(&m, None);
+        for row in m.registry() {
+            let name = format!("{PREFIX}{}", row.name);
+            assert!(
+                body.contains(&format!("# HELP {name} ")),
+                "missing HELP for {name}"
+            );
+            assert!(
+                body.contains(&format!("# TYPE {name} ")),
+                "missing TYPE for {name}"
+            );
+            let kind = match row.value {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histogram(_) => "summary",
+            };
+            assert!(
+                body.contains(&format!("# TYPE {name} {kind}\n")),
+                "{name} typed {kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn exposition_format_conforms() {
+        let m = ServiceMetrics::default();
+        m.samples_in.add(42);
+        m.epoch.set(7);
+        m.latency.record(1_000);
+        m.latency.record(3_000);
+        let body = render_prometheus(&m, None);
+
+        assert_eq!(value_of(&body, "teda_samples_in"), Some(42.0));
+        assert_eq!(value_of(&body, "teda_epoch"), Some(7.0));
+        assert_eq!(value_of(&body, "teda_latency_count"), Some(2.0));
+        assert_eq!(value_of(&body, "teda_latency_sum"), Some(4_000.0));
+        assert!(body.contains("teda_latency{quantile=\"0.5\"}"));
+        assert!(body.contains("teda_latency{quantile=\"0.99\"}"));
+
+        // Structural conformance: every non-comment line is
+        // `<name>[{labels}] <number>`, names carry the prefix, HELP
+        // precedes TYPE precedes samples within each family.
+        for line in body.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP teda_")
+                        || line.starts_with("# TYPE teda_"),
+                    "bad comment line: {line}"
+                );
+                continue;
+            }
+            let (series, v) = line.rsplit_once(' ').expect("sample line");
+            assert!(series.starts_with(PREFIX), "unprefixed: {line}");
+            assert!(v.parse::<f64>().is_ok(), "non-numeric value: {line}");
+        }
+        let help_at = body.find("# HELP teda_samples_in").unwrap();
+        let type_at = body.find("# TYPE teda_samples_in").unwrap();
+        let sample_at = body.find("\nteda_samples_in 42").unwrap();
+        assert!(help_at < type_at && type_at < sample_at);
+    }
+
+    #[test]
+    fn counters_scrape_monotonically() {
+        let m = ServiceMetrics::default();
+        m.samples_in.add(5);
+        let first = value_of(&render_prometheus(&m, None), "teda_samples_in")
+            .unwrap();
+        m.samples_in.add(3);
+        let second = value_of(&render_prometheus(&m, None), "teda_samples_in")
+            .unwrap();
+        m.samples_in.inc();
+        let third = value_of(&render_prometheus(&m, None), "teda_samples_in")
+            .unwrap();
+        assert!(first <= second && second <= third);
+        assert_eq!(second, 8.0);
+        assert_eq!(third, 9.0);
+    }
+
+    #[test]
+    fn member_labels_are_escaped() {
+        let em = EnsembleMetrics::new(vec![
+            "weird\"label\\with\nnewline".to_string(),
+        ]);
+        em.members[0].votes.add(3);
+        let m = ServiceMetrics::default();
+        let body = render_prometheus(&m, Some(&em));
+        assert!(
+            body.contains(
+                "teda_ensemble_member_votes{member=\"weird\\\"label\\\\with\\nnewline\"} 3"
+            ),
+            "escaped member label missing:\n{body}"
+        );
+        assert!(!body.contains("with\nnewline\""), "raw newline leaked");
+        // Labelled summaries put the quantile after the member label.
+        assert!(body.contains(
+            "teda_ensemble_member_vote_time{member=\"weird\\\"label\\\\with\\nnewline\",quantile=\"0.5\"}"
+        ));
+    }
+
+    #[test]
+    fn escape_label_covers_the_spec_triplet() {
+        assert_eq!(escape_label(r"a\b"), r"a\\b");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+}

@@ -1,0 +1,266 @@
+//! Tiny scrape endpoint: one std-`TcpListener` thread serving the
+//! metrics plane over HTTP/1.1, no dependencies.
+//!
+//! Routes:
+//! - `/metrics` — Prometheus text exposition (version 0.0.4)
+//! - `/`        — the human-readable `ServiceMetrics::render()` text
+//! - `/trace`   — the flight recorder's merged event tail
+//!
+//! The listener runs nonblocking with a stop flag checked between
+//! accepts, so [`MetricsServer::stop`] (and `Drop`) shut it down
+//! promptly without needing a self-connect or a poll syscall. One
+//! request per connection, `Connection: close` — scrapers reconnect
+//! per scrape anyway, and it keeps the loop allocation-free of any
+//! connection table.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::metrics::{EnsembleMetrics, ServiceMetrics};
+use crate::obs::prometheus::{render_prometheus, CONTENT_TYPE};
+use crate::obs::recorder::recorder;
+
+/// How much of the merged recorder tail `/trace` serves.
+const TRACE_TAIL: usize = 256;
+
+/// Accept-loop nap when no connection is pending.
+const ACCEPT_NAP: Duration = Duration::from_millis(5);
+
+/// A running metrics endpoint. Stop it explicitly with
+/// [`MetricsServer::stop`]; dropping it stops it too.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9464"`; port `0` picks a free
+    /// one — handy for tests) and start serving the given metrics.
+    pub fn start(
+        addr: &str,
+        service: Arc<ServiceMetrics>,
+        ensemble: Option<Arc<EnsembleMetrics>>,
+    ) -> crate::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| crate::Error::io(format!("bind {addr}"), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::Error::io("set_nonblocking", e))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| crate::Error::io("local_addr", e))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_in = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("teda-metrics".into())
+            .spawn(move || {
+                while !stop_in.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((conn, _)) => {
+                            // A misbehaving client must not wedge the
+                            // scrape plane: errors just drop the conn.
+                            let _ = serve_one(conn, &service, &ensemble);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(ACCEPT_NAP);
+                        }
+                        Err(_) => std::thread::sleep(ACCEPT_NAP),
+                    }
+                }
+            })
+            .map_err(|e| crate::Error::io("spawn teda-metrics", e))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port `0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_one(
+    mut conn: TcpStream,
+    service: &ServiceMetrics,
+    ensemble: &Option<Arc<EnsembleMetrics>>,
+) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_millis(500)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read until the request line is complete (we ignore headers; a
+    // scrape has no body). 1 KiB is plenty for `GET <path> HTTP/1.1`.
+    let mut buf = [0u8; 1024];
+    let mut used = 0usize;
+    let path = loop {
+        let n = conn.read(&mut buf[used..])?;
+        used += n;
+        let head = &buf[..used];
+        if let Some(eol) = head.iter().position(|&b| b == b'\n') {
+            let line = String::from_utf8_lossy(&head[..eol]);
+            let mut parts = line.split_whitespace();
+            let method = parts.next().unwrap_or("");
+            let path = parts.next().unwrap_or("/").to_string();
+            if method != "GET" {
+                return respond(&mut conn, 405, "text/plain", "method not allowed\n");
+            }
+            break path;
+        }
+        if n == 0 || used == buf.len() {
+            return respond(&mut conn, 400, "text/plain", "bad request\n");
+        }
+    };
+    match path.split('?').next().unwrap_or("/") {
+        "/metrics" => {
+            let body = render_prometheus(service, ensemble.as_deref());
+            respond(&mut conn, 200, CONTENT_TYPE, &body)
+        }
+        "/" => {
+            let mut body = service.render();
+            if let Some(em) = ensemble {
+                body.push('\n');
+                body.push_str(&em.render());
+            }
+            respond(&mut conn, 200, "text/plain; charset=utf-8", &body)
+        }
+        "/trace" => {
+            let body = recorder().render_tail(TRACE_TAIL);
+            respond(&mut conn, 200, "text/plain; charset=utf-8", &body)
+        }
+        _ => respond(&mut conn, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn respond(
+    conn: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes(),
+        )
+        .unwrap();
+        let mut raw = String::new();
+        conn.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").unwrap();
+        let status: u16 =
+            head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let ctype = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Type: "))
+            .unwrap_or("")
+            .to_string();
+        (status, ctype, body.to_string())
+    }
+
+    #[test]
+    fn serves_metrics_text_and_trace() {
+        let m = ServiceMetrics::new();
+        m.samples_in.add(99);
+        let mut srv = MetricsServer::start("127.0.0.1:0", m.clone(), None)
+            .unwrap();
+        let addr = srv.local_addr();
+
+        let (status, ctype, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert_eq!(ctype, CONTENT_TYPE);
+        assert!(body.contains("teda_samples_in 99"));
+        assert!(body.contains("# TYPE teda_samples_in counter"));
+
+        let (status, _, body) = get(addr, "/");
+        assert_eq!(status, 200);
+        assert!(body.contains("samples_in          99"));
+
+        let (status, _, body) = get(addr, "/trace");
+        assert_eq!(status, 200);
+        assert!(body.contains("flight recorder: last"));
+
+        let (status, _, _) = get(addr, "/nope");
+        assert_eq!(status, 404);
+
+        srv.stop();
+        srv.stop(); // idempotent
+        assert!(
+            TcpStream::connect(addr).is_err()
+                || TcpStream::connect(addr)
+                    .map(|mut c| {
+                        // Listener is gone; at best the connect queue
+                        // drains with no responder.
+                        c.set_read_timeout(Some(Duration::from_millis(200)))
+                            .unwrap();
+                        c.write_all(b"GET /metrics HTTP/1.1\r\n\r\n").ok();
+                        let mut s = String::new();
+                        c.read_to_string(&mut s).is_err() || s.is_empty()
+                    })
+                    .unwrap_or(true),
+            "server still answering after stop"
+        );
+    }
+
+    #[test]
+    fn ensemble_appears_when_attached() {
+        let m = ServiceMetrics::new();
+        let em = EnsembleMetrics::new(vec!["teda(m=3)".into()]);
+        em.fused_verdicts.add(4);
+        let srv =
+            MetricsServer::start("127.0.0.1:0", m, Some(em)).unwrap();
+        let (status, _, body) = get(srv.local_addr(), "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("teda_ensemble_fused_verdicts 4"));
+        let (_, _, human) = get(srv.local_addr(), "/");
+        assert!(human.contains("fused_verdicts    4"));
+    }
+
+    #[test]
+    fn rejects_non_get() {
+        let m = ServiceMetrics::new();
+        let srv = MetricsServer::start("127.0.0.1:0", m, None).unwrap();
+        let mut conn = TcpStream::connect(srv.local_addr()).unwrap();
+        conn.write_all(b"POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        conn.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405"));
+    }
+}

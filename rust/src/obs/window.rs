@@ -1,0 +1,320 @@
+//! Windowed metric views: delta snapshots over the registry.
+//!
+//! Lifetime counters answer "how much, ever"; control loops need "how
+//! much, lately". [`MetricsWindow`] snapshots every registry row and,
+//! on each tick, returns the counter deltas, per-second rates, and
+//! windowed histogram distributions for just the elapsed interval.
+//! [`ShardWindow`] is the per-shard analogue the rebalancer consumes:
+//! sample-count deltas plus windowed per-shard p99, replacing the raw
+//! count vector the coordinator used to diff by hand.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::metrics::{
+    HistogramSnapshot, MetricValue, ServiceMetrics, ShardMetrics,
+};
+
+/// One counter's view of the last window.
+#[derive(Debug, Clone)]
+pub struct WindowRow {
+    pub name: &'static str,
+    /// Increment over the window.
+    pub delta: u64,
+    /// Increment per second of window wall time.
+    pub rate_per_s: f64,
+}
+
+/// Everything one [`MetricsWindow::tick`] observed.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    /// Window wall time in seconds (never 0; clamped to ≥ 1µs).
+    pub elapsed_s: f64,
+    /// Counter deltas/rates, registry order.
+    pub counters: Vec<WindowRow>,
+    /// Gauges are instantaneous: current value, registry order.
+    pub gauges: Vec<(&'static str, u64)>,
+    /// Histogram distributions of just this window, registry order.
+    pub histograms: Vec<(&'static str, HistogramSnapshot)>,
+}
+
+impl WindowReport {
+    /// Windowed counter increment (0 for unknown names).
+    pub fn delta(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|r| r.name == name)
+            .map_or(0, |r| r.delta)
+    }
+
+    /// Windowed counter rate per second (0 for unknown names).
+    pub fn rate(&self, name: &str) -> f64 {
+        self.counters
+            .iter()
+            .find(|r| r.name == name)
+            .map_or(0.0, |r| r.rate_per_s)
+    }
+
+    /// Current gauge value (0 for unknown names).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// Windowed histogram (None for unknown names).
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Windowed p99 in ns (0 for unknown or empty windows).
+    pub fn p99(&self, name: &str) -> u64 {
+        self.histogram(name).map_or(0, |h| h.quantile(0.99))
+    }
+
+    /// Compact one-window summary for `serve` progress lines.
+    pub fn render(&self) -> String {
+        format!(
+            "window {:.1}s: in={:.0}/s out={:.0}/s backpressure={} \
+             latency_p99={}ns queue_p99={}ns engine_p99={}ns",
+            self.elapsed_s,
+            self.rate("samples_in"),
+            self.rate("verdicts_out"),
+            self.delta("backpressure_events"),
+            self.p99("latency"),
+            self.p99("queue_wait"),
+            self.p99("engine_time"),
+        )
+    }
+}
+
+/// Rolling delta tracker over the whole [`ServiceMetrics`] registry.
+/// Feed it the same metrics handle each tick; it remembers the last
+/// snapshot and hands back the interval view (sink 3 of the registry).
+#[derive(Debug)]
+pub struct MetricsWindow {
+    counters: BTreeMap<&'static str, u64>,
+    histograms: BTreeMap<&'static str, HistogramSnapshot>,
+    taken: Instant,
+}
+
+impl MetricsWindow {
+    /// Baseline "now": the first tick measures from this call.
+    pub fn new(metrics: &ServiceMetrics) -> MetricsWindow {
+        let mut w = MetricsWindow {
+            counters: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+            taken: Instant::now(),
+        };
+        w.rebaseline(metrics);
+        w
+    }
+
+    fn rebaseline(&mut self, metrics: &ServiceMetrics) {
+        for row in metrics.registry() {
+            match row.value {
+                MetricValue::Counter(v) => {
+                    self.counters.insert(row.name, v);
+                }
+                MetricValue::Gauge(_) => {}
+                MetricValue::Histogram(h) => {
+                    self.histograms.insert(row.name, h.snapshot());
+                }
+            }
+        }
+        self.taken = Instant::now();
+    }
+
+    /// Close the current window: report deltas/rates since the last
+    /// tick (or construction) and start the next window.
+    pub fn tick(&mut self, metrics: &ServiceMetrics) -> WindowReport {
+        let elapsed_s = self.taken.elapsed().as_secs_f64().max(1e-6);
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut histograms = Vec::new();
+        for row in metrics.registry() {
+            match row.value {
+                MetricValue::Counter(v) => {
+                    let prev = self.counters.get(row.name).copied().unwrap_or(0);
+                    let delta = v.saturating_sub(prev);
+                    counters.push(WindowRow {
+                        name: row.name,
+                        delta,
+                        rate_per_s: delta as f64 / elapsed_s,
+                    });
+                }
+                MetricValue::Gauge(v) => gauges.push((row.name, v)),
+                MetricValue::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let prev = self.histograms.remove(row.name).unwrap_or_default();
+                    histograms.push((row.name, snap.delta(&prev)));
+                }
+            }
+        }
+        self.rebaseline(metrics);
+        WindowReport { elapsed_s, counters, gauges, histograms }
+    }
+}
+
+/// One shard's activity over a window.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardDelta {
+    pub shard: u32,
+    /// Samples processed in the window.
+    pub samples: u64,
+    /// Windowed end-to-end p99 of this shard's verdicts (0 if idle).
+    pub p99_ns: u64,
+}
+
+/// Per-shard delta tracker for the rebalancer: what each virtual shard
+/// did since the last look, by volume *and* by windowed tail latency.
+#[derive(Debug)]
+pub struct ShardWindow {
+    counts: Vec<u64>,
+    latency: Vec<HistogramSnapshot>,
+}
+
+impl ShardWindow {
+    /// Zero baseline: the first delta reports lifetime totals (the
+    /// behaviour the rebalancer's very first interval always had).
+    pub fn new(virtual_shards: usize) -> ShardWindow {
+        ShardWindow {
+            counts: vec![0; virtual_shards],
+            latency: vec![HistogramSnapshot::default(); virtual_shards],
+        }
+    }
+
+    /// Forget the current window: the next delta measures from here.
+    /// Called after a migration so the post-move interval isn't
+    /// polluted by pre-move load attribution.
+    pub fn rebaseline(&mut self, shards: &ShardMetrics) {
+        self.counts = shards.sample_counts();
+        self.latency = shards.latency_snapshots();
+    }
+
+    /// Per-shard activity since the last call (or construction), then
+    /// rebaseline — each window is consumed exactly once.
+    pub fn delta(&mut self, shards: &ShardMetrics) -> Vec<ShardDelta> {
+        let counts = shards.sample_counts();
+        let snaps = shards.latency_snapshots();
+        let empty = HistogramSnapshot::default();
+        let out = counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| ShardDelta {
+                shard: i as u32,
+                samples: c
+                    .saturating_sub(self.counts.get(i).copied().unwrap_or(0)),
+                p99_ns: snaps[i]
+                    .delta(self.latency.get(i).unwrap_or(&empty))
+                    .quantile(0.99),
+            })
+            .collect();
+        self.counts = counts;
+        self.latency = snaps;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_reports_deltas_not_lifetimes() {
+        let m = ServiceMetrics::default();
+        m.samples_in.add(1_000);
+        m.latency.record(500);
+        let mut w = MetricsWindow::new(&m);
+        // Everything before construction is baseline, not window.
+        m.samples_in.add(10);
+        m.verdicts_out.add(7);
+        m.latency.record(2_000_000);
+        let r = w.tick(&m);
+        assert_eq!(r.delta("samples_in"), 10);
+        assert_eq!(r.delta("verdicts_out"), 7);
+        assert!(r.rate("samples_in") > 0.0);
+        let lat = r.histogram("latency").unwrap();
+        assert_eq!(lat.count, 1, "only the in-window recording");
+        assert!(r.p99("latency") > 1_000_000);
+        // Next window starts clean.
+        let r2 = w.tick(&m);
+        assert_eq!(r2.delta("samples_in"), 0);
+        assert_eq!(r2.histogram("latency").unwrap().count, 0);
+        assert_eq!(r2.p99("latency"), 0);
+    }
+
+    #[test]
+    fn window_covers_every_registry_row() {
+        // Sink 3 (windows) must show every registry row.
+        let m = ServiceMetrics::default();
+        let mut w = MetricsWindow::new(&m);
+        let r = w.tick(&m);
+        for row in m.registry() {
+            let present = match row.value {
+                MetricValue::Counter(_) => {
+                    r.counters.iter().any(|c| c.name == row.name)
+                }
+                MetricValue::Gauge(_) => {
+                    r.gauges.iter().any(|(n, _)| *n == row.name)
+                }
+                MetricValue::Histogram(_) => r.histogram(row.name).is_some(),
+            };
+            assert!(present, "window missing {}", row.name);
+        }
+    }
+
+    #[test]
+    fn window_gauges_are_instantaneous() {
+        let m = ServiceMetrics::default();
+        m.workers_active.set(4);
+        let mut w = MetricsWindow::new(&m);
+        m.workers_active.set(6);
+        let r = w.tick(&m);
+        assert_eq!(r.gauge("workers_active"), 6, "current value, not delta");
+        assert_eq!(r.gauge("epoch"), 0);
+    }
+
+    #[test]
+    fn window_render_mentions_rates() {
+        let m = ServiceMetrics::default();
+        let mut w = MetricsWindow::new(&m);
+        m.samples_in.add(100);
+        let line = w.tick(&m).render();
+        assert!(line.contains("in="));
+        assert!(line.contains("latency_p99="));
+    }
+
+    #[test]
+    fn shard_window_isolates_intervals_and_ranks_by_recent_load() {
+        let sm = ShardMetrics::new(4);
+        sm.shard(0).samples.add(1_000); // historic hotspot
+        sm.shard(0).latency.record(100);
+        let mut w = ShardWindow::new(4);
+        // First delta sees lifetime totals (zero baseline)...
+        let first = w.delta(&sm);
+        assert_eq!(first[0].samples, 1_000);
+        // ...then only shard 2 is active in the new window.
+        sm.shard(2).samples.add(50);
+        sm.shard(2).latency.record(5_000_000);
+        let second = w.delta(&sm);
+        assert_eq!(second[0].samples, 0, "historic load aged out");
+        assert_eq!(second[2].samples, 50);
+        assert!(second[2].p99_ns > 1_000_000, "windowed p99");
+        assert_eq!(second[0].p99_ns, 0, "idle shard has no window p99");
+    }
+
+    #[test]
+    fn shard_window_rebaseline_discards_the_open_window() {
+        let sm = ShardMetrics::new(2);
+        let mut w = ShardWindow::new(2);
+        sm.shard(1).samples.add(500);
+        w.rebaseline(&sm); // e.g. a migration just rebalanced
+        let d = w.delta(&sm);
+        assert_eq!(d[1].samples, 0, "pre-rebaseline load not attributed");
+    }
+}
