@@ -1,0 +1,281 @@
+//! Cluster transport costs: frame encode/decode, a loopback-TCP RPC
+//! round trip, and the number the distributed design actually turns
+//! on — what a seal→adopt shard migration pays when it crosses a
+//! process boundary instead of a worker queue.
+//!
+//! Emits `BENCH_transport.json` at the repository root and appends the
+//! run to the cumulative `BENCH_trend.json`.
+//!
+//! Run: `cargo bench --bench transport`
+
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use teda_fpga::config::{ClusterConfig, Json, ServiceConfig, ShardingConfig};
+use teda_fpga::coordinator::transport::frame::{self, Msg};
+use teda_fpga::coordinator::transport::net::{PeerAddr, RpcClient};
+use teda_fpga::coordinator::{ClusterNode, Service};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+/// Frames per measured iteration for the codec rows.
+const FRAMES: u64 = 10_000;
+/// RPC round trips per measured iteration.
+const RPCS: u64 = 500;
+/// Shard moves per measured iteration for the migration rows.
+const MOVES: u64 = 10;
+/// Shards per move (matches a typical rebalance step).
+const SHARDS_PER_MOVE: usize = 4;
+/// Streams warmed up before the migration ping-pong.
+const STREAMS: u64 = 16;
+const WARM_SAMPLES: u64 = 200;
+
+/// Loopback ports for the cross-node row (benches run one at a time;
+/// distinct from the 1746x pair the e2e test uses).
+const PORT_A: u16 = 17471;
+const PORT_B: u16 = 17472;
+
+fn num(v: f64) -> Json {
+    Json::Num((v * 10.0).round() / 10.0)
+}
+
+fn row(results: &mut Vec<Json>, metric: &str, value: f64) {
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str(metric.into()));
+    row.insert("value".into(), num(value));
+    results.push(Json::Obj(row));
+}
+
+fn sample(sid: u64, seq: u64) -> Sample {
+    let mut rng = SplitMix64::new(sid.wrapping_mul(0x9E37) ^ seq);
+    Sample {
+        stream_id: sid,
+        seq,
+        values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+    }
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n_features: 2,
+        queue_capacity: 256,
+        sharding: ShardingConfig { virtual_shards: 32, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn codec_rows(results: &mut Vec<Json>) {
+    let batch: Vec<Sample> = (0..64).map(|i| sample(i, i * 7)).collect();
+    let cases: Vec<(&str, Msg)> = vec![
+        ("heartbeat", Msg::Heartbeat { node_id: 1, epoch: 3 }),
+        ("batch64", Msg::Samples { samples: batch }),
+        (
+            "bundle64k",
+            Msg::Bundle { records: vec![vec![0x5A; 1024]; 64] },
+        ),
+    ];
+    for (label, msg) in &cases {
+        let enc = Bench::new(&format!("encode_{label}"))
+            .iters(30)
+            .units(FRAMES, "frames")
+            .run(|| {
+                for _ in 0..FRAMES {
+                    black_box(frame::encode(black_box(msg)));
+                }
+            });
+        row(results, &format!("encode_{label}_ns"), enc.ns_per_unit);
+        let wire = frame::encode(msg);
+        let dec = Bench::new(&format!("decode_{label}"))
+            .iters(30)
+            .units(FRAMES, "frames")
+            .run(|| {
+                for _ in 0..FRAMES {
+                    black_box(frame::decode(black_box(&wire)).unwrap());
+                }
+            });
+        row(results, &format!("decode_{label}_ns"), dec.ns_per_unit);
+        println!(
+            "  {label}: {} B/frame, encode {:.0} ns, decode {:.0} ns",
+            wire.len(),
+            enc.ns_per_unit,
+            dec.ns_per_unit
+        );
+    }
+}
+
+fn rpc_row(results: &mut Vec<Json>) {
+    // Minimal echo peer: every request gets a HelloOk back.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind echo");
+    let addr = listener.local_addr().expect("echo addr");
+    let server = thread::spawn(move || {
+        let (mut conn, _) = listener.accept().expect("accept");
+        while let Ok(Some(_)) = frame::read_msg(&mut conn) {
+            frame::write_msg(
+                &mut conn,
+                &Msg::HelloOk { node_id: 2, epoch: 0 },
+            )
+            .expect("echo reply");
+        }
+    });
+    let client = RpcClient::new(PeerAddr::Tcp(addr.to_string()));
+    let probe = Msg::Heartbeat { node_id: 1, epoch: 0 };
+    client.rpc(&probe).expect("rpc warmup");
+    let rpc = Bench::new("rpc_roundtrip")
+        .iters(20)
+        .units(RPCS, "rpcs")
+        .run(|| {
+            for _ in 0..RPCS {
+                black_box(client.rpc(&probe).expect("rpc"));
+            }
+        });
+    row(results, "rpc_roundtrip_ns", rpc.ns_per_unit);
+    println!("  rpc round trip: {:.0} ns", rpc.ns_per_unit);
+    client.disconnect();
+    server.join().expect("echo server");
+}
+
+/// Warm `STREAMS` streams into a service so sealed bundles carry real
+/// state.
+fn warm(submit: &mut dyn FnMut(Vec<Sample>)) {
+    for seq in 0..WARM_SAMPLES {
+        submit((0..STREAMS).map(|sid| sample(sid, seq)).collect());
+    }
+}
+
+fn migrate_inproc_row(results: &mut Vec<Json>) -> f64 {
+    let svc = Service::start(svc_cfg()).expect("start service");
+    warm(&mut |burst| svc.submit_batch(burst).expect("submit"));
+    // Ping-pong the same shard set between the two workers: each move
+    // is a full seal → snapshot → adopt → replay cycle, all in-process.
+    // Same shard set the TCP row moves (node 1's first four at epoch 0)
+    // so the two rows seal identical stream populations.
+    let shards: Vec<u32> = vec![0, 2, 4, 6];
+    let mut dst = 1usize;
+    let mig = Bench::new("migrate_inproc")
+        .iters(20)
+        .units(MOVES, "migrations")
+        .run(|| {
+            for _ in 0..MOVES {
+                let moves: Vec<(u32, usize)> =
+                    shards.iter().map(|&s| (s, dst)).collect();
+                svc.migrate_shards(&moves).expect("migrate");
+                dst = 1 - dst;
+            }
+        });
+    row(results, "migrate_inproc_ns", mig.ns_per_unit);
+    println!(
+        "  in-process migration ({SHARDS_PER_MOVE} shards): {:.0} ns",
+        mig.ns_per_unit
+    );
+    drop(svc.finish().expect("finish"));
+    mig.ns_per_unit
+}
+
+fn migrate_tcp_row(results: &mut Vec<Json>) -> f64 {
+    let a = format!("127.0.0.1:{PORT_A}");
+    let b = format!("127.0.0.1:{PORT_B}");
+    let c1 = ClusterConfig {
+        node_id: 1,
+        listen: Some(a.clone()),
+        peers: vec![format!("2={b}")],
+        heartbeat_ms: 500,
+        failover_ms: 0,
+    };
+    let c2 = ClusterConfig {
+        node_id: 2,
+        listen: Some(b),
+        peers: vec![format!("1={a}")],
+        heartbeat_ms: 500,
+        failover_ms: 0,
+    };
+    let svc1 = Arc::new(Service::start(svc_cfg()).expect("node 1 svc"));
+    let svc2 = Arc::new(Service::start(svc_cfg()).expect("node 2 svc"));
+    let n1 = ClusterNode::start(svc1.clone(), &c1).expect("node 1");
+    let n2 = ClusterNode::start(svc2.clone(), &c2).expect("node 2");
+    assert_eq!(n1.hello_peers(), 1, "node 2 must answer hello");
+    let ingest = n1.handle();
+    warm(&mut |burst| ingest.submit_batch(burst).expect("submit"));
+    // The same ping-pong, but each move now crosses the loopback wire:
+    // Table push + Expect + Seal reply hauling the bundle + barrier +
+    // Adopt, all framed RPCs.
+    let shards: Vec<u32> = n1
+        .owned_shards()
+        .into_iter()
+        .take(SHARDS_PER_MOVE)
+        .collect();
+    let mut here = true; // whose turn it is to push
+    let mig = Bench::new("migrate_tcp")
+        .iters(20)
+        .units(MOVES, "migrations")
+        .run(|| {
+            for _ in 0..MOVES {
+                if here {
+                    n1.migrate_to_peer(2, &shards).expect("push 1→2");
+                } else {
+                    n2.migrate_to_peer(1, &shards).expect("push 2→1");
+                }
+                here = !here;
+            }
+        });
+    row(results, "migrate_tcp_ns", mig.ns_per_unit);
+    println!(
+        "  loopback-TCP migration ({SHARDS_PER_MOVE} shards): {:.0} ns",
+        mig.ns_per_unit
+    );
+    drop(ingest);
+    n1.shutdown().expect("node 1 shutdown");
+    n2.shutdown().expect("node 2 shutdown");
+    let svc1 = Arc::try_unwrap(svc1)
+        .unwrap_or_else(|_| panic!("node 1 service still shared"));
+    let svc2 = Arc::try_unwrap(svc2)
+        .unwrap_or_else(|_| panic!("node 2 service still shared"));
+    drop(svc1.finish().expect("node 1 finish"));
+    drop(svc2.finish().expect("node 2 finish"));
+    mig.ns_per_unit
+}
+
+fn main() {
+    println!("== cluster transport ==\n");
+    let mut results = Vec::new();
+
+    codec_rows(&mut results);
+    rpc_row(&mut results);
+    let inproc = migrate_inproc_row(&mut results);
+    let tcp = migrate_tcp_row(&mut results);
+    if inproc > 0.0 {
+        println!(
+            "\n  cross-process premium: {:.1}x over in-process",
+            tcp / inproc
+        );
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("transport".into()));
+    doc.insert(
+        "workload".into(),
+        Json::Str(format!(
+            "{FRAMES} frames/iter codec rows; {RPCS} loopback RPCs/iter; \
+             {MOVES} x {SHARDS_PER_MOVE}-shard seal→adopt moves/iter with \
+             {STREAMS} warm streams, in-process vs loopback TCP"
+        )),
+    );
+    doc.insert("results".into(), Json::Arr(results));
+    let json = Json::Obj(doc);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent");
+    let path = root.join("BENCH_transport.json");
+    std::fs::write(&path, json.to_string_compact() + "\n")
+        .expect("write BENCH_transport.json");
+    println!("wrote {}", path.display());
+    match teda_fpga::util::benchkit::append_trend(root, "transport", &json) {
+        Ok(true) => println!("appended run to BENCH_trend.json"),
+        Ok(false) => println!("BENCH_trend.json already has this run"),
+        Err(e) => eprintln!("warning: trend append failed: {e}"),
+    }
+}

@@ -11,5 +11,7 @@ pub mod toml;
 
 pub use ensemble::{CombinerKind, EnsembleConfig, MemberKind, MemberSpec};
 pub use json::Json;
-pub use service::{EngineKind, ObsConfig, ServiceConfig, ShardingConfig};
+pub use service::{
+    ClusterConfig, EngineKind, ObsConfig, ServiceConfig, ShardingConfig,
+};
 pub use toml::TomlDoc;

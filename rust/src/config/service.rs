@@ -76,6 +76,86 @@ impl Default for ShardingConfig {
     }
 }
 
+/// Distributed-serve knobs (`[cluster]` in TOML, `"cluster"` in JSON).
+///
+/// Clustering is off unless `listen` is set. Peers are static:
+/// `"ID=ADDR"` entries where ADDR is `host:port` or `unix:/path`. All
+/// nodes of one logical service must share `sharding.virtual_shards`
+/// and (for failover) `checkpoint.dir` on a shared filesystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// This node's stable identity (unique across the cluster).
+    /// TOML/JSON: `cluster.node_id`, CLI: `--node-id`.
+    pub node_id: u64,
+    /// Transport bind address (`host:port` or `unix:/path`); `None`
+    /// runs single-process. TOML/JSON: `cluster.listen`, CLI:
+    /// `--cluster-listen`.
+    pub listen: Option<String>,
+    /// Peer roster as `"ID=ADDR"` strings. TOML/JSON: `cluster.peers`,
+    /// CLI: `--peer ID=ADDR` (repeatable).
+    pub peers: Vec<String>,
+    /// Heartbeat interval in milliseconds. TOML/JSON:
+    /// `cluster.heartbeat_ms`.
+    pub heartbeat_ms: u64,
+    /// Declare a silent peer dead and adopt its shards from the shared
+    /// checkpoint store after this many milliseconds (0 = automatic
+    /// failover off; migration and manual failover still work).
+    /// TOML/JSON: `cluster.failover_ms`.
+    pub failover_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            node_id: 0,
+            listen: None,
+            peers: Vec::new(),
+            heartbeat_ms: 500,
+            failover_ms: 0,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Whether this config asks for a cluster transport at all.
+    pub fn enabled(&self) -> bool {
+        self.listen.is_some()
+    }
+
+    /// Parse the `"ID=ADDR"` roster into `(node_id, addr)` pairs.
+    pub fn parse_peers(&self) -> Result<Vec<(u64, String)>> {
+        let mut out = Vec::with_capacity(self.peers.len());
+        for p in &self.peers {
+            let (id, addr) = p.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "cluster peer '{p}' must be ID=ADDR"
+                ))
+            })?;
+            let id: u64 = id.trim().parse().map_err(|_| {
+                Error::Config(format!(
+                    "cluster peer '{p}': bad node id '{id}'"
+                ))
+            })?;
+            if id == self.node_id {
+                return Err(Error::Config(format!(
+                    "cluster peer '{p}' reuses this node's id"
+                )));
+            }
+            out.push((id, addr.trim().to_string()));
+        }
+        out.sort_unstable_by_key(|(id, _)| *id);
+        for w in out.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(Error::Config(format!(
+                    "duplicate cluster peer id {}",
+                    w[0].0
+                )));
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Observability knobs (`[obs]` in TOML, `"obs"` in JSON).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObsConfig {
@@ -152,6 +232,8 @@ pub struct ServiceConfig {
     pub sharding: ShardingConfig,
     /// Observability: scrape endpoint + flight recorder knobs.
     pub obs: ObsConfig,
+    /// Distributed serve: transport bind, peer roster, failover.
+    pub cluster: ClusterConfig,
     /// Ensemble member roster + combiner (used when `engine = ensemble`).
     pub ensemble: EnsembleConfig,
 }
@@ -177,6 +259,7 @@ impl Default for ServiceConfig {
             seed: 0x7EDA, // "TEDA"
             sharding: ShardingConfig::default(),
             obs: ObsConfig::default(),
+            cluster: ClusterConfig::default(),
             ensemble: EnsembleConfig::default(),
         }
     }
@@ -260,6 +343,32 @@ impl ServiceConfig {
         }
         if let Some(v) = doc.usize_("obs.recorder_capacity") {
             cfg.obs.recorder_capacity = v;
+        }
+        if let Some(v) = doc.u64_("cluster.node_id") {
+            cfg.cluster.node_id = v;
+        }
+        if let Some(v) = doc.str_("cluster.listen") {
+            cfg.cluster.listen = Some(v.to_string());
+        }
+        if let Some(arr) = doc.get("cluster.peers").and_then(Json::as_arr) {
+            cfg.cluster.peers = arr
+                .iter()
+                .map(|p| {
+                    p.as_str().map(str::to_string).ok_or_else(|| {
+                        Error::Config(
+                            "cluster.peers entries must be \
+                             \"ID=ADDR\" strings"
+                                .into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.u64_("cluster.heartbeat_ms") {
+            cfg.cluster.heartbeat_ms = v;
+        }
+        if let Some(v) = doc.u64_("cluster.failover_ms") {
+            cfg.cluster.failover_ms = v;
         }
         cfg.ensemble.apply_toml(&doc)?;
         cfg.validate()?;
@@ -363,6 +472,38 @@ impl ServiceConfig {
                 cfg.obs.recorder_capacity = v;
             }
         }
+        if let Some(cluster) = doc.get("cluster") {
+            if let Some(v) = cluster.get("node_id").and_then(Json::as_u64) {
+                cfg.cluster.node_id = v;
+            }
+            if let Some(v) = cluster.get("listen").and_then(Json::as_str) {
+                cfg.cluster.listen = Some(v.to_string());
+            }
+            if let Some(arr) = cluster.get("peers").and_then(Json::as_arr) {
+                cfg.cluster.peers = arr
+                    .iter()
+                    .map(|p| {
+                        p.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::Config(
+                                "cluster.peers entries must be \
+                                 \"ID=ADDR\" strings"
+                                    .into(),
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(v) =
+                cluster.get("heartbeat_ms").and_then(Json::as_u64)
+            {
+                cfg.cluster.heartbeat_ms = v;
+            }
+            if let Some(v) =
+                cluster.get("failover_ms").and_then(Json::as_u64)
+            {
+                cfg.cluster.failover_ms = v;
+            }
+        }
         if let Some(batcher) = doc.get("batcher") {
             if let Some(v) =
                 batcher.get("max_streams").and_then(Json::as_usize)
@@ -456,6 +597,21 @@ impl ServiceConfig {
                 )));
             }
         }
+        if let Some(listen) = &self.cluster.listen {
+            if !listen.contains(':') {
+                return Err(Error::Config(format!(
+                    "cluster.listen '{listen}' must be host:port or \
+                     unix:/path"
+                )));
+            }
+            if self.cluster.heartbeat_ms == 0 {
+                return Err(Error::Config(
+                    "cluster.heartbeat_ms must be > 0".into(),
+                ));
+            }
+        }
+        // Roster syntax fails at parse time, not at first dial.
+        self.cluster.parse_peers()?;
         if self.engine == EngineKind::Ensemble {
             self.ensemble.validate()?;
         }
@@ -614,6 +770,12 @@ mod tests {
             metrics_addr = "127.0.0.1:9464"
             recorder = false
             recorder_capacity = 512
+            [cluster]
+            node_id = 3
+            listen = "127.0.0.1:7441"
+            peers = ["1=127.0.0.1:7442", "2=unix:/tmp/teda-2.sock"]
+            heartbeat_ms = 250
+            failover_ms = 1500
             [ensemble]
             combiner = "adaptive"
             members = ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]
@@ -629,6 +791,10 @@ mod tests {
             "artifacts": {"dir": "/opt/a"},
             "obs": {"metrics_addr": "127.0.0.1:9464",
                     "recorder": false, "recorder_capacity": 512},
+            "cluster": {"node_id": 3, "listen": "127.0.0.1:7441",
+                        "peers": ["1=127.0.0.1:7442",
+                                  "2=unix:/tmp/teda-2.sock"],
+                        "heartbeat_ms": 250, "failover_ms": 1500},
             "ensemble": {"combiner": "adaptive",
                          "members": ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]}
         }"#;
@@ -650,6 +816,64 @@ mod tests {
         assert_eq!(a.obs.metrics_addr.as_deref(), Some("127.0.0.1:9464"));
         assert!(!a.obs.recorder);
         assert_eq!(a.obs.recorder_capacity, 512);
+        assert_eq!(a.cluster.node_id, 3);
+        assert_eq!(a.cluster.listen.as_deref(), Some("127.0.0.1:7441"));
+        assert_eq!(a.cluster.peers.len(), 2);
+        assert_eq!(a.cluster.heartbeat_ms, 250);
+        assert_eq!(a.cluster.failover_ms, 1500);
+    }
+
+    #[test]
+    fn cluster_defaults_and_peer_parsing() {
+        let cfg = ServiceConfig::default();
+        assert!(!cfg.cluster.enabled(), "clustering off by default");
+        assert_eq!(cfg.cluster.heartbeat_ms, 500);
+        assert_eq!(cfg.cluster.failover_ms, 0, "auto failover off");
+
+        let cfg = ServiceConfig::from_toml(
+            "[cluster]\nnode_id = 1\nlisten = \"127.0.0.1:0\"\n\
+             peers = [\"2=127.0.0.1:7442\", \"3=unix:/tmp/n3.sock\"]\n",
+        )
+        .unwrap();
+        assert!(cfg.cluster.enabled());
+        let peers = cfg.cluster.parse_peers().unwrap();
+        assert_eq!(
+            peers,
+            vec![
+                (2, "127.0.0.1:7442".to_string()),
+                (3, "unix:/tmp/n3.sock".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn invalid_cluster_rejected() {
+        // Listen without a port, zero heartbeat, malformed rosters,
+        // self-referential and duplicate peer ids.
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nlisten = \"localhost\"\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nlisten = \"127.0.0.1:7441\"\nheartbeat_ms = 0\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\npeers = [\"127.0.0.1:7442\"]\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\npeers = [\"x=127.0.0.1:7442\"]\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nnode_id = 2\npeers = [\"2=127.0.0.1:7442\"]\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_json(
+            r#"{"cluster": {"peers": ["1=a:1", "1=b:2"]}}"#
+        )
+        .is_err());
     }
 
     #[test]

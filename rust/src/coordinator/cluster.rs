@@ -1,0 +1,1045 @@
+//! Cluster control plane: membership, heartbeats, node-level shard
+//! ownership, and cross-process seal → adopt migration.
+//!
+//! Several `teda-fpga serve` processes — each one a full node core
+//! ([`Service`]: workers, rings, engines, state manager) — serve one
+//! logical shard map. The split of responsibilities:
+//!
+//! - **Node core** ([`Service`]): everything inside one process. Its
+//!   node-level entry points (`expect_shards` / `seal_shards` /
+//!   `adopt_shards` / `replay_strays` / `reroute_strays`) present the
+//!   whole process as one [`Transport`]-shaped endpoint fanned out
+//!   over the local workers.
+//! - **Control plane** (this module): a static peer roster, a
+//!   deterministic initial ownership table (every node computes the
+//!   same round-robin [`NodeTable`] at epoch 0, so no handshake is
+//!   needed to agree), heartbeat liveness, epoch-numbered table
+//!   broadcasts, node → node migration driven by the *same*
+//!   [`migrate_over`] sequence the in-process rebalancer uses, and
+//!   failover: when a peer dies, the lowest-id survivor adopts its
+//!   shards from the shared checkpoint store.
+//! - **Transport** ([`super::transport`]): the length-prefixed,
+//!   CRC-framed TCP/UDS protocol. Sealed bundles cross as unmodified
+//!   persist-codec records.
+//!
+//! Ordering across processes leans on one property: all migration
+//! traffic for one move flows over ONE serialized connection (the
+//! peer's [`RpcClient`]), so the far side processes Table before Seal,
+//! and stray Replays before the Adopt — exactly the FIFO the
+//! in-process control plane guarantees.
+//!
+//! Failover contract: automatic failover (`cluster.failover_ms > 0`)
+//! requires every node to share `checkpoint.dir` on a common
+//! filesystem and run with `checkpoint.restore = true`. The survivor
+//! re-reads the store ([`StateManager::recover`]), takes ownership of
+//! the dead node's shards with an empty Adopt, and resuming streams
+//! restore at their checkpointed watermarks — samples at or below a
+//! watermark are deduplicated, so re-feeding a window of recent
+//! samples converges on bit-identical verdicts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::service::Service;
+use super::shard_map::shard_of;
+use super::transport::frame::{self, Msg};
+use super::transport::net::{Listener, PeerAddr, RemoteLink, RpcClient};
+use super::transport::{
+    migrate_over, MigrationStats, StraySample, Transport,
+};
+use crate::config::ClusterConfig;
+use crate::obs::{record, EventKind, NO_WORKER};
+use crate::stream::Sample;
+use crate::{Error, Result};
+
+/// How long the accept loop naps when no connection is pending.
+const ACCEPT_NAP: Duration = Duration::from_millis(5);
+
+/// Node-level shard ownership: `owner[shard]` is the node id serving
+/// that virtual shard. Epoch-numbered like the worker-level
+/// [`super::ShardTable`]; higher epoch wins, equal epochs are
+/// idempotent duplicates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeTable {
+    /// Monotonic version; bumps on every ownership change.
+    pub epoch: u64,
+    /// Shard → owning node id, indexed by virtual shard.
+    pub owner: Vec<u64>,
+}
+
+impl NodeTable {
+    /// The deterministic epoch-0 table: shards round-robin over the
+    /// sorted member ids. Every node of a roster computes the same
+    /// table, so a cluster boots agreed without any exchange.
+    pub fn new_uniform(virtual_shards: u32, members: &[u64]) -> NodeTable {
+        assert!(!members.is_empty(), "a cluster has at least one node");
+        let mut ids = members.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        let owner = (0..virtual_shards)
+            .map(|s| ids[s as usize % ids.len()])
+            .collect();
+        NodeTable { epoch: 0, owner }
+    }
+
+    /// Shards owned by `node`, ascending.
+    pub fn shards_of(&self, node: u64) -> Vec<u32> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o == node)
+            .map(|(s, _)| s as u32)
+            .collect()
+    }
+
+    /// Owner of one shard (panics on out-of-range shard).
+    pub fn owner_of(&self, shard: u32) -> u64 {
+        self.owner[shard as usize]
+    }
+
+    /// Successor table: `shards` reassigned to `node`, epoch bumped.
+    pub fn with_owner(&self, shards: &[u32], node: u64) -> NodeTable {
+        let mut owner = self.owner.clone();
+        for &s in shards {
+            owner[s as usize] = node;
+        }
+        NodeTable { epoch: self.epoch + 1, owner }
+    }
+
+    /// Distinct member ids present in the table, ascending.
+    pub fn members(&self) -> Vec<u64> {
+        let mut ids = self.owner.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+}
+
+struct PeerState {
+    alive: bool,
+    last_seen: Option<Instant>,
+    epoch: u64,
+}
+
+struct Peer {
+    id: u64,
+    client: Arc<RpcClient>,
+    state: Mutex<PeerState>,
+}
+
+struct Shared {
+    node_id: u64,
+    svc: Arc<Service>,
+    table: Mutex<NodeTable>,
+    peers: BTreeMap<u64, Peer>,
+    heartbeat_every: Duration,
+    /// 0 = automatic failover off.
+    failover_after: Duration,
+    /// Serializes node-level moves and failovers against each other.
+    move_lock: Mutex<()>,
+    stop: AtomicBool,
+    bound: String,
+    started: Instant,
+}
+
+impl Shared {
+    fn peer(&self, id: u64) -> Result<&Peer> {
+        self.peers.get(&id).ok_or_else(|| {
+            Error::Stream(format!("unknown cluster peer {id}"))
+        })
+    }
+
+    fn epoch(&self) -> u64 {
+        self.table.lock().unwrap().epoch
+    }
+
+    /// Liveness bookkeeping for any message proving `id` is up.
+    fn note_alive(&self, id: u64, epoch: u64) {
+        let Some(peer) = self.peers.get(&id) else { return };
+        let mut st = peer.state.lock().unwrap();
+        if !st.alive {
+            self.svc.metrics().peer_connects.inc();
+            record(EventKind::PeerConnect, id, 0, NO_WORKER);
+        }
+        st.alive = true;
+        st.last_seen = Some(Instant::now());
+        st.epoch = epoch;
+        drop(st);
+        self.refresh_peers_alive();
+    }
+
+    fn note_dead(&self, id: u64) {
+        if let Some(peer) = self.peers.get(&id) {
+            peer.state.lock().unwrap().alive = false;
+            peer.client.disconnect();
+        }
+        self.refresh_peers_alive();
+    }
+
+    fn refresh_peers_alive(&self) {
+        let alive = self
+            .peers
+            .values()
+            .filter(|p| p.state.lock().unwrap().alive)
+            .count();
+        self.svc.metrics().peers_alive.set(alive as u64);
+    }
+
+    /// Adopt a (possibly remote) ownership table. Stale epochs are
+    /// refused, the current epoch is an idempotent duplicate. The
+    /// service's foreign-shard set tracks the table: shards owned
+    /// elsewhere escalate their strays through the forwarder.
+    fn apply_table(&self, epoch: u64, owner: Vec<u64>) -> Result<()> {
+        let vs = self.svc.table().virtual_shards() as usize;
+        if owner.len() != vs {
+            return Err(Error::Stream(format!(
+                "table for {} shards, this cluster serves {vs}",
+                owner.len()
+            )));
+        }
+        {
+            let mut t = self.table.lock().unwrap();
+            if epoch < t.epoch {
+                return Err(Error::Stream(format!(
+                    "stale table epoch {epoch} (current {})",
+                    t.epoch
+                )));
+            }
+            // An empty current table is the pre-bootstrap sentinel:
+            // accept whatever installs first.
+            if epoch == t.epoch && !t.owner.is_empty() {
+                if t.owner == owner {
+                    return Ok(());
+                }
+                return Err(Error::Stream(format!(
+                    "conflicting table at epoch {epoch}"
+                )));
+            }
+            *t = NodeTable { epoch, owner: owner.clone() };
+        }
+        let mut mine = Vec::new();
+        let mut foreign = Vec::new();
+        for (s, &o) in owner.iter().enumerate() {
+            if o == self.node_id {
+                mine.push(s as u32);
+            } else {
+                foreign.push(s as u32);
+            }
+        }
+        self.svc.mark_foreign(&foreign, true);
+        self.svc.mark_foreign(&mine, false);
+        self.svc.metrics().cluster_epoch.set(epoch);
+        Ok(())
+    }
+
+    /// Install a successor table locally, then push it to every peer.
+    /// Push failures are tolerated: a lagging peer self-heals on the
+    /// next heartbeat (its stale epoch triggers a re-push), and a dead
+    /// one is on its way to failover.
+    fn install_table(&self, next: NodeTable) -> Result<()> {
+        let msg = Msg::Table {
+            epoch: next.epoch,
+            owner: next.owner.clone(),
+        };
+        self.apply_table(next.epoch, next.owner)?;
+        for peer in self.peers.values() {
+            let _ = peer.client.rpc(&msg);
+        }
+        Ok(())
+    }
+
+    /// Escalate strays whose shards live on a peer ([`Service`] calls
+    /// this through the forwarder hook). Delivered strays ride the
+    /// peer's control plane (Replay), staying FIFO with any queued
+    /// Adopt over there. Undeliverable strays come back to be parked.
+    fn forward_strays(
+        &self,
+        strays: Vec<StraySample>,
+    ) -> std::result::Result<usize, Vec<StraySample>> {
+        let table = self.table.lock().unwrap().clone();
+        let vs = table.owner.len() as u32;
+        let mut per_owner: BTreeMap<u64, Vec<StraySample>> =
+            BTreeMap::new();
+        for stray in strays {
+            let owner = table.owner_of(shard_of(stray.0.stream_id, vs));
+            per_owner.entry(owner).or_default().push(stray);
+        }
+        let mut delivered = 0usize;
+        let mut failed: Vec<StraySample> = Vec::new();
+        for (owner, group) in per_owner {
+            // A shard marked foreign but mapping to self is a transient
+            // race with a table install: park, the next drain re-reads.
+            let peer = match self.peers.get(&owner) {
+                Some(p) if owner != self.node_id => p,
+                _ => {
+                    failed.extend(group);
+                    continue;
+                }
+            };
+            let samples: Vec<Sample> =
+                group.iter().map(|(s, _)| s.clone()).collect();
+            let n = samples.len();
+            match peer.client.rpc(&Msg::Replay { samples }) {
+                Ok(Msg::Ok) => delivered += n,
+                _ => failed.extend(group),
+            }
+        }
+        if failed.is_empty() {
+            Ok(delivered)
+        } else {
+            Err(failed)
+        }
+    }
+
+    /// One request → one reply. Control messages map straight onto the
+    /// node core's protocol entry points.
+    fn handle_msg(&self, msg: Msg) -> Msg {
+        let m = self.svc.metrics();
+        match msg {
+            Msg::Hello { node_id, epoch } => {
+                self.note_alive(node_id, epoch);
+                Msg::HelloOk {
+                    node_id: self.node_id,
+                    epoch: self.epoch(),
+                }
+            }
+            Msg::Heartbeat { node_id, epoch } => {
+                m.heartbeats_rx.inc();
+                self.note_alive(node_id, epoch);
+                record(EventKind::Heartbeat, node_id, 0, NO_WORKER);
+                Msg::HelloOk {
+                    node_id: self.node_id,
+                    epoch: self.epoch(),
+                }
+            }
+            Msg::Expect { shards } => {
+                match self.svc.expect_shards(&shards) {
+                    Ok(()) => Msg::Ok,
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Seal { shards } => {
+                match self.svc.seal_shards(&shards) {
+                    Ok(records) => {
+                        if !shards.is_empty() {
+                            self.svc.mark_foreign(&shards, true);
+                            let bytes: u64 = records
+                                .iter()
+                                .map(|r| r.len() as u64)
+                                .sum();
+                            m.bundle_bytes_tx.add(bytes);
+                            record(
+                                EventKind::BundleShip,
+                                bytes,
+                                shards.len() as u32,
+                                NO_WORKER,
+                            );
+                        }
+                        Msg::Bundle { records }
+                    }
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Adopt { shards, records } => {
+                let bytes: u64 =
+                    records.iter().map(|r| r.len() as u64).sum();
+                self.svc.mark_foreign(&shards, false);
+                match self.svc.adopt_shards(&shards, records) {
+                    Ok(()) => {
+                        m.bundle_bytes_rx.add(bytes);
+                        record(
+                            EventKind::BundleShip,
+                            bytes,
+                            shards.len() as u32,
+                            NO_WORKER,
+                        );
+                        Msg::Ok
+                    }
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Replay { samples } => {
+                match self.svc.replay_strays(samples) {
+                    Ok(_) => Msg::Ok,
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Samples { samples } => {
+                match self.svc.submit_batch(samples) {
+                    Ok(()) => Msg::Ok,
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Table { epoch, owner } => {
+                match self.apply_table(epoch, owner) {
+                    Ok(()) => Msg::Ok,
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Settle => match self.svc.reroute_strays() {
+                Ok(_) => Msg::Ok,
+                Err(e) => Msg::Denied { reason: e.to_string() },
+            },
+            Msg::Status => Msg::StatusText { text: self.status() },
+            // Replies arriving as requests: protocol violation.
+            other => Msg::Denied {
+                reason: format!("unexpected {} request", other.label()),
+            },
+        }
+    }
+
+    fn status(&self) -> String {
+        let table = self.table.lock().unwrap();
+        let owned = table.shards_of(self.node_id).len();
+        let m = self.svc.metrics();
+        let mut out = format!(
+            "node {} @ {}\nepoch {}\nshards {}/{} owned\n\
+             workers {}\nsamples_in {}\nuptime {:.1}s\n",
+            self.node_id,
+            self.bound,
+            table.epoch,
+            owned,
+            table.owner.len(),
+            self.svc.workers(),
+            m.samples_in.get(),
+            self.started.elapsed().as_secs_f64(),
+        );
+        for peer in self.peers.values() {
+            let st = peer.state.lock().unwrap();
+            out.push_str(&format!(
+                "peer {} @ {} {} (epoch {}, owns {})\n",
+                peer.id,
+                peer.client.addr(),
+                if st.alive { "alive" } else { "unseen/dead" },
+                st.epoch,
+                table.shards_of(peer.id).len(),
+            ));
+        }
+        out
+    }
+
+    /// Am I the designated survivor for `dead`? Exactly one node may
+    /// run a failover: the lowest-id member still alive.
+    fn failover_leader(&self, dead: u64) -> bool {
+        self.peers.values().all(|p| {
+            p.id == dead
+                || p.id > self.node_id
+                || !p.state.lock().unwrap().alive
+        })
+    }
+
+    /// Adopt every shard `dead` owned, recovering stream state from
+    /// the shared checkpoint store. Returns how many shards moved.
+    fn failover(&self, dead: u64) -> Result<usize> {
+        let _guard = self.move_lock.lock().unwrap();
+        let (shards, next) = {
+            let t = self.table.lock().unwrap();
+            let shards = t.shards_of(dead);
+            let next = t.with_owner(&shards, self.node_id);
+            (shards, next)
+        };
+        if shards.is_empty() {
+            return Ok(0);
+        }
+        // Pull the dead node's published watermarks out of the shared
+        // durable store; resuming streams restore from them. Without a
+        // durable store this degrades to ownership-only adoption.
+        let _ = self.svc.state_manager().recover();
+        self.svc.expect_shards(&shards)?;
+        self.install_table(next)?;
+        self.svc.adopt_shards(&shards, Vec::new())?;
+        self.note_dead(dead);
+        self.svc.metrics().failovers.inc();
+        record(
+            EventKind::Failover,
+            dead,
+            shards.len() as u32,
+            NO_WORKER,
+        );
+        Ok(shards.len())
+    }
+
+    /// One heartbeat round over every peer. Successes refresh
+    /// liveness (and re-push the table to lagging peers); a silence
+    /// longer than the failover window declares the peer dead and —
+    /// if automatic failover is on and this node is the designated
+    /// survivor — adopts its shards.
+    fn heartbeat_round(&self) {
+        let m = self.svc.metrics();
+        for peer in self.peers.values() {
+            if self.stop.load(Ordering::Acquire) {
+                return;
+            }
+            let req = Msg::Heartbeat {
+                node_id: self.node_id,
+                epoch: self.epoch(),
+            };
+            match peer.client.rpc(&req) {
+                Ok(Msg::HelloOk { epoch, .. }) => {
+                    m.heartbeats_tx.inc();
+                    self.note_alive(peer.id, epoch);
+                    record(EventKind::Heartbeat, peer.id, 0, NO_WORKER);
+                    if epoch < self.epoch() {
+                        // Lagging peer (missed a broadcast): re-push.
+                        let t = self.table.lock().unwrap().clone();
+                        let _ = peer.client.rpc(&Msg::Table {
+                            epoch: t.epoch,
+                            owner: t.owner,
+                        });
+                    }
+                }
+                _ => {
+                    let (was_alive, basis) = {
+                        let st = peer.state.lock().unwrap();
+                        (st.alive, st.last_seen.unwrap_or(self.started))
+                    };
+                    let dead_after = if self.failover_after.is_zero() {
+                        // No auto failover: still mark dead after a few
+                        // missed rounds so status/metrics tell the truth.
+                        self.heartbeat_every * 3
+                    } else {
+                        self.failover_after
+                    };
+                    if basis.elapsed() < dead_after {
+                        continue;
+                    }
+                    if was_alive {
+                        self.note_dead(peer.id);
+                    }
+                    if !self.failover_after.is_zero()
+                        && self.failover_leader(peer.id)
+                        && !self
+                            .table
+                            .lock()
+                            .unwrap()
+                            .shards_of(peer.id)
+                            .is_empty()
+                    {
+                        let _ = self.failover(peer.id);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A running cluster node: the transport listener + heartbeat loop
+/// wrapped around a node core. Create with [`ClusterNode::start`],
+/// stop with [`ClusterNode::shutdown`] (the [`Service`] itself is
+/// finished separately by its owner).
+pub struct ClusterNode {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    heartbeat: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ClusterNode {
+    /// Bind the transport, install the deterministic epoch-0 table,
+    /// hook the service's stray forwarder, and start the accept +
+    /// heartbeat threads. `cfg.listen` must be set.
+    pub fn start(
+        svc: Arc<Service>,
+        cfg: &ClusterConfig,
+    ) -> Result<ClusterNode> {
+        let listen = cfg.listen.as_deref().ok_or_else(|| {
+            Error::Config("cluster.listen is required".into())
+        })?;
+        let listener = Listener::bind(&PeerAddr::parse(listen)?)?;
+        let bound = listener.bound_addr();
+
+        let mut peers = BTreeMap::new();
+        let mut members = vec![cfg.node_id];
+        for (id, addr) in cfg.parse_peers()? {
+            members.push(id);
+            peers.insert(
+                id,
+                Peer {
+                    id,
+                    client: Arc::new(RpcClient::new(PeerAddr::parse(
+                        &addr,
+                    )?)),
+                    state: Mutex::new(PeerState {
+                        alive: false,
+                        last_seen: None,
+                        epoch: 0,
+                    }),
+                },
+            );
+        }
+        let table = NodeTable::new_uniform(
+            svc.table().virtual_shards(),
+            &members,
+        );
+        let shared = Arc::new(Shared {
+            node_id: cfg.node_id,
+            svc,
+            table: Mutex::new(NodeTable { epoch: 0, owner: Vec::new() }),
+            peers,
+            heartbeat_every: Duration::from_millis(cfg.heartbeat_ms),
+            failover_after: Duration::from_millis(cfg.failover_ms),
+            move_lock: Mutex::new(()),
+            stop: AtomicBool::new(false),
+            bound,
+            started: Instant::now(),
+        });
+        // Epoch 0 through the same path every later table takes (also
+        // seeds the foreign-shard set and the cluster_epoch gauge).
+        shared.apply_table(0, table.owner)?;
+
+        // Stray escalation: a Weak hook, so Service ⇄ cluster never
+        // form an Arc cycle and the service stays individually owned.
+        let weak: Weak<Shared> = Arc::downgrade(&shared);
+        shared.svc.set_stray_forwarder(Some(Arc::new(
+            move |strays: Vec<StraySample>| match weak.upgrade() {
+                Some(sh) => sh.forward_strays(strays),
+                None => Err(strays),
+            },
+        )));
+
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name(format!("teda-cluster-accept-{}", shared.node_id))
+                .spawn(move || {
+                    while !shared.stop.load(Ordering::Acquire) {
+                        match listener.try_accept() {
+                            Ok(Some(mut conn)) => {
+                                let sh = shared.clone();
+                                let h = std::thread::Builder::new()
+                                    .name("teda-cluster-conn".into())
+                                    .spawn(move || {
+                                        while let Ok(Some(msg)) =
+                                            frame::read_msg_cancellable(
+                                                &mut conn, &sh.stop,
+                                            )
+                                            .map_err(|_| {
+                                                sh.svc
+                                                    .metrics()
+                                                    .frame_errors
+                                                    .inc();
+                                            })
+                                        {
+                                            let reply =
+                                                sh.handle_msg(msg);
+                                            if frame::write_msg(
+                                                &mut conn, &reply,
+                                            )
+                                            .is_err()
+                                            {
+                                                break;
+                                            }
+                                        }
+                                    })
+                                    .expect("spawn conn handler");
+                                conns.lock().unwrap().push(h);
+                            }
+                            Ok(None) => std::thread::sleep(ACCEPT_NAP),
+                            Err(_) => {
+                                shared.svc.metrics().frame_errors.inc()
+                            }
+                        }
+                    }
+                })
+                .map_err(|e| Error::io("spawn cluster accept", e))?
+        };
+        let heartbeat = if shared.peers.is_empty() {
+            None
+        } else {
+            let sh = shared.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name(format!(
+                        "teda-cluster-heartbeat-{}",
+                        sh.node_id
+                    ))
+                    .spawn(move || {
+                        while !sh.stop.load(Ordering::Acquire) {
+                            sh.heartbeat_round();
+                            // Nap in short slices: prompt shutdown.
+                            let mut left = sh.heartbeat_every;
+                            while !left.is_zero()
+                                && !sh.stop.load(Ordering::Acquire)
+                            {
+                                let nap = left.min(ACCEPT_NAP * 4);
+                                std::thread::sleep(nap);
+                                left = left.saturating_sub(nap);
+                            }
+                        }
+                    })
+                    .map_err(|e| {
+                        Error::io("spawn cluster heartbeat", e)
+                    })?,
+            )
+        };
+        Ok(ClusterNode {
+            shared,
+            accept: Some(accept),
+            heartbeat,
+            conns,
+        })
+    }
+
+    /// This node's id.
+    pub fn node_id(&self) -> u64 {
+        self.shared.node_id
+    }
+
+    /// The transport's actual bound address (resolves `:0` binds).
+    pub fn bound_addr(&self) -> String {
+        self.shared.bound.clone()
+    }
+
+    /// Current ownership table (copy).
+    pub fn table(&self) -> NodeTable {
+        self.shared.table.lock().unwrap().clone()
+    }
+
+    /// Current table epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch()
+    }
+
+    /// Shards this node currently owns.
+    pub fn owned_shards(&self) -> Vec<u32> {
+        self.shared
+            .table
+            .lock()
+            .unwrap()
+            .shards_of(self.shared.node_id)
+    }
+
+    /// Dial every peer with a Hello; returns how many answered. Useful
+    /// at boot (populates liveness before the first heartbeat round)
+    /// and harmless to repeat.
+    pub fn hello_peers(&self) -> usize {
+        let mut up = 0;
+        for peer in self.shared.peers.values() {
+            let req = Msg::Hello {
+                node_id: self.shared.node_id,
+                epoch: self.shared.epoch(),
+            };
+            if let Ok(Msg::HelloOk { epoch, .. }) = peer.client.rpc(&req)
+            {
+                self.shared.note_alive(peer.id, epoch);
+                up += 1;
+            }
+        }
+        up
+    }
+
+    /// Human-readable status (the `teda-fpga cluster` subcommand's
+    /// payload when pointed at this node).
+    pub fn status(&self) -> String {
+        self.shared.status()
+    }
+
+    /// Move `shards` from this node to `peer`: the exact
+    /// Expect → install → Seal → drain → Adopt sequence of the
+    /// in-process rebalancer, with the destination endpoint behind the
+    /// framed transport. Verdicts stay bit-identical to an unmigrated
+    /// run — strays drained up to the barrier cross as Replay frames
+    /// on the same serialized connection as the Adopt.
+    pub fn migrate_to_peer(
+        &self,
+        peer: u64,
+        shards: &[u32],
+    ) -> Result<MigrationStats> {
+        let sh = &self.shared;
+        let _guard = sh.move_lock.lock().unwrap();
+        let (next, not_mine) = {
+            let t = sh.table.lock().unwrap();
+            let not_mine: Vec<u32> = shards
+                .iter()
+                .copied()
+                .filter(|&s| {
+                    (s as usize) >= t.owner.len()
+                        || t.owner_of(s) != sh.node_id
+                })
+                .collect();
+            (t.with_owner(shards, peer), not_mine)
+        };
+        if !not_mine.is_empty() {
+            return Err(Error::Stream(format!(
+                "cannot migrate shards {not_mine:?}: not owned by node {}",
+                sh.node_id
+            )));
+        }
+        let t0 = Instant::now();
+        let remote = RemoteLink::new(sh.peer(peer)?.client.clone())
+            .with_metrics(sh.svc.metrics());
+        let local = NodeLocal { svc: &sh.svc };
+        let stats = migrate_over(
+            &local,
+            &remote,
+            shards,
+            &mut || sh.install_table(next.clone()),
+            &mut || sh.svc.reroute_strays().map(|_| ()),
+        )?;
+        let m = sh.svc.metrics();
+        m.migrations.inc();
+        m.shards_moved.add(shards.len() as u64);
+        m.streams_migrated.add(stats.streams);
+        m.migration_time.record(t0.elapsed().as_nanos() as u64);
+        record(
+            EventKind::BundleShip,
+            stats.bytes,
+            shards.len() as u32,
+            NO_WORKER,
+        );
+        Ok(stats)
+    }
+
+    /// Pull `shards` from `peer` onto this node (the mirror move:
+    /// remote seal, local adopt). The drain step is a Settle frame —
+    /// the remote re-routes its strays, which arrive here as Replay
+    /// frames *before* this side's local Adopt is enqueued.
+    pub fn pull_from_peer(
+        &self,
+        peer: u64,
+        shards: &[u32],
+    ) -> Result<MigrationStats> {
+        let sh = &self.shared;
+        let _guard = sh.move_lock.lock().unwrap();
+        let (next, not_theirs) = {
+            let t = sh.table.lock().unwrap();
+            let not_theirs: Vec<u32> = shards
+                .iter()
+                .copied()
+                .filter(|&s| {
+                    (s as usize) >= t.owner.len()
+                        || t.owner_of(s) != peer
+                })
+                .collect();
+            (t.with_owner(shards, sh.node_id), not_theirs)
+        };
+        if !not_theirs.is_empty() {
+            return Err(Error::Stream(format!(
+                "cannot pull shards {not_theirs:?}: not owned by peer \
+                 {peer}"
+            )));
+        }
+        let t0 = Instant::now();
+        let client = sh.peer(peer)?.client.clone();
+        let remote = RemoteLink::new(client.clone())
+            .with_metrics(sh.svc.metrics());
+        let local = NodeLocal { svc: &sh.svc };
+        let stats = migrate_over(
+            &remote,
+            &local,
+            shards,
+            &mut || sh.install_table(next.clone()),
+            &mut || match client.rpc(&Msg::Settle)? {
+                Msg::Ok => Ok(()),
+                Msg::Denied { reason } => Err(Error::Stream(format!(
+                    "peer {peer} denied settle: {reason}"
+                ))),
+                other => Err(Error::Stream(format!(
+                    "peer {peer}: unexpected {} reply to settle",
+                    other.label()
+                ))),
+            },
+        )?;
+        let m = sh.svc.metrics();
+        m.migrations.inc();
+        m.shards_moved.add(shards.len() as u64);
+        m.streams_migrated.add(stats.streams);
+        m.migration_time.record(t0.elapsed().as_nanos() as u64);
+        Ok(stats)
+    }
+
+    /// Manually fail over a (known-dead) peer: adopt every shard it
+    /// owned, recovering state from the shared checkpoint store.
+    /// Returns the number of shards adopted. The automatic path (the
+    /// heartbeat monitor with `cluster.failover_ms > 0`) calls the
+    /// same sequence.
+    pub fn failover(&self, dead: u64) -> Result<usize> {
+        self.shared.failover(dead)
+    }
+
+    /// A cloneable ingest handle that routes by *node* ownership:
+    /// local samples go down the lock-free local path, foreign ones
+    /// are forwarded to their owner in one Samples frame per peer.
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { shared: self.shared.clone() }
+    }
+
+    /// Stop the control plane: halt heartbeats, stop accepting, join
+    /// every connection handler, and unhook the stray forwarder. The
+    /// node core keeps serving locally; its owner finishes it.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.svc.set_stray_forwarder(None);
+        Ok(())
+    }
+}
+
+/// The local node as a [`Transport`] endpoint: the cluster-side twin
+/// of [`super::transport::WorkerLink`], fanned out over every local
+/// worker through the service's node-level entry points.
+struct NodeLocal<'a> {
+    svc: &'a Arc<Service>,
+}
+
+impl Transport for NodeLocal<'_> {
+    fn kind(&self) -> String {
+        "local node".into()
+    }
+
+    fn expect(&self, shards: &[u32]) -> Result<()> {
+        self.svc.expect_shards(shards)
+    }
+
+    fn seal(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>> {
+        let records = self.svc.seal_shards(shards)?;
+        self.svc.mark_foreign(shards, true);
+        Ok(records)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.svc.seal_shards(&[]).map(|_| ())
+    }
+
+    fn adopt(&self, shards: &[u32], records: Vec<Vec<u8>>) -> Result<()> {
+        self.svc.mark_foreign(shards, false);
+        self.svc.adopt_shards(shards, records)
+    }
+
+    fn replay(
+        &self,
+        strays: Vec<StraySample>,
+    ) -> std::result::Result<usize, Vec<StraySample>> {
+        let samples: Vec<Sample> =
+            strays.iter().map(|(s, _)| s.clone()).collect();
+        match self.svc.replay_strays(samples) {
+            Ok(n) => Ok(n),
+            Err(_) => Err(strays),
+        }
+    }
+
+    fn retire(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Cloneable cluster-aware ingest front door.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    shared: Arc<Shared>,
+}
+
+impl ClusterHandle {
+    /// Submit a burst: locally-owned samples take the lock-free local
+    /// path, the rest are forwarded to their owning peers (one Samples
+    /// frame per peer). Errors if any forward is refused or a peer is
+    /// unreachable — the caller decides whether to retry; duplicated
+    /// retries are absorbed by the per-stream watermark dedup.
+    pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
+        let sh = &self.shared;
+        let (vs, table) = {
+            let t = sh.table.lock().unwrap();
+            (t.owner.len() as u32, t.clone())
+        };
+        let mut local: Vec<Sample> = Vec::new();
+        let mut remote: BTreeMap<u64, Vec<Sample>> = BTreeMap::new();
+        for s in samples {
+            let owner = table.owner_of(shard_of(s.stream_id, vs));
+            if owner == sh.node_id {
+                local.push(s);
+            } else {
+                remote.entry(owner).or_default().push(s);
+            }
+        }
+        if !local.is_empty() {
+            sh.svc.submit_batch(local)?;
+        }
+        for (owner, group) in remote {
+            let peer = sh.peer(owner)?;
+            let n = group.len() as u64;
+            match peer.client.rpc(&Msg::Samples { samples: group })? {
+                Msg::Ok => {
+                    sh.svc.metrics().samples_forwarded.add(n);
+                }
+                Msg::Denied { reason } => {
+                    return Err(Error::Stream(format!(
+                        "peer {owner} refused {n} samples: {reason}"
+                    )))
+                }
+                other => {
+                    return Err(Error::Stream(format!(
+                        "peer {owner}: unexpected {} reply to samples",
+                        other.label()
+                    )))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit one sample (see [`ClusterHandle::submit_batch`]).
+    pub fn submit(&self, sample: Sample) -> Result<()> {
+        self.submit_batch(vec![sample])
+    }
+
+    /// Node id of the shard owner a stream currently routes to.
+    pub fn owner_of_stream(&self, stream_id: u64) -> u64 {
+        let t = self.shared.table.lock().unwrap();
+        t.owner_of(shard_of(stream_id, t.owner.len() as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_table_is_deterministic_and_covers_all_members() {
+        let a = NodeTable::new_uniform(256, &[3, 1, 2]);
+        let b = NodeTable::new_uniform(256, &[2, 3, 1]);
+        assert_eq!(a, b, "member order must not matter");
+        assert_eq!(a.epoch, 0);
+        assert_eq!(a.members(), vec![1, 2, 3]);
+        let n1 = a.shards_of(1).len();
+        let n2 = a.shards_of(2).len();
+        let n3 = a.shards_of(3).len();
+        assert_eq!(n1 + n2 + n3, 256);
+        assert!(n1.abs_diff(n2) <= 1 && n2.abs_diff(n3) <= 1);
+    }
+
+    #[test]
+    fn with_owner_bumps_epoch_and_moves_only_named_shards() {
+        let t = NodeTable::new_uniform(8, &[1, 2]);
+        let moved = t.with_owner(&[0, 2], 2);
+        assert_eq!(moved.epoch, 1);
+        assert_eq!(moved.owner_of(0), 2);
+        assert_eq!(moved.owner_of(2), 2);
+        for s in [1u32, 3, 5, 7] {
+            assert_eq!(moved.owner_of(s), t.owner_of(s), "shard {s}");
+        }
+        assert!(t.shards_of(9).is_empty(), "unknown member owns nothing");
+    }
+
+    #[test]
+    fn single_member_table_owns_everything() {
+        let t = NodeTable::new_uniform(16, &[7]);
+        assert_eq!(t.shards_of(7).len(), 16);
+        assert_eq!(t.members(), vec![7]);
+    }
+}

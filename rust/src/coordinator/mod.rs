@@ -62,14 +62,21 @@
 //!   rebalancer *windowed* per-shard deltas ([`crate::obs::ShardWindow`])
 //!   instead of lifetime counters.
 
+pub mod cluster;
 pub mod ring;
 pub mod senders;
 mod service;
 mod shard_map;
 mod state_mgr;
+pub mod transport;
+pub(crate) mod worker;
 
-pub use service::{Classified, Service, ServiceHandle};
+pub use cluster::{ClusterHandle, ClusterNode, NodeTable};
+pub use service::{
+    scale_up_wanted, Classified, Service, ServiceHandle, StrayForwarder,
+};
 pub use shard_map::{
     shard_of, ShardMap, ShardTable, DEFAULT_VIRTUAL_SHARDS,
 };
 pub use state_mgr::{StateCheckpoint, StateManager};
+pub use transport::{migrate_over, MigrationStats, Transport};

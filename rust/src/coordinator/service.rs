@@ -1,94 +1,49 @@
-//! The service: worker threads + versioned shard map + result
+//! The node core: worker threads + versioned shard map + result
 //! collection, with live shard migration and runtime worker scaling.
+//!
+//! Post-split (ISSUE 8) this file is the *single-node* service only:
+//! the worker loop lives in [`crate::coordinator::worker`], migration
+//! and control traffic flow through the
+//! [`crate::coordinator::transport::Transport`] trait (the in-process
+//! [`WorkerLink`] here; a framed TCP/UDS link cross-process), and
+//! multi-node membership/failover lives in
+//! [`crate::coordinator::cluster`]. The node-level entry points the
+//! cluster layer drives — [`Service::expect_shards`],
+//! [`Service::seal_shards`], [`Service::adopt_shards`],
+//! [`Service::replay_strays`], [`Service::reroute_strays`] — are thin
+//! per-worker fan-outs of the same protocol messages.
 
-use std::collections::{BTreeMap, HashMap, HashSet};
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::collections::{BTreeMap, HashSet};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::{EngineKind, ServiceConfig};
 use crate::coordinator::ring::{thread_token, PushOutcome};
 use crate::coordinator::senders::{SenderRegistry, WorkerSlot};
-use crate::coordinator::{
-    shard_of, ShardMap, ShardTable, StateCheckpoint, StateManager,
+use crate::coordinator::transport::{
+    migrate_over, StraySample, Transport, WorkerLink,
 };
-use crate::engine::{
-    Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine,
-};
-use crate::ensemble::EnsembleEngine;
+use crate::coordinator::worker::{spawn_worker, Job, Stray, WorkerHandle};
+use crate::coordinator::{ShardMap, ShardTable, StateManager};
 use crate::metrics::{EnsembleMetrics, ServiceMetrics, ShardMetrics};
 use crate::obs::recorder::{record, EventKind};
 use crate::obs::window::{MetricsWindow, ShardWindow};
 use crate::persist::{codec, CheckpointStore, FileStore};
-use crate::runtime::XlaRuntime;
-use crate::stream::{bounded, Receiver, Sample, Sender};
+use crate::stream::{Receiver, Sample, Sender};
 use crate::{Error, Result};
 
-/// A verdict annotated with its end-to-end latency.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Classified {
-    pub verdict: EngineVerdict,
-    /// submit → verdict wall time in ns.
-    pub latency_ns: u64,
-}
+pub use crate::coordinator::worker::Classified;
 
-/// A sample that reached a worker no longer owning its shard, carrying
-/// its original submit time so re-routing keeps latency accounting
-/// honest.
-type Stray = (Sample, Instant);
-
-/// A worker thread's join handle (None once joined).
-type WorkerHandle = JoinHandle<Result<()>>;
-
-/// One sealed shard set leaving its old worker: every resident stream,
-/// snapshotted at its exact watermark and encoded through the persist
-/// codec (the migration wire format — what would cross the network in a
-/// multi-process deployment).
-struct SealBundle {
-    /// Encoded [`StateCheckpoint`]s, one per resident stream.
-    records: Vec<Vec<u8>>,
-}
-
-enum Job {
-    /// A sample plus its submit time. The shard-map epoch it was
-    /// routed under is consumed at submit time (one table snapshot per
-    /// route); the worker does not need it back: ownership is tracked
-    /// by the owned/pending shard sets, which change strictly in queue
-    /// order (Seal removes, Adopt adds), so a sample routed under a
-    /// stale epoch is detected as "not owned here" and forwarded for
-    /// re-routing rather than misprocessed.
-    Sample(Sample, Instant),
-    /// Amortizes queue synchronization: one ring/channel operation per
-    /// burst instead of one per sample (see EXPERIMENTS.md §Perf).
-    Batch(Vec<Sample>, Instant),
-    /// A batch of re-routed strays, each with its original submit time
-    /// (latency accounting stays honest across re-routes). Travels on
-    /// the CONTROL channel only: strays must stay FIFO with the
-    /// migration control jobs (before their shard's Adopt).
-    Replay(Vec<Stray>),
-    /// Migration step 2 (old worker): snapshot + evict every resident
-    /// stream of these shards, stop owning them, reply with the
-    /// encoded bundle.
-    Seal { shards: Vec<u32>, reply: Sender<SealBundle> },
-    /// Migration step 1 (new worker): samples for these shards may
-    /// arrive before their state does — stash them until Adopt.
-    Expect { shards: Vec<u32> },
-    /// Migration step 3 (new worker): restore the sealed streams, take
-    /// ownership, then replay the stash in (stream, seq) order through
-    /// the inclusive-watermark dedup.
-    Adopt { shards: Vec<u32>, records: Vec<Vec<u8>> },
-    /// Scale-down: final flush (sent only after every shard has been
-    /// migrated off this worker; the thread exits when its queue
-    /// closes, so stragglers still get stray-forwarded).
-    Retire,
-    /// Force pending batches out (end of input).
-    Flush,
-    /// Die immediately WITHOUT flushing — crash simulation for failover
-    /// testing and fast teardown. In-flight engine state is abandoned
-    /// exactly as a killed worker would abandon it.
-    Abort,
-}
+/// Escalation hook for strays whose shard left this *node*: the
+/// cluster layer installs a closure that ships them to the owning peer
+/// (a Replay frame on the owner's control connection). Returns how
+/// many were delivered, or hands the strays back to be parked and
+/// retried.
+pub type StrayForwarder = Arc<
+    dyn Fn(Vec<StraySample>) -> std::result::Result<usize, Vec<StraySample>>
+        + Send
+        + Sync,
+>;
 
 /// A running service instance.
 pub struct Service {
@@ -127,6 +82,14 @@ pub struct Service {
     /// the last `maybe_rebalance` check — the rebalancer acts on recent
     /// load, not lifetime totals.
     shard_window: Mutex<ShardWindow>,
+    /// Shards owned by a *peer node*, not this process. Local workers
+    /// never own them; strays routed to them are escalated through
+    /// `forwarder` instead of re-delivered locally (re-delivery would
+    /// ping-pong forever: the local table still maps every virtual
+    /// shard to some local worker).
+    foreign: Mutex<HashSet<u32>>,
+    /// Cluster-installed stray escalation (None when single-node).
+    forwarder: Mutex<Option<StrayForwarder>>,
 }
 
 /// Cheap clonable submit-side handle. Shares the live shard map and
@@ -366,144 +329,6 @@ fn submit_batch_inner(
     Ok(())
 }
 
-/// Worker-side checkpoint/eviction knobs, lifted from [`ServiceConfig`].
-#[derive(Clone, Copy)]
-struct CheckpointPolicy {
-    /// Publish a snapshot every N samples per stream (0 = off).
-    every: u64,
-    /// Restore the newest checkpoint when a stream resumes mid-sequence.
-    restore_on_resume: bool,
-    /// Evict a stream idle for N worker-processed samples (0 = never).
-    evict_after: u64,
-}
-
-impl CheckpointPolicy {
-    fn from_cfg(cfg: &ServiceConfig) -> Self {
-        CheckpointPolicy {
-            every: cfg.checkpoint_every,
-            restore_on_resume: cfg.restore_on_resume,
-            evict_after: cfg.evict_after,
-        }
-    }
-}
-
-/// Construct the configured engine. PJRT handles are not Send (the xla
-/// crate wraps an Rc), so this runs *inside* each worker thread.
-fn build_engine(
-    cfg: &ServiceConfig,
-    ens_metrics: Option<Arc<EnsembleMetrics>>,
-) -> Result<Box<dyn Engine>> {
-    Ok(match cfg.engine {
-        EngineKind::Software => {
-            Box::new(SoftwareEngine::new(cfg.n_features, cfg.m))
-        }
-        EngineKind::Rtl => Box::new(RtlEngine::new(cfg.n_features, cfg.m)),
-        EngineKind::Xla => {
-            let rt = XlaRuntime::new(&cfg.artifact_dir)?;
-            Box::new(
-                XlaEngine::new(
-                    &rt,
-                    cfg.n_features,
-                    cfg.batch_max_streams * cfg.chunk_t,
-                )?
-                // Wait for a full batch of stream chunks before
-                // dispatching: padding lanes cost as much as real ones
-                // (27× per-sample difference — see the `batcher`
-                // bench); stragglers are handled by Flush.
-                .with_min_ready(cfg.batch_max_streams),
-            )
-        }
-        EngineKind::Ensemble => {
-            let mut eng = EnsembleEngine::new(&cfg.ensemble, cfg.n_features)?;
-            if let Some(em) = ens_metrics {
-                eng = eng.with_metrics(em);
-            }
-            Box::new(eng)
-        }
-    })
-}
-
-/// Spawn one worker thread. The worker loop is guarded by
-/// `catch_unwind`: a panicking engine takes down its own worker only,
-/// bumps `worker_panics`, and surfaces as *that worker's* error when
-/// the service drains — never as an anonymous join failure.
-#[allow(clippy::too_many_arguments)]
-fn spawn_worker(
-    widx: usize,
-    cfg: &ServiceConfig,
-    owned: HashSet<u32>,
-    slot: Arc<WorkerSlot<Job>>,
-    rx: Receiver<Job>,
-    res_tx: Sender<Vec<Classified>>,
-    stray_tx: Sender<Stray>,
-    metrics: Arc<ServiceMetrics>,
-    shard_metrics: Arc<ShardMetrics>,
-    ens_metrics: Option<Arc<EnsembleMetrics>>,
-    state_mgr: Arc<StateManager>,
-) -> Result<WorkerHandle> {
-    let cfg = cfg.clone();
-    std::thread::Builder::new()
-        .name(format!("teda-worker-{widx}"))
-        .spawn(move || {
-            let panic_metrics = metrics.clone();
-            let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
-                let mut engine = build_engine(&cfg, ens_metrics)?;
-                let mut worker = Worker {
-                    widx,
-                    virtual_shards: cfg.sharding.virtual_shards,
-                    policy: CheckpointPolicy::from_cfg(&cfg),
-                    res_tx,
-                    stray_tx,
-                    metrics,
-                    shard_metrics,
-                    state_mgr,
-                    owned,
-                    pending: HashSet::new(),
-                    stash: Vec::new(),
-                    inflight: HashMap::new(),
-                    seen: HashSet::new(),
-                    restored_at: HashMap::new(),
-                    last_seen: HashMap::new(),
-                    last_seq: HashMap::new(),
-                    tick: 0,
-                };
-                worker.run(rx, &slot, engine.as_mut())
-            }));
-            // Close the ring on EVERY exit — normal return, error, or
-            // panic — so a producer blocked on a full ring unblocks
-            // into the control channel's proper closed error instead
-            // of spinning forever against a dead consumer.
-            slot.close_ring();
-            match outcome {
-                Ok(result) => result,
-                Err(payload) => {
-                    panic_metrics.worker_panics.inc();
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| {
-                            payload.downcast_ref::<String>().cloned()
-                        })
-                        .unwrap_or_else(|| "non-string panic".into());
-                    // Postmortem: journal the death, then dump the
-                    // merged recorder tail — the last events leading
-                    // up to the panic, not just a counter bump.
-                    record(EventKind::WorkerPanic, 0, 0, widx as u32);
-                    if crate::obs::recorder().is_enabled() {
-                        eprintln!(
-                            "worker {widx} panicked: {msg}\n{}",
-                            crate::obs::recorder().render_tail(64)
-                        );
-                    }
-                    Err(Error::Stream(format!(
-                        "worker {widx} panicked: {msg}"
-                    )))
-                }
-            }
-        })
-        .map_err(|e| Error::io("spawn worker", e))
-}
-
 impl Service {
     /// Start workers per the config, with a fresh checkpoint store.
     /// When `checkpoint.dir` is configured, a durable [`FileStore`] is
@@ -612,6 +437,8 @@ impl Service {
             parked: Mutex::new(Vec::new()),
             rebalance_lock: Mutex::new(()),
             shard_window: Mutex::new(shard_window),
+            foreign: Mutex::new(HashSet::new()),
+            forwarder: Mutex::new(None),
         })
     }
 
@@ -762,13 +589,36 @@ impl Service {
         // each stray; samples_in was counted at the original submit.
         let table = self.shard_map.load();
         let slots = self.senders.load();
+        // Node-level partition first: strays whose shard now lives on
+        // a peer node leave through the cluster's forwarder (a Replay
+        // frame to the owner) — local re-delivery would loop forever.
+        let mut remote: Vec<Stray> = Vec::new();
         let mut per_worker: BTreeMap<usize, Vec<Stray>> = BTreeMap::new();
-        for stray in pending {
-            let (w, _shard) = table.route(stray.0.stream_id);
-            per_worker.entry(w).or_default().push(stray);
+        {
+            let foreign = self.foreign.lock().unwrap();
+            for stray in pending {
+                let (w, shard) = table.route(stray.0.stream_id);
+                if foreign.contains(&shard) {
+                    remote.push(stray);
+                } else {
+                    per_worker.entry(w).or_default().push(stray);
+                }
+            }
         }
         let mut n = 0;
         let mut failed: Vec<Stray> = Vec::new();
+        if !remote.is_empty() {
+            let fwd = self.forwarder.lock().unwrap().clone();
+            match fwd {
+                Some(forward) => match forward(remote) {
+                    Ok(k) => n += k,
+                    Err(back) => failed.extend(back),
+                },
+                // No cluster layer yet foreign shards marked: park
+                // until the forwarder is installed (bootstrap window).
+                None => failed.extend(remote),
+            }
+        }
         for (w, strays) in per_worker {
             let count = strays.len();
             let undelivered = match slots.get(w) {
@@ -803,23 +653,13 @@ impl Service {
     fn quiesce(&self) -> Result<()> {
         loop {
             let slots = self.senders.snapshot();
-            let mut replies = Vec::with_capacity(slots.len());
-            for slot in slots.slots() {
-                let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
-                // A dead worker's queue fails the send; its own error
-                // is reported at join, so just skip the rendezvous.
-                // (An empty Seal drains the worker's ring before
-                // answering, so the rendezvous still means "backlog
+            for (w, slot) in slots.slots().iter().enumerate() {
+                // A dead worker's queue fails the barrier; its own
+                // error is reported at join, so just skip the
+                // rendezvous. (The barrier drains the worker's ring
+                // before answering, so it still means "backlog
                 // processed" across both queue planes.)
-                if slot
-                    .send_ctl(Job::Seal { shards: Vec::new(), reply: reply_tx })
-                    .is_ok()
-                {
-                    replies.push(reply_rx);
-                }
-            }
-            for reply in replies {
-                let _ = reply.recv();
+                let _ = WorkerLink::new(w, slot.clone()).barrier();
             }
             if self.drain_strays()? == 0 {
                 return Ok(());
@@ -1000,8 +840,8 @@ impl Service {
         // queued — re-route them before the retired queues close.
         self.drain_strays()?;
         let retired = self.senders.truncate(n, self.shard_map.epoch());
-        for slot in &retired {
-            let _ = slot.send_ctl(Job::Retire);
+        for (i, slot) in retired.iter().enumerate() {
+            let _ = WorkerLink::new(n + i, slot.clone()).retire();
             // Explicit close: Senders retained by old tables would
             // otherwise keep the queue open forever. Retire is already
             // buffered — the worker still receives it, then sees the
@@ -1084,72 +924,34 @@ impl Service {
         }
         let t0 = Instant::now();
         let slots = self.senders.snapshot();
-        let (from_tx, to_tx) = match (slots.get(from), slots.get(to)) {
-            (Some(f), Some(t)) => (f.clone(), t.clone()),
+        let (src, dst) = match (slots.get(from), slots.get(to)) {
+            (Some(f), Some(t)) => (
+                WorkerLink::new(from, f.clone()),
+                WorkerLink::new(to, t.clone()),
+            ),
             _ => {
                 return Err(Error::Stream(format!(
                     "migration {from} → {to} names a dead worker"
                 )))
             }
         };
-        to_tx
-            .send_ctl(Job::Expect { shards: shards.to_vec() })
-            .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
         let table = self.shard_map.snapshot();
         let moves: Vec<(u32, usize)> =
             shards.iter().map(|&s| (s, to)).collect();
-        self.install(table.with_moves(&moves, workers)?)?;
-        // From here on the table already routes the shards to `to`:
-        // any failure on the `from` side (a dead worker) must still
-        // deliver an Adopt — with whatever records were salvaged — so
-        // `to` takes ownership instead of stashing samples forever.
-        // Unsealed state is lost exactly as a worker crash loses it;
-        // resuming streams go through the normal checkpoint-restore
-        // path.
-        let seal = (|| -> Result<Vec<Vec<u8>>> {
-            let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
-            from_tx
-                .send_ctl(Job::Seal {
-                    shards: shards.to_vec(),
-                    reply: reply_tx,
-                })
-                .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
-            let bundle = reply_rx.recv().map_err(|_| {
-                Error::Stream(format!("worker {from} died mid-migration"))
-            })?;
-            // Barrier round: a submitter that routed under the old
-            // table may have enqueued samples behind the Seal while
-            // the old worker drained. An empty Seal is a pure
-            // rendezvous — when it answers, every such sample has been
-            // dequeued and forwarded as a stray, so the drain below
-            // catches them all and the Adopt's stash replay can sort
-            // them back into per-stream seq order.
-            let (barrier_tx, barrier_rx) = bounded::<SealBundle>(1);
-            from_tx
-                .send_ctl(Job::Seal { shards: Vec::new(), reply: barrier_tx })
-                .map_err(|_| Error::Stream(format!("worker {from} gone")))?;
-            barrier_rx.recv().map_err(|_| {
-                Error::Stream(format!("worker {from} died mid-migration"))
-            })?;
-            Ok(bundle.records)
-        })();
-        let (records, seal_err) = match seal {
-            Ok(records) => (records, None),
-            Err(e) => (Vec::new(), Some(e)),
-        };
-        let n_streams = records.len() as u64;
-        // Strays forwarded up to the barrier must precede the Adopt in
-        // the new worker's queue so the stash replay sees them.
-        let drain_err = self.drain_strays().err();
-        to_tx
-            .send_ctl(Job::Adopt { shards: shards.to_vec(), records })
-            .map_err(|_| Error::Stream(format!("worker {to} gone")))?;
-        if let Some(e) = seal_err.or(drain_err) {
-            return Err(e);
-        }
+        // The protocol itself (Expect → install → Seal+barrier → stray
+        // drain → Adopt, with the Adopt-always-delivered failure
+        // contract) lives in `migrate_over`, shared verbatim with the
+        // cluster layer's node → node moves.
+        let stats = migrate_over(
+            &src,
+            &dst,
+            shards,
+            &mut || self.install(table.with_moves(&moves, workers)?),
+            &mut || self.drain_strays().map(|_| ()),
+        )?;
         self.metrics.migrations.inc();
         self.metrics.shards_moved.add(shards.len() as u64);
-        self.metrics.streams_migrated.add(n_streams);
+        self.metrics.streams_migrated.add(stats.streams);
         self.metrics
             .migration_time
             .record(t0.elapsed().as_nanos() as u64);
@@ -1160,6 +962,211 @@ impl Service {
         // worker and ping-pong the shard straight back.
         self.shard_window.lock().unwrap().rebaseline(&self.shard_metrics);
         Ok(())
+    }
+
+    // ---- node-level protocol entry points (the cluster layer's view
+    // of this process: one Transport-shaped surface fanned out over
+    // the local workers) -------------------------------------------
+
+    /// Mark shards as owned by a peer node (`foreign = true`) or
+    /// returned home (`false`). Foreign shards still map to a local
+    /// worker in the *local* table — the workers just never own them —
+    /// so strays for them are escalated through the forwarder instead
+    /// of re-delivered locally.
+    pub fn mark_foreign(&self, shards: &[u32], foreign: bool) {
+        let mut set = self.foreign.lock().unwrap();
+        for &s in shards {
+            if foreign {
+                set.insert(s);
+            } else {
+                set.remove(&s);
+            }
+        }
+    }
+
+    /// Shards currently marked foreign (sorted, for status output).
+    pub fn foreign_shards(&self) -> Vec<u32> {
+        let mut v: Vec<u32> =
+            self.foreign.lock().unwrap().iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Install (or remove) the cluster's stray escalation hook.
+    pub fn set_stray_forwarder(&self, f: Option<StrayForwarder>) {
+        *self.forwarder.lock().unwrap() = f;
+    }
+
+    /// Node-level Expect: tell the local owner-to-be of each shard to
+    /// stash outrunning samples until the state arrives.
+    pub fn expect_shards(&self, shards: &[u32]) -> Result<()> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let slots = self.senders.snapshot();
+        let table = self.shard_map.snapshot();
+        let mut by_worker: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        for &s in shards {
+            if s >= table.virtual_shards() {
+                return Err(Error::Stream(format!(
+                    "no shard {s} (virtual_shards = {})",
+                    table.virtual_shards()
+                )));
+            }
+            by_worker.entry(table.worker_of(s)).or_default().push(s);
+        }
+        for (w, group) in by_worker {
+            match slots.get(w) {
+                Some(slot) => {
+                    WorkerLink::new(w, slot.clone()).expect(&group)?
+                }
+                None => {
+                    return Err(Error::Stream(format!("worker {w} gone")))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Node-level Seal: snapshot-at-watermark, evict and disown every
+    /// stream of `shards` across all local workers; returns the
+    /// concatenated encoded checkpoint records (the wire bundle). An
+    /// empty shard list is a pure barrier — rendezvous with every
+    /// worker, exactly like the in-process migration's barrier round.
+    /// The caller (cluster layer) is responsible for marking the
+    /// shards foreign afterwards.
+    pub fn seal_shards(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let slots = self.senders.snapshot();
+        if shards.is_empty() {
+            for (w, slot) in slots.slots().iter().enumerate() {
+                // Dead workers report their own error at join.
+                let _ = WorkerLink::new(w, slot.clone()).barrier();
+            }
+            return Ok(Vec::new());
+        }
+        let table = self.shard_map.snapshot();
+        let mut by_owner: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        for &s in shards {
+            if s >= table.virtual_shards() {
+                return Err(Error::Stream(format!(
+                    "no shard {s} (virtual_shards = {})",
+                    table.virtual_shards()
+                )));
+            }
+            by_owner.entry(table.worker_of(s)).or_default().push(s);
+        }
+        let mut records = Vec::new();
+        for (w, group) in by_owner {
+            let link = match slots.get(w) {
+                Some(slot) => WorkerLink::new(w, slot.clone()),
+                None => {
+                    return Err(Error::Stream(format!("worker {w} gone")))
+                }
+            };
+            records.extend(link.seal(&group)?);
+            // Per-owner barrier: samples enqueued behind the seal are
+            // stray-forwarded before we report the bundle complete.
+            link.barrier()?;
+        }
+        Ok(records)
+    }
+
+    /// Node-level Adopt: restore `records` into the local workers that
+    /// own their shards (per the local table) and take ownership of
+    /// `shards`. Records are routed by the stream id embedded in each
+    /// persist-codec record; a record outside the adopted shard set is
+    /// a protocol violation and is refused whole.
+    pub fn adopt_shards(
+        &self,
+        shards: &[u32],
+        records: Vec<Vec<u8>>,
+    ) -> Result<()> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let slots = self.senders.snapshot();
+        let table = self.shard_map.snapshot();
+        let shard_set: HashSet<u32> = shards.iter().copied().collect();
+        let mut by_worker: BTreeMap<usize, (Vec<u32>, Vec<Vec<u8>>)> =
+            BTreeMap::new();
+        for &s in shards {
+            if s >= table.virtual_shards() {
+                return Err(Error::Stream(format!(
+                    "no shard {s} (virtual_shards = {})",
+                    table.virtual_shards()
+                )));
+            }
+            by_worker.entry(table.worker_of(s)).or_default().0.push(s);
+        }
+        for rec in records {
+            let sid = codec::record_stream_id(&rec)?;
+            let (w, shard) = table.route(sid);
+            if !shard_set.contains(&shard) {
+                return Err(Error::Stream(format!(
+                    "adopt record for stream {sid} (shard {shard}) \
+                     outside the adopted shard set"
+                )));
+            }
+            by_worker.entry(w).or_default().1.push(rec);
+        }
+        for (w, (group, recs)) in by_worker {
+            match slots.get(w) {
+                Some(slot) => {
+                    WorkerLink::new(w, slot.clone()).adopt(&group, recs)?
+                }
+                None => {
+                    return Err(Error::Stream(format!("worker {w} gone")))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deliver strays that arrived from a peer node (their shard moved
+    /// here). Samples are re-stamped on arrival — Instants cannot
+    /// cross the process boundary — and ride the control plane so they
+    /// stay FIFO with any queued Adopt. Undeliverable strays are
+    /// parked, never dropped.
+    pub fn replay_strays(&self, samples: Vec<Sample>) -> Result<usize> {
+        if samples.is_empty() {
+            return Ok(0);
+        }
+        let now = Instant::now();
+        let table = self.shard_map.load();
+        let slots = self.senders.load();
+        let mut per_worker: BTreeMap<usize, Vec<Stray>> = BTreeMap::new();
+        for s in samples {
+            let (w, _shard) = table.route(s.stream_id);
+            per_worker.entry(w).or_default().push((s, now));
+        }
+        let mut n = 0;
+        let mut failed: Vec<Stray> = Vec::new();
+        for (w, strays) in per_worker {
+            let count = strays.len();
+            let undelivered = match slots.get(w) {
+                Some(slot) => {
+                    match WorkerLink::new(w, slot.clone()).replay(strays) {
+                        Ok(_) => None,
+                        Err(back) => Some(back),
+                    }
+                }
+                None => Some(strays),
+            };
+            match undelivered {
+                None => n += count,
+                Some(back) => failed.extend(back),
+            }
+        }
+        if !failed.is_empty() {
+            self.parked.lock().unwrap().extend(failed);
+        }
+        Ok(n)
+    }
+
+    /// Public stray settlement: re-route (or escalate to peers) every
+    /// stray currently queued. The cluster layer calls this as the
+    /// pull-migration epilogue (a Settle frame) and periodically from
+    /// its heartbeat loop.
+    pub fn reroute_strays(&self) -> Result<usize> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        self.drain_strays()
     }
 
     /// Finish: flush engines, stop workers, and return every remaining
@@ -1724,9 +1731,34 @@ impl Worker {
     }
 }
 
+/// Should the serve loop add a worker *now*? Keyed off the live
+/// signals the observability plane exposes (ROADMAP item 2, first
+/// half): any data ring ≥ 3/4 full, any backpressure events in the
+/// last window, or a windowed queue-wait p99 over the SLO. Pure
+/// function of the sampled signals so the policy is unit-testable
+/// without threads; the serve loop samples
+/// [`Service::queue_depths`] + a [`MetricsWindow`] tick and acts on
+/// the verdict.
+pub fn scale_up_wanted(
+    depths: &[usize],
+    capacity: usize,
+    backpressure_delta: u64,
+    queue_wait_p99_ns: u64,
+    slo_ns: u64,
+) -> bool {
+    let ring_hot = capacity > 0
+        && depths
+            .iter()
+            .any(|&d| d.saturating_mul(4) >= capacity.saturating_mul(3));
+    ring_hot
+        || backpressure_delta > 0
+        || (slo_ns > 0 && queue_wait_p99_ns > slo_ns)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     fn base_cfg(engine: EngineKind, workers: usize) -> ServiceConfig {
         ServiceConfig {

@@ -1,0 +1,511 @@
+//! The cluster wire format: length-prefixed, CRC-framed messages.
+//!
+//! Every frame is a 16-byte header followed by a payload:
+//!
+//! | offset | size | field                                   |
+//! |--------|------|-----------------------------------------|
+//! | 0      | 4    | magic `b"TEDW"`                         |
+//! | 4      | 2    | version (LE, currently 1)               |
+//! | 6      | 1    | message type                            |
+//! | 7      | 1    | flags (reserved, 0)                     |
+//! | 8      | 4    | payload length (LE)                     |
+//! | 12     | 4    | frame check (LE), see below             |
+//!
+//! The frame check is `crc32(payload) XOR crc32(header[4..12])` — it
+//! covers the version, type, flags, and length fields as well as the
+//! payload, so a bit flip *anywhere* after the magic is caught (a
+//! payload-only CRC would let a flipped type byte reinterpret a frame
+//! as a different message). The XOR form avoids re-buffering the
+//! payload behind the header just to checksum them together.
+//!
+//! Sealed shard bundles carry the *unmodified* persist-codec records
+//! (`TEDACKPT` magic, own per-record CRC) as opaque byte strings — the
+//! migration wire format is literally the checkpoint file format, so a
+//! bundle that crosses the network is bit-identical to one adopted
+//! in-process. Every decoder path is bounds-checked and
+//! length-limited: corrupt or hostile input degrades to an error, not
+//! a panic or an unbounded allocation (see `tests/transport_corruption.rs`).
+
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::persist::codec::crc32;
+use crate::stream::Sample;
+use crate::{Error, Result};
+
+/// Frame magic: "TEDA wire".
+pub const MAGIC: [u8; 4] = *b"TEDW";
+/// Wire protocol version.
+pub const VERSION: u16 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 16;
+/// Hard payload cap: reject anything larger *before* allocating. A
+/// full 256-shard bundle of ensemble checkpoints is well under 1 MiB;
+/// 64 MiB leaves headroom for giant ensembles without letting a
+/// corrupt length prefix OOM the process.
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Everything that crosses the cluster wire. Requests (node → node)
+/// and replies share one enum so a connection handler is a single
+/// match.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Join/identify: "I am `node_id`, my table epoch is `epoch`".
+    Hello { node_id: u64, epoch: u64 },
+    /// Liveness + epoch gossip.
+    Heartbeat { node_id: u64, epoch: u64 },
+    /// Migration step 1: stash samples for these shards until Adopt.
+    Expect { shards: Vec<u32> },
+    /// Migration step 2: seal these shards, reply with a Bundle.
+    /// An empty shard list is a pure barrier (rendezvous).
+    Seal { shards: Vec<u32> },
+    /// Migration step 3: restore the records, own the shards.
+    Adopt { shards: Vec<u32>, records: Vec<Vec<u8>> },
+    /// Stray re-delivery: samples routed here after a node-level move.
+    /// Control-plane ordering: processed FIFO with Expect/Adopt on the
+    /// same connection.
+    Replay { samples: Vec<Sample> },
+    /// Data-plane forwarding: samples this peer owns.
+    Samples { samples: Vec<Sample> },
+    /// Node-level shard ownership table push (epoch agreement).
+    Table { epoch: u64, owner: Vec<u64> },
+    /// Ask the remote to settle strays (run its re-route pass) — the
+    /// pull-migration epilogue.
+    Settle,
+    /// Status probe (the `teda-fpga cluster` subcommand).
+    Status,
+    /// Generic success reply.
+    Ok,
+    /// Refusal with a reason (unknown shards, stale epoch, …).
+    Denied { reason: String },
+    /// Seal reply: the encoded checkpoint records.
+    Bundle { records: Vec<Vec<u8>> },
+    /// Hello/Heartbeat reply: the responder's identity and epoch.
+    HelloOk { node_id: u64, epoch: u64 },
+    /// Status reply: human-readable node status.
+    StatusText { text: String },
+}
+
+impl Msg {
+    fn type_id(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Heartbeat { .. } => 2,
+            Msg::Expect { .. } => 3,
+            Msg::Seal { .. } => 4,
+            Msg::Adopt { .. } => 5,
+            Msg::Replay { .. } => 6,
+            Msg::Samples { .. } => 7,
+            Msg::Table { .. } => 8,
+            Msg::Settle => 9,
+            Msg::Status => 10,
+            Msg::Ok => 0x40,
+            Msg::Denied { .. } => 0x41,
+            Msg::Bundle { .. } => 0x42,
+            Msg::HelloOk { .. } => 0x43,
+            Msg::StatusText { .. } => 0x44,
+        }
+    }
+
+    /// Short label for logs and error messages.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Heartbeat { .. } => "heartbeat",
+            Msg::Expect { .. } => "expect",
+            Msg::Seal { .. } => "seal",
+            Msg::Adopt { .. } => "adopt",
+            Msg::Replay { .. } => "replay",
+            Msg::Samples { .. } => "samples",
+            Msg::Table { .. } => "table",
+            Msg::Settle => "settle",
+            Msg::Status => "status",
+            Msg::Ok => "ok",
+            Msg::Denied { .. } => "denied",
+            Msg::Bundle { .. } => "bundle",
+            Msg::HelloOk { .. } => "hello_ok",
+            Msg::StatusText { .. } => "status_text",
+        }
+    }
+}
+
+fn err(what: impl Into<String>) -> Error {
+    Error::Stream(format!("transport: {}", what.into()))
+}
+
+// ---- payload writer ----------------------------------------------------
+
+struct W(Vec<u8>);
+
+impl W {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
+    }
+    fn shards(&mut self, shards: &[u32]) {
+        self.u32(shards.len() as u32);
+        for &s in shards {
+            self.u32(s);
+        }
+    }
+    fn records(&mut self, records: &[Vec<u8>]) {
+        self.u32(records.len() as u32);
+        for r in records {
+            self.bytes(r);
+        }
+    }
+    fn samples(&mut self, samples: &[Sample]) {
+        self.u32(samples.len() as u32);
+        for s in samples {
+            self.u64(s.stream_id);
+            self.u64(s.seq);
+            self.u32(s.values.len() as u32);
+            for &v in &s.values {
+                self.f64(v);
+            }
+        }
+    }
+}
+
+// ---- payload reader (bounds-checked) -----------------------------------
+
+struct R<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            err("length overflow")
+        })?;
+        if end > self.buf.len() {
+            return Err(err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A count prefix for elements of at least `elem_size` bytes each:
+    /// bounded by what the payload could physically hold, so a corrupt
+    /// count cannot drive a huge allocation.
+    fn count(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(elem_size.max(1)) > remaining {
+            return Err(err(format!(
+                "count {n} x {elem_size}B exceeds remaining {remaining}B"
+            )));
+        }
+        Ok(n)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn shards(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn records(&mut self) -> Result<Vec<Vec<u8>>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.bytes()).collect()
+    }
+    fn samples(&mut self) -> Result<Vec<Sample>> {
+        let n = self.count(20)?;
+        (0..n)
+            .map(|_| {
+                let stream_id = self.u64()?;
+                let seq = self.u64()?;
+                let k = self.count(8)?;
+                let values =
+                    (0..k).map(|_| self.f64()).collect::<Result<Vec<_>>>()?;
+                Ok(Sample { stream_id, seq, values })
+            })
+            .collect()
+    }
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|_| err("string not UTF-8"))
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(err(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- encode / decode ---------------------------------------------------
+
+/// Encode one message into a complete frame (header + payload).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut w = W(Vec::new());
+    match msg {
+        Msg::Hello { node_id, epoch }
+        | Msg::Heartbeat { node_id, epoch }
+        | Msg::HelloOk { node_id, epoch } => {
+            w.u64(*node_id);
+            w.u64(*epoch);
+        }
+        Msg::Expect { shards } | Msg::Seal { shards } => w.shards(shards),
+        Msg::Adopt { shards, records } => {
+            w.shards(shards);
+            w.records(records);
+        }
+        Msg::Replay { samples } | Msg::Samples { samples } => {
+            w.samples(samples)
+        }
+        Msg::Table { epoch, owner } => {
+            w.u64(*epoch);
+            w.u32(owner.len() as u32);
+            for &o in owner {
+                w.u64(o);
+            }
+        }
+        Msg::Settle | Msg::Status | Msg::Ok => {}
+        Msg::Denied { reason } => w.bytes(reason.as_bytes()),
+        Msg::Bundle { records } => w.records(records),
+        Msg::StatusText { text } => w.bytes(text.as_bytes()),
+    }
+    let payload = w.0;
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(msg.type_id());
+    out.push(0); // flags
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let check = crc32(&payload) ^ crc32(&out[4..12]);
+    out.extend_from_slice(&check.to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Validate a frame header. Returns (type_id, payload_len, crc) where
+/// `crc` is the expected `crc32(payload)` — the header half of the
+/// frame check is already folded out of the stored field here, so a
+/// corrupted type/flags/length byte surfaces as a CRC mismatch.
+fn check_header(header: &[u8; HEADER_LEN]) -> Result<(u8, usize, u32)> {
+    if header[..4] != MAGIC {
+        return Err(err("bad magic (not a TEDW frame)"));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(err(format!(
+            "unsupported version {version} (expected {VERSION})"
+        )));
+    }
+    let type_id = header[6];
+    let len =
+        u32::from_le_bytes([header[8], header[9], header[10], header[11]])
+            as usize;
+    if len > MAX_PAYLOAD {
+        return Err(err(format!(
+            "payload length {len} exceeds cap {MAX_PAYLOAD}"
+        )));
+    }
+    let stored = u32::from_le_bytes([
+        header[12], header[13], header[14], header[15],
+    ]);
+    Ok((type_id, len, stored ^ crc32(&header[4..12])))
+}
+
+fn decode_payload(type_id: u8, payload: &[u8]) -> Result<Msg> {
+    let mut r = R { buf: payload, pos: 0 };
+    let msg = match type_id {
+        1 => Msg::Hello { node_id: r.u64()?, epoch: r.u64()? },
+        2 => Msg::Heartbeat { node_id: r.u64()?, epoch: r.u64()? },
+        3 => Msg::Expect { shards: r.shards()? },
+        4 => Msg::Seal { shards: r.shards()? },
+        5 => Msg::Adopt { shards: r.shards()?, records: r.records()? },
+        6 => Msg::Replay { samples: r.samples()? },
+        7 => Msg::Samples { samples: r.samples()? },
+        8 => {
+            let epoch = r.u64()?;
+            let n = r.count(8)?;
+            let owner =
+                (0..n).map(|_| r.u64()).collect::<Result<Vec<_>>>()?;
+            Msg::Table { epoch, owner }
+        }
+        9 => Msg::Settle,
+        10 => Msg::Status,
+        0x40 => Msg::Ok,
+        0x41 => Msg::Denied { reason: r.string()? },
+        0x42 => Msg::Bundle { records: r.records()? },
+        0x43 => Msg::HelloOk { node_id: r.u64()?, epoch: r.u64()? },
+        0x44 => Msg::StatusText { text: r.string()? },
+        other => return Err(err(format!("unknown message type {other}"))),
+    };
+    r.done()?;
+    Ok(msg)
+}
+
+/// Decode one complete frame from a byte slice (must be exact).
+pub fn decode(frame: &[u8]) -> Result<Msg> {
+    if frame.len() < HEADER_LEN {
+        return Err(err(format!(
+            "frame too short: {} bytes, header needs {HEADER_LEN}",
+            frame.len()
+        )));
+    }
+    let header: [u8; HEADER_LEN] = frame[..HEADER_LEN].try_into().unwrap();
+    let (type_id, len, crc) = check_header(&header)?;
+    let payload = &frame[HEADER_LEN..];
+    if payload.len() != len {
+        return Err(err(format!(
+            "payload length mismatch: header says {len}, have {}",
+            payload.len()
+        )));
+    }
+    if crc32(payload) != crc {
+        return Err(err("payload CRC mismatch"));
+    }
+    decode_payload(type_id, payload)
+}
+
+/// Write one framed message to a stream.
+pub fn write_msg<Wr: Write>(w: &mut Wr, msg: &Msg) -> Result<()> {
+    let frame = encode(msg);
+    w.write_all(&frame)
+        .and_then(|_| w.flush())
+        .map_err(|e| Error::io(format!("send {}", msg.label()), e))
+}
+
+/// Read one framed message from a stream. An EOF *before any header
+/// byte* is a clean disconnect (`Ok(None)`); an EOF mid-frame is an
+/// error (the peer died mid-send).
+pub fn read_msg<Rd: Read>(r: &mut Rd) -> Result<Option<Msg>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(err(format!(
+                    "disconnected mid-header ({got}/{HEADER_LEN} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::io("read frame header", e)),
+        }
+    }
+    let (type_id, len, crc) = check_header(&header)?;
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(err(format!(
+                    "disconnected mid-payload ({got}/{len} bytes)"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::io("read frame payload", e)),
+        }
+    }
+    if crc32(&payload) != crc {
+        return Err(err("payload CRC mismatch"));
+    }
+    decode_payload(type_id, &payload).map(Some)
+}
+
+/// [`read_msg`] for server-side connection handlers: the stream must
+/// have a read timeout set; every timeout tick re-checks `stop` so a
+/// handler thread parked on an idle connection still joins promptly at
+/// shutdown. Returns `Ok(None)` on clean disconnect OR stop.
+pub fn read_msg_cancellable<Rd: Read>(
+    r: &mut Rd,
+    stop: &AtomicBool,
+) -> Result<Option<Msg>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(HEADER_LEN);
+    let mut need = HEADER_LEN;
+    let mut header: Option<(u8, usize, u32)> = None;
+    let mut chunk = [0u8; 64 << 10];
+    loop {
+        // Completeness checks come *before* the next read, so a
+        // zero-payload frame never triggers a zero-byte read (which
+        // would be indistinguishable from a disconnect).
+        if header.is_none() && buf.len() >= HEADER_LEN {
+            let h: [u8; HEADER_LEN] =
+                buf[..HEADER_LEN].try_into().unwrap();
+            let parsed = check_header(&h)?;
+            buf.drain(..HEADER_LEN);
+            need = parsed.1;
+            header = Some(parsed);
+        }
+        if let Some((type_id, len, crc)) = header {
+            if buf.len() >= len {
+                if crc32(&buf[..len]) != crc {
+                    return Err(err("payload CRC mismatch"));
+                }
+                return decode_payload(type_id, &buf[..len]).map(Some);
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            return Ok(None);
+        }
+        let want = (need - buf.len()).min(chunk.len());
+        match r.read(&mut chunk[..want]) {
+            Ok(0) if buf.is_empty() && header.is_none() => return Ok(None),
+            Ok(0) => {
+                return Err(err(format!(
+                    "disconnected mid-frame ({}/{need} bytes)",
+                    buf.len()
+                )))
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::io("read frame", e)),
+        }
+    }
+}
+
+/// Round-trip helper: send a request, read one reply (blocking, with
+/// whatever timeout the stream carries converted into an error).
+pub fn roundtrip<S: Read + Write>(s: &mut S, msg: &Msg) -> Result<Msg> {
+    write_msg(s, msg)?;
+    match read_msg(s)? {
+        Some(reply) => Ok(reply),
+        None => Err(err(format!(
+            "peer disconnected awaiting reply to {}",
+            msg.label()
+        ))),
+    }
+}
+
+/// Suggested per-connection read timeout: long enough for a seal of a
+/// full node to complete, short enough that stop-flag checks stay
+/// responsive in [`read_msg_cancellable`].
+pub const READ_TIMEOUT: Duration = Duration::from_millis(50);

@@ -1,0 +1,341 @@
+//! Migration transport abstraction: one seal → adopt code path for
+//! in-process and cross-process shard moves.
+//!
+//! The migration protocol (ISSUE 5) always used the persist codec as
+//! its wire format; this module makes the "wire" real. A
+//! [`Transport`] endpoint is *one side* of a shard move — something
+//! that can be told to expect shards, seal them into encoded
+//! checkpoint records, rendezvous (barrier), adopt records, replay
+//! strays, or retire. Two implementations:
+//!
+//! - [`WorkerLink`]: the zero-cost in-process endpoint — a thin shim
+//!   over a worker's control channel, sending exactly the `Job`
+//!   variants the pre-split coordinator sent. No serialization, no
+//!   copies beyond the protocol's own.
+//! - [`net::RemoteLink`]: a peer node reached over the length-prefixed,
+//!   CRC-framed TCP/UDS protocol in [`frame`] — sealed bundles ship as
+//!   the same codec records, just framed.
+//!
+//! [`migrate_over`] drives the protocol over any (src, dst) endpoint
+//! pair, so `Service::migrate_shards` (worker → worker) and
+//! `ClusterNode::migrate_to_peer` (node → node) are the same sequence
+//! with different endpoints plugged in.
+
+pub mod frame;
+pub mod net;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::senders::WorkerSlot;
+use crate::coordinator::worker::{Job, SealBundle};
+use crate::stream::{bounded, Sample};
+use crate::{Error, Result};
+
+/// A re-routable stray: a sample plus its original submit time.
+pub type StraySample = (Sample, Instant);
+
+/// One endpoint of a shard migration. Implementations must preserve
+/// the protocol's ordering contract: messages sent through one
+/// endpoint are processed in send order, and `barrier` returns only
+/// after everything enqueued before it (data included) has been
+/// processed or stray-forwarded by the far side.
+pub trait Transport: Send + Sync {
+    /// Human tag for logs/errors ("worker 3", "peer 127.0.0.1:7441").
+    fn kind(&self) -> String;
+
+    /// Step 1 (destination): samples for `shards` may now outrun their
+    /// state — stash them until the adopt.
+    fn expect(&self, shards: &[u32]) -> Result<()>;
+
+    /// Step 2 (source): drain, snapshot-at-watermark, evict and disown
+    /// `shards`; return the encoded checkpoint records.
+    fn seal(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>>;
+
+    /// Rendezvous: returns once every message (and data sample)
+    /// enqueued to this endpoint before the barrier has been processed
+    /// or forwarded as a stray.
+    fn barrier(&self) -> Result<()>;
+
+    /// Step 3 (destination): restore `records`, take ownership of
+    /// `shards`, replay the stash through the dedup window.
+    fn adopt(&self, shards: &[u32], records: Vec<Vec<u8>>) -> Result<()>;
+
+    /// Re-deliver strays to this endpoint on the control plane (FIFO
+    /// with any queued Adopt). Returns how many were delivered, or
+    /// hands every stray back on failure so the caller can park them.
+    fn replay(
+        &self,
+        strays: Vec<StraySample>,
+    ) -> std::result::Result<usize, Vec<StraySample>>;
+
+    /// Scale-down farewell: flush and prepare to exit once the queue
+    /// closes.
+    fn retire(&self) -> Result<()>;
+}
+
+/// The in-process endpoint: one worker's control channel. This is the
+/// pre-split protocol verbatim — same `Job`s, same error strings — so
+/// `rebalance_e2e` and `ingest_stress` prove the refactor
+/// behavior-preserving by running unmodified.
+pub struct WorkerLink {
+    widx: usize,
+    slot: Arc<WorkerSlot<Job>>,
+}
+
+impl WorkerLink {
+    pub(crate) fn new(widx: usize, slot: Arc<WorkerSlot<Job>>) -> Self {
+        WorkerLink { widx, slot }
+    }
+}
+
+impl Transport for WorkerLink {
+    fn kind(&self) -> String {
+        format!("worker {}", self.widx)
+    }
+
+    fn expect(&self, shards: &[u32]) -> Result<()> {
+        self.slot
+            .send_ctl(Job::Expect { shards: shards.to_vec() })
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))
+    }
+
+    fn seal(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>> {
+        let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
+        self.slot
+            .send_ctl(Job::Seal { shards: shards.to_vec(), reply: reply_tx })
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))?;
+        let bundle = reply_rx.recv().map_err(|_| {
+            Error::Stream(format!(
+                "worker {} died mid-migration",
+                self.widx
+            ))
+        })?;
+        Ok(bundle.records)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        // An empty Seal is a pure rendezvous: the worker drains its
+        // ring before answering, so "answered" spans both queue
+        // planes.
+        let (reply_tx, reply_rx) = bounded::<SealBundle>(1);
+        self.slot
+            .send_ctl(Job::Seal { shards: Vec::new(), reply: reply_tx })
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))?;
+        reply_rx.recv().map(|_| ()).map_err(|_| {
+            Error::Stream(format!(
+                "worker {} died mid-migration",
+                self.widx
+            ))
+        })
+    }
+
+    fn adopt(&self, shards: &[u32], records: Vec<Vec<u8>>) -> Result<()> {
+        self.slot
+            .send_ctl(Job::Adopt { shards: shards.to_vec(), records })
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))
+    }
+
+    fn replay(
+        &self,
+        strays: Vec<StraySample>,
+    ) -> std::result::Result<usize, Vec<StraySample>> {
+        let n = strays.len();
+        match self.slot.send_ctl_reclaim(Job::Replay(strays)) {
+            Ok(()) => Ok(n),
+            Err(Job::Replay(back)) => Err(back),
+            Err(_) => unreachable!("reclaim returns what was sent"),
+        }
+    }
+
+    fn retire(&self) -> Result<()> {
+        self.slot
+            .send_ctl(Job::Retire)
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))
+    }
+}
+
+/// What a completed migration moved (for metrics/logs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationStats {
+    /// Streams whose state crossed the transport.
+    pub streams: u64,
+    /// Encoded checkpoint bytes that crossed the transport.
+    pub bytes: u64,
+}
+
+/// Drive the seal → adopt protocol for one shard set over any endpoint
+/// pair. `install` swaps the routing table *between* the destination's
+/// Expect and the source's Seal (new submissions route to the
+/// destination from that moment). `drain` re-routes every stray
+/// surfaced up to the source barrier — it MUST deliver them to the
+/// destination's control plane before this function sends the Adopt,
+/// which [`Transport::replay`] guarantees.
+///
+/// Failure contract (inherited verbatim from the pre-split
+/// `migrate_set`): once the table is installed, a source-side failure
+/// must still deliver an Adopt with whatever records were salvaged, so
+/// the destination takes ownership instead of stashing samples
+/// forever. Unsealed state is lost exactly as a worker crash loses it;
+/// resuming streams go through the normal checkpoint-restore path.
+pub fn migrate_over(
+    src: &dyn Transport,
+    dst: &dyn Transport,
+    shards: &[u32],
+    install: &mut dyn FnMut() -> Result<()>,
+    drain: &mut dyn FnMut() -> Result<()>,
+) -> Result<MigrationStats> {
+    dst.expect(shards)?;
+    install()?;
+    let seal = (|| -> Result<Vec<Vec<u8>>> {
+        let records = src.seal(shards)?;
+        // Barrier round: a submitter that routed under the old table
+        // may have enqueued samples behind the Seal while the source
+        // drained. When the barrier answers, every such sample has
+        // been forwarded as a stray, so `drain` below catches them all
+        // and the destination's stash replay can sort them back into
+        // per-stream seq order.
+        src.barrier()?;
+        Ok(records)
+    })();
+    let (records, seal_err) = match seal {
+        Ok(records) => (records, None),
+        Err(e) => (Vec::new(), Some(e)),
+    };
+    let stats = MigrationStats {
+        streams: records.len() as u64,
+        bytes: records.iter().map(|r| r.len() as u64).sum(),
+    };
+    // Strays forwarded up to the barrier must precede the Adopt in the
+    // destination's queue so the stash replay sees them.
+    let drain_err = drain().err();
+    dst.adopt(shards, records)?;
+    if let Some(e) = seal_err.or(drain_err) {
+        return Err(e);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Scripted endpoint journaling every call, optionally failing the
+    /// seal — the ordering contract checked without threads.
+    struct Scripted {
+        tag: &'static str,
+        log: Arc<Mutex<Vec<String>>>,
+        fail_seal: bool,
+    }
+
+    impl Scripted {
+        fn new(
+            tag: &'static str,
+            log: Arc<Mutex<Vec<String>>>,
+            fail_seal: bool,
+        ) -> Self {
+            Scripted { tag, log, fail_seal }
+        }
+        fn note(&self, what: String) {
+            self.log.lock().unwrap().push(what);
+        }
+    }
+
+    impl Transport for Scripted {
+        fn kind(&self) -> String {
+            self.tag.into()
+        }
+        fn expect(&self, shards: &[u32]) -> Result<()> {
+            self.note(format!("{}:expect{:?}", self.tag, shards));
+            Ok(())
+        }
+        fn seal(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>> {
+            self.note(format!("{}:seal{:?}", self.tag, shards));
+            if self.fail_seal {
+                return Err(Error::Stream("seal died".into()));
+            }
+            Ok(vec![vec![1, 2, 3], vec![4, 5]])
+        }
+        fn barrier(&self) -> Result<()> {
+            self.note(format!("{}:barrier", self.tag));
+            Ok(())
+        }
+        fn adopt(&self, shards: &[u32], records: Vec<Vec<u8>>) -> Result<()> {
+            self.note(format!(
+                "{}:adopt{:?}x{}",
+                self.tag,
+                shards,
+                records.len()
+            ));
+            Ok(())
+        }
+        fn replay(
+            &self,
+            strays: Vec<StraySample>,
+        ) -> std::result::Result<usize, Vec<StraySample>> {
+            Ok(strays.len())
+        }
+        fn retire(&self) -> Result<()> {
+            self.note(format!("{}:retire", self.tag));
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn migrate_over_runs_the_protocol_in_order() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Scripted::new("src", log.clone(), false);
+        let dst = Scripted::new("dst", log.clone(), false);
+        let log2 = log.clone();
+        let log3 = log.clone();
+        let stats = migrate_over(
+            &src,
+            &dst,
+            &[7, 9],
+            &mut move || {
+                log2.lock().unwrap().push("install".into());
+                Ok(())
+            },
+            &mut move || {
+                log3.lock().unwrap().push("drain".into());
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(stats, MigrationStats { streams: 2, bytes: 5 });
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![
+                "dst:expect[7, 9]",
+                "install",
+                "src:seal[7, 9]",
+                "src:barrier",
+                "drain",
+                "dst:adopt[7, 9]x2",
+            ]
+        );
+    }
+
+    #[test]
+    fn seal_failure_still_delivers_an_empty_adopt() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let src = Scripted::new("src", log.clone(), true);
+        let dst = Scripted::new("dst", log.clone(), false);
+        let err = migrate_over(
+            &src,
+            &dst,
+            &[3],
+            &mut || Ok(()),
+            &mut || Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("seal died"), "{err}");
+        // The destination still took ownership (empty Adopt delivered).
+        assert!(log
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|l| l == "dst:adopt[3]x0"));
+    }
+}

@@ -1,0 +1,442 @@
+//! Dependency-free TCP/UDS plumbing for the cluster transport: peer
+//! addresses, framed connections, a non-blocking listener (the
+//! `obs/server.rs` idiom), and a lazy reconnecting RPC client with a
+//! [`Transport`] implementation on top.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::frame::{self, Msg};
+use super::{StraySample, Transport};
+use crate::metrics::ServiceMetrics;
+use crate::{Error, Result};
+
+/// How long a connect may take before the peer counts as unreachable.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+/// Client-side reply timeout: generous because a Seal reply waits for
+/// the remote to drain its whole backlog first.
+pub const RPC_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A peer endpoint: `host:port` TCP, or `unix:/path` on Unix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PeerAddr {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl PeerAddr {
+    /// Parse `"host:port"` or `"unix:/path/to.sock"`.
+    pub fn parse(s: &str) -> Result<PeerAddr> {
+        let s = s.trim();
+        if let Some(path) = s.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return Ok(PeerAddr::Unix(path.into()));
+            #[cfg(not(unix))]
+            return Err(Error::Config(format!(
+                "unix socket address {path:?} unsupported on this platform"
+            )));
+        }
+        if s.is_empty() || !s.contains(':') {
+            return Err(Error::Config(format!(
+                "bad peer address {s:?} (want host:port or unix:/path)"
+            )));
+        }
+        Ok(PeerAddr::Tcp(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for PeerAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PeerAddr::Tcp(a) => write!(f, "{a}"),
+            #[cfg(unix)]
+            PeerAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// One framed stream, TCP or UDS.
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Connect with [`CONNECT_TIMEOUT`] and set [`RPC_TIMEOUT`] reads.
+    pub fn connect(addr: &PeerAddr) -> Result<Conn> {
+        let conn = match addr {
+            PeerAddr::Tcp(a) => {
+                let mut last: Option<std::io::Error> = None;
+                let addrs = a.to_socket_addrs().map_err(|e| {
+                    Error::io(format!("resolve {a}"), e)
+                })?;
+                let mut stream = None;
+                for sa in addrs {
+                    match TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                let stream = stream.ok_or_else(|| {
+                    Error::io(
+                        format!("connect {a}"),
+                        last.unwrap_or_else(|| {
+                            std::io::Error::new(
+                                std::io::ErrorKind::AddrNotAvailable,
+                                "no addresses resolved",
+                            )
+                        }),
+                    )
+                })?;
+                let _ = stream.set_nodelay(true);
+                Conn::Tcp(stream)
+            }
+            #[cfg(unix)]
+            PeerAddr::Unix(p) => Conn::Unix(
+                UnixStream::connect(p).map_err(|e| {
+                    Error::io(format!("connect unix:{}", p.display()), e)
+                })?,
+            ),
+        };
+        conn.set_read_timeout(Some(RPC_TIMEOUT))?;
+        Ok(conn)
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(t),
+        }
+        .map_err(|e| Error::io("set read timeout", e))
+    }
+
+    /// Peer description for logs.
+    pub fn peer_desc(&self) -> String {
+        match self {
+            Conn::Tcp(s) => s
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:?".into()),
+            #[cfg(unix)]
+            Conn::Unix(_) => "unix".into(),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A non-blocking accept socket (the `obs::server` idiom: the owner
+/// polls `try_accept` in a loop with a stop flag and a short nap).
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    pub fn bind(addr: &PeerAddr) -> Result<Listener> {
+        match addr {
+            PeerAddr::Tcp(a) => {
+                let l = TcpListener::bind(a)
+                    .map_err(|e| Error::io(format!("bind {a}"), e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| Error::io("set_nonblocking", e))?;
+                Ok(Listener::Tcp(l))
+            }
+            #[cfg(unix)]
+            PeerAddr::Unix(p) => {
+                // A dead previous instance leaves the socket file
+                // behind; binding over it is the expected restart path.
+                let _ = std::fs::remove_file(p);
+                let l = UnixListener::bind(p).map_err(|e| {
+                    Error::io(format!("bind unix:{}", p.display()), e)
+                })?;
+                l.set_nonblocking(true)
+                    .map_err(|e| Error::io("set_nonblocking", e))?;
+                Ok(Listener::Unix(l))
+            }
+        }
+    }
+
+    /// Accept one pending connection, if any. Accepted connections are
+    /// switched to blocking mode with the short cancellable read
+    /// timeout ([`frame::READ_TIMEOUT`]) for handler loops.
+    pub fn try_accept(&self) -> Result<Option<Conn>> {
+        let accepted = match self {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    let _ = s.set_nodelay(true);
+                    Some(Conn::Tcp(s))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => return Err(Error::io("accept", e)),
+            },
+            #[cfg(unix)]
+            Listener::Unix(l) => match l.accept() {
+                Ok((s, _)) => Some(Conn::Unix(s)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => return Err(Error::io("accept", e)),
+            },
+        };
+        if let Some(conn) = accepted {
+            match &conn {
+                Conn::Tcp(s) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| Error::io("set blocking", e))?;
+                }
+                #[cfg(unix)]
+                Conn::Unix(s) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| Error::io("set blocking", e))?;
+                }
+            }
+            conn.set_read_timeout(Some(frame::READ_TIMEOUT))?;
+            return Ok(Some(conn));
+        }
+        Ok(None)
+    }
+
+    /// The actual bound address (resolves `:0` test binds).
+    pub fn bound_addr(&self) -> String {
+        match self {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:?".into()),
+            #[cfg(unix)]
+            Listener::Unix(_) => "unix".into(),
+        }
+    }
+}
+
+/// Serialized request/reply client over one lazily-(re)connected
+/// framed stream. Connection state is a cache: any I/O failure drops
+/// it, and (for idempotent requests) one transparent reconnect+retry
+/// covers the common "peer restarted / idle conn reaped" case.
+pub struct RpcClient {
+    addr: PeerAddr,
+    conn: Mutex<Option<Conn>>,
+}
+
+impl RpcClient {
+    pub fn new(addr: PeerAddr) -> Self {
+        RpcClient { addr, conn: Mutex::new(None) }
+    }
+
+    pub fn addr(&self) -> &PeerAddr {
+        &self.addr
+    }
+
+    /// Is a connection currently cached? (Does not probe the peer.)
+    pub fn is_connected(&self) -> bool {
+        self.conn.lock().unwrap().is_some()
+    }
+
+    /// Drop the cached connection (the peer is known dead).
+    pub fn disconnect(&self) {
+        *self.conn.lock().unwrap() = None;
+    }
+
+    fn attempt(&self, msg: &Msg) -> Result<Msg> {
+        let mut guard = self.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(Conn::connect(&self.addr)?);
+        }
+        let conn = guard.as_mut().unwrap();
+        match frame::roundtrip(conn, msg) {
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                // Any failure poisons the stream (a half-read frame
+                // would desync every later reply): drop it.
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Send one request, return the reply. Retries ONCE on a cached-
+    /// connection failure — safe only for idempotent requests (Expect,
+    /// Adopt, Replay, Samples, Hello, Heartbeat, Table, Status: all
+    /// are absorbed by the restore/dedup machinery if duplicated).
+    pub fn rpc(&self, msg: &Msg) -> Result<Msg> {
+        let had_conn = self.is_connected();
+        match self.attempt(msg) {
+            Ok(reply) => Ok(reply),
+            Err(first) => {
+                if had_conn {
+                    // The cached stream may simply have gone stale;
+                    // one fresh-connection retry.
+                    self.attempt(msg).map_err(|_| first)
+                } else {
+                    Err(first)
+                }
+            }
+        }
+    }
+
+    /// Send one request with NO retry. Required for Seal: a Seal that
+    /// executed but lost its reply has already disowned the shards —
+    /// retrying would return an empty bundle and silently drop the
+    /// sealed state.
+    pub fn rpc_no_retry(&self, msg: &Msg) -> Result<Msg> {
+        self.attempt(msg)
+    }
+}
+
+fn expect_ok(reply: Msg, what: &str, peer: &PeerAddr) -> Result<()> {
+    match reply {
+        Msg::Ok => Ok(()),
+        Msg::Denied { reason } => Err(Error::Stream(format!(
+            "peer {peer} denied {what}: {reason}"
+        ))),
+        other => Err(Error::Stream(format!(
+            "peer {peer}: unexpected {} reply to {what}",
+            other.label()
+        ))),
+    }
+}
+
+/// The cross-process [`Transport`] endpoint: a peer node reached
+/// through an [`RpcClient`]. Sealed bundles and strays cross the wire
+/// framed by [`frame`]; byte counters land in the service metrics when
+/// provided.
+pub struct RemoteLink {
+    client: Arc<RpcClient>,
+    metrics: Option<Arc<ServiceMetrics>>,
+}
+
+impl RemoteLink {
+    pub fn new(client: Arc<RpcClient>) -> Self {
+        RemoteLink { client, metrics: None }
+    }
+
+    pub fn with_metrics(mut self, metrics: Arc<ServiceMetrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+}
+
+impl Transport for RemoteLink {
+    fn kind(&self) -> String {
+        format!("peer {}", self.client.addr())
+    }
+
+    fn expect(&self, shards: &[u32]) -> Result<()> {
+        let reply =
+            self.client.rpc(&Msg::Expect { shards: shards.to_vec() })?;
+        expect_ok(reply, "expect", self.client.addr())
+    }
+
+    fn seal(&self, shards: &[u32]) -> Result<Vec<Vec<u8>>> {
+        // No retry: see RpcClient::rpc_no_retry.
+        let reply = self
+            .client
+            .rpc_no_retry(&Msg::Seal { shards: shards.to_vec() })?;
+        match reply {
+            Msg::Bundle { records } => {
+                if let Some(m) = &self.metrics {
+                    let bytes: u64 =
+                        records.iter().map(|r| r.len() as u64).sum();
+                    m.bundle_bytes_rx.add(bytes);
+                }
+                Ok(records)
+            }
+            Msg::Denied { reason } => Err(Error::Stream(format!(
+                "peer {} denied seal: {reason}",
+                self.client.addr()
+            ))),
+            other => Err(Error::Stream(format!(
+                "peer {}: unexpected {} reply to seal",
+                self.client.addr(),
+                other.label()
+            ))),
+        }
+    }
+
+    fn barrier(&self) -> Result<()> {
+        // An empty Seal is a pure rendezvous on the remote too: the
+        // node barriers every local worker before replying.
+        let reply =
+            self.client.rpc_no_retry(&Msg::Seal { shards: Vec::new() })?;
+        match reply {
+            Msg::Bundle { .. } | Msg::Ok => Ok(()),
+            Msg::Denied { reason } => Err(Error::Stream(format!(
+                "peer {} denied barrier: {reason}",
+                self.client.addr()
+            ))),
+            other => Err(Error::Stream(format!(
+                "peer {}: unexpected {} reply to barrier",
+                self.client.addr(),
+                other.label()
+            ))),
+        }
+    }
+
+    fn adopt(&self, shards: &[u32], records: Vec<Vec<u8>>) -> Result<()> {
+        if let Some(m) = &self.metrics {
+            let bytes: u64 = records.iter().map(|r| r.len() as u64).sum();
+            m.bundle_bytes_tx.add(bytes);
+        }
+        let reply = self
+            .client
+            .rpc(&Msg::Adopt { shards: shards.to_vec(), records })?;
+        expect_ok(reply, "adopt", self.client.addr())
+    }
+
+    fn replay(
+        &self,
+        strays: Vec<StraySample>,
+    ) -> std::result::Result<usize, Vec<StraySample>> {
+        // Submit times cannot cross the process boundary (Instants are
+        // process-local); the receiver re-stamps on arrival, so
+        // cross-node re-routes measure their remaining latency only.
+        let samples: Vec<_> =
+            strays.iter().map(|(s, _)| s.clone()).collect();
+        let n = samples.len();
+        match self.client.rpc(&Msg::Replay { samples }) {
+            Ok(Msg::Ok) => Ok(n),
+            _ => Err(strays),
+        }
+    }
+
+    fn retire(&self) -> Result<()> {
+        // Nodes are not retired through the migration transport; the
+        // control plane kills them whole. Nothing to send.
+        Ok(())
+    }
+}

@@ -9,6 +9,10 @@
 //!                    [--checkpoint-interval N] [--restore]
 //!                    [--checkpoint-dir DIR] [--recover] [--evict-after N]
 //!                    [--metrics-addr HOST:PORT] [--trace-dump]
+//!                    [--cluster-listen ADDR] [--node-id N]
+//!                    [--peer ID=ADDR]... [--heartbeat-ms N]
+//!                    [--failover-ms N]
+//! teda-fpga cluster  --addr HOST:PORT
 //! teda-fpga trace    --addr HOST:PORT
 //! teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
 //!                    [--streams S] [--full]
@@ -32,7 +36,11 @@ use std::process::ExitCode;
 use teda_fpga::config::{
     CombinerKind, EngineKind, EnsembleConfig, Json, ServiceConfig,
 };
-use teda_fpga::coordinator::{Service, ShardTable};
+use teda_fpga::coordinator::transport::frame::Msg;
+use teda_fpga::coordinator::transport::net::{PeerAddr, RpcClient};
+use teda_fpga::coordinator::{
+    scale_up_wanted, ClusterNode, Service, ShardTable,
+};
 use teda_fpga::damadics::{
     actuator1_schedule, evaluate_detection, fault_catalog, schedule_item,
     ActuatorSim,
@@ -59,6 +67,7 @@ fn main() -> ExitCode {
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&flags),
+        "cluster" => cmd_cluster(&flags),
         "trace" => cmd_trace(&flags),
         "shards" => cmd_shards(&flags),
         "rebalance" => cmd_rebalance(&flags),
@@ -97,6 +106,10 @@ USAGE:
                      [--checkpoint-interval N] [--restore]
                      [--checkpoint-dir DIR] [--recover] [--evict-after N]
                      [--metrics-addr HOST:PORT] [--trace-dump]
+                     [--cluster-listen ADDR] [--node-id N]
+                     [--peer ID=ADDR]... [--heartbeat-ms N]
+                     [--failover-ms N]
+  teda-fpga cluster  --addr HOST:PORT
   teda-fpga trace    --addr HOST:PORT
   teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
                      [--streams S] [--full]
@@ -119,10 +132,17 @@ USAGE:
   --checkpoint-dir persists checkpoints durably (atomic-rename files);
   --recover cold-starts from that dir after a process death (implies
   --restore); --evict-after drops idle streams after N samples.
-  --workers-max N lets serve scale the worker pool up live mid-run
-  (demo trigger: the resize fires once at the halfway sample — a
-  production driver would key this off backpressure instead);
+  --workers-max N lets serve scale the worker pool up live mid-run,
+  triggered by real pressure: a data ring ≥ 3/4 full, backpressure
+  events in the last window, or queue-wait p99 over a 5 ms SLO;
   --rebalance-interval N rebalances hot shards every N samples.
+  --cluster-listen ADDR (host:port or unix:/path) makes this serve a
+  cluster node; --peer ID=ADDR (repeatable) names the other nodes of
+  the logical shard map; --node-id N identifies this one. Nodes
+  heartbeat every --heartbeat-ms; with --failover-ms N > 0, the
+  lowest-id survivor adopts a silent peer's shards from the shared
+  --checkpoint-dir after N ms of silence. `cluster --addr` probes a
+  running node's status over the framed transport.
   `shards` prints the shard→worker table; `rebalance` is a live-
   migration smoke: it forces mid-stream shard moves + a worker resize
   and asserts verdict parity against an undisturbed run.
@@ -154,7 +174,14 @@ impl Flags {
                 Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                 _ => "true".to_string(), // boolean flag
             };
-            map.insert(key.to_string(), value);
+            // Repeatable flags (--peer 1=A --peer 2=B) accumulate
+            // comma-separated; single-valued flags just read the join.
+            map.entry(key.to_string())
+                .and_modify(|prev| {
+                    prev.push(',');
+                    prev.push_str(&value);
+                })
+                .or_insert(value);
         }
         Ok(Flags { map })
     }
@@ -270,6 +297,24 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     if let Some(addr) = flags.get("metrics-addr") {
         cfg.obs.metrics_addr = Some(addr.to_string());
     }
+    if let Some(listen) = flags.get("cluster-listen") {
+        cfg.cluster.listen = Some(listen.to_string());
+    }
+    cfg.cluster.node_id = flags.parse_as("node-id", cfg.cluster.node_id)?;
+    if let Some(peers) = flags.get("peer") {
+        cfg.cluster
+            .peers
+            .extend(peers.split(',').map(str::to_string));
+    }
+    cfg.cluster.heartbeat_ms =
+        flags.parse_as("heartbeat-ms", cfg.cluster.heartbeat_ms)?;
+    cfg.cluster.failover_ms =
+        flags.parse_as("failover-ms", cfg.cluster.failover_ms)?;
+    if !cfg.cluster.peers.is_empty() && !cfg.cluster.enabled() {
+        return Err("--peer needs --cluster-listen (this node must be \
+                    reachable too)"
+            .into());
+    }
     teda_fpga::obs::recorder()
         .configure(cfg.obs.recorder, cfg.obs.recorder_capacity);
     let workers_max: usize = flags.parse_as("workers-max", cfg.workers)?;
@@ -304,6 +349,27 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     } else {
         Service::start(cfg.clone())?
     };
+    // The cluster control plane shares the service with this loop;
+    // single-node serves skip the Arc indirection's plumbing entirely.
+    let svc = std::sync::Arc::new(svc);
+    let cluster = if cfg.cluster.enabled() {
+        let node = ClusterNode::start(svc.clone(), &cfg.cluster)?;
+        let up = node.hello_peers();
+        println!(
+            "cluster node {} on {} — epoch {}, {} of {} shards owned, \
+             {}/{} peers up",
+            node.node_id(),
+            node.bound_addr(),
+            node.epoch(),
+            node.owned_shards().len(),
+            cfg.sharding.virtual_shards,
+            up,
+            cfg.cluster.peers.len()
+        );
+        Some(node)
+    } else {
+        None
+    };
     let mut metrics_server = match &cfg.obs.metrics_addr {
         Some(addr) => {
             let srv = teda_fpga::obs::MetricsServer::start(
@@ -327,12 +393,19 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         .collect();
     let rebalance_every = cfg.sharding.rebalance_interval;
     let handle = svc.handle();
+    let cluster_handle = cluster.as_ref().map(|n| n.handle());
     let mut submitted: u64 = 0;
     let mut next_rebalance = rebalance_every;
     let mut round: usize = 0;
     // Windowed progress: deltas-per-interval, not lifetime counters.
     let mut window = svc.metrics_window();
     let report_every = (samples / 4).max(1);
+    // Autoscale signals: a dedicated delta window so scale checks see
+    // rates since the *last check*, not since the last progress line.
+    let mut scale_window = svc.metrics_window();
+    let scale_check_every = (samples / 20).max(1);
+    // Queue-wait p99 SLO the autoscaler defends (5 ms).
+    const SCALE_SLO_NS: u64 = 5_000_000;
     loop {
         // One batched submit per round: the whole cross-stream burst
         // is routed under a single snapshot and enqueued with one
@@ -347,19 +420,54 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
             break;
         }
         submitted += round_burst.len() as u64;
-        handle.submit_batch(round_burst)?;
+        match &cluster_handle {
+            // Cluster mode: route by node ownership — locally-owned
+            // samples take the local hot path, the rest ship to peers.
+            // A peer can be briefly unreachable (still starting, just
+            // killed, mid-failover): retry the burst until the table
+            // heals. The locally-submitted half of a partial first
+            // attempt is re-dropped by the workers' watermark dedup,
+            // so re-submitting the whole burst is safe.
+            Some(ch) => {
+                let deadline = std::time::Instant::now()
+                    + std::time::Duration::from_secs(10);
+                loop {
+                    match ch.submit_batch(round_burst.clone()) {
+                        Ok(()) => break,
+                        Err(_) if std::time::Instant::now() < deadline => {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(50),
+                            );
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+            None => handle.submit_batch(round_burst)?,
+        }
         round += 1;
-        // Live worker scaling: grow to --workers-max at the halfway
-        // point (a deterministic mid-run resize the smoke tests lean
-        // on; a production driver would key this off backpressure).
-        if workers_max > svc.workers() && round == samples / 2 {
-            svc.scale_to(workers_max)?;
-            println!(
-                "scaled to {} workers at sample {} (epoch {})",
-                workers_max,
-                submitted,
-                svc.table().epoch()
-            );
+        // Live worker scaling: grow toward --workers-max when the
+        // observability plane reports real pressure — a data ring
+        // ≥ 3/4 full, backpressure events in the last window, or a
+        // windowed queue-wait p99 over the SLO. (Was: a fixed
+        // halfway-sample demo trigger.)
+        if workers_max > svc.workers() && round % scale_check_every == 0 {
+            let report = scale_window.tick(&svc.metrics());
+            if scale_up_wanted(
+                &svc.queue_depths(),
+                cfg.queue_capacity,
+                report.delta("backpressure_events"),
+                report.p99("queue_wait"),
+                SCALE_SLO_NS,
+            ) {
+                let n = (svc.workers() + 1).min(workers_max);
+                svc.scale_to(n)?;
+                println!(
+                    "scaled to {n} workers at sample {submitted} \
+                     (queue pressure; epoch {})",
+                    svc.table().epoch()
+                );
+            }
         }
         if rebalance_every > 0 && submitted >= next_rebalance {
             next_rebalance += rebalance_every;
@@ -380,6 +488,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
     let metrics = svc.metrics();
     let ens_metrics = svc.ensemble_metrics();
     let state_mgr = svc.state_manager();
+    // Tear down the control plane before finishing the node core: the
+    // cluster handle and node both share the service Arc.
+    drop(cluster_handle);
+    if let Some(node) = cluster {
+        node.shutdown()?;
+    }
+    let svc = std::sync::Arc::try_unwrap(svc)
+        .map_err(|_| "service still shared at shutdown")?;
     let out = svc.finish()?;
     let dt = t0.elapsed();
     if let Some(srv) = metrics_server.as_mut() {
@@ -418,6 +534,28 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         out.len() as f64 / dt.as_secs_f64()
     );
     Ok(())
+}
+
+/// `teda-fpga cluster` — probe a running cluster node over the framed
+/// transport: one Status request, print the StatusText reply (node id,
+/// bound address, table epoch, shard ownership, peer liveness).
+fn cmd_cluster(flags: &Flags) -> Result<(), CliError> {
+    let addr = flags.get("addr").ok_or(
+        "cluster needs --addr HOST:PORT or unix:/path (the serve \
+         --cluster-listen)",
+    )?;
+    let client = RpcClient::new(PeerAddr::parse(addr)?);
+    match client.rpc(&Msg::Status)? {
+        Msg::StatusText { text } => {
+            print!("{text}");
+            Ok(())
+        }
+        other => Err(format!(
+            "node {addr} sent an unexpected {} reply to a status probe",
+            other.label()
+        )
+        .into()),
+    }
 }
 
 /// `teda-fpga trace` — fetch and print the flight-recorder tail of a

@@ -359,8 +359,34 @@ service_metrics! {
         /// Previously-parked strays re-attempted by a later drain (stuck
         /// strays are observable here rather than silently retried).
         pub parked_retries: Counter,
+        /// Peer connections established by this node (transport dials,
+        /// both control-plane and migration traffic).
+        pub peer_connects: Counter,
+        /// Cluster heartbeats sent to peers.
+        pub heartbeats_tx: Counter,
+        /// Cluster heartbeats received from peers.
+        pub heartbeats_rx: Counter,
+        /// Sealed-bundle bytes shipped to peers (outbound migrations).
+        pub bundle_bytes_tx: Counter,
+        /// Sealed-bundle bytes received from peers (inbound migrations
+        /// and pulls).
+        pub bundle_bytes_rx: Counter,
+        /// Samples forwarded to the owning peer instead of being
+        /// processed locally (cluster routing).
+        pub samples_forwarded: Counter,
+        /// Transport frames rejected (bad magic/version/CRC/length or a
+        /// mid-frame disconnect).
+        pub frame_errors: Counter,
+        /// Failovers completed: dead peers whose shards this node
+        /// recovered from the shared checkpoint store.
+        pub failovers: Counter,
         /// Current shard-map epoch (bumps once per installed table).
         pub epoch: Gauge,
+        /// Current cluster shard-table epoch (node-level ownership;
+        /// bumps on joins, migrations between nodes, and failovers).
+        pub cluster_epoch: Gauge,
+        /// Peers currently considered alive by the heartbeat monitor.
+        pub peers_alive: Gauge,
         /// Live worker threads (tracks `scale_to`).
         pub workers_active: Gauge,
         /// Per-sample end-to-end latency (submit → verdict).

@@ -43,6 +43,10 @@
 //! | `EpochSwap`            | new epoch         | —              | —      |
 //! | `Park`                 | —                 | —              | —      |
 //! | `WorkerPanic`          | —                 | —              | self   |
+//! | `PeerConnect`          | peer node id      | —              | —      |
+//! | `Heartbeat`            | peer node id      | —              | —      |
+//! | `BundleShip`           | bundle bytes      | shards moved   | —      |
+//! | `Failover`             | dead node id      | shards adopted | —      |
 //!
 //! "—" columns carry `0` (or [`NO_WORKER`] for the worker field).
 
@@ -94,9 +98,17 @@ pub enum EventKind {
     Park,
     /// A worker thread died by panic.
     WorkerPanic,
+    /// A transport connection to a cluster peer was established.
+    PeerConnect,
+    /// A cluster heartbeat was exchanged with a peer.
+    Heartbeat,
+    /// A sealed bundle crossed the transport to/from a peer.
+    BundleShip,
+    /// A dead peer's shards were recovered from the shared store.
+    Failover,
 }
 
-const KINDS: [EventKind; 15] = [
+const KINDS: [EventKind; 19] = [
     EventKind::Submit,
     EventKind::Route,
     EventKind::RingPush,
@@ -112,6 +124,10 @@ const KINDS: [EventKind; 15] = [
     EventKind::EpochSwap,
     EventKind::Park,
     EventKind::WorkerPanic,
+    EventKind::PeerConnect,
+    EventKind::Heartbeat,
+    EventKind::BundleShip,
+    EventKind::Failover,
 ];
 
 impl EventKind {
@@ -133,6 +149,10 @@ impl EventKind {
             EventKind::EpochSwap => "epoch_swap",
             EventKind::Park => "park",
             EventKind::WorkerPanic => "worker_panic",
+            EventKind::PeerConnect => "peer_connect",
+            EventKind::Heartbeat => "heartbeat",
+            EventKind::BundleShip => "bundle_ship",
+            EventKind::Failover => "failover",
         }
     }
 

@@ -217,6 +217,85 @@ impl<'a> Reader<'a> {
 
 // --------------------------------------------------------------- encode
 
+/// Peek the stream id out of an encoded record without a full decode.
+///
+/// The payload begins with the stream id (u64 LE) immediately after the
+/// fixed header, so routing a sealed bundle's records to workers needs
+/// only this 28-byte prefix check — full CRC/structure validation still
+/// happens in the worker's [`decode`] on adopt.
+pub fn record_stream_id(data: &[u8]) -> Result<u64> {
+    if data.len() < HEADER_LEN + 8 {
+        return Err(err(format!(
+            "record too short to carry a stream id: {} bytes",
+            data.len()
+        )));
+    }
+    if data[0..8] != MAGIC {
+        return Err(err("bad magic (not a TEDA checkpoint)"));
+    }
+    Ok(u64::from_le_bytes(
+        data[HEADER_LEN..HEADER_LEN + 8].try_into().unwrap(),
+    ))
+}
+
+/// Frame a sealed bundle (many encoded records) into one byte string:
+/// `count:u32 LE` then per record `len:u32 LE` + bytes. This is the
+/// transport payload layout for shipping seal → adopt bundles between
+/// processes; each inner record keeps its own magic + CRC.
+pub fn encode_bundle(records: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize =
+        4 + records.iter().map(|r| 4 + r.len()).sum::<usize>();
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for rec in records {
+        out.extend_from_slice(&(rec.len() as u32).to_le_bytes());
+        out.extend_from_slice(rec);
+    }
+    out
+}
+
+/// Inverse of [`encode_bundle`]. Returns the records and how many bytes
+/// of `data` were consumed, so a caller embedding a bundle inside a
+/// larger frame can keep parsing after it. Allocation is bounded by the
+/// input length before any record is copied.
+pub fn decode_bundle(data: &[u8]) -> Result<(Vec<Vec<u8>>, usize)> {
+    if data.len() < 4 {
+        return Err(err("bundle too short for a record count"));
+    }
+    let count =
+        u32::from_le_bytes(data[0..4].try_into().unwrap()) as usize;
+    // Each record costs at least 4 length bytes; reject counts the
+    // input cannot possibly carry before allocating for them.
+    if count > (data.len() - 4) / 4 {
+        return Err(err(format!(
+            "bundle claims {count} records in {} bytes",
+            data.len()
+        )));
+    }
+    let mut records = Vec::with_capacity(count);
+    let mut at = 4usize;
+    for i in 0..count {
+        if data.len() - at < 4 {
+            return Err(err(format!(
+                "bundle truncated at record {i} length"
+            )));
+        }
+        let len = u32::from_le_bytes(
+            data[at..at + 4].try_into().unwrap(),
+        ) as usize;
+        at += 4;
+        if data.len() - at < len {
+            return Err(err(format!(
+                "bundle record {i} truncated: wants {len} bytes, {} left",
+                data.len() - at
+            )));
+        }
+        records.push(data[at..at + len].to_vec());
+        at += len;
+    }
+    Ok((records, at))
+}
+
 /// Serialize one checkpoint into a self-verifying record.
 pub fn encode(cp: &StateCheckpoint) -> Vec<u8> {
     let mut w = Writer::default();
@@ -599,6 +678,47 @@ mod tests {
         // The zlib/PNG CRC test vector.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn stream_id_peek_matches_full_decode() {
+        let cp = software_cp(0xDEAD_BEEF_CAFE, 12);
+        let bytes = encode(&cp);
+        assert_eq!(record_stream_id(&bytes).unwrap(), cp.stream_id);
+        assert!(record_stream_id(&bytes[..HEADER_LEN]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(record_stream_id(&bad).is_err());
+    }
+
+    #[test]
+    fn bundle_roundtrip_and_consumed_offset() {
+        let records: Vec<Vec<u8>> =
+            vec![encode(&software_cp(1, 3)), encode(&software_cp(2, 9))];
+        let mut framed = encode_bundle(&records);
+        let len = framed.len();
+        framed.extend_from_slice(b"trailing");
+        let (back, used) = decode_bundle(&framed).unwrap();
+        assert_eq!(back, records);
+        assert_eq!(used, len);
+
+        let (empty, used) = decode_bundle(&encode_bundle(&[])).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(used, 4);
+    }
+
+    #[test]
+    fn bundle_rejects_lies_about_its_size() {
+        // A count the input cannot carry must fail before allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_bundle(&huge).is_err());
+
+        // Truncation inside a record length, and inside record bytes.
+        let framed = encode_bundle(&[vec![9u8; 32]]);
+        for cut in [2, 6, framed.len() - 1] {
+            assert!(decode_bundle(&framed[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

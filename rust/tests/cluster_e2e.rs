@@ -1,0 +1,458 @@
+//! Cluster end-to-end: several node processes' worth of machinery —
+//! full node cores, the cluster control plane, and the framed
+//! transport — serving ONE logical shard map, attacked the same way
+//! `rebalance_e2e` attacks a single process:
+//!
+//! - shards migrate **between nodes** mid-stream (seal → adopt over
+//!   the wire, sealed bundles in persist-codec records) and verdicts
+//!   must stay bit-identical to an undisturbed single-service run;
+//! - a whole node is killed mid-stream (transport torn down, node core
+//!   aborted, unsealed state gone) and a peer fails over from the
+//!   shared checkpoint store — the union of verdicts must STILL be
+//!   bit-identical, for the software, RTL, and ensemble engines;
+//! - heartbeat monitoring performs that failover automatically.
+//!
+//! Nodes here live in one test process but share nothing except the
+//! checkpoint store and their sockets — the same isolation a real
+//! multi-process deployment has (the CI smoke runs the true
+//! two-process version).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use teda_fpga::config::{
+    ClusterConfig, CombinerKind, EngineKind, EnsembleConfig,
+    ServiceConfig, ShardingConfig,
+};
+use teda_fpga::coordinator::transport::frame::Msg;
+use teda_fpga::coordinator::transport::net::{PeerAddr, RpcClient};
+use teda_fpga::coordinator::{ClusterNode, Service, StateManager};
+use teda_fpga::engine::EngineVerdict;
+use teda_fpga::persist::{CheckpointStore, MemoryStore};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+
+const STREAMS: u64 = 6;
+const PER_STREAM: u64 = 90;
+const VIRTUAL_SHARDS: u32 = 32;
+/// Push shards node 1 → node 2 after this seq...
+const MIGRATE_AT: u64 = 30;
+/// ...and pull some back after this one.
+const PULL_AT: u64 = 60;
+/// Whole-node kill point for the failover tests.
+const KILL_AT: u64 = 45;
+
+fn cfg(engine: EngineKind) -> ServiceConfig {
+    ServiceConfig {
+        engine,
+        workers: 2,
+        n_features: 2,
+        queue_capacity: 256,
+        sharding: ShardingConfig {
+            virtual_shards: VIRTUAL_SHARDS,
+            ..Default::default()
+        },
+        // Same roster as rebalance_e2e: the RTL member's tighter
+        // threshold keeps fusion quorums open across every handoff.
+        ensemble: EnsembleConfig::from_member_list(
+            "teda:m=3+rtl:m=1.5",
+            CombinerKind::Adaptive,
+        )
+        .unwrap(),
+        ..Default::default()
+    }
+}
+
+/// Deterministic per-(stream, seq) sample — identical to the
+/// rebalance_e2e generator so runs are comparable across topologies.
+fn sample(sid: u64, seq: u64) -> Sample {
+    let mut rng = SplitMix64::new(sid.wrapping_mul(0x9E37) ^ seq);
+    Sample {
+        stream_id: sid,
+        seq,
+        values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+    }
+}
+
+fn index(
+    out: Vec<teda_fpga::coordinator::Classified>,
+    map: &mut BTreeMap<(u64, u64), EngineVerdict>,
+) {
+    for c in out {
+        let key = (c.verdict.stream_id, c.verdict.seq);
+        match map.get(&key) {
+            // Duplicates must be identical re-derivations (NaN-safe).
+            Some(prev) => {
+                assert_eq!(prev.k, c.verdict.k, "{key:?}");
+                assert_eq!(prev.outlier, c.verdict.outlier, "{key:?}");
+                assert_eq!(
+                    prev.zeta.to_bits(),
+                    c.verdict.zeta.to_bits(),
+                    "replayed verdict diverged at {key:?}"
+                );
+            }
+            None => {
+                map.insert(key, c.verdict);
+            }
+        }
+    }
+}
+
+fn reference(engine: EngineKind) -> BTreeMap<(u64, u64), EngineVerdict> {
+    let svc = Service::start(cfg(engine)).unwrap();
+    for seq in 0..PER_STREAM {
+        for sid in 0..STREAMS {
+            svc.submit(sample(sid, seq)).unwrap();
+        }
+    }
+    let mut map = BTreeMap::new();
+    index(svc.finish().unwrap(), &mut map);
+    map
+}
+
+fn assert_bit_identical(
+    engine: EngineKind,
+    full: &BTreeMap<(u64, u64), EngineVerdict>,
+    got: &BTreeMap<(u64, u64), EngineVerdict>,
+) {
+    assert_eq!(
+        full.len(),
+        (STREAMS * PER_STREAM) as usize,
+        "{engine}: reference must classify everything"
+    );
+    assert_eq!(
+        got.len(),
+        full.len(),
+        "{engine}: cluster run lost or duplicated verdicts"
+    );
+    for (key, a) in full {
+        let b = &got[key];
+        assert_eq!(a.k, b.k, "{engine} {key:?}");
+        assert_eq!(a.outlier, b.outlier, "{engine} {key:?}");
+        assert_eq!(
+            a.zeta.to_bits(),
+            b.zeta.to_bits(),
+            "{engine} {key:?}: zeta {} vs {}",
+            a.zeta,
+            b.zeta
+        );
+        assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+    }
+}
+
+/// Two cluster configs wired at each other over unix sockets in a
+/// fresh temp dir (deterministic addresses — no port races under
+/// parallel `cargo test`).
+fn uds_pair(tag: &str) -> (ClusterConfig, ClusterConfig) {
+    let dir = teda_fpga::util::unique_temp_dir(&format!("cluster-{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = format!("unix:{}", dir.join("node1.sock").display());
+    let b = format!("unix:{}", dir.join("node2.sock").display());
+    (
+        ClusterConfig {
+            node_id: 1,
+            listen: Some(a.clone()),
+            peers: vec![format!("2={b}")],
+            heartbeat_ms: 50,
+            failover_ms: 0,
+        },
+        ClusterConfig {
+            node_id: 2,
+            listen: Some(b),
+            peers: vec![format!("1={a}")],
+            heartbeat_ms: 50,
+            failover_ms: 0,
+        },
+    )
+}
+
+/// Node with a service wired to a (possibly shared) checkpoint store.
+fn start_node(
+    engine: EngineKind,
+    ccfg: &ClusterConfig,
+    store: Option<Arc<MemoryStore>>,
+) -> (Arc<Service>, ClusterNode) {
+    let mut scfg = cfg(engine);
+    let svc = match store {
+        Some(store) => {
+            scfg.checkpoint_every = 10;
+            scfg.restore_on_resume = true;
+            let mgr = Arc::new(StateManager::with_store(store));
+            Arc::new(Service::start_with_state(scfg, mgr).unwrap())
+        }
+        None => Arc::new(Service::start(scfg).unwrap()),
+    };
+    let node = ClusterNode::start(svc.clone(), ccfg).unwrap();
+    (svc, node)
+}
+
+/// Clean teardown: control plane first, then the node core — the
+/// verdicts drained from `finish` join the caller's map.
+fn finish_node(
+    svc: Arc<Service>,
+    node: ClusterNode,
+    map: &mut BTreeMap<(u64, u64), EngineVerdict>,
+) {
+    node.shutdown().unwrap();
+    let svc = Arc::try_unwrap(svc)
+        .unwrap_or_else(|_| panic!("service still shared at teardown"));
+    index(svc.finish().unwrap(), map);
+}
+
+/// Mid-stream node → node migration (push AND pull) must be invisible
+/// in the verdict stream.
+fn assert_cluster_migration_invisible(engine: EngineKind) {
+    let full = reference(engine);
+    let (c1, c2) = uds_pair(&format!("mig-{engine}"));
+    let (svc1, n1) = start_node(engine, &c1, None);
+    let (svc2, n2) = start_node(engine, &c2, None);
+    assert_eq!(n1.hello_peers(), 1, "node 2 must answer hello");
+    assert_eq!(n2.hello_peers(), 1, "node 1 must answer hello");
+    // Epoch-0 agreement needs no handshake: both nodes computed the
+    // same deterministic round-robin table.
+    assert_eq!(n1.table(), n2.table());
+    assert_eq!(
+        n1.owned_shards().len() + n2.owned_shards().len(),
+        VIRTUAL_SHARDS as usize
+    );
+
+    // All traffic enters through node 1; samples for node-2 shards
+    // cross the wire as Samples frames.
+    let ingest = n1.handle();
+    for seq in 0..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+        if seq == MIGRATE_AT {
+            let moved: Vec<u32> =
+                n1.owned_shards().into_iter().take(6).collect();
+            let stats = n1.migrate_to_peer(2, &moved).unwrap();
+            assert!(stats.streams > 0, "seal must ship real state");
+            assert!(stats.bytes > 0);
+            assert_eq!(n1.epoch(), 1, "push bumps the epoch");
+            assert_eq!(
+                n1.table(),
+                n2.table(),
+                "table push must reach the peer synchronously"
+            );
+            for s in &moved {
+                assert_eq!(n2.table().owner_of(*s), 2);
+            }
+        }
+        if seq == PULL_AT {
+            let back: Vec<u32> =
+                n1.table().shards_of(2).into_iter().take(4).collect();
+            n1.pull_from_peer(2, &back).unwrap();
+            assert_eq!(n1.epoch(), 2, "pull bumps the epoch");
+            assert_eq!(n1.table(), n2.table());
+            for s in &back {
+                assert_eq!(n1.table().owner_of(*s), 1);
+            }
+        }
+    }
+    let m1 = svc1.metrics();
+    let m2 = svc2.metrics();
+    drop(ingest);
+    let mut got = BTreeMap::new();
+    finish_node(svc1, n1, &mut got);
+    finish_node(svc2, n2, &mut got);
+
+    assert_bit_identical(engine, &full, &got);
+    assert!(m1.bundle_bytes_rx.get() > 0, "pull shipped bundles back");
+    assert!(m2.bundle_bytes_rx.get() > 0, "push shipped bundles over");
+    assert!(
+        m1.samples_forwarded.get() > 0,
+        "node 1 must have forwarded node-2 samples"
+    );
+    assert!(m1.peer_connects.get() >= 1);
+    assert!(m1.heartbeats_rx.get() + m2.heartbeats_rx.get() > 0);
+}
+
+#[test]
+fn software_cross_node_migration_is_invisible() {
+    assert_cluster_migration_invisible(EngineKind::Software);
+}
+
+#[test]
+fn rtl_cross_node_migration_is_invisible() {
+    // In-flight pipeline verdicts must cross the WIRE inside the
+    // register-file snapshot and re-emerge on the other node.
+    assert_cluster_migration_invisible(EngineKind::Rtl);
+}
+
+#[test]
+fn ensemble_cross_node_migration_is_invisible() {
+    assert_cluster_migration_invisible(EngineKind::Ensemble);
+}
+
+/// Kill a whole node mid-stream; a peer adopts its shards from the
+/// shared checkpoint store; re-fed samples re-derive identically.
+fn assert_kill_and_failover_recovers(engine: EngineKind) {
+    let full = reference(engine);
+    let store = Arc::new(MemoryStore::new());
+    let (c1, c2) = uds_pair(&format!("kill-{engine}"));
+    let (svc1, n1) = start_node(engine, &c1, Some(store.clone()));
+    let (svc2, n2) = start_node(engine, &c2, Some(store.clone()));
+    n2.hello_peers();
+    let owned_before = n2.owned_shards().len();
+    assert!(owned_before < VIRTUAL_SHARDS as usize);
+
+    // Phase 1: the survivor's handle feeds both nodes.
+    let ingest = n2.handle();
+    let mut map = BTreeMap::new();
+    for seq in 0..KILL_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+
+    // Kill node 1 whole: transport down, node core aborted, every
+    // unsealed in-memory state lost. Only its periodic checkpoints in
+    // the shared store survive — exactly what a SIGKILL leaves behind.
+    n1.shutdown().unwrap();
+    let svc1 = Arc::try_unwrap(svc1)
+        .unwrap_or_else(|_| panic!("node 1 service still shared"));
+    index(svc1.abort().unwrap(), &mut map);
+
+    // Node 2 adopts everything the dead node owned.
+    let adopted = n2.failover(1).unwrap();
+    assert_eq!(
+        adopted,
+        VIRTUAL_SHARDS as usize - owned_before,
+        "failover must adopt exactly the dead node's shards"
+    );
+    assert_eq!(n2.owned_shards().len(), VIRTUAL_SHARDS as usize);
+    assert_eq!(svc2.metrics().failovers.get(), 1);
+
+    // Every stream checkpointed below the kill point; resume from the
+    // lowest watermark and re-feed — dedup absorbs the overlap.
+    let mut resume = u64::MAX;
+    for sid in 0..STREAMS {
+        let cp = store
+            .latest(sid)
+            .unwrap()
+            .expect("checkpoint before the kill");
+        assert!(cp.seq < KILL_AT);
+        resume = resume.min(cp.seq + 1);
+    }
+    for seq in resume..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    drop(ingest);
+    finish_node(svc2, n2, &mut map);
+    assert_bit_identical(engine, &full, &map);
+}
+
+#[test]
+fn software_node_kill_failover_is_bit_identical() {
+    assert_kill_and_failover_recovers(EngineKind::Software);
+}
+
+#[test]
+fn rtl_node_kill_failover_is_bit_identical() {
+    assert_kill_and_failover_recovers(EngineKind::Rtl);
+}
+
+#[test]
+fn ensemble_node_kill_failover_is_bit_identical() {
+    assert_kill_and_failover_recovers(EngineKind::Ensemble);
+}
+
+#[test]
+fn heartbeat_monitor_fails_over_automatically() {
+    let store = Arc::new(MemoryStore::new());
+    let (c1, mut c2) = uds_pair("auto");
+    // Node 2 (the surviving leader for a dead node 1's shards) runs
+    // the monitor with automatic failover armed.
+    c2.failover_ms = 400;
+    let (svc1, n1) = start_node(EngineKind::Software, &c1, Some(store.clone()));
+    let (svc2, n2) = start_node(EngineKind::Software, &c2, Some(store));
+    n2.hello_peers();
+    let ingest = n2.handle();
+    for seq in 0..KILL_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    n1.shutdown().unwrap();
+    let svc1 = Arc::try_unwrap(svc1)
+        .unwrap_or_else(|_| panic!("node 1 service still shared"));
+    svc1.abort().unwrap();
+
+    // No manual intervention: the heartbeat monitor must notice the
+    // silence and adopt within a few failover windows.
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    while n2.owned_shards().len() < VIRTUAL_SHARDS as usize {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "automatic failover never fired (owned {}/{})",
+            n2.owned_shards().len(),
+            VIRTUAL_SHARDS
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    assert_eq!(svc2.metrics().failovers.get(), 1);
+    assert_eq!(svc2.metrics().peers_alive.get(), 0);
+    assert!(n2.epoch() > 0, "failover must advance the epoch");
+
+    // The cluster keeps serving: the handle ingests everything locally.
+    for seq in KILL_AT..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    drop(ingest);
+    let mut map = BTreeMap::new();
+    finish_node(svc2, n2, &mut map);
+    assert!(!map.is_empty());
+}
+
+#[test]
+fn tcp_loopback_cluster_migrates_and_answers_status() {
+    // The TCP flavour of the transport (the CI smoke runs it across
+    // real processes; fixed high ports keep parallel tests apart).
+    let c1 = ClusterConfig {
+        node_id: 1,
+        listen: Some("127.0.0.1:17461".into()),
+        peers: vec!["2=127.0.0.1:17462".into()],
+        heartbeat_ms: 50,
+        failover_ms: 0,
+    };
+    let c2 = ClusterConfig {
+        node_id: 2,
+        listen: Some("127.0.0.1:17462".into()),
+        peers: vec!["1=127.0.0.1:17461".into()],
+        heartbeat_ms: 50,
+        failover_ms: 0,
+    };
+    let (svc1, n1) = start_node(EngineKind::Software, &c1, None);
+    let (svc2, n2) = start_node(EngineKind::Software, &c2, None);
+    assert_eq!(n1.hello_peers(), 1);
+    let ingest = n1.handle();
+    for seq in 0..40u64 {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    let moved: Vec<u32> = n1.owned_shards().into_iter().take(4).collect();
+    n1.migrate_to_peer(2, &moved).unwrap();
+    assert_eq!(n1.table(), n2.table());
+
+    // What `teda-fpga cluster --addr` does: a raw Status probe.
+    let probe = RpcClient::new(PeerAddr::parse("127.0.0.1:17461").unwrap());
+    match probe.rpc(&Msg::Status).unwrap() {
+        Msg::StatusText { text } => {
+            assert!(text.contains("node 1"), "{text}");
+            assert!(text.contains("epoch 1"), "{text}");
+        }
+        other => panic!("unexpected {} reply", other.label()),
+    }
+    drop(ingest);
+    let mut map = BTreeMap::new();
+    finish_node(svc1, n1, &mut map);
+    finish_node(svc2, n2, &mut map);
+    assert_eq!(map.len(), (STREAMS * 40) as usize);
+}

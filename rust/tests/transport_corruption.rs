@@ -1,0 +1,362 @@
+//! Corruption battery for the cluster wire format.
+//!
+//! The framing contract under attack (the network twin of
+//! `persist_corruption.rs`): bit flips, truncations, oversized length
+//! prefixes, count bombs, and mid-stream disconnects must ALWAYS yield
+//! a clean decode error or a clean disconnect — never a panic, never a
+//! silently different message, never an attacker-sized allocation.
+
+use std::io::{Cursor, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+use teda_fpga::coordinator::transport::frame::{
+    self, Msg, HEADER_LEN, MAGIC, MAX_PAYLOAD, READ_TIMEOUT, VERSION,
+};
+use teda_fpga::persist::codec::crc32;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+use teda_fpga::Result;
+
+fn sample(sid: u64, seq: u64) -> Sample {
+    Sample { stream_id: sid, seq, values: vec![0.5, -1.25, 3.0] }
+}
+
+/// One representative of every wire message, non-trivial payloads.
+fn every_msg() -> Vec<Msg> {
+    vec![
+        Msg::Hello { node_id: 1, epoch: 0 },
+        Msg::Heartbeat { node_id: 2, epoch: 7 },
+        Msg::Expect { shards: vec![0, 5, 31] },
+        Msg::Seal { shards: Vec::new() }, // pure barrier
+        Msg::Seal { shards: vec![3] },
+        Msg::Adopt {
+            shards: vec![1, 2],
+            records: vec![vec![0xAA; 33], Vec::new()],
+        },
+        Msg::Replay { samples: vec![sample(9, 120)] },
+        Msg::Samples { samples: vec![sample(1, 0), sample(2, 1)] },
+        Msg::Table { epoch: 3, owner: (0..32u64).map(|s| 1 + s % 2).collect() },
+        Msg::Settle,
+        Msg::Status,
+        Msg::Ok,
+        Msg::Denied { reason: "stale epoch 2 < 3".into() },
+        Msg::Bundle { records: vec![b"opaque persist record".to_vec()] },
+        Msg::HelloOk { node_id: 2, epoch: 3 },
+        Msg::StatusText { text: "node 1 \u{2014} epoch 3".into() },
+    ]
+}
+
+/// Hand-build a frame so individual header fields can be forged while
+/// the frame check stays valid (mirrors `frame::encode`).
+fn forge(type_id: u8, len_field: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(type_id);
+    out.push(0); // flags
+    out.extend_from_slice(&len_field.to_le_bytes());
+    let check = crc32(payload) ^ crc32(&out[4..12]);
+    out.extend_from_slice(&check.to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn every_variant_roundtrips() {
+    for msg in every_msg() {
+        let wire = frame::encode(&msg);
+        assert_eq!(
+            frame::decode(&wire).unwrap(),
+            msg,
+            "{}: slice decode",
+            msg.label()
+        );
+        let mut cur = Cursor::new(wire);
+        assert_eq!(
+            frame::read_msg(&mut cur).unwrap(),
+            Some(msg.clone()),
+            "{}: stream decode",
+            msg.label()
+        );
+    }
+}
+
+#[test]
+fn back_to_back_frames_stream_cleanly() {
+    // A connection handler reads frames in sequence off one stream;
+    // exhaustion of the stream is a clean disconnect.
+    let mut wire = Vec::new();
+    for msg in every_msg() {
+        frame::write_msg(&mut wire, &msg).unwrap();
+    }
+    let mut cur = Cursor::new(wire);
+    for msg in every_msg() {
+        assert_eq!(frame::read_msg(&mut cur).unwrap(), Some(msg));
+    }
+    assert_eq!(frame::read_msg(&mut cur).unwrap(), None);
+}
+
+#[test]
+fn every_single_bit_flip_is_rejected() {
+    // Exhaustive, not sampled: every bit of every variant's frame. The
+    // magic/version/length checks catch their own bytes, and the frame
+    // check covers everything else INCLUDING the type and flags bytes —
+    // a payload-only CRC would let a flipped type byte reinterpret the
+    // frame as a different message.
+    for msg in every_msg() {
+        let good = frame::encode(&msg);
+        for bit in 0..good.len() * 8 {
+            let mut bad = good.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                frame::decode(&bad).is_err(),
+                "{}: flipped bit {bit} still decoded",
+                msg.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_bit_corruption_never_decodes_or_lies() {
+    // Heavier damage may in principle collide the CRC; if a corrupt
+    // frame decodes at all it must decode to the IDENTICAL message
+    // (fixed seed: deterministic, no flaky collisions).
+    let mut rng = SplitMix64::new(0x7ED2_F1A6);
+    for msg in every_msg() {
+        let good = frame::encode(&msg);
+        for trial in 0..128 {
+            let mut bad = good.clone();
+            let flips = 2 + (rng.next_u64() % 63) as usize;
+            for _ in 0..flips {
+                let bit = rng.next_u64() as usize % (bad.len() * 8);
+                bad[bit / 8] ^= 1 << (bit % 8);
+            }
+            if bad == good {
+                continue; // flips cancelled out
+            }
+            match frame::decode(&bad) {
+                Err(_) => {}
+                Ok(m) => assert_eq!(
+                    m,
+                    msg,
+                    "{} trial {trial}: corrupt frame decoded to a \
+                     DIFFERENT message",
+                    msg.label()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_a_clean_error() {
+    for msg in every_msg() {
+        let good = frame::encode(&msg);
+        for cut in 0..good.len() {
+            assert!(
+                frame::decode(&good[..cut]).is_err(),
+                "{}: truncation to {cut}/{} bytes decoded",
+                msg.label(),
+                good.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn trailing_garbage_is_a_clean_error() {
+    for msg in [Msg::Settle, Msg::Hello { node_id: 1, epoch: 2 }] {
+        let mut bad = frame::encode(&msg);
+        bad.push(0x00);
+        assert!(frame::decode(&bad).is_err(), "{}", msg.label());
+    }
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocating() {
+    for len in [(MAX_PAYLOAD + 1) as u32, u32::MAX] {
+        let bad = forge(9 /* Settle */, len, &[]);
+        let err = frame::decode(&bad).unwrap_err();
+        assert!(
+            format!("{err}").contains("exceeds cap"),
+            "want a length-cap error, got: {err}"
+        );
+        // The streaming reader must reject from the header alone: the
+        // cursor holds only 16 bytes, so if read_msg had tried to
+        // allocate-and-fill the payload the error would be a
+        // mid-payload disconnect instead.
+        let mut cur = Cursor::new(bad);
+        let err = frame::read_msg(&mut cur).unwrap_err();
+        assert!(
+            format!("{err}").contains("exceeds cap"),
+            "read_msg reached past the header: {err}"
+        );
+    }
+}
+
+#[test]
+fn count_bomb_inside_payload_is_rejected() {
+    // A valid frame whose payload claims 2^30-ish elements: the
+    // bounds-checked reader must reject the count against the bytes
+    // actually present instead of allocating element-count capacity.
+    let bomb = 0x3FFF_FFFFu32.to_le_bytes();
+    for type_id in [3u8, 4, 5, 6, 7, 0x42] {
+        // Expect/Seal/Adopt/Replay/Samples/Bundle all lead with counts.
+        let bad = forge(type_id, bomb.len() as u32, &bomb);
+        assert!(
+            frame::decode(&bad).is_err(),
+            "type {type_id}: count bomb decoded"
+        );
+    }
+}
+
+#[test]
+fn unknown_type_version_and_magic_are_clean_errors() {
+    // Unknown type id with an otherwise perfect frame.
+    assert!(frame::decode(&forge(0x7F, 0, &[])).is_err());
+    // Wrong version, correct everything else.
+    let mut bad = forge(9, 0, &[]);
+    bad[4] = 0xFF;
+    let check = crc32(&[]) ^ crc32(&bad[4..12]);
+    bad[12..16].copy_from_slice(&check.to_le_bytes());
+    let err = frame::decode(&bad).unwrap_err();
+    assert!(format!("{err}").contains("version"), "{err}");
+    // Garbage that never had a magic.
+    let mut rng = SplitMix64::new(7);
+    for len in [0usize, 1, 15, 16, 17, 64, 1024] {
+        let garbage: Vec<u8> =
+            (0..len).map(|_| rng.next_u64() as u8).collect();
+        assert!(
+            frame::decode(&garbage).is_err(),
+            "{len} bytes of garbage decoded"
+        );
+    }
+}
+
+// ---- mid-stream disconnects over a real socket -------------------------
+
+/// Server accepts one connection, writes `bytes`, closes. Returns what
+/// the client's `read_msg` saw.
+fn read_after_peer_sent(bytes: &[u8]) -> Result<Option<Msg>> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload = bytes.to_vec();
+    let server = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        s.write_all(&payload).unwrap();
+        // drop(s): FIN after the partial frame.
+    });
+    let mut client = TcpStream::connect(addr).unwrap();
+    let got = frame::read_msg(&mut client);
+    server.join().unwrap();
+    got
+}
+
+/// Client connects, writes `bytes`, closes. Returns what the server's
+/// `read_msg` saw — the other direction of the same contract.
+fn server_read_after_client_sent(bytes: &[u8]) -> Result<Option<Msg>> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload = bytes.to_vec();
+    let client = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&payload).unwrap();
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let got = frame::read_msg(&mut conn);
+    client.join().unwrap();
+    got
+}
+
+#[test]
+fn clean_eof_before_a_header_is_a_disconnect_not_an_error() {
+    assert!(matches!(read_after_peer_sent(&[]), Ok(None)));
+    assert!(matches!(server_read_after_client_sent(&[]), Ok(None)));
+}
+
+#[test]
+fn whole_frames_cross_a_real_socket_in_both_directions() {
+    let msg = Msg::Hello { node_id: 1, epoch: 2 };
+    let wire = frame::encode(&msg);
+    assert_eq!(read_after_peer_sent(&wire).unwrap(), Some(msg.clone()));
+    assert_eq!(server_read_after_client_sent(&wire).unwrap(), Some(msg));
+}
+
+#[test]
+fn eof_mid_header_or_mid_payload_is_an_error_both_directions() {
+    let wire = frame::encode(&Msg::Hello { node_id: 1, epoch: 2 });
+    assert_eq!(wire.len(), HEADER_LEN + 16);
+    for cut in [1, 7, HEADER_LEN - 1, HEADER_LEN, HEADER_LEN + 5,
+        wire.len() - 1]
+    {
+        assert!(
+            read_after_peer_sent(&wire[..cut]).is_err(),
+            "client read: peer died after {cut}/{} bytes",
+            wire.len()
+        );
+        assert!(
+            server_read_after_client_sent(&wire[..cut]).is_err(),
+            "server read: peer died after {cut}/{} bytes",
+            wire.len()
+        );
+    }
+}
+
+#[test]
+fn cancellable_read_survives_timeouts_and_honors_stop() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let client = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        // Hold the connection idle across several READ_TIMEOUT ticks,
+        // then send two frames (one zero-payload) back to back.
+        thread::sleep(READ_TIMEOUT * 3);
+        frame::write_msg(&mut s, &Msg::Settle).unwrap();
+        frame::write_msg(&mut s, &Msg::Hello { node_id: 4, epoch: 0 })
+            .unwrap();
+        // Keep the socket open until the server is done reading.
+        thread::sleep(READ_TIMEOUT * 6);
+    });
+    let (conn, _) = listener.accept().unwrap();
+    conn.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+    let mut conn = conn;
+    let stop = AtomicBool::new(false);
+    // Timeout ticks while the peer is idle are absorbed, not errors —
+    // and a zero-payload frame decodes without a zero-byte read being
+    // mistaken for a disconnect.
+    assert_eq!(
+        frame::read_msg_cancellable(&mut conn, &stop).unwrap(),
+        Some(Msg::Settle)
+    );
+    assert_eq!(
+        frame::read_msg_cancellable(&mut conn, &stop).unwrap(),
+        Some(Msg::Hello { node_id: 4, epoch: 0 })
+    );
+    // With the stop flag raised, an idle connection yields a prompt
+    // clean exit instead of blocking forever.
+    stop.store(true, Ordering::Release);
+    assert_eq!(frame::read_msg_cancellable(&mut conn, &stop).unwrap(), None);
+    client.join().unwrap();
+}
+
+#[test]
+fn cancellable_read_reports_mid_frame_death() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let wire = frame::encode(&Msg::Hello { node_id: 1, epoch: 2 });
+    let half = wire.len() / 2;
+    let client = thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&wire[..half]).unwrap();
+    });
+    let (conn, _) = listener.accept().unwrap();
+    conn.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+    let mut conn = conn;
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    assert!(frame::read_msg_cancellable(&mut conn, &stop).is_err());
+    client.join().unwrap();
+}
