@@ -1,0 +1,289 @@
+//! Cluster hardening costs: what the dynamic-membership machinery
+//! actually pays —
+//!
+//! - **join-to-routable**: a cold node running `--join` against a live
+//!   sponsor, measured from `ClusterNode::start` until the table and
+//!   roster are installed (the node can route, though it owns nothing
+//!   yet);
+//! - **cross-node shard move**: one load-driven `migrate_to_peer`
+//!   step — Table push + Expect + Seal hauling the sealed bundle +
+//!   barrier + Adopt, all framed RPCs;
+//! - **buffered-burst drain**: replaying a backlog that parked in the
+//!   `ClusterHandle` ingest buffer while a peer was down, once the
+//!   peer is back.
+//!
+//! Unix-socket transport throughout: deterministic addresses, no port
+//! races, and the framing/RPC path is identical to TCP (whose raw
+//! round-trip cost `benches/transport.rs` already tracks).
+//!
+//! Emits `BENCH_cluster.json` at the repository root and appends the
+//! run to the cumulative `BENCH_trend.json`.
+//!
+//! Run: `cargo bench --bench cluster`
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use teda_fpga::config::{ClusterConfig, Json, ServiceConfig, ShardingConfig};
+use teda_fpga::coordinator::{ClusterNode, Service};
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+/// Join → leave cycles measured one per iteration.
+const JOIN_ITERS: u64 = 10;
+/// Shard moves per measured iteration.
+const MOVES: u64 = 10;
+const SHARDS_PER_MOVE: usize = 4;
+/// Streams warmed before moves / the parked burst.
+const STREAMS: u64 = 16;
+const WARM_SAMPLES: u64 = 60;
+/// Per-stream samples submitted while the peer is down (these park).
+const BURST_SAMPLES: u64 = 100;
+/// Kill → park → restart → drain cycles averaged for the drain row.
+const DRAIN_CYCLES: u64 = 3;
+
+fn num(v: f64) -> Json {
+    Json::Num((v * 10.0).round() / 10.0)
+}
+
+fn row(results: &mut Vec<Json>, metric: &str, value: f64) {
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str(metric.into()));
+    row.insert("value".into(), num(value));
+    results.push(Json::Obj(row));
+}
+
+fn sample(sid: u64, seq: u64) -> Sample {
+    let mut rng = SplitMix64::new(sid.wrapping_mul(0x9E37) ^ seq);
+    Sample {
+        stream_id: sid,
+        seq,
+        values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+    }
+}
+
+fn svc_cfg() -> ServiceConfig {
+    ServiceConfig {
+        workers: 2,
+        n_features: 2,
+        queue_capacity: 256,
+        sharding: ShardingConfig { virtual_shards: 32, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn pair_cfg(dir: &Path, tag: &str) -> (ClusterConfig, ClusterConfig) {
+    let a = format!("unix:{}", dir.join(format!("{tag}-n1.sock")).display());
+    let b = format!("unix:{}", dir.join(format!("{tag}-n2.sock")).display());
+    (
+        ClusterConfig {
+            node_id: 1,
+            listen: Some(a.clone()),
+            peers: vec![format!("2={b}")],
+            heartbeat_ms: 500,
+            failover_ms: 0,
+            ..Default::default()
+        },
+        ClusterConfig {
+            node_id: 2,
+            listen: Some(b),
+            peers: vec![format!("1={a}")],
+            heartbeat_ms: 500,
+            failover_ms: 0,
+            ..Default::default()
+        },
+    )
+}
+
+fn start_pair(
+    dir: &Path,
+    tag: &str,
+) -> (Arc<Service>, ClusterNode, Arc<Service>, ClusterNode, ClusterConfig)
+{
+    let (c1, c2) = pair_cfg(dir, tag);
+    let svc1 = Arc::new(Service::start(svc_cfg()).expect("node 1 svc"));
+    let svc2 = Arc::new(Service::start(svc_cfg()).expect("node 2 svc"));
+    let n1 = ClusterNode::start(svc1.clone(), &c1).expect("node 1");
+    let n2 = ClusterNode::start(svc2.clone(), &c2).expect("node 2");
+    assert_eq!(n1.hello_peers(), 1, "node 2 must answer hello");
+    (svc1, n1, svc2, n2, c2)
+}
+
+fn finish(svc: Arc<Service>, tag: &str) {
+    let svc = Arc::try_unwrap(svc)
+        .unwrap_or_else(|_| panic!("{tag} service still shared"));
+    drop(svc.finish().expect("finish"));
+}
+
+/// Time from `ClusterNode::start` with `join` set until the joiner is
+/// routable (table + roster installed, peers helloed). Each iteration
+/// joins as a NEW member (the previous cycle `leave`s cleanly), so the
+/// sponsor walks the full admit path every time: roster install,
+/// epoch+1 re-broadcast, join gossip, JoinOk.
+fn join_row(results: &mut Vec<Json>, dir: &Path) {
+    let (svc1, n1, svc2, n2, _) = start_pair(dir, "join");
+    let sponsor = n1.bound_addr();
+    let svc3 = Arc::new(Service::start(svc_cfg()).expect("joiner svc"));
+    let mut round = 0u64;
+    let bench = Bench::new("join_to_routable")
+        .iters(JOIN_ITERS as usize)
+        .units(1, "joins")
+        .run(|| {
+            round += 1;
+            let c3 = ClusterConfig {
+                node_id: 3,
+                listen: Some(format!(
+                    "unix:{}",
+                    dir.join(format!("join-n3-{round}.sock")).display()
+                )),
+                peers: vec![],
+                join: Some(sponsor.clone()),
+                heartbeat_ms: 500,
+                failover_ms: 0,
+                ..Default::default()
+            };
+            let n3 = ClusterNode::start(svc3.clone(), &c3).expect("join");
+            black_box(n3.table());
+            n3.leave().expect("leave");
+            n3.shutdown().expect("joiner shutdown");
+        });
+    row(results, "join_to_routable_ns", bench.ns_per_unit);
+    println!("  join → routable: {:.0} ns", bench.ns_per_unit);
+    n1.shutdown().expect("node 1 shutdown");
+    n2.shutdown().expect("node 2 shutdown");
+    finish(svc1, "node 1");
+    finish(svc2, "node 2");
+    finish(svc3, "joiner");
+}
+
+/// One cross-node shard move — the step the load-driven rebalancer
+/// takes when it sheds hot shards to the coldest peer.
+fn shard_move_row(results: &mut Vec<Json>, dir: &Path) {
+    let (svc1, n1, svc2, n2, _) = start_pair(dir, "move");
+    let ingest = n1.handle();
+    for seq in 0..WARM_SAMPLES {
+        ingest
+            .submit_batch((0..STREAMS).map(|sid| sample(sid, seq)).collect())
+            .expect("warm");
+    }
+    let shards: Vec<u32> = n1
+        .owned_shards()
+        .into_iter()
+        .take(SHARDS_PER_MOVE)
+        .collect();
+    let mut here = true;
+    let bench = Bench::new("shard_move")
+        .iters(20)
+        .units(MOVES, "moves")
+        .run(|| {
+            for _ in 0..MOVES {
+                if here {
+                    n1.migrate_to_peer(2, &shards).expect("push 1→2");
+                } else {
+                    n2.migrate_to_peer(1, &shards).expect("push 2→1");
+                }
+                here = !here;
+            }
+        });
+    row(results, "shard_move_ns", bench.ns_per_unit);
+    println!(
+        "  cross-node shard move ({SHARDS_PER_MOVE} shards): {:.0} ns",
+        bench.ns_per_unit
+    );
+    drop(ingest);
+    n1.shutdown().expect("node 1 shutdown");
+    n2.shutdown().expect("node 2 shutdown");
+    finish(svc1, "node 1");
+    finish(svc2, "node 2");
+}
+
+/// Drain cost per parked sample: kill node 2, park a burst of its
+/// share in node 1's ingest buffer, bring node 2 back, and measure
+/// replaying the backlog until the buffer is empty. Hand-timed — the
+/// benchkit warmup pass would drain the one-shot backlog before the
+/// measured pass — with a few kill→park→restart cycles averaged.
+fn burst_drain_row(results: &mut Vec<Json>, dir: &Path) {
+    let (svc1, n1, svc2, mut n2, c2) = start_pair(dir, "burst");
+    let ingest = n1.handle();
+    for seq in 0..WARM_SAMPLES {
+        ingest
+            .submit_batch((0..STREAMS).map(|sid| sample(sid, seq)).collect())
+            .expect("warm");
+    }
+    let mut drained = 0u64;
+    let mut spent_ns = 0f64;
+    let mut seq0 = WARM_SAMPLES;
+    for _cycle in 0..DRAIN_CYCLES {
+        // Down: node 2's control plane dies (its service survives —
+        // this is the failover *window*, not a data loss drill).
+        n2.shutdown().expect("node 2 shutdown");
+        for seq in seq0..seq0 + BURST_SAMPLES {
+            ingest
+                .submit_batch(
+                    (0..STREAMS).map(|sid| sample(sid, seq)).collect(),
+                )
+                .expect("burst must park, not error");
+        }
+        seq0 += BURST_SAMPLES;
+        let parked = ingest.parked() as u64;
+        assert!(parked > 0, "node 2's share of the burst must park");
+        // Back: rebind over the stale socket (the designed restart
+        // path); node 1's peer client reconnects on the next RPC.
+        n2 = ClusterNode::start(svc2.clone(), &c2).expect("restart");
+        let t0 = std::time::Instant::now();
+        while ingest.flush_parked() > 0 {}
+        spent_ns += t0.elapsed().as_nanos() as f64;
+        drained += parked;
+    }
+    let ns_per_sample = spent_ns / drained as f64;
+    row(results, "burst_drain_ns", ns_per_sample);
+    println!(
+        "  buffered-burst drain: {drained} samples over {DRAIN_CYCLES} \
+         cycles, {ns_per_sample:.0} ns/sample"
+    );
+    drop(ingest);
+    n1.shutdown().expect("node 1 shutdown");
+    n2.shutdown().expect("node 2 restart shutdown");
+    finish(svc1, "node 1");
+    finish(svc2, "node 2");
+}
+
+fn main() {
+    println!("== cluster hardening ==\n");
+    let dir = teda_fpga::util::unique_temp_dir("bench-cluster");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let mut results = Vec::new();
+
+    join_row(&mut results, &dir);
+    shard_move_row(&mut results, &dir);
+    burst_drain_row(&mut results, &dir);
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("cluster".into()));
+    doc.insert(
+        "workload".into(),
+        Json::Str(format!(
+            "{JOIN_ITERS} join→leave cycles; {MOVES} x \
+             {SHARDS_PER_MOVE}-shard cross-node moves/iter with {STREAMS} \
+             warm streams; {BURST_SAMPLES}-deep per-stream burst parked \
+             against a down peer then drained, unix-socket transport"
+        )),
+    );
+    doc.insert("results".into(), Json::Arr(results));
+    let json = Json::Obj(doc);
+
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent");
+    let path = root.join("BENCH_cluster.json");
+    std::fs::write(&path, json.to_string_compact() + "\n")
+        .expect("write BENCH_cluster.json");
+    println!("wrote {}", path.display());
+    match teda_fpga::util::benchkit::append_trend(root, "cluster", &json) {
+        Ok(true) => println!("appended run to BENCH_trend.json"),
+        Ok(false) => println!("BENCH_trend.json already has this run"),
+        Err(e) => eprintln!("warning: trend append failed: {e}"),
+    }
+}

@@ -71,7 +71,7 @@ fn svc_cfg() -> ServiceConfig {
 fn codec_rows(results: &mut Vec<Json>) {
     let batch: Vec<Sample> = (0..64).map(|i| sample(i, i * 7)).collect();
     let cases: Vec<(&str, Msg)> = vec![
-        ("heartbeat", Msg::Heartbeat { node_id: 1, epoch: 3 }),
+        ("heartbeat", Msg::Heartbeat { node_id: 1, epoch: 3, load: 512 }),
         ("batch64", Msg::Samples { samples: batch }),
         (
             "bundle64k",
@@ -122,7 +122,7 @@ fn rpc_row(results: &mut Vec<Json>) {
         }
     });
     let client = RpcClient::new(PeerAddr::Tcp(addr.to_string()));
-    let probe = Msg::Heartbeat { node_id: 1, epoch: 0 };
+    let probe = Msg::Heartbeat { node_id: 1, epoch: 0, load: 0 };
     client.rpc(&probe).expect("rpc warmup");
     let rpc = Bench::new("rpc_roundtrip")
         .iters(20)
@@ -184,6 +184,7 @@ fn migrate_tcp_row(results: &mut Vec<Json>) -> f64 {
         peers: vec![format!("2={b}")],
         heartbeat_ms: 500,
         failover_ms: 0,
+        ..Default::default()
     };
     let c2 = ClusterConfig {
         node_id: 2,
@@ -191,6 +192,7 @@ fn migrate_tcp_row(results: &mut Vec<Json>) -> f64 {
         peers: vec![format!("1={a}")],
         heartbeat_ms: 500,
         failover_ms: 0,
+        ..Default::default()
     };
     let svc1 = Arc::new(Service::start(svc_cfg()).expect("node 1 svc"));
     let svc2 = Arc::new(Service::start(svc_cfg()).expect("node 2 svc"));

@@ -102,6 +102,26 @@ pub struct ClusterConfig {
     /// failover off; migration and manual failover still work).
     /// TOML/JSON: `cluster.failover_ms`.
     pub failover_ms: u64,
+    /// Join an existing cluster through the live member at this
+    /// address instead of booting from a static roster (`peers` must
+    /// be empty; the roster arrives in the JoinOk reply). TOML/JSON:
+    /// `cluster.join`, CLI: `--join ADDR`.
+    pub join: Option<String>,
+    /// Minimum quiet window between cross-node load rebalances, in
+    /// milliseconds (0 = load-driven rebalancing off). TOML/JSON:
+    /// `cluster.rebalance_ms`, CLI: `--cluster-rebalance-ms`.
+    pub rebalance_ms: u64,
+    /// Donor gate for cross-node rebalancing: a node only sheds load
+    /// while its windowed ingest rate exceeds this multiple of the
+    /// cluster average (must be > 1.0 when rebalancing is on).
+    /// TOML/JSON: `cluster.rebalance_threshold`.
+    pub rebalance_threshold: f64,
+    /// Capacity (samples) of the failover-window ingest buffer: a
+    /// burst whose owner is mid-failover (or mid-join) parks locally
+    /// and replays when the route heals (0 = buffering off; forward
+    /// failures surface as errors). TOML/JSON: `cluster.ingest_buffer`,
+    /// CLI: `--ingest-buffer`.
+    pub ingest_buffer: u64,
 }
 
 impl Default for ClusterConfig {
@@ -112,6 +132,10 @@ impl Default for ClusterConfig {
             peers: Vec::new(),
             heartbeat_ms: 500,
             failover_ms: 0,
+            join: None,
+            rebalance_ms: 0,
+            rebalance_threshold: 1.5,
+            ingest_buffer: 65_536,
         }
     }
 }
@@ -370,6 +394,18 @@ impl ServiceConfig {
         if let Some(v) = doc.u64_("cluster.failover_ms") {
             cfg.cluster.failover_ms = v;
         }
+        if let Some(v) = doc.str_("cluster.join") {
+            cfg.cluster.join = Some(v.to_string());
+        }
+        if let Some(v) = doc.u64_("cluster.rebalance_ms") {
+            cfg.cluster.rebalance_ms = v;
+        }
+        if let Some(v) = doc.f64_("cluster.rebalance_threshold") {
+            cfg.cluster.rebalance_threshold = v;
+        }
+        if let Some(v) = doc.u64_("cluster.ingest_buffer") {
+            cfg.cluster.ingest_buffer = v;
+        }
         cfg.ensemble.apply_toml(&doc)?;
         cfg.validate()?;
         Ok(cfg)
@@ -503,6 +539,24 @@ impl ServiceConfig {
             {
                 cfg.cluster.failover_ms = v;
             }
+            if let Some(v) = cluster.get("join").and_then(Json::as_str) {
+                cfg.cluster.join = Some(v.to_string());
+            }
+            if let Some(v) =
+                cluster.get("rebalance_ms").and_then(Json::as_u64)
+            {
+                cfg.cluster.rebalance_ms = v;
+            }
+            if let Some(v) =
+                cluster.get("rebalance_threshold").and_then(Json::as_f64)
+            {
+                cfg.cluster.rebalance_threshold = v;
+            }
+            if let Some(v) =
+                cluster.get("ingest_buffer").and_then(Json::as_u64)
+            {
+                cfg.cluster.ingest_buffer = v;
+            }
         }
         if let Some(batcher) = doc.get("batcher") {
             if let Some(v) =
@@ -607,6 +661,39 @@ impl ServiceConfig {
             if self.cluster.heartbeat_ms == 0 {
                 return Err(Error::Config(
                     "cluster.heartbeat_ms must be > 0".into(),
+                ));
+            }
+        }
+        if let Some(join) = &self.cluster.join {
+            if !join.contains(':') {
+                return Err(Error::Config(format!(
+                    "cluster.join '{join}' must be host:port or \
+                     unix:/path"
+                )));
+            }
+            if !self.cluster.peers.is_empty() {
+                return Err(Error::Config(
+                    "cluster.join and cluster.peers are mutually \
+                     exclusive (the roster arrives from the sponsor)"
+                        .into(),
+                ));
+            }
+            if self.cluster.listen.is_none() {
+                return Err(Error::Config(
+                    "cluster.join requires cluster.listen (peers must \
+                     be able to dial back)"
+                        .into(),
+                ));
+            }
+        }
+        if self.cluster.rebalance_ms > 0 {
+            // Same NaN discipline as sharding.imbalance_threshold.
+            let t = self.cluster.rebalance_threshold;
+            if t.is_nan() || t <= 1.0 {
+                return Err(Error::Config(
+                    "cluster.rebalance_threshold must be > 1.0 (1.0 \
+                     would rebalance forever)"
+                        .into(),
                 ));
             }
         }
@@ -776,6 +863,9 @@ mod tests {
             peers = ["1=127.0.0.1:7442", "2=unix:/tmp/teda-2.sock"]
             heartbeat_ms = 250
             failover_ms = 1500
+            rebalance_ms = 2000
+            rebalance_threshold = 1.75
+            ingest_buffer = 4096
             [ensemble]
             combiner = "adaptive"
             members = ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]
@@ -794,7 +884,10 @@ mod tests {
             "cluster": {"node_id": 3, "listen": "127.0.0.1:7441",
                         "peers": ["1=127.0.0.1:7442",
                                   "2=unix:/tmp/teda-2.sock"],
-                        "heartbeat_ms": 250, "failover_ms": 1500},
+                        "heartbeat_ms": 250, "failover_ms": 1500,
+                        "rebalance_ms": 2000,
+                        "rebalance_threshold": 1.75,
+                        "ingest_buffer": 4096},
             "ensemble": {"combiner": "adaptive",
                          "members": ["teda", "rtl:m=2.5", "zscore:m=3,w=32"]}
         }"#;
@@ -821,6 +914,9 @@ mod tests {
         assert_eq!(a.cluster.peers.len(), 2);
         assert_eq!(a.cluster.heartbeat_ms, 250);
         assert_eq!(a.cluster.failover_ms, 1500);
+        assert_eq!(a.cluster.rebalance_ms, 2000);
+        assert_eq!(a.cluster.rebalance_threshold, 1.75);
+        assert_eq!(a.cluster.ingest_buffer, 4096);
     }
 
     #[test]
@@ -829,6 +925,10 @@ mod tests {
         assert!(!cfg.cluster.enabled(), "clustering off by default");
         assert_eq!(cfg.cluster.heartbeat_ms, 500);
         assert_eq!(cfg.cluster.failover_ms, 0, "auto failover off");
+        assert!(cfg.cluster.join.is_none(), "static roster by default");
+        assert_eq!(cfg.cluster.rebalance_ms, 0, "load rebalance off");
+        assert_eq!(cfg.cluster.rebalance_threshold, 1.5);
+        assert_eq!(cfg.cluster.ingest_buffer, 65_536);
 
         let cfg = ServiceConfig::from_toml(
             "[cluster]\nnode_id = 1\nlisten = \"127.0.0.1:0\"\n\
@@ -874,6 +974,38 @@ mod tests {
             r#"{"cluster": {"peers": ["1=a:1", "1=b:2"]}}"#
         )
         .is_err());
+        // Join: needs a dialable form, a listen address, and no
+        // static roster alongside it.
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nlisten = \"127.0.0.1:0\"\njoin = \"localhost\"\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\njoin = \"127.0.0.1:7441\"\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nnode_id = 2\nlisten = \"127.0.0.1:0\"\n\
+             join = \"127.0.0.1:7441\"\npeers = [\"1=127.0.0.1:7441\"]\n"
+        )
+        .is_err());
+        // Rebalance threshold must be > 1.0 when rebalancing is on
+        // (and NaN must not slip through).
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nrebalance_ms = 1000\nrebalance_threshold = 1.0\n"
+        )
+        .is_err());
+        assert!(ServiceConfig::from_toml(
+            "[cluster]\nrebalance_ms = 1000\nrebalance_threshold = nan\n"
+        )
+        .is_err());
+        assert!(
+            ServiceConfig::from_toml(
+                "[cluster]\nrebalance_threshold = 1.0\n"
+            )
+            .is_ok(),
+            "threshold unchecked while rebalancing is off"
+        );
     }
 
     #[test]

@@ -10,14 +10,15 @@
 //!   `adopt_shards` / `replay_strays` / `reroute_strays`) present the
 //!   whole process as one [`Transport`]-shaped endpoint fanned out
 //!   over the local workers.
-//! - **Control plane** (this module): a static peer roster, a
-//!   deterministic initial ownership table (every node computes the
-//!   same round-robin [`NodeTable`] at epoch 0, so no handshake is
-//!   needed to agree), heartbeat liveness, epoch-numbered table
-//!   broadcasts, node → node migration driven by the *same*
-//!   [`migrate_over`] sequence the in-process rebalancer uses, and
-//!   failover: when a peer dies, the lowest-id survivor adopts its
-//!   shards from the shared checkpoint store.
+//! - **Control plane** (this module): a peer roster (static from
+//!   config, or grown at runtime via `Join`), a deterministic initial
+//!   ownership table (every node of a static roster computes the same
+//!   round-robin [`NodeTable`] at epoch 0, so no handshake is needed
+//!   to agree), heartbeat liveness, epoch-numbered table broadcasts,
+//!   node → node migration driven by the *same* [`migrate_over`]
+//!   sequence the in-process rebalancer uses, and failover: when a
+//!   peer dies, the lowest-id survivor adopts its shards from the
+//!   shared checkpoint store.
 //! - **Transport** ([`super::transport`]): the length-prefixed,
 //!   CRC-framed TCP/UDS protocol. Sealed bundles cross as unmodified
 //!   persist-codec records.
@@ -36,10 +37,34 @@
 //! restore at their checkpointed watermarks — samples at or below a
 //! watermark are deduplicated, so re-feeding a window of recent
 //! samples converges on bit-identical verdicts.
+//!
+//! Three runtime behaviours layer on top of that base:
+//!
+//! - **Dynamic join** (`cluster.join = ADDR`): a new node registers
+//!   with any live member (`Join` → `JoinOk`). The sponsor installs
+//!   the joiner, re-broadcasts the table at epoch+1 and gossips the
+//!   join to the rest of the roster (each member relays a given
+//!   joiner at most once, so the gossip terminates); the joiner
+//!   learns the roster + table from `JoinOk` and pulls its uniform
+//!   share of shards with [`ClusterNode::pull_share`] — the ordinary
+//!   seal → adopt path, so in-flight work survives.
+//! - **Load-driven rebalancing** (`cluster.rebalance_ms > 0`): every
+//!   heartbeat carries the sender's windowed ingest rate, so each
+//!   member knows every peer's load. A node sustaining more than
+//!   `cluster.rebalance_threshold` × the cluster average sheds its
+//!   hottest shards to the coldest live peer via
+//!   [`ClusterNode::migrate_to_peer`] — at most once per
+//!   `rebalance_ms` window, rebaselining the load window after each
+//!   move (hysteresis against ping-pong).
+//! - **Ingest buffering** (`cluster.ingest_buffer > 0`): a burst that
+//!   cannot be forwarded right now (owner mid-failover, or no table
+//!   yet mid-join) parks in a bounded local buffer and replays once
+//!   the route heals; admission is all-or-nothing so an overflow is
+//!   an error the caller can retry, never a silent drop.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -51,7 +76,9 @@ use super::transport::{
     migrate_over, MigrationStats, StraySample, Transport,
 };
 use crate::config::ClusterConfig;
-use crate::obs::{record, EventKind, NO_WORKER};
+use crate::obs::{
+    record, EventKind, ShardDelta, ShardWindow, NO_WORKER,
+};
 use crate::stream::Sample;
 use crate::{Error, Result};
 
@@ -120,8 +147,14 @@ impl NodeTable {
 
 struct PeerState {
     alive: bool,
-    last_seen: Option<Instant>,
+    /// Stamped at member-install time (not first contact): a peer —
+    /// static or just-admitted — gets a full failover window from the
+    /// moment we learn of it before silence can declare it dead.
+    last_seen: Instant,
     epoch: u64,
+    /// The peer's windowed ingest rate (samples/s), as self-reported
+    /// by its latest heartbeat. Feeds the cross-node rebalancer.
+    load: u64,
 }
 
 struct Peer {
@@ -130,14 +163,53 @@ struct Peer {
     state: Mutex<PeerState>,
 }
 
+/// Windowed view of this node's own ingest, shared between the
+/// heartbeat sender (advertises `rate`) and the cross-node rebalancer
+/// (ranks shards by the per-shard `deltas`).
+struct BalanceState {
+    window: ShardWindow,
+    /// Per-shard activity of the last closed window.
+    deltas: Vec<ShardDelta>,
+    /// Wall seconds the last window spanned.
+    dt: f64,
+    /// Node-total ingest rate of the last window (samples/s).
+    rate: f64,
+    last_sample: Instant,
+    /// Hysteresis anchor: no rebalance decision until a full quiet
+    /// `rebalance_every` has passed since the previous move.
+    last_move: Instant,
+}
+
 struct Shared {
     node_id: u64,
     svc: Arc<Service>,
     table: Mutex<NodeTable>,
-    peers: BTreeMap<u64, Peer>,
+    /// Member roster. Write-locked only by join/leave; every steady
+    /// state path takes brief read locks (heartbeats, forwarding).
+    peers: RwLock<BTreeMap<u64, Arc<Peer>>>,
     heartbeat_every: Duration,
     /// 0 = automatic failover off.
     failover_after: Duration,
+    /// 0 = load-driven cross-node rebalancing off.
+    rebalance_every: Duration,
+    /// Donor gate: rebalance only above `threshold ×` cluster-average
+    /// load (> 1.0, validated by config).
+    rebalance_threshold: f64,
+    balance: Mutex<BalanceState>,
+    /// 0 = ingest park-and-replay buffering off.
+    ingest_cap: usize,
+    /// Samples admitted by [`ClusterHandle`] that could not be routed
+    /// (owner mid-failover, table mid-join); drained every heartbeat.
+    ingest_park: Mutex<VecDeque<Sample>>,
+    /// Serializes park drains. Without it, two overlapping drains
+    /// could deliver a newer slice of a stream before an older one
+    /// finishes its (failed → repark) round-trip, and the watermark
+    /// guard would then drop the older samples as stale — losing
+    /// verdicts. Never held while `ingest_park` admission runs, so
+    /// submitters don't block on a drain's network I/O.
+    drain_lock: Mutex<()>,
+    /// Cluster-autoscale recommendation (mirrors `node_scale_hint`).
+    scale_hint: AtomicBool,
     /// Serializes node-level moves and failovers against each other.
     move_lock: Mutex<()>,
     stop: AtomicBool,
@@ -146,10 +218,74 @@ struct Shared {
 }
 
 impl Shared {
-    fn peer(&self, id: u64) -> Result<&Peer> {
-        self.peers.get(&id).ok_or_else(|| {
-            Error::Stream(format!("unknown cluster peer {id}"))
-        })
+    fn peer(&self, id: u64) -> Result<Arc<Peer>> {
+        self.peers.read().unwrap().get(&id).cloned().ok_or_else(
+            || Error::Stream(format!("unknown cluster peer {id}")),
+        )
+    }
+
+    fn peer_snapshot(&self) -> Vec<Arc<Peer>> {
+        self.peers.read().unwrap().values().cloned().collect()
+    }
+
+    /// Install `id @ addr` into the roster. Returns `Ok(true)` when
+    /// the member is newly installed (the caller relays the join
+    /// exactly then, so gossip terminates), `Ok(false)` for an
+    /// already-known member (liveness restamped). A known id
+    /// re-joining from a *different* address replaces the entry — a
+    /// restarted node is a new incarnation.
+    fn add_peer(&self, id: u64, addr: &str, alive: bool) -> Result<bool> {
+        if id == self.node_id {
+            return Err(Error::Stream(format!(
+                "node {id} cannot be its own peer"
+            )));
+        }
+        let parsed = PeerAddr::parse(addr)?;
+        let mut peers = self.peers.write().unwrap();
+        if let Some(p) = peers.get(&id) {
+            if p.client.addr().to_string() == parsed.to_string() {
+                let mut st = p.state.lock().unwrap();
+                st.last_seen = Instant::now();
+                if alive {
+                    st.alive = true;
+                }
+                return Ok(false);
+            }
+            // Same id, new address: fall through and replace.
+        }
+        peers.insert(
+            id,
+            Arc::new(Peer {
+                id,
+                client: Arc::new(RpcClient::new(parsed)),
+                state: Mutex::new(PeerState {
+                    alive,
+                    last_seen: Instant::now(),
+                    epoch: 0,
+                    load: 0,
+                }),
+            }),
+        );
+        drop(peers);
+        self.svc.metrics().member_joins.inc();
+        record(EventKind::MemberJoin, id, 0, NO_WORKER);
+        self.refresh_peers_alive();
+        Ok(true)
+    }
+
+    /// Drop `id` from the roster (a clean `Leave`). Returns whether
+    /// the member was known.
+    fn remove_peer(&self, id: u64) -> bool {
+        let removed = self.peers.write().unwrap().remove(&id);
+        match removed {
+            Some(p) => {
+                p.client.disconnect();
+                self.svc.metrics().member_leaves.inc();
+                self.refresh_peers_alive();
+                true
+            }
+            None => false,
+        }
     }
 
     fn epoch(&self) -> u64 {
@@ -157,22 +293,27 @@ impl Shared {
     }
 
     /// Liveness bookkeeping for any message proving `id` is up.
-    fn note_alive(&self, id: u64, epoch: u64) {
-        let Some(peer) = self.peers.get(&id) else { return };
+    /// `load` is only known for heartbeat *requests* (they carry the
+    /// sender's windowed ingest rate); other proofs leave it alone.
+    fn note_alive(&self, id: u64, epoch: u64, load: Option<u64>) {
+        let Ok(peer) = self.peer(id) else { return };
         let mut st = peer.state.lock().unwrap();
         if !st.alive {
             self.svc.metrics().peer_connects.inc();
             record(EventKind::PeerConnect, id, 0, NO_WORKER);
         }
         st.alive = true;
-        st.last_seen = Some(Instant::now());
+        st.last_seen = Instant::now();
         st.epoch = epoch;
+        if let Some(load) = load {
+            st.load = load;
+        }
         drop(st);
         self.refresh_peers_alive();
     }
 
     fn note_dead(&self, id: u64) {
-        if let Some(peer) = self.peers.get(&id) {
+        if let Ok(peer) = self.peer(id) {
             peer.state.lock().unwrap().alive = false;
             peer.client.disconnect();
         }
@@ -181,8 +322,8 @@ impl Shared {
 
     fn refresh_peers_alive(&self) {
         let alive = self
-            .peers
-            .values()
+            .peer_snapshot()
+            .iter()
             .filter(|p| p.state.lock().unwrap().alive)
             .count();
         self.svc.metrics().peers_alive.set(alive as u64);
@@ -245,7 +386,7 @@ impl Shared {
             owner: next.owner.clone(),
         };
         self.apply_table(next.epoch, next.owner)?;
-        for peer in self.peers.values() {
+        for peer in self.peer_snapshot() {
             let _ = peer.client.rpc(&msg);
         }
         Ok(())
@@ -272,8 +413,8 @@ impl Shared {
         for (owner, group) in per_owner {
             // A shard marked foreign but mapping to self is a transient
             // race with a table install: park, the next drain re-reads.
-            let peer = match self.peers.get(&owner) {
-                Some(p) if owner != self.node_id => p,
+            let peer = match self.peer(owner) {
+                Ok(p) if owner != self.node_id => p,
                 _ => {
                     failed.extend(group);
                     continue;
@@ -300,19 +441,47 @@ impl Shared {
         let m = self.svc.metrics();
         match msg {
             Msg::Hello { node_id, epoch } => {
-                self.note_alive(node_id, epoch);
+                self.note_alive(node_id, epoch, None);
                 Msg::HelloOk {
                     node_id: self.node_id,
                     epoch: self.epoch(),
                 }
             }
-            Msg::Heartbeat { node_id, epoch } => {
+            Msg::Heartbeat { node_id, epoch, load } => {
                 m.heartbeats_rx.inc();
-                self.note_alive(node_id, epoch);
+                self.note_alive(node_id, epoch, Some(load));
                 record(EventKind::Heartbeat, node_id, 0, NO_WORKER);
                 Msg::HelloOk {
                     node_id: self.node_id,
                     epoch: self.epoch(),
+                }
+            }
+            Msg::Join { node_id, addr } => {
+                match self.admit(node_id, addr) {
+                    Ok(reply) => reply,
+                    Err(e) => Msg::Denied { reason: e.to_string() },
+                }
+            }
+            Msg::Leave { node_id } => {
+                let owned = self
+                    .table
+                    .lock()
+                    .unwrap()
+                    .shards_of(node_id)
+                    .len();
+                if owned > 0 {
+                    Msg::Denied {
+                        reason: format!(
+                            "node {node_id} still owns {owned} shards; \
+                             migrate them away first"
+                        ),
+                    }
+                } else if self.remove_peer(node_id) {
+                    Msg::Ok
+                } else {
+                    Msg::Denied {
+                        reason: format!("unknown cluster peer {node_id}"),
+                    }
                 }
             }
             Msg::Expect { shards } => {
@@ -391,6 +560,50 @@ impl Shared {
         }
     }
 
+    /// Sponsor a joining node: install it into the roster, force a
+    /// table re-broadcast at epoch+1 (unchanged ownership — the bump
+    /// makes every member, joiner included, converge on a fresh
+    /// epoch), gossip the join to the rest of the roster, and reply
+    /// with the table plus the full member list so the joiner can
+    /// dial everyone. Only a *newly* installed member is relayed, so
+    /// the gossip visits each member once and terminates.
+    fn admit(&self, id: u64, addr: String) -> Result<Msg> {
+        if self.table.lock().unwrap().owner.is_empty() {
+            return Err(Error::Stream(
+                "not bootstrapped yet (still joining): cannot sponsor"
+                    .into(),
+            ));
+        }
+        let newly = self.add_peer(id, &addr, true)?;
+        if newly {
+            let next = self
+                .table
+                .lock()
+                .unwrap()
+                .with_owner(&[], self.node_id);
+            // Best-effort: a member that misses the broadcast
+            // self-heals on the next heartbeat's epoch re-push.
+            let _ = self.install_table(next);
+            let relay = Msg::Join { node_id: id, addr: addr.clone() };
+            for p in self.peer_snapshot() {
+                if p.id != id {
+                    let _ = p.client.rpc(&relay);
+                }
+            }
+        }
+        let (epoch, owner) = {
+            let t = self.table.lock().unwrap();
+            (t.epoch, t.owner.clone())
+        };
+        let mut peers = vec![(self.node_id, self.bound.clone())];
+        for p in self.peer_snapshot() {
+            if p.id != id {
+                peers.push((p.id, p.client.addr().to_string()));
+            }
+        }
+        Ok(Msg::JoinOk { epoch, owner, peers })
+    }
+
     fn status(&self) -> String {
         let table = self.table.lock().unwrap();
         let owned = table.shards_of(self.node_id).len();
@@ -407,39 +620,67 @@ impl Shared {
             m.samples_in.get(),
             self.started.elapsed().as_secs_f64(),
         );
-        for peer in self.peers.values() {
+        for peer in self.peer_snapshot() {
             let st = peer.state.lock().unwrap();
             out.push_str(&format!(
-                "peer {} @ {} {} (epoch {}, owns {})\n",
+                "peer {} @ {} {} (epoch {}, owns {}, load {}/s)\n",
                 peer.id,
                 peer.client.addr(),
                 if st.alive { "alive" } else { "unseen/dead" },
                 st.epoch,
                 table.shards_of(peer.id).len(),
+                st.load,
             ));
+        }
+        let parked = self.ingest_park.lock().unwrap().len();
+        if parked > 0 {
+            out.push_str(&format!("ingest parked {parked}\n"));
+        }
+        if self.scale_hint.load(Ordering::Relaxed) {
+            out.push_str(
+                "scale hint: add a node (sustained pressure at max \
+                 workers)\n",
+            );
         }
         out
     }
 
     /// Am I the designated survivor for `dead`? Exactly one node may
-    /// run a failover: the lowest-id member still alive.
+    /// run a failover: the lowest-id member still alive. A lower-id
+    /// peer we have *marked* dead gets one direct probe before we
+    /// claim leadership — a one-sided link loss must not elect two
+    /// leaders (and if both still do race, the epoch guard in
+    /// [`Shared::failover`] settles it).
     fn failover_leader(&self, dead: u64) -> bool {
-        self.peers.values().all(|p| {
-            p.id == dead
-                || p.id > self.node_id
-                || !p.state.lock().unwrap().alive
-        })
+        for p in self.peer_snapshot() {
+            if p.id == dead || p.id > self.node_id {
+                continue;
+            }
+            if p.state.lock().unwrap().alive {
+                return false;
+            }
+            let req = Msg::Hello {
+                node_id: self.node_id,
+                epoch: self.epoch(),
+            };
+            if let Ok(Msg::HelloOk { epoch, .. }) = p.client.rpc(&req) {
+                self.note_alive(p.id, epoch, None);
+                return false;
+            }
+        }
+        true
     }
 
     /// Adopt every shard `dead` owned, recovering stream state from
-    /// the shared checkpoint store. Returns how many shards moved.
+    /// the shared checkpoint store. Returns how many shards moved —
+    /// 0 when this node lost the claim race to another leader.
     fn failover(&self, dead: u64) -> Result<usize> {
         let _guard = self.move_lock.lock().unwrap();
-        let (shards, next) = {
+        let (observed, shards, next) = {
             let t = self.table.lock().unwrap();
             let shards = t.shards_of(dead);
             let next = t.with_owner(&shards, self.node_id);
-            (shards, next)
+            (t.epoch, shards, next)
         };
         if shards.is_empty() {
             return Ok(0);
@@ -449,7 +690,27 @@ impl Shared {
         // durable store this degrades to ownership-only adoption.
         let _ = self.svc.state_manager().recover();
         self.svc.expect_shards(&shards)?;
-        self.install_table(next)?;
+        // Compare-and-refuse: the claim only lands on the epoch it
+        // was computed against. If a racing leader moved the table
+        // while we recovered, `apply_table` refuses it (stale epoch,
+        // or an equal-epoch conflict — two leaders name different
+        // owners) and this node backs off idempotently.
+        let install = if self.table.lock().unwrap().epoch != observed {
+            Err(Error::Stream(format!(
+                "table moved past epoch {observed} during recovery"
+            )))
+        } else {
+            self.install_table(next)
+        };
+        if install.is_err() {
+            // The adopt is not coming: cancel the workers' stashes so
+            // outrun samples re-route to the winner instead of waiting
+            // forever. The dead-mark stands either way.
+            let _ = self.svc.unexpect_shards(&shards);
+            self.svc.metrics().failover_races.inc();
+            self.note_dead(dead);
+            return Ok(0);
+        }
         self.svc.adopt_shards(&shards, Vec::new())?;
         self.note_dead(dead);
         self.svc.metrics().failovers.inc();
@@ -469,18 +730,20 @@ impl Shared {
     /// survivor — adopts its shards.
     fn heartbeat_round(&self) {
         let m = self.svc.metrics();
-        for peer in self.peers.values() {
+        let load = self.my_load();
+        for peer in self.peer_snapshot() {
             if self.stop.load(Ordering::Acquire) {
                 return;
             }
             let req = Msg::Heartbeat {
                 node_id: self.node_id,
                 epoch: self.epoch(),
+                load,
             };
             match peer.client.rpc(&req) {
                 Ok(Msg::HelloOk { epoch, .. }) => {
                     m.heartbeats_tx.inc();
-                    self.note_alive(peer.id, epoch);
+                    self.note_alive(peer.id, epoch, None);
                     record(EventKind::Heartbeat, peer.id, 0, NO_WORKER);
                     if epoch < self.epoch() {
                         // Lagging peer (missed a broadcast): re-push.
@@ -494,7 +757,7 @@ impl Shared {
                 _ => {
                     let (was_alive, basis) = {
                         let st = peer.state.lock().unwrap();
-                        (st.alive, st.last_seen.unwrap_or(self.started))
+                        (st.alive, st.last_seen)
                     };
                     let dead_after = if self.failover_after.is_zero() {
                         // No auto failover: still mark dead after a few
@@ -523,6 +786,427 @@ impl Shared {
                 }
             }
         }
+    }
+
+    /// Close the current load window: per-shard deltas + the node
+    /// rate it advertises in heartbeats. Runs once per heartbeat
+    /// round, so "load" always means "the last heartbeat interval".
+    fn sample_load(&self) {
+        let sm = self.svc.shard_metrics();
+        let mut b = self.balance.lock().unwrap();
+        let dt = b.last_sample.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            return;
+        }
+        let deltas = b.window.delta(&sm);
+        let total: u64 = deltas.iter().map(|d| d.samples).sum();
+        b.rate = total as f64 / dt;
+        b.deltas = deltas;
+        b.dt = dt;
+        b.last_sample = Instant::now();
+    }
+
+    /// This node's windowed ingest rate (samples/s, last window).
+    fn my_load(&self) -> u64 {
+        self.balance.lock().unwrap().rate.round() as u64
+    }
+
+    /// Load-driven cross-node rebalancing: if this node sustains more
+    /// than `rebalance_threshold ×` the cluster-average ingest rate,
+    /// shed its hottest shards to the coldest live peer. Hysteresis
+    /// against ping-pong: at most one decision per `rebalance_every`
+    /// window, the load window is rebaselined after every move (the
+    /// post-move interval is never polluted by pre-move attribution —
+    /// same discipline as the intra-node `maybe_rebalance`), the
+    /// donor only sheds down to the average, and never below one
+    /// owned shard. Returns how many shards moved.
+    fn maybe_rebalance_cluster(&self) -> Result<usize> {
+        if self.rebalance_every.is_zero() {
+            return Ok(0);
+        }
+        let (my_rate, deltas, dt) = {
+            let b = self.balance.lock().unwrap();
+            if b.last_move.elapsed() < self.rebalance_every {
+                return Ok(0);
+            }
+            (b.rate, b.deltas.clone(), b.dt)
+        };
+        if dt <= 0.0 {
+            return Ok(0);
+        }
+        let peers: Vec<(u64, f64)> = self
+            .peer_snapshot()
+            .iter()
+            .filter_map(|p| {
+                let st = p.state.lock().unwrap();
+                st.alive.then_some((p.id, st.load as f64))
+            })
+            .collect();
+        if peers.is_empty() {
+            return Ok(0);
+        }
+        let avg = (my_rate
+            + peers.iter().map(|(_, l)| l).sum::<f64>())
+            / (peers.len() + 1) as f64;
+        if avg <= 0.0 || my_rate <= self.rebalance_threshold * avg {
+            return Ok(0);
+        }
+        let (coldest, cold_load) = peers
+            .iter()
+            .copied()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        if cold_load >= avg {
+            // Everyone is hot: shuffling shards cannot help.
+            return Ok(0);
+        }
+        let mine = self.table.lock().unwrap().shards_of(self.node_id);
+        if mine.len() <= 1 {
+            return Ok(0);
+        }
+        // Hottest-first candidates from the windowed per-shard view:
+        // by rate, then by windowed p99 (of two equally busy shards,
+        // shed the one hurting tail latency more).
+        let mut cands: Vec<(u32, f64, u64)> = deltas
+            .iter()
+            .filter(|d| mine.contains(&d.shard))
+            .map(|d| (d.shard, d.samples as f64 / dt, d.p99_ns))
+            .collect();
+        cands.sort_by(|a, b| {
+            b.1.total_cmp(&a.1)
+                .then(b.2.cmp(&a.2))
+                .then(a.0.cmp(&b.0))
+        });
+        let mut donor = my_rate;
+        let mut recip = cold_load;
+        let mut moves: Vec<u32> = Vec::new();
+        for (shard, rate, _) in cands {
+            if rate <= 0.0 || donor <= avg {
+                break;
+            }
+            if moves.len() + 1 >= mine.len() {
+                break;
+            }
+            if donor - rate < recip + rate {
+                // This shard alone would flip the imbalance; a cooler
+                // one further down may still fit.
+                continue;
+            }
+            donor -= rate;
+            recip += rate;
+            moves.push(shard);
+        }
+        if moves.is_empty() {
+            return Ok(0);
+        }
+        self.migrate_to_peer(coldest, &moves)?;
+        self.svc.metrics().node_rebalances.inc();
+        record(
+            EventKind::NodeRebalance,
+            coldest,
+            moves.len() as u32,
+            NO_WORKER,
+        );
+        let sm = self.svc.shard_metrics();
+        let mut b = self.balance.lock().unwrap();
+        b.window.rebaseline(&sm);
+        b.deltas.clear();
+        b.rate = 0.0;
+        b.last_sample = Instant::now();
+        b.last_move = Instant::now();
+        Ok(moves.len())
+    }
+
+    /// Move `shards` from this node to `peer`: the exact
+    /// Expect → install → Seal → drain → Adopt sequence of the
+    /// in-process rebalancer, with the destination endpoint behind the
+    /// framed transport. Verdicts stay bit-identical to an unmigrated
+    /// run — strays drained up to the barrier cross as Replay frames
+    /// on the same serialized connection as the Adopt.
+    fn migrate_to_peer(
+        &self,
+        peer: u64,
+        shards: &[u32],
+    ) -> Result<MigrationStats> {
+        let _guard = self.move_lock.lock().unwrap();
+        let (next, not_mine) = {
+            let t = self.table.lock().unwrap();
+            let not_mine: Vec<u32> = shards
+                .iter()
+                .copied()
+                .filter(|&s| {
+                    (s as usize) >= t.owner.len()
+                        || t.owner_of(s) != self.node_id
+                })
+                .collect();
+            (t.with_owner(shards, peer), not_mine)
+        };
+        if !not_mine.is_empty() {
+            return Err(Error::Stream(format!(
+                "cannot migrate shards {not_mine:?}: not owned by node {}",
+                self.node_id
+            )));
+        }
+        let t0 = Instant::now();
+        let remote = RemoteLink::new(self.peer(peer)?.client.clone())
+            .with_metrics(self.svc.metrics());
+        let local = NodeLocal { svc: &self.svc };
+        let stats = migrate_over(
+            &local,
+            &remote,
+            shards,
+            &mut || self.install_table(next.clone()),
+            &mut || self.svc.reroute_strays().map(|_| ()),
+        )?;
+        let m = self.svc.metrics();
+        m.migrations.inc();
+        m.shards_moved.add(shards.len() as u64);
+        m.streams_migrated.add(stats.streams);
+        m.migration_time.record(t0.elapsed().as_nanos() as u64);
+        record(
+            EventKind::BundleShip,
+            stats.bytes,
+            shards.len() as u32,
+            NO_WORKER,
+        );
+        Ok(stats)
+    }
+
+    /// Pull `shards` from `peer` onto this node (the mirror move:
+    /// remote seal, local adopt). The drain step is a Settle frame —
+    /// the remote re-routes its strays, which arrive here as Replay
+    /// frames *before* this side's local Adopt is enqueued.
+    fn pull_from_peer(
+        &self,
+        peer: u64,
+        shards: &[u32],
+    ) -> Result<MigrationStats> {
+        let _guard = self.move_lock.lock().unwrap();
+        let (next, not_theirs) = {
+            let t = self.table.lock().unwrap();
+            let not_theirs: Vec<u32> = shards
+                .iter()
+                .copied()
+                .filter(|&s| {
+                    (s as usize) >= t.owner.len()
+                        || t.owner_of(s) != peer
+                })
+                .collect();
+            (t.with_owner(shards, self.node_id), not_theirs)
+        };
+        if !not_theirs.is_empty() {
+            return Err(Error::Stream(format!(
+                "cannot pull shards {not_theirs:?}: not owned by peer \
+                 {peer}"
+            )));
+        }
+        let t0 = Instant::now();
+        let client = self.peer(peer)?.client.clone();
+        let remote = RemoteLink::new(client.clone())
+            .with_metrics(self.svc.metrics());
+        let local = NodeLocal { svc: &self.svc };
+        let stats = migrate_over(
+            &remote,
+            &local,
+            shards,
+            &mut || self.install_table(next.clone()),
+            &mut || match client.rpc(&Msg::Settle)? {
+                Msg::Ok => Ok(()),
+                Msg::Denied { reason } => Err(Error::Stream(format!(
+                    "peer {peer} denied settle: {reason}"
+                ))),
+                other => Err(Error::Stream(format!(
+                    "peer {peer}: unexpected {} reply to settle",
+                    other.label()
+                ))),
+            },
+        )?;
+        let m = self.svc.metrics();
+        m.migrations.inc();
+        m.shards_moved.add(shards.len() as u64);
+        m.streams_migrated.add(stats.streams);
+        m.migration_time.record(t0.elapsed().as_nanos() as u64);
+        Ok(stats)
+    }
+
+    /// Split a burst by node ownership under `table`.
+    fn partition(
+        table: &NodeTable,
+        node_id: u64,
+        samples: Vec<Sample>,
+    ) -> (Vec<Sample>, BTreeMap<u64, Vec<Sample>>) {
+        let vs = table.owner.len() as u32;
+        let mut local: Vec<Sample> = Vec::new();
+        let mut remote: BTreeMap<u64, Vec<Sample>> = BTreeMap::new();
+        for s in samples {
+            let owner = table.owner_of(shard_of(s.stream_id, vs));
+            if owner == node_id {
+                local.push(s);
+            } else {
+                remote.entry(owner).or_default().push(s);
+            }
+        }
+        (local, remote)
+    }
+
+    /// Forward per-owner groups to their peers. Never errors:
+    /// undeliverable samples come back (with the first failure's
+    /// reason) and the caller decides between parking and reporting.
+    fn forward_remote(
+        &self,
+        remote: BTreeMap<u64, Vec<Sample>>,
+    ) -> (Vec<Sample>, Option<String>) {
+        let mut failed: Vec<Sample> = Vec::new();
+        let mut why: Option<String> = None;
+        for (owner, group) in remote {
+            let n = group.len() as u64;
+            let msg = Msg::Samples { samples: group };
+            let reply = match self.peer(owner) {
+                Ok(peer) => peer.client.rpc(&msg),
+                Err(e) => Err(e),
+            };
+            let reason = match reply {
+                Ok(Msg::Ok) => {
+                    self.svc.metrics().samples_forwarded.add(n);
+                    continue;
+                }
+                Ok(Msg::Denied { reason }) => format!(
+                    "peer {owner} refused {n} samples: {reason}"
+                ),
+                Ok(other) => format!(
+                    "peer {owner}: unexpected {} reply to samples",
+                    other.label()
+                ),
+                Err(e) => format!("peer {owner}: {e}"),
+            };
+            why.get_or_insert(reason);
+            if let Msg::Samples { samples } = msg {
+                failed.extend(samples);
+            }
+        }
+        (failed, why)
+    }
+
+    /// Admit samples into the park buffer, all-or-nothing: a burst
+    /// that does not fit leaves the buffer untouched and errors, so
+    /// the caller's retry never half-delivers (duplicated retries are
+    /// absorbed downstream by the per-stream watermark dedup).
+    fn park_ingest(&self, samples: Vec<Sample>) -> Result<()> {
+        let n = samples.len();
+        let depth = {
+            let mut q = self.ingest_park.lock().unwrap();
+            if q.len() + n > self.ingest_cap {
+                drop(q);
+                self.svc.metrics().ingest_park_full.add(n as u64);
+                return Err(Error::Stream(format!(
+                    "ingest buffer full: {n} samples not absorbed \
+                     (cap {})",
+                    self.ingest_cap
+                )));
+            }
+            q.extend(samples);
+            q.len() as u64
+        };
+        let m = self.svc.metrics();
+        m.ingest_parked.add(n as u64);
+        m.ingest_park_depth.set(depth);
+        record(EventKind::IngestPark, n as u64, depth as u32, NO_WORKER);
+        Ok(())
+    }
+
+    /// Put already-admitted samples back after a failed drain. No cap
+    /// check: they were inside the bound when admitted, and dropping
+    /// them here would lose verdicts (admission is the only gate).
+    /// Prepended, not appended — anything parked while the drain was
+    /// out doing network I/O is *newer*, and per-stream replay order
+    /// must survive the round-trip.
+    fn repark_ingest(&self, samples: Vec<Sample>) {
+        let mut q = self.ingest_park.lock().unwrap();
+        for s in samples.into_iter().rev() {
+            q.push_front(s);
+        }
+        let depth = q.len() as u64;
+        drop(q);
+        self.svc.metrics().ingest_park_depth.set(depth);
+    }
+
+    /// Replay the park buffer through the current table. Runs every
+    /// heartbeat and at the front of every [`ClusterHandle`] submit
+    /// (parked samples stay ahead of new ones); whatever is still
+    /// undeliverable re-parks.
+    fn drain_ingest_park(&self) {
+        let _serial = self.drain_lock.lock().unwrap();
+        let pending: Vec<Sample> = {
+            let mut q = self.ingest_park.lock().unwrap();
+            if q.is_empty() {
+                return;
+            }
+            q.drain(..).collect()
+        };
+        self.svc.metrics().ingest_park_depth.set(0);
+        let table = self.table.lock().unwrap().clone();
+        if table.owner.is_empty() {
+            self.repark_ingest(pending);
+            return;
+        }
+        let (local, remote) =
+            Self::partition(&table, self.node_id, pending);
+        let (mut still, _) = self.forward_remote(remote);
+        if !local.is_empty() {
+            // Cold path: clone so a refused local enqueue re-parks
+            // instead of losing the burst.
+            let backup = local.clone();
+            if self.svc.submit_batch(local).is_err() {
+                still.extend(backup);
+            }
+        }
+        if !still.is_empty() {
+            self.repark_ingest(still);
+        }
+    }
+
+    /// Cluster-aware burst submit (the [`ClusterHandle`] entry
+    /// point): locally-owned samples take the lock-free local path,
+    /// the rest go to their owners in one Samples frame per peer.
+    /// With buffering on (`ingest_cap > 0`), undeliverable remote
+    /// groups — and, mid-join, the whole burst — park locally instead
+    /// of erroring; with it off this errors exactly like before.
+    fn cluster_submit(&self, samples: Vec<Sample>) -> Result<()> {
+        self.drain_ingest_park();
+        let table = self.table.lock().unwrap().clone();
+        if table.owner.is_empty() {
+            // Mid-join: no table yet. Buffer the burst if we can.
+            if self.ingest_cap > 0 {
+                return self.park_ingest(samples);
+            }
+            return Err(Error::Stream(
+                "no ownership table installed yet".into(),
+            ));
+        }
+        let (local, remote) =
+            Self::partition(&table, self.node_id, samples);
+        let (failed, why) = self.forward_remote(remote);
+        if !failed.is_empty() {
+            if self.ingest_cap > 0 {
+                self.park_ingest(failed)?;
+            } else {
+                return Err(Error::Stream(why.unwrap_or_else(|| {
+                    "sample forwarding failed".into()
+                })));
+            }
+        }
+        if local.is_empty() {
+            Ok(())
+        } else {
+            self.svc.submit_batch(local)
+        }
+    }
+
+    /// Record the cluster-autoscale recommendation (the serve loop's
+    /// pressure trigger calls this when local scaling is exhausted).
+    fn set_scale_hint(&self, want: bool) {
+        self.scale_hint.store(want, Ordering::Relaxed);
+        self.svc.metrics().node_scale_hint.set(want as u64);
     }
 }
 
@@ -557,38 +1241,65 @@ impl ClusterNode {
             members.push(id);
             peers.insert(
                 id,
-                Peer {
+                Arc::new(Peer {
                     id,
                     client: Arc::new(RpcClient::new(PeerAddr::parse(
                         &addr,
                     )?)),
                     state: Mutex::new(PeerState {
                         alive: false,
-                        last_seen: None,
+                        // Member-install stamp: the full failover
+                        // window starts now, not at process start.
+                        last_seen: Instant::now(),
                         epoch: 0,
+                        load: 0,
                     }),
-                },
+                }),
             );
         }
-        let table = NodeTable::new_uniform(
-            svc.table().virtual_shards(),
-            &members,
-        );
+        let virtual_shards = svc.table().virtual_shards();
+        let shard_metrics = svc.shard_metrics();
         let shared = Arc::new(Shared {
             node_id: cfg.node_id,
             svc,
             table: Mutex::new(NodeTable { epoch: 0, owner: Vec::new() }),
-            peers,
+            peers: RwLock::new(peers),
             heartbeat_every: Duration::from_millis(cfg.heartbeat_ms),
             failover_after: Duration::from_millis(cfg.failover_ms),
+            rebalance_every: Duration::from_millis(cfg.rebalance_ms),
+            rebalance_threshold: cfg.rebalance_threshold,
+            balance: Mutex::new(BalanceState {
+                window: {
+                    let mut w =
+                        ShardWindow::new(virtual_shards as usize);
+                    w.rebaseline(&shard_metrics);
+                    w
+                },
+                deltas: Vec::new(),
+                dt: 0.0,
+                rate: 0.0,
+                last_sample: Instant::now(),
+                last_move: Instant::now(),
+            }),
+            ingest_cap: cfg.ingest_buffer as usize,
+            ingest_park: Mutex::new(VecDeque::new()),
+            drain_lock: Mutex::new(()),
+            scale_hint: AtomicBool::new(false),
             move_lock: Mutex::new(()),
             stop: AtomicBool::new(false),
             bound,
             started: Instant::now(),
         });
-        // Epoch 0 through the same path every later table takes (also
-        // seeds the foreign-shard set and the cluster_epoch gauge).
-        shared.apply_table(0, table.owner)?;
+        if cfg.join.is_none() {
+            // Epoch 0 through the same path every later table takes
+            // (also seeds the foreign-shard set and the cluster_epoch
+            // gauge). A joining node skips this: the empty table stays
+            // the pre-bootstrap sentinel until JoinOk installs the
+            // sponsor's table.
+            let table =
+                NodeTable::new_uniform(virtual_shards, &members);
+            shared.apply_table(0, table.owner)?;
+        }
 
         // Stray escalation: a Weak hook, so Service ⇄ cluster never
         // form an Arc cycle and the service stays individually owned.
@@ -649,9 +1360,10 @@ impl ClusterNode {
                 })
                 .map_err(|e| Error::io("spawn cluster accept", e))?
         };
-        let heartbeat = if shared.peers.is_empty() {
-            None
-        } else {
+        // Unconditional (even with an empty static roster): members
+        // may join later, and the loop also drains the ingest park
+        // and drives the cross-node rebalancer.
+        let heartbeat = {
             let sh = shared.clone();
             Some(
                 std::thread::Builder::new()
@@ -661,7 +1373,10 @@ impl ClusterNode {
                     ))
                     .spawn(move || {
                         while !sh.stop.load(Ordering::Acquire) {
+                            sh.sample_load();
                             sh.heartbeat_round();
+                            sh.drain_ingest_park();
+                            let _ = sh.maybe_rebalance_cluster();
                             // Nap in short slices: prompt shutdown.
                             let mut left = sh.heartbeat_every;
                             while !left.is_zero()
@@ -678,12 +1393,144 @@ impl ClusterNode {
                     })?,
             )
         };
-        Ok(ClusterNode {
+        let node = ClusterNode {
             shared,
             accept: Some(accept),
             heartbeat,
             conns,
-        })
+        };
+        if let Some(sponsor) = cfg.join.as_deref() {
+            if let Err(e) = node.join_via(sponsor) {
+                let _ = node.shutdown();
+                return Err(e);
+            }
+        }
+        Ok(node)
+    }
+
+    /// Register with a live member at `sponsor`: send `Join`, install
+    /// the roster and table its `JoinOk` carries, and Hello everyone.
+    /// After this the node is routable (owns nothing yet); call
+    /// [`ClusterNode::pull_share`] to take on a uniform share.
+    fn join_via(&self, sponsor: &str) -> Result<()> {
+        let client = RpcClient::new(PeerAddr::parse(sponsor)?);
+        let req = Msg::Join {
+            node_id: self.shared.node_id,
+            addr: self.shared.bound.clone(),
+        };
+        match client.rpc(&req)? {
+            Msg::JoinOk { epoch, owner, peers } => {
+                for (id, addr) in peers {
+                    if id != self.shared.node_id {
+                        let _ = self.shared.add_peer(id, &addr, false);
+                    }
+                }
+                match self.shared.apply_table(epoch, owner) {
+                    Ok(()) => {}
+                    // The sponsor's epoch-bump broadcast (or a later
+                    // table) can beat the JoinOk reply here; newer
+                    // already installed means the join landed.
+                    Err(_) if self.shared.epoch() > epoch => {}
+                    Err(e) => return Err(e),
+                }
+                self.hello_peers();
+                Ok(())
+            }
+            Msg::Denied { reason } => Err(Error::Stream(format!(
+                "join denied by {sponsor}: {reason}"
+            ))),
+            other => Err(Error::Stream(format!(
+                "unexpected {} reply to join",
+                other.label()
+            ))),
+        }
+    }
+
+    /// Pull this node's uniform share of shards from the current
+    /// owners (called after a dynamic join): repeatedly take the
+    /// highest shard from the biggest owner — never a donor's last
+    /// shard — until this node holds `virtual_shards / members`.
+    /// Every transfer is the ordinary seal → adopt migration, so
+    /// in-flight streams survive bit-identically. Returns how many
+    /// shards were pulled.
+    pub fn pull_share(&self) -> Result<usize> {
+        let table = self.shared.table.lock().unwrap().clone();
+        if table.owner.is_empty() {
+            return Err(Error::Stream(
+                "no ownership table installed yet".into(),
+            ));
+        }
+        let mut members = table.members();
+        if !members.contains(&self.shared.node_id) {
+            members.push(self.shared.node_id);
+        }
+        let share = table.owner.len() / members.len();
+        let mut have = table.shards_of(self.shared.node_id).len();
+        let mut per_owner: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for (s, &o) in table.owner.iter().enumerate() {
+            if o != self.shared.node_id {
+                per_owner.entry(o).or_default().push(s as u32);
+            }
+        }
+        let mut plan: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        while have < share {
+            let Some((&donor, shards)) = per_owner
+                .iter_mut()
+                .filter(|(_, v)| v.len() > 1)
+                .max_by_key(|(&id, v)| {
+                    (v.len(), std::cmp::Reverse(id))
+                })
+            else {
+                break;
+            };
+            let s = shards.pop().expect("donor has > 1 shard");
+            plan.entry(donor).or_default().push(s);
+            have += 1;
+        }
+        let mut pulled = 0;
+        for (owner, shards) in plan {
+            self.shared.pull_from_peer(owner, &shards)?;
+            pulled += shards.len();
+        }
+        Ok(pulled)
+    }
+
+    /// Leave the cluster cleanly: refuse while this node still owns
+    /// shards (migrate them away first), otherwise announce `Leave`
+    /// to every peer. Returns how many peers acknowledged.
+    pub fn leave(&self) -> Result<usize> {
+        let owned = self.owned_shards();
+        if !owned.is_empty() {
+            return Err(Error::Stream(format!(
+                "cannot leave: node {} still owns {} shards \
+                 (migrate them away first)",
+                self.shared.node_id,
+                owned.len()
+            )));
+        }
+        let req = Msg::Leave { node_id: self.shared.node_id };
+        let mut acked = 0;
+        for p in self.shared.peer_snapshot() {
+            if let Ok(Msg::Ok) = p.client.rpc(&req) {
+                acked += 1;
+            }
+        }
+        Ok(acked)
+    }
+
+    /// One cross-node rebalance decision right now (the heartbeat
+    /// loop runs the same check on its own cadence). See
+    /// [`Shared::maybe_rebalance_cluster`] for the policy.
+    pub fn maybe_rebalance_cluster(&self) -> Result<usize> {
+        self.shared.maybe_rebalance_cluster()
+    }
+
+    /// Record (or clear) the cluster-autoscale recommendation:
+    /// sustained pressure with local worker scaling exhausted means
+    /// the cluster wants another node. Surfaces as the
+    /// `node_scale_hint` gauge and a line in [`ClusterNode::status`].
+    pub fn set_scale_hint(&self, want: bool) {
+        self.shared.set_scale_hint(want);
     }
 
     /// This node's id.
@@ -720,14 +1567,14 @@ impl ClusterNode {
     /// and harmless to repeat.
     pub fn hello_peers(&self) -> usize {
         let mut up = 0;
-        for peer in self.shared.peers.values() {
+        for peer in self.shared.peer_snapshot() {
             let req = Msg::Hello {
                 node_id: self.shared.node_id,
                 epoch: self.shared.epoch(),
             };
             if let Ok(Msg::HelloOk { epoch, .. }) = peer.client.rpc(&req)
             {
-                self.shared.note_alive(peer.id, epoch);
+                self.shared.note_alive(peer.id, epoch, None);
                 up += 1;
             }
         }
@@ -751,49 +1598,7 @@ impl ClusterNode {
         peer: u64,
         shards: &[u32],
     ) -> Result<MigrationStats> {
-        let sh = &self.shared;
-        let _guard = sh.move_lock.lock().unwrap();
-        let (next, not_mine) = {
-            let t = sh.table.lock().unwrap();
-            let not_mine: Vec<u32> = shards
-                .iter()
-                .copied()
-                .filter(|&s| {
-                    (s as usize) >= t.owner.len()
-                        || t.owner_of(s) != sh.node_id
-                })
-                .collect();
-            (t.with_owner(shards, peer), not_mine)
-        };
-        if !not_mine.is_empty() {
-            return Err(Error::Stream(format!(
-                "cannot migrate shards {not_mine:?}: not owned by node {}",
-                sh.node_id
-            )));
-        }
-        let t0 = Instant::now();
-        let remote = RemoteLink::new(sh.peer(peer)?.client.clone())
-            .with_metrics(sh.svc.metrics());
-        let local = NodeLocal { svc: &sh.svc };
-        let stats = migrate_over(
-            &local,
-            &remote,
-            shards,
-            &mut || sh.install_table(next.clone()),
-            &mut || sh.svc.reroute_strays().map(|_| ()),
-        )?;
-        let m = sh.svc.metrics();
-        m.migrations.inc();
-        m.shards_moved.add(shards.len() as u64);
-        m.streams_migrated.add(stats.streams);
-        m.migration_time.record(t0.elapsed().as_nanos() as u64);
-        record(
-            EventKind::BundleShip,
-            stats.bytes,
-            shards.len() as u32,
-            NO_WORKER,
-        );
-        Ok(stats)
+        self.shared.migrate_to_peer(peer, shards)
     }
 
     /// Pull `shards` from `peer` onto this node (the mirror move:
@@ -805,53 +1610,7 @@ impl ClusterNode {
         peer: u64,
         shards: &[u32],
     ) -> Result<MigrationStats> {
-        let sh = &self.shared;
-        let _guard = sh.move_lock.lock().unwrap();
-        let (next, not_theirs) = {
-            let t = sh.table.lock().unwrap();
-            let not_theirs: Vec<u32> = shards
-                .iter()
-                .copied()
-                .filter(|&s| {
-                    (s as usize) >= t.owner.len()
-                        || t.owner_of(s) != peer
-                })
-                .collect();
-            (t.with_owner(shards, sh.node_id), not_theirs)
-        };
-        if !not_theirs.is_empty() {
-            return Err(Error::Stream(format!(
-                "cannot pull shards {not_theirs:?}: not owned by peer \
-                 {peer}"
-            )));
-        }
-        let t0 = Instant::now();
-        let client = sh.peer(peer)?.client.clone();
-        let remote = RemoteLink::new(client.clone())
-            .with_metrics(sh.svc.metrics());
-        let local = NodeLocal { svc: &sh.svc };
-        let stats = migrate_over(
-            &remote,
-            &local,
-            shards,
-            &mut || sh.install_table(next.clone()),
-            &mut || match client.rpc(&Msg::Settle)? {
-                Msg::Ok => Ok(()),
-                Msg::Denied { reason } => Err(Error::Stream(format!(
-                    "peer {peer} denied settle: {reason}"
-                ))),
-                other => Err(Error::Stream(format!(
-                    "peer {peer}: unexpected {} reply to settle",
-                    other.label()
-                ))),
-            },
-        )?;
-        let m = sh.svc.metrics();
-        m.migrations.inc();
-        m.shards_moved.add(shards.len() as u64);
-        m.streams_migrated.add(stats.streams);
-        m.migration_time.record(t0.elapsed().as_nanos() as u64);
-        Ok(stats)
+        self.shared.pull_from_peer(peer, shards)
     }
 
     /// Manually fail over a (known-dead) peer: adopt every shard it
@@ -948,49 +1707,29 @@ pub struct ClusterHandle {
 impl ClusterHandle {
     /// Submit a burst: locally-owned samples take the lock-free local
     /// path, the rest are forwarded to their owning peers (one Samples
-    /// frame per peer). Errors if any forward is refused or a peer is
-    /// unreachable — the caller decides whether to retry; duplicated
-    /// retries are absorbed by the per-stream watermark dedup.
+    /// frame per peer). With `cluster.ingest_buffer > 0`, a group
+    /// that cannot be delivered right now (owner mid-failover, table
+    /// mid-join) parks in the bounded local buffer and replays once
+    /// the route heals — a burst during a failover window is absorbed,
+    /// not lost. Errors when buffering is off and a forward fails, or
+    /// when the buffer itself is full (all-or-nothing admission) —
+    /// the caller decides whether to retry; duplicated retries are
+    /// absorbed by the per-stream watermark dedup.
     pub fn submit_batch(&self, samples: Vec<Sample>) -> Result<()> {
-        let sh = &self.shared;
-        let (vs, table) = {
-            let t = sh.table.lock().unwrap();
-            (t.owner.len() as u32, t.clone())
-        };
-        let mut local: Vec<Sample> = Vec::new();
-        let mut remote: BTreeMap<u64, Vec<Sample>> = BTreeMap::new();
-        for s in samples {
-            let owner = table.owner_of(shard_of(s.stream_id, vs));
-            if owner == sh.node_id {
-                local.push(s);
-            } else {
-                remote.entry(owner).or_default().push(s);
-            }
-        }
-        if !local.is_empty() {
-            sh.svc.submit_batch(local)?;
-        }
-        for (owner, group) in remote {
-            let peer = sh.peer(owner)?;
-            let n = group.len() as u64;
-            match peer.client.rpc(&Msg::Samples { samples: group })? {
-                Msg::Ok => {
-                    sh.svc.metrics().samples_forwarded.add(n);
-                }
-                Msg::Denied { reason } => {
-                    return Err(Error::Stream(format!(
-                        "peer {owner} refused {n} samples: {reason}"
-                    )))
-                }
-                other => {
-                    return Err(Error::Stream(format!(
-                        "peer {owner}: unexpected {} reply to samples",
-                        other.label()
-                    )))
-                }
-            }
-        }
-        Ok(())
+        self.shared.cluster_submit(samples)
+    }
+
+    /// Samples currently parked in the failover-window ingest buffer.
+    pub fn parked(&self) -> usize {
+        self.shared.ingest_park.lock().unwrap().len()
+    }
+
+    /// Force one park-buffer replay right now (the heartbeat loop
+    /// does this on its own cadence); returns how many samples remain
+    /// parked afterwards.
+    pub fn flush_parked(&self) -> usize {
+        self.shared.drain_ingest_park();
+        self.parked()
     }
 
     /// Submit one sample (see [`ClusterHandle::submit_batch`]).

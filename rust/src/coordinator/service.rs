@@ -26,7 +26,7 @@ use crate::coordinator::transport::{
 use crate::coordinator::worker::{spawn_worker, Job, Stray, WorkerHandle};
 use crate::coordinator::{ShardMap, ShardTable, StateManager};
 use crate::metrics::{EnsembleMetrics, ServiceMetrics, ShardMetrics};
-use crate::obs::recorder::{record, EventKind};
+use crate::obs::recorder::{record, EventKind, NO_WORKER};
 use crate::obs::window::{MetricsWindow, ShardWindow};
 use crate::persist::{codec, CheckpointStore, FileStore};
 use crate::stream::{Receiver, Sample, Sender};
@@ -44,6 +44,13 @@ pub type StrayForwarder = Arc<
         + Send
         + Sync,
 >;
+
+/// Hard cap on the parked-stray list. Parked strays exist to survive
+/// transient re-route failures; against a *permanently* undeliverable
+/// destination the list would otherwise grow without bound. 64k
+/// strays is minutes of worst-case stray traffic — far beyond any
+/// transient — so overflow means the destination is gone for good.
+const PARKED_CAP: usize = 64 * 1024;
 
 /// A running service instance.
 pub struct Service {
@@ -73,8 +80,10 @@ pub struct Service {
     ensemble_metrics: Option<Arc<EnsembleMetrics>>,
     state_mgr: Arc<StateManager>,
     /// Strays that could not be re-routed (their worker's queue was
-    /// closed mid-drain); retried on every subsequent drain so no
-    /// sample is ever silently discarded.
+    /// closed mid-drain); retried on every subsequent drain. Bounded
+    /// by [`PARKED_CAP`] — a permanently dead destination must not
+    /// grow this without bound (overflow is counted in
+    /// `stray_park_drops`, never silent).
     parked: Mutex<Vec<Stray>>,
     /// Serializes migrate / scale / rebalance operations.
     rebalance_lock: Mutex<()>,
@@ -636,12 +645,36 @@ impl Service {
         }
         if !failed.is_empty() {
             let n_failed = failed.len();
-            self.parked.lock().unwrap().extend(failed);
+            self.park_strays(failed);
             return Err(Error::Stream(format!(
                 "{n_failed} strays re-parked: target worker queue closed"
             )));
         }
         Ok(n)
+    }
+
+    /// Park undeliverable strays, bounded by [`PARKED_CAP`]. The list
+    /// keeps its oldest entries (they lead the replay order); overflow
+    /// — the newest arrivals — is dropped, counted in
+    /// `stray_park_drops`, and journaled so an operator can see the
+    /// loss in the flight recorder instead of in an OOM.
+    fn park_strays(&self, strays: Vec<Stray>) {
+        let n = strays.len();
+        let dropped = {
+            let mut parked = self.parked.lock().unwrap();
+            let room = PARKED_CAP.saturating_sub(parked.len());
+            if n <= room {
+                parked.extend(strays);
+                0
+            } else {
+                parked.extend(strays.into_iter().take(room));
+                n - room
+            }
+        };
+        if dropped > 0 {
+            self.metrics.stray_park_drops.add(dropped as u64);
+            record(EventKind::StrayDrop, dropped as u64, 0, NO_WORKER);
+        }
     }
 
     /// Settle all in-flight routing: rendezvous with every worker (an
@@ -1026,6 +1059,37 @@ impl Service {
         Ok(())
     }
 
+    /// Node-level Unexpect: cancel a pending [`Self::expect_shards`]
+    /// whose Adopt is not coming (the cluster layer lost a failover
+    /// race to a peer with a newer table). The workers drop the
+    /// pending marks and re-route anything they stashed while waiting.
+    pub fn unexpect_shards(&self, shards: &[u32]) -> Result<()> {
+        let _guard = self.rebalance_lock.lock().unwrap();
+        let slots = self.senders.snapshot();
+        let table = self.shard_map.snapshot();
+        let mut by_worker: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+        for &s in shards {
+            if s >= table.virtual_shards() {
+                return Err(Error::Stream(format!(
+                    "no shard {s} (virtual_shards = {})",
+                    table.virtual_shards()
+                )));
+            }
+            by_worker.entry(table.worker_of(s)).or_default().push(s);
+        }
+        for (w, group) in by_worker {
+            match slots.get(w) {
+                Some(slot) => {
+                    WorkerLink::new(w, slot.clone()).unexpect(&group)?
+                }
+                None => {
+                    return Err(Error::Stream(format!("worker {w} gone")))
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Node-level Seal: snapshot-at-watermark, evict and disown every
     /// stream of `shards` across all local workers; returns the
     /// concatenated encoded checkpoint records (the wire bundle). An
@@ -1155,7 +1219,7 @@ impl Service {
             }
         }
         if !failed.is_empty() {
-            self.parked.lock().unwrap().extend(failed);
+            self.park_strays(failed);
         }
         Ok(n)
     }

@@ -53,8 +53,11 @@ pub const MAX_PAYLOAD: usize = 64 << 20;
 pub enum Msg {
     /// Join/identify: "I am `node_id`, my table epoch is `epoch`".
     Hello { node_id: u64, epoch: u64 },
-    /// Liveness + epoch gossip.
-    Heartbeat { node_id: u64, epoch: u64 },
+    /// Liveness + epoch gossip. `load` is the sender's windowed ingest
+    /// rate (samples/s) — every member learns every peer's load from
+    /// the heartbeats it receives, which is what the cross-node
+    /// rebalancer compares against its own.
+    Heartbeat { node_id: u64, epoch: u64, load: u64 },
     /// Migration step 1: stash samples for these shards until Adopt.
     Expect { shards: Vec<u32> },
     /// Migration step 2: seal these shards, reply with a Bundle.
@@ -75,6 +78,13 @@ pub enum Msg {
     Settle,
     /// Status probe (the `teda-fpga cluster` subcommand).
     Status,
+    /// Dynamic membership: "admit me as `node_id`, reachable at
+    /// `addr`". The receiver installs the joiner in its roster and
+    /// answers with a [`Msg::JoinOk`] snapshot.
+    Join { node_id: u64, addr: String },
+    /// Dynamic membership: `node_id` is leaving the cluster; drop it
+    /// from the roster (its shards must already have moved).
+    Leave { node_id: u64 },
     /// Generic success reply.
     Ok,
     /// Refusal with a reason (unknown shards, stale epoch, …).
@@ -85,6 +95,14 @@ pub enum Msg {
     HelloOk { node_id: u64, epoch: u64 },
     /// Status reply: human-readable node status.
     StatusText { text: String },
+    /// Join reply: the sponsor's current table and full peer roster
+    /// (id → dial address, the sponsor itself included), so the joiner
+    /// can dial every member without any out-of-band configuration.
+    JoinOk {
+        epoch: u64,
+        owner: Vec<u64>,
+        peers: Vec<(u64, String)>,
+    },
 }
 
 impl Msg {
@@ -100,11 +118,14 @@ impl Msg {
             Msg::Table { .. } => 8,
             Msg::Settle => 9,
             Msg::Status => 10,
+            Msg::Join { .. } => 11,
+            Msg::Leave { .. } => 12,
             Msg::Ok => 0x40,
             Msg::Denied { .. } => 0x41,
             Msg::Bundle { .. } => 0x42,
             Msg::HelloOk { .. } => 0x43,
             Msg::StatusText { .. } => 0x44,
+            Msg::JoinOk { .. } => 0x45,
         }
     }
 
@@ -121,11 +142,14 @@ impl Msg {
             Msg::Table { .. } => "table",
             Msg::Settle => "settle",
             Msg::Status => "status",
+            Msg::Join { .. } => "join",
+            Msg::Leave { .. } => "leave",
             Msg::Ok => "ok",
             Msg::Denied { .. } => "denied",
             Msg::Bundle { .. } => "bundle",
             Msg::HelloOk { .. } => "hello_ok",
             Msg::StatusText { .. } => "status_text",
+            Msg::JoinOk { .. } => "join_ok",
         }
     }
 }
@@ -269,10 +293,14 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
     let mut w = W(Vec::new());
     match msg {
         Msg::Hello { node_id, epoch }
-        | Msg::Heartbeat { node_id, epoch }
         | Msg::HelloOk { node_id, epoch } => {
             w.u64(*node_id);
             w.u64(*epoch);
+        }
+        Msg::Heartbeat { node_id, epoch, load } => {
+            w.u64(*node_id);
+            w.u64(*epoch);
+            w.u64(*load);
         }
         Msg::Expect { shards } | Msg::Seal { shards } => w.shards(shards),
         Msg::Adopt { shards, records } => {
@@ -290,9 +318,26 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             }
         }
         Msg::Settle | Msg::Status | Msg::Ok => {}
+        Msg::Join { node_id, addr } => {
+            w.u64(*node_id);
+            w.bytes(addr.as_bytes());
+        }
+        Msg::Leave { node_id } => w.u64(*node_id),
         Msg::Denied { reason } => w.bytes(reason.as_bytes()),
         Msg::Bundle { records } => w.records(records),
         Msg::StatusText { text } => w.bytes(text.as_bytes()),
+        Msg::JoinOk { epoch, owner, peers } => {
+            w.u64(*epoch);
+            w.u32(owner.len() as u32);
+            for &o in owner {
+                w.u64(o);
+            }
+            w.u32(peers.len() as u32);
+            for (id, addr) in peers {
+                w.u64(*id);
+                w.bytes(addr.as_bytes());
+            }
+        }
     }
     let payload = w.0;
     debug_assert!(payload.len() <= MAX_PAYLOAD);
@@ -341,7 +386,11 @@ fn decode_payload(type_id: u8, payload: &[u8]) -> Result<Msg> {
     let mut r = R { buf: payload, pos: 0 };
     let msg = match type_id {
         1 => Msg::Hello { node_id: r.u64()?, epoch: r.u64()? },
-        2 => Msg::Heartbeat { node_id: r.u64()?, epoch: r.u64()? },
+        2 => Msg::Heartbeat {
+            node_id: r.u64()?,
+            epoch: r.u64()?,
+            load: r.u64()?,
+        },
         3 => Msg::Expect { shards: r.shards()? },
         4 => Msg::Seal { shards: r.shards()? },
         5 => Msg::Adopt { shards: r.shards()?, records: r.records()? },
@@ -356,11 +405,26 @@ fn decode_payload(type_id: u8, payload: &[u8]) -> Result<Msg> {
         }
         9 => Msg::Settle,
         10 => Msg::Status,
+        11 => Msg::Join { node_id: r.u64()?, addr: r.string()? },
+        12 => Msg::Leave { node_id: r.u64()? },
         0x40 => Msg::Ok,
         0x41 => Msg::Denied { reason: r.string()? },
         0x42 => Msg::Bundle { records: r.records()? },
         0x43 => Msg::HelloOk { node_id: r.u64()?, epoch: r.u64()? },
         0x44 => Msg::StatusText { text: r.string()? },
+        0x45 => {
+            let epoch = r.u64()?;
+            let n = r.count(8)?;
+            let owner =
+                (0..n).map(|_| r.u64()).collect::<Result<Vec<_>>>()?;
+            // Each roster entry is at least an id (8B) + an address
+            // length prefix (4B).
+            let np = r.count(12)?;
+            let peers = (0..np)
+                .map(|_| Ok((r.u64()?, r.string()?)))
+                .collect::<Result<Vec<_>>>()?;
+            Msg::JoinOk { epoch, owner, peers }
+        }
         other => return Err(err(format!("unknown message type {other}"))),
     };
     r.done()?;

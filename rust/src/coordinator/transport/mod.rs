@@ -87,6 +87,16 @@ impl WorkerLink {
     pub(crate) fn new(widx: usize, slot: Arc<WorkerSlot<Job>>) -> Self {
         WorkerLink { widx, slot }
     }
+
+    /// Cancel a pending `expect` (outside the [`Transport`] trait: only
+    /// the in-process endpoint ever needs it — the cluster layer backs
+    /// off a failover it lost, and the adopt the worker is stashing for
+    /// is not coming).
+    pub(crate) fn unexpect(&self, shards: &[u32]) -> Result<()> {
+        self.slot
+            .send_ctl(Job::Unexpect { shards: shards.to_vec() })
+            .map_err(|_| Error::Stream(format!("worker {} gone", self.widx)))
+    }
 }
 
 impl Transport for WorkerLink {

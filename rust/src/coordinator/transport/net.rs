@@ -231,7 +231,9 @@ impl Listener {
         Ok(None)
     }
 
-    /// The actual bound address (resolves `:0` test binds).
+    /// The actual bound address (resolves `:0` test binds), in the
+    /// same `host:port` / `unix:/path` form [`PeerAddr::parse`]
+    /// accepts, so a node can advertise it to joiners verbatim.
     pub fn bound_addr(&self) -> String {
         match self {
             Listener::Tcp(l) => l
@@ -239,7 +241,14 @@ impl Listener {
                 .map(|a| a.to_string())
                 .unwrap_or_else(|_| "tcp:?".into()),
             #[cfg(unix)]
-            Listener::Unix(_) => "unix".into(),
+            Listener::Unix(l) => l
+                .local_addr()
+                .ok()
+                .and_then(|a| {
+                    a.as_pathname()
+                        .map(|p| format!("unix:{}", p.display()))
+                })
+                .unwrap_or_else(|| "unix:?".into()),
         }
     }
 }
@@ -291,8 +300,9 @@ impl RpcClient {
 
     /// Send one request, return the reply. Retries ONCE on a cached-
     /// connection failure — safe only for idempotent requests (Expect,
-    /// Adopt, Replay, Samples, Hello, Heartbeat, Table, Status: all
-    /// are absorbed by the restore/dedup machinery if duplicated).
+    /// Adopt, Replay, Samples, Hello, Heartbeat, Table, Status, Join,
+    /// Leave: all are absorbed by the restore/dedup/roster-install
+    /// machinery if duplicated).
     pub fn rpc(&self, msg: &Msg) -> Result<Msg> {
         let had_conn = self.is_connected();
         match self.attempt(msg) {

@@ -78,6 +78,10 @@ pub(crate) enum Job {
     /// Migration step 1 (new worker): samples for these shards may
     /// arrive before their state does — stash them until Adopt.
     Expect { shards: Vec<u32> },
+    /// Cancel an Expect whose Adopt is not coming (the cluster layer
+    /// lost a failover race): stop stashing for these shards and
+    /// re-route anything already stashed as strays.
+    Unexpect { shards: Vec<u32> },
     /// Migration step 3 (new worker): restore the sealed streams, take
     /// ownership, then replay the stash in (stream, seq) order through
     /// the inclusive-watermark dedup.
@@ -420,6 +424,31 @@ impl Worker {
             }
             Job::Expect { shards } => {
                 self.pending.extend(shards);
+            }
+            Job::Unexpect { shards } => {
+                for s in &shards {
+                    self.pending.remove(s);
+                }
+                // Whatever outran the adopt-that-never-came belongs to
+                // someone else now: hand it back for re-routing.
+                let vs = self.virtual_shards;
+                let (gone, keep): (Vec<_>, Vec<_>) =
+                    std::mem::take(&mut self.stash)
+                        .into_iter()
+                        .partition(|(s, _)| {
+                            shards.contains(&shard_of(s.stream_id, vs))
+                        });
+                self.stash = keep;
+                for (sample, t0) in gone {
+                    self.metrics.stray_reroutes.inc();
+                    record(
+                        EventKind::Stray,
+                        sample.stream_id,
+                        shard_of(sample.stream_id, vs),
+                        self.widx as u32,
+                    );
+                    let _ = self.stray_tx.send((sample, t0));
+                }
             }
             Job::Adopt { shards, records } => {
                 self.adopt(engine, &shards, records)?;

@@ -108,7 +108,8 @@ USAGE:
                      [--metrics-addr HOST:PORT] [--trace-dump]
                      [--cluster-listen ADDR] [--node-id N]
                      [--peer ID=ADDR]... [--heartbeat-ms N]
-                     [--failover-ms N]
+                     [--failover-ms N] [--join ADDR]
+                     [--cluster-rebalance-ms N] [--ingest-buffer N]
   teda-fpga cluster  --addr HOST:PORT
   teda-fpga trace    --addr HOST:PORT
   teda-fpga shards   [--config FILE] [--workers N] [--virtual-shards V]
@@ -141,8 +142,14 @@ USAGE:
   the logical shard map; --node-id N identifies this one. Nodes
   heartbeat every --heartbeat-ms; with --failover-ms N > 0, the
   lowest-id survivor adopts a silent peer's shards from the shared
-  --checkpoint-dir after N ms of silence. `cluster --addr` probes a
-  running node's status over the framed transport.
+  --checkpoint-dir after N ms of silence. --join ADDR registers with
+  a live member instead of a static --peer roster and pulls this
+  node's uniform share of shards mid-stream; --cluster-rebalance-ms N
+  lets a node sustaining > cluster.rebalance_threshold × the average
+  ingest rate shed hot shards to the coldest peer at most every N ms;
+  --ingest-buffer N bounds the park-and-replay buffer that absorbs
+  bursts while an owner is mid-failover (0 = off). `cluster --addr`
+  probes a running node's status over the framed transport.
   `shards` prints the shard→worker table; `rebalance` is a live-
   migration smoke: it forces mid-stream shard moves + a worker resize
   and asserts verdict parity against an undisturbed run.
@@ -310,9 +317,21 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         flags.parse_as("heartbeat-ms", cfg.cluster.heartbeat_ms)?;
     cfg.cluster.failover_ms =
         flags.parse_as("failover-ms", cfg.cluster.failover_ms)?;
+    if let Some(sponsor) = flags.get("join") {
+        cfg.cluster.join = Some(sponsor.to_string());
+    }
+    cfg.cluster.rebalance_ms =
+        flags.parse_as("cluster-rebalance-ms", cfg.cluster.rebalance_ms)?;
+    cfg.cluster.ingest_buffer =
+        flags.parse_as("ingest-buffer", cfg.cluster.ingest_buffer)?;
     if !cfg.cluster.peers.is_empty() && !cfg.cluster.enabled() {
         return Err("--peer needs --cluster-listen (this node must be \
                     reachable too)"
+            .into());
+    }
+    if cfg.cluster.join.is_some() && !cfg.cluster.enabled() {
+        return Err("--join needs --cluster-listen (peers must be able \
+                    to dial back)"
             .into());
     }
     teda_fpga::obs::recorder()
@@ -357,15 +376,28 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         let up = node.hello_peers();
         println!(
             "cluster node {} on {} — epoch {}, {} of {} shards owned, \
-             {}/{} peers up",
+             {} peers up",
             node.node_id(),
             node.bound_addr(),
             node.epoch(),
             node.owned_shards().len(),
             cfg.sharding.virtual_shards,
             up,
-            cfg.cluster.peers.len()
         );
+        if cfg.cluster.join.is_some() {
+            // Dynamic join: the roster + table arrived from the
+            // sponsor; now take on a uniform share of the shards via
+            // the ordinary seal → adopt pulls (mid-stream safe).
+            let pulled = node.pull_share()?;
+            println!(
+                "joined via {} — pulled {pulled} shard(s), epoch {}, \
+                 {} of {} owned",
+                cfg.cluster.join.as_deref().unwrap_or("?"),
+                node.epoch(),
+                node.owned_shards().len(),
+                cfg.sharding.virtual_shards,
+            );
+        }
         Some(node)
     } else {
         None
@@ -423,11 +455,14 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         match &cluster_handle {
             // Cluster mode: route by node ownership — locally-owned
             // samples take the local hot path, the rest ship to peers.
-            // A peer can be briefly unreachable (still starting, just
-            // killed, mid-failover): retry the burst until the table
-            // heals. The locally-submitted half of a partial first
-            // attempt is re-dropped by the workers' watermark dedup,
-            // so re-submitting the whole burst is safe.
+            // A peer that is briefly unreachable (still starting, just
+            // killed, mid-failover) is absorbed by the handle's bounded
+            // park-and-replay buffer, so submit_batch usually succeeds
+            // even mid-failover. It only errs once the buffer is full
+            // (or buffering is off); then retry until the table heals.
+            // The locally-submitted half of a partial first attempt is
+            // re-dropped by the workers' watermark dedup, so
+            // re-submitting the whole burst is safe.
             Some(ch) => {
                 let deadline = std::time::Instant::now()
                     + std::time::Duration::from_secs(10);
@@ -451,15 +486,18 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
         // ≥ 3/4 full, backpressure events in the last window, or a
         // windowed queue-wait p99 over the SLO. (Was: a fixed
         // halfway-sample demo trigger.)
-        if workers_max > svc.workers() && round % scale_check_every == 0 {
+        if round % scale_check_every == 0
+            && (workers_max > svc.workers() || cluster.is_some())
+        {
             let report = scale_window.tick(&svc.metrics());
-            if scale_up_wanted(
+            let wanted = scale_up_wanted(
                 &svc.queue_depths(),
                 cfg.queue_capacity,
                 report.delta("backpressure_events"),
                 report.p99("queue_wait"),
                 SCALE_SLO_NS,
-            ) {
+            );
+            if wanted && workers_max > svc.workers() {
                 let n = (svc.workers() + 1).min(workers_max);
                 svc.scale_to(n)?;
                 println!(
@@ -467,6 +505,12 @@ fn cmd_serve(flags: &Flags) -> Result<(), CliError> {
                      (queue pressure; epoch {})",
                     svc.table().epoch()
                 );
+            } else if let Some(node) = &cluster {
+                // Same pressure trigger, escalated cluster-wide:
+                // local worker scaling exhausted means this node
+                // recommends adding a node (visible as the
+                // node_scale_hint gauge and in `teda-fpga cluster`).
+                node.set_scale_hint(wanted);
             }
         }
         if rebalance_every > 0 && submitted >= next_rebalance {
@@ -841,14 +885,57 @@ fn metric_map(doc: &Json) -> HashMap<String, f64> {
     map
 }
 
-/// `teda-fpga bench-gate` — the CI perf regression gate: compare a
-/// freshly emitted `BENCH_shard.json` against the most recent
-/// *different* entry in the committed `BENCH_trend.json` (the fresh
-/// run usually self-appended as the tail) and fail when routing
-/// latency or throughput regressed beyond `--max-regress`. Counter
-/// metrics (migration totals) are informational and never gate. A
-/// missing trend or metric passes with a notice — the gate only bites
-/// once a baseline exists to compare against.
+/// One trend series gated by `bench-gate`: the key it was appended
+/// under in `BENCH_trend.json`, the fresh `BENCH_<key>.json` file it
+/// is compared against, and which metric directions count as a
+/// regression. Counter metrics (migration totals, drop counts) are
+/// informational and never gate.
+struct GateSeries {
+    key: &'static str,
+    lower_better: &'static [&'static str],
+    higher_better: &'static [&'static str],
+    /// A required series errors when its fresh file is missing; an
+    /// optional one skips with a notice (partial CI runs and older
+    /// checkouts don't emit every bench).
+    required: bool,
+}
+
+const GATE_SERIES: [GateSeries; 2] = [
+    GateSeries {
+        key: "shard",
+        lower_better: &[
+            "route_ns",
+            "route_snapshot_ns",
+            "migration_ns",
+            "migration_p99_ns",
+        ],
+        higher_better: &[
+            "throughput_single_sps",
+            "throughput_before_sps",
+            "throughput_after_rebalance_sps",
+        ],
+        required: true,
+    },
+    GateSeries {
+        key: "cluster",
+        lower_better: &[
+            "join_to_routable_ns",
+            "shard_move_ns",
+            "burst_drain_ns",
+        ],
+        higher_better: &[],
+        required: false,
+    },
+];
+
+/// `teda-fpga bench-gate` — the CI perf regression gate: compare each
+/// freshly emitted `BENCH_<series>.json` against the most recent
+/// *different* entry in that series of the committed
+/// `BENCH_trend.json` (the fresh run usually self-appended as the
+/// tail) and fail when a gated latency or throughput metric regressed
+/// beyond `--max-regress`. A missing trend, series, or metric passes
+/// with a notice — the gate only bites once a baseline exists to
+/// compare against.
 fn cmd_bench_gate(flags: &Flags) -> Result<(), CliError> {
     let root = match flags.get("root") {
         Some(dir) => std::path::PathBuf::from(dir),
@@ -861,90 +948,103 @@ fn cmd_bench_gate(flags: &Flags) -> Result<(), CliError> {
     if !(0.0..1.0).contains(&max_regress) {
         return Err("--max-regress must be in [0, 1)".into());
     }
-    let fresh_path = root.join("BENCH_shard.json");
-    let fresh_text = std::fs::read_to_string(&fresh_path).map_err(|e| {
-        format!(
-            "{}: {e} (run `cargo bench --bench shard` first)",
-            fresh_path.display()
-        )
-    })?;
-    let fresh = Json::parse(&fresh_text)
-        .map_err(|e| format!("{}: {e}", fresh_path.display()))?;
-    let current = metric_map(&fresh);
-    if current.is_empty() {
-        return Err("BENCH_shard.json emitted no metric rows — the bench \
-                    is broken, not merely slow"
-            .into());
-    }
     let trend_path = root.join("BENCH_trend.json");
-    let trend_text = match std::fs::read_to_string(&trend_path) {
-        Ok(t) => t,
+    let trend = match std::fs::read_to_string(&trend_path) {
+        Ok(text) => Some(
+            Json::parse(&text)
+                .map_err(|e| format!("{}: {e}", trend_path.display()))?,
+        ),
         Err(_) => {
             println!(
                 "bench-gate: no {} — pass with notice (no baseline yet)",
                 trend_path.display()
             );
-            return Ok(());
+            None
         }
     };
-    let trend = Json::parse(&trend_text)
-        .map_err(|e| format!("{}: {e}", trend_path.display()))?;
-    let baseline = trend
-        .get("shard")
-        .and_then(Json::as_arr)
-        .unwrap_or(&[])
-        .iter()
-        .rev()
-        .filter_map(|entry| entry.get("results"))
-        .find(|doc| **doc != fresh)
-        .map(metric_map);
-    let Some(baseline) = baseline else {
-        println!(
-            "bench-gate: no prior shard baseline in {} — pass with notice",
-            trend_path.display()
-        );
-        return Ok(());
-    };
-    const LOWER_BETTER: [&str; 4] = [
-        "route_ns",
-        "route_snapshot_ns",
-        "migration_ns",
-        "migration_p99_ns",
-    ];
-    const HIGHER_BETTER: [&str; 3] = [
-        "throughput_single_sps",
-        "throughput_before_sps",
-        "throughput_after_rebalance_sps",
-    ];
     println!("bench-gate: max regression {:.0}%", max_regress * 100.0);
     let mut checked = 0usize;
     let mut failures: Vec<String> = Vec::new();
-    let gated = LOWER_BETTER
-        .iter()
-        .map(|&n| (n, true))
-        .chain(HIGHER_BETTER.iter().map(|&n| (n, false)));
-    for (name, lower_better) in gated {
-        let (Some(&cur), Some(&base)) =
-            (current.get(name), baseline.get(name))
-        else {
-            println!("  {name:<32} no baseline — skipped");
+    for series in &GATE_SERIES {
+        let fresh_path = root.join(format!("BENCH_{}.json", series.key));
+        let fresh_text = match std::fs::read_to_string(&fresh_path) {
+            Ok(t) => t,
+            Err(e) if series.required => {
+                return Err(format!(
+                    "{}: {e} (run `cargo bench --bench {}` first)",
+                    fresh_path.display(),
+                    series.key
+                )
+                .into());
+            }
+            Err(_) => {
+                println!(
+                    "bench-gate: no {} — {} series skipped",
+                    fresh_path.display(),
+                    series.key
+                );
+                continue;
+            }
+        };
+        let fresh = Json::parse(&fresh_text)
+            .map_err(|e| format!("{}: {e}", fresh_path.display()))?;
+        let current = metric_map(&fresh);
+        if current.is_empty() {
+            return Err(format!(
+                "{} emitted no metric rows — the bench is broken, not \
+                 merely slow",
+                fresh_path.display()
+            )
+            .into());
+        }
+        let baseline = trend
+            .as_ref()
+            .and_then(|t| t.get(series.key))
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .rev()
+            .filter_map(|entry| entry.get("results"))
+            .find(|doc| **doc != fresh)
+            .map(metric_map);
+        let Some(baseline) = baseline else {
+            println!(
+                "bench-gate: no prior {} baseline in {} — pass with notice",
+                series.key,
+                trend_path.display()
+            );
             continue;
         };
-        checked += 1;
-        // Regression fraction, positive = worse.
-        let regress = if lower_better {
-            cur / base - 1.0
-        } else {
-            1.0 - cur / base
-        };
-        let delta_pct = (cur / base - 1.0) * 100.0;
-        println!("  {name:<32} {base:>14.1} → {cur:>14.1}  ({delta_pct:+.1}%)");
-        if base > 0.0 && regress > max_regress {
-            failures.push(format!(
-                "{name}: {base:.1} → {cur:.1} ({delta_pct:+.1}%, limit \
-                 ±{:.0}%)",
-                max_regress * 100.0
-            ));
+        let gated = series
+            .lower_better
+            .iter()
+            .map(|&n| (n, true))
+            .chain(series.higher_better.iter().map(|&n| (n, false)));
+        for (name, lower_better) in gated {
+            let (Some(&cur), Some(&base)) =
+                (current.get(name), baseline.get(name))
+            else {
+                println!("  {name:<32} no baseline — skipped");
+                continue;
+            };
+            checked += 1;
+            // Regression fraction, positive = worse.
+            let regress = if lower_better {
+                cur / base - 1.0
+            } else {
+                1.0 - cur / base
+            };
+            let delta_pct = (cur / base - 1.0) * 100.0;
+            println!(
+                "  {name:<32} {base:>14.1} → {cur:>14.1}  ({delta_pct:+.1}%)"
+            );
+            if base > 0.0 && regress > max_regress {
+                failures.push(format!(
+                    "{name}: {base:.1} → {cur:.1} ({delta_pct:+.1}%, limit \
+                     ±{:.0}%)",
+                    max_regress * 100.0
+                ));
+            }
         }
     }
     if checked == 0 {

@@ -380,6 +380,25 @@ service_metrics! {
         /// Failovers completed: dead peers whose shards this node
         /// recovered from the shared checkpoint store.
         pub failovers: Counter,
+        /// Failover claims this node lost to a racing leader (the
+        /// table moved past the observed epoch; backed off cleanly).
+        pub failover_races: Counter,
+        /// Members installed into the roster at runtime (dynamic
+        /// joins; static peers configured at boot do not count).
+        pub member_joins: Counter,
+        /// Members removed from the roster by a clean Leave.
+        pub member_leaves: Counter,
+        /// Cross-node load rebalances performed by this node (shards
+        /// shed to a colder peer by the heartbeat-driven policy).
+        pub node_rebalances: Counter,
+        /// Parked strays dropped because the bounded park list was
+        /// full (a permanently dead destination; never silent).
+        pub stray_park_drops: Counter,
+        /// Samples admitted into the failover-window ingest buffer.
+        pub ingest_parked: Counter,
+        /// Samples refused because the ingest buffer was full
+        /// (all-or-nothing admission; the caller saw an error).
+        pub ingest_park_full: Counter,
         /// Current shard-map epoch (bumps once per installed table).
         pub epoch: Gauge,
         /// Current cluster shard-table epoch (node-level ownership;
@@ -387,6 +406,11 @@ service_metrics! {
         pub cluster_epoch: Gauge,
         /// Peers currently considered alive by the heartbeat monitor.
         pub peers_alive: Gauge,
+        /// Samples currently parked in the ingest buffer.
+        pub ingest_park_depth: Gauge,
+        /// 1 while the autoscale policy recommends adding a node
+        /// (sustained pressure with local worker scaling exhausted).
+        pub node_scale_hint: Gauge,
         /// Live worker threads (tracks `scale_to`).
         pub workers_active: Gauge,
         /// Per-sample end-to-end latency (submit → verdict).

@@ -47,6 +47,10 @@
 //! | `Heartbeat`            | peer node id      | —              | —      |
 //! | `BundleShip`           | bundle bytes      | shards moved   | —      |
 //! | `Failover`             | dead node id      | shards adopted | —      |
+//! | `MemberJoin`           | joined node id    | —              | —      |
+//! | `NodeRebalance`        | recipient node id | shards shed    | —      |
+//! | `IngestPark`           | samples parked    | buffer depth   | —      |
+//! | `StrayDrop`            | strays dropped    | —              | —      |
 //!
 //! "—" columns carry `0` (or [`NO_WORKER`] for the worker field).
 
@@ -106,9 +110,17 @@ pub enum EventKind {
     BundleShip,
     /// A dead peer's shards were recovered from the shared store.
     Failover,
+    /// A member was installed into the roster at runtime.
+    MemberJoin,
+    /// Cross-node load rebalance: shards shed to a colder peer.
+    NodeRebalance,
+    /// A burst was parked in the failover-window ingest buffer.
+    IngestPark,
+    /// Parked strays were dropped at the bounded park list's cap.
+    StrayDrop,
 }
 
-const KINDS: [EventKind; 19] = [
+const KINDS: [EventKind; 23] = [
     EventKind::Submit,
     EventKind::Route,
     EventKind::RingPush,
@@ -128,6 +140,10 @@ const KINDS: [EventKind; 19] = [
     EventKind::Heartbeat,
     EventKind::BundleShip,
     EventKind::Failover,
+    EventKind::MemberJoin,
+    EventKind::NodeRebalance,
+    EventKind::IngestPark,
+    EventKind::StrayDrop,
 ];
 
 impl EventKind {
@@ -153,6 +169,10 @@ impl EventKind {
             EventKind::Heartbeat => "heartbeat",
             EventKind::BundleShip => "bundle_ship",
             EventKind::Failover => "failover",
+            EventKind::MemberJoin => "member_join",
+            EventKind::NodeRebalance => "node_rebalance",
+            EventKind::IngestPark => "ingest_park",
+            EventKind::StrayDrop => "stray_drop",
         }
     }
 

@@ -10,7 +10,14 @@
 //!   aborted, unsealed state gone) and a peer fails over from the
 //!   shared checkpoint store — the union of verdicts must STILL be
 //!   bit-identical, for the software, RTL, and ensemble engines;
-//! - heartbeat monitoring performs that failover automatically.
+//! - heartbeat monitoring performs that failover automatically;
+//! - a third node joins **mid-stream** (`--join`), pulls its uniform
+//!   share via seal → adopt, and the verdict stream stays
+//!   bit-identical; killing the joiner later fails its shards back;
+//! - a burst submitted **while a node is dead** (before failover
+//!   runs) parks in the [`ClusterHandle`] ingest buffer and replays
+//!   once the survivor adopts — no lost verdicts, no contradictory
+//!   duplicates.
 //!
 //! Nodes here live in one test process but share nothing except the
 //! checkpoint store and their sockets — the same isolation a real
@@ -155,6 +162,7 @@ fn uds_pair(tag: &str) -> (ClusterConfig, ClusterConfig) {
             peers: vec![format!("2={b}")],
             heartbeat_ms: 50,
             failover_ms: 0,
+            ..Default::default()
         },
         ClusterConfig {
             node_id: 2,
@@ -162,6 +170,47 @@ fn uds_pair(tag: &str) -> (ClusterConfig, ClusterConfig) {
             peers: vec![format!("1={a}")],
             heartbeat_ms: 50,
             failover_ms: 0,
+            ..Default::default()
+        },
+    )
+}
+
+/// The two-node pair plus a third config that *joins dynamically*:
+/// no static roster — node 3 knows only node 1's address and learns
+/// everything else from the `JoinOk`.
+fn uds_trio(
+    tag: &str,
+) -> (ClusterConfig, ClusterConfig, ClusterConfig) {
+    let dir = teda_fpga::util::unique_temp_dir(&format!("cluster-{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = format!("unix:{}", dir.join("node1.sock").display());
+    let b = format!("unix:{}", dir.join("node2.sock").display());
+    let c = format!("unix:{}", dir.join("node3.sock").display());
+    (
+        ClusterConfig {
+            node_id: 1,
+            listen: Some(a.clone()),
+            peers: vec![format!("2={b}")],
+            heartbeat_ms: 50,
+            failover_ms: 0,
+            ..Default::default()
+        },
+        ClusterConfig {
+            node_id: 2,
+            listen: Some(b),
+            peers: vec![format!("1={a}")],
+            heartbeat_ms: 50,
+            failover_ms: 0,
+            ..Default::default()
+        },
+        ClusterConfig {
+            node_id: 3,
+            listen: Some(c),
+            peers: vec![],
+            join: Some(a),
+            heartbeat_ms: 50,
+            failover_ms: 0,
+            ..Default::default()
         },
     )
 }
@@ -420,6 +469,7 @@ fn tcp_loopback_cluster_migrates_and_answers_status() {
         peers: vec!["2=127.0.0.1:17462".into()],
         heartbeat_ms: 50,
         failover_ms: 0,
+        ..Default::default()
     };
     let c2 = ClusterConfig {
         node_id: 2,
@@ -427,6 +477,7 @@ fn tcp_loopback_cluster_migrates_and_answers_status() {
         peers: vec!["1=127.0.0.1:17461".into()],
         heartbeat_ms: 50,
         failover_ms: 0,
+        ..Default::default()
     };
     let (svc1, n1) = start_node(EngineKind::Software, &c1, None);
     let (svc2, n2) = start_node(EngineKind::Software, &c2, None);
@@ -455,4 +506,205 @@ fn tcp_loopback_cluster_migrates_and_answers_status() {
     finish_node(svc1, n1, &mut map);
     finish_node(svc2, n2, &mut map);
     assert_eq!(map.len(), (STREAMS * 40) as usize);
+}
+
+/// A third node joins MID-STREAM via the dynamic-join path (what
+/// `serve --join ADDR` does), pulls its uniform share through the
+/// ordinary seal → adopt migration, and the verdict stream stays
+/// bit-identical to an undisturbed single-service run.
+fn assert_join_mid_stream_invisible(engine: EngineKind) {
+    let full = reference(engine);
+    let (c1, c2, c3) = uds_trio(&format!("join-{engine}"));
+    let (svc1, n1) = start_node(engine, &c1, None);
+    let (svc2, n2) = start_node(engine, &c2, None);
+    assert_eq!(n1.hello_peers(), 1);
+    let ingest = n1.handle();
+    for seq in 0..MIGRATE_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+
+    // Node 3 has NO static roster: `join` registers it with node 1,
+    // which re-broadcasts the table at epoch+1, gossips the join to
+    // node 2, and hands back the full member list. After start it is
+    // routable but owns nothing.
+    let (svc3, n3) = start_node(engine, &c3, None);
+    assert!(n3.owned_shards().is_empty(), "a joiner owns nothing yet");
+    assert_eq!(n3.epoch(), 1, "admission re-broadcasts at epoch+1");
+    assert_eq!(n3.table(), n1.table());
+    assert_eq!(n3.table(), n2.table(), "join gossip must reach node 2");
+
+    // Pull the uniform share — 32 shards / 3 members — from the
+    // biggest owners; in-flight streams cross inside sealed bundles.
+    let pulled = n3.pull_share().unwrap();
+    assert_eq!(pulled, (VIRTUAL_SHARDS / 3) as usize);
+    assert_eq!(n3.owned_shards().len(), pulled);
+    assert_eq!(n1.table(), n3.table());
+    assert_eq!(n2.table(), n3.table());
+    assert_eq!(
+        n1.owned_shards().len() + n2.owned_shards().len() + pulled,
+        VIRTUAL_SHARDS as usize
+    );
+
+    // Keep streaming through node 1: the joiner's samples now cross
+    // the wire like any other member's.
+    for seq in MIGRATE_AT..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    assert!(
+        svc3.metrics().bundle_bytes_rx.get() > 0,
+        "pull must ship sealed bundles to the joiner"
+    );
+    assert!(svc1.metrics().member_joins.get() >= 1);
+    drop(ingest);
+    let mut got = BTreeMap::new();
+    finish_node(svc1, n1, &mut got);
+    finish_node(svc2, n2, &mut got);
+    finish_node(svc3, n3, &mut got);
+    assert_bit_identical(engine, &full, &got);
+}
+
+#[test]
+fn software_join_mid_stream_is_invisible() {
+    assert_join_mid_stream_invisible(EngineKind::Software);
+}
+
+#[test]
+fn ensemble_join_mid_stream_is_invisible() {
+    assert_join_mid_stream_invisible(EngineKind::Ensemble);
+}
+
+/// Kill the dynamically-joined node mid-stream: a founding member
+/// fails over and re-adopts exactly the share the joiner pulled —
+/// including shards it had itself donated earlier — and the union of
+/// verdicts is still bit-identical.
+#[test]
+fn joiner_kill_failover_readopts_its_share() {
+    let engine = EngineKind::Software;
+    let full = reference(engine);
+    let store = Arc::new(MemoryStore::new());
+    let (c1, c2, c3) = uds_trio("kill-joiner");
+    let (svc1, n1) = start_node(engine, &c1, Some(store.clone()));
+    let (svc2, n2) = start_node(engine, &c2, Some(store.clone()));
+    n1.hello_peers();
+    let ingest = n1.handle();
+    let mut map = BTreeMap::new();
+    for seq in 0..MIGRATE_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    let (svc3, n3) = start_node(engine, &c3, Some(store.clone()));
+    let pulled = n3.pull_share().unwrap();
+    assert_eq!(pulled, (VIRTUAL_SHARDS / 3) as usize);
+    for seq in MIGRATE_AT..KILL_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+
+    // SIGKILL-equivalent: transport down, unsealed state gone; only
+    // the joiner's periodic checkpoints in the shared store survive.
+    n3.shutdown().unwrap();
+    let svc3 = Arc::try_unwrap(svc3)
+        .unwrap_or_else(|_| panic!("node 3 service still shared"));
+    index(svc3.abort().unwrap(), &mut map);
+
+    let adopted = n1.failover(3).unwrap();
+    assert_eq!(adopted, pulled, "survivor re-adopts the joiner's share");
+    assert_eq!(svc1.metrics().failovers.get(), 1);
+    assert_eq!(n1.table(), n2.table());
+
+    // Re-feed from the lowest checkpoint watermark; the inclusive
+    // dedup absorbs the overlap on every live stream.
+    let mut resume = u64::MAX;
+    for sid in 0..STREAMS {
+        let cp = store
+            .latest(sid)
+            .unwrap()
+            .expect("checkpoint before the kill");
+        assert!(cp.seq < KILL_AT);
+        resume = resume.min(cp.seq + 1);
+    }
+    for seq in resume..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    drop(ingest);
+    finish_node(svc1, n1, &mut map);
+    finish_node(svc2, n2, &mut map);
+    assert_bit_identical(engine, &full, &map);
+}
+
+/// A burst submitted while a peer is DOWN — the failover window —
+/// must be absorbed by the [`ClusterHandle`] park-and-replay buffer:
+/// `submit_batch` keeps returning `Ok`, the undeliverable share
+/// queues locally, and once the survivor adopts, the replay yields
+/// the full bit-identical verdict set — no lost verdicts, no
+/// contradictory duplicates.
+#[test]
+fn burst_during_failover_window_is_absorbed() {
+    let engine = EngineKind::Software;
+    let full = reference(engine);
+    let store = Arc::new(MemoryStore::new());
+    let (c1, c2) = uds_pair("burst");
+    let (svc1, n1) = start_node(engine, &c1, Some(store.clone()));
+    let (svc2, n2) = start_node(engine, &c2, Some(store.clone()));
+    n2.hello_peers();
+    let ingest = n2.handle();
+    let mut map = BTreeMap::new();
+    for seq in 0..KILL_AT {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest.submit_batch(burst).unwrap();
+    }
+    n1.shutdown().unwrap();
+    let svc1 = Arc::try_unwrap(svc1)
+        .unwrap_or_else(|_| panic!("node 1 service still shared"));
+    index(svc1.abort().unwrap(), &mut map);
+
+    // Node 1 is dead and nobody has failed over yet. Keep submitting
+    // the whole remaining stream from every live stream's replay
+    // point: locally-owned samples process normally, node-1 samples
+    // park — not one submit errors.
+    let mut resume = u64::MAX;
+    for sid in 0..STREAMS {
+        let cp = store
+            .latest(sid)
+            .unwrap()
+            .expect("checkpoint before the kill");
+        resume = resume.min(cp.seq + 1);
+    }
+    for seq in resume..PER_STREAM {
+        let burst: Vec<Sample> =
+            (0..STREAMS).map(|sid| sample(sid, seq)).collect();
+        ingest
+            .submit_batch(burst)
+            .expect("burst must be absorbed, not refused");
+    }
+    assert!(
+        ingest.parked() > 0,
+        "the dead node's share must be parked, not dropped"
+    );
+    assert!(svc2.metrics().ingest_parked.get() > 0);
+
+    // Failover; the parked backlog replays onto the adopted shards.
+    let adopted = n2.failover(1).unwrap();
+    assert!(adopted > 0);
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    while ingest.flush_parked() > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "park buffer never drained after failover"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    drop(ingest);
+    finish_node(svc2, n2, &mut map);
+    assert_bit_identical(engine, &full, &map);
 }

@@ -26,7 +26,17 @@ fn sample(sid: u64, seq: u64) -> Sample {
 fn every_msg() -> Vec<Msg> {
     vec![
         Msg::Hello { node_id: 1, epoch: 0 },
-        Msg::Heartbeat { node_id: 2, epoch: 7 },
+        Msg::Heartbeat { node_id: 2, epoch: 7, load: 4_096 },
+        Msg::Join { node_id: 3, addr: "10.0.0.3:7000".into() },
+        Msg::Leave { node_id: 3 },
+        Msg::JoinOk {
+            epoch: 4,
+            owner: (0..32u64).map(|s| 1 + s % 2).collect(),
+            peers: vec![
+                (1, "10.0.0.1:7000".into()),
+                (2, "unix:/tmp/node2.sock".into()),
+            ],
+        },
         Msg::Expect { shards: vec![0, 5, 31] },
         Msg::Seal { shards: Vec::new() }, // pure barrier
         Msg::Seal { shards: vec![3] },
@@ -210,6 +220,17 @@ fn count_bomb_inside_payload_is_rejected() {
             "type {type_id}: count bomb decoded"
         );
     }
+    // JoinOk leads with an epoch word; its bombs sit one field in —
+    // the owner count — so forge the epoch and then the bomb.
+    let mut tail = 3u64.to_le_bytes().to_vec();
+    tail.extend_from_slice(&bomb);
+    let bad = forge(0x45, tail.len() as u32, &tail);
+    assert!(frame::decode(&bad).is_err(), "JoinOk count bomb decoded");
+    // Join's bomb is a string length claiming ~1 GiB of address.
+    let mut tail = 7u64.to_le_bytes().to_vec();
+    tail.extend_from_slice(&bomb);
+    let bad = forge(11, tail.len() as u32, &tail);
+    assert!(frame::decode(&bad).is_err(), "Join length bomb decoded");
 }
 
 #[test]
