@@ -1,0 +1,193 @@
+//! Batch-native engine kernels: `process_batch` (run-coalesced) vs the
+//! per-sample `ingest` loop, per backend, across a run-length sweep.
+//!
+//! The workload holds total sample count fixed and varies only how many
+//! consecutive samples share a stream (the run length): at run length 1
+//! every sample pays the per-stream dispatch (map lookup, state
+//! resolve), at 1024 the batch kernel amortizes it across the whole
+//! run. Single-submit throughput is the coalescing-off baseline for the
+//! EXPERIMENTS.md ablation.
+//!
+//! The global flight recorder stays at its default (enabled), matching
+//! production services; nothing here turns it off.
+//!
+//! Emits `BENCH_engine.json` at the repository root and appends the run
+//! to the cumulative `BENCH_trend.json`.
+//!
+//! Run: `cargo bench --bench engine`
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{EnsembleConfig, Json};
+use teda_fpga::engine::{Engine, RtlEngine, SoftwareEngine, XlaEngine};
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::obs::recorder;
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::benchkit::{black_box, Bench};
+use teda_fpga::util::prng::SplitMix64;
+
+const N_FEATURES: usize = 2;
+const M: f64 = 3.0;
+/// Samples per measured burst (fixed across the run-length sweep).
+const BURST: usize = 8_192;
+const STREAMS: u64 = 16;
+/// Lengths of the consecutive same-stream runs inside each burst.
+const RUN_LENS: [usize; 4] = [1, 8, 64, 1024];
+/// Run length used for the single-submit (coalescing-off) baseline.
+const SINGLE_RL: usize = 64;
+
+/// A burst of `BURST` samples where every maximal same-stream run is
+/// exactly `run_len` long: streams rotate round-robin, each contributing
+/// `run_len` consecutive samples with monotonic per-stream seqs.
+fn workload(run_len: usize, rng: &mut SplitMix64) -> Vec<Sample> {
+    let mut out = Vec::with_capacity(BURST);
+    let mut seqs = vec![0u64; STREAMS as usize];
+    let mut sid = 0u64;
+    while out.len() < BURST {
+        for _ in 0..run_len.min(BURST - out.len()) {
+            let seq = &mut seqs[sid as usize];
+            out.push(Sample {
+                stream_id: sid,
+                seq: *seq,
+                values: (0..N_FEATURES).map(|_| rng.normal()).collect(),
+            });
+            *seq += 1;
+        }
+        sid = (sid + 1) % STREAMS;
+    }
+    out
+}
+
+/// Per-sample baseline: the pre-coalescing hot path (one map resolve
+/// per sample).
+fn bench_single(name: &str, eng: &mut dyn Engine, samples: &[Sample]) -> f64 {
+    Bench::new(name)
+        .iters(30)
+        .units(BURST as u64, "samples")
+        .run(|| {
+            for s in samples {
+                black_box(eng.ingest(s).unwrap());
+            }
+        })
+        .throughput
+}
+
+/// Run-coalesced batch kernel: one state resolve per run, one reused
+/// output buffer per burst.
+fn bench_batch(name: &str, eng: &mut dyn Engine, samples: &[Sample]) -> f64 {
+    let mut out = Vec::new();
+    Bench::new(name)
+        .iters(30)
+        .units(BURST as u64, "samples")
+        .run(|| {
+            out.clear();
+            eng.process_batch(samples, &mut out).unwrap();
+            black_box(out.len());
+        })
+        .throughput
+}
+
+fn num(v: f64) -> Json {
+    Json::Num((v * 10.0).round() / 10.0)
+}
+
+fn push(results: &mut Vec<Json>, metric: String, value: f64) {
+    let mut row = BTreeMap::new();
+    row.insert("metric".into(), Json::Str(metric));
+    row.insert("value".into(), num(value));
+    results.push(Json::Obj(row));
+}
+
+/// Sweep one engine: single-submit baseline at `SINGLE_RL`, then the
+/// batch kernel across every run length. `make` returns a fresh engine
+/// per measurement so map sizes stay comparable across backends.
+fn sweep(
+    results: &mut Vec<Json>,
+    label: &str,
+    mut make: impl FnMut() -> Box<dyn Engine>,
+) {
+    let mut rng = SplitMix64::new(0x7EDA_BA7C);
+    let single_wl = workload(SINGLE_RL, &mut rng);
+    let single = bench_single(
+        &format!("{label}_single"),
+        make().as_mut(),
+        &single_wl,
+    );
+    println!("{label:>9} single rl{SINGLE_RL}: {single:>12.0} samples/s");
+    push(results, format!("{label}_single_sps"), single);
+
+    for rl in RUN_LENS {
+        let wl = workload(rl, &mut rng);
+        let batch = bench_batch(
+            &format!("{label}_batch_rl{rl}"),
+            make().as_mut(),
+            &wl,
+        );
+        println!("{label:>9} batch  rl{rl}: {batch:>12.0} samples/s");
+        push(results, format!("{label}_batch_rl{rl}_sps"), batch);
+    }
+}
+
+fn main() {
+    assert!(
+        recorder().is_enabled(),
+        "flight recorder must stay on for this bench"
+    );
+    println!(
+        "== engine kernels ({STREAMS} streams, bursts of {BURST}, run \
+         lengths {RUN_LENS:?}, recorder on) ==\n"
+    );
+    let mut results = Vec::new();
+
+    sweep(&mut results, "software", || {
+        Box::new(SoftwareEngine::new(N_FEATURES, M))
+    });
+    sweep(&mut results, "rtl", || {
+        Box::new(RtlEngine::new(N_FEATURES, M))
+    });
+    let ens_cfg = EnsembleConfig::default();
+    sweep(&mut results, "ensemble", || {
+        Box::new(EnsembleEngine::new(&ens_cfg, N_FEATURES).unwrap())
+    });
+
+    // XLA rows ship only when the AOT artifact is present (same gate as
+    // the engine tests); the bench-gate treats them as optional.
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        let rt = XlaRuntime::new(dir).unwrap();
+        sweep(&mut results, "xla", || {
+            Box::new(XlaEngine::new(&rt, N_FEATURES, 1).unwrap())
+        });
+    } else {
+        eprintln!("artifacts missing; skipping XLA engine rows");
+    }
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("engine".into()));
+    doc.insert(
+        "workload".into(),
+        Json::Str(format!(
+            "{STREAMS} streams, bursts of {BURST}, batch vs single per \
+             backend, run-length sweep {RUN_LENS:?} (single baseline at \
+             rl{SINGLE_RL}), flight recorder on"
+        )),
+    );
+    doc.insert("results".into(), Json::Arr(results));
+    let json = Json::Obj(doc);
+
+    // Always the repository root (one level above the cargo manifest),
+    // matching the other BENCH_*.json emitters.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("cargo manifest dir has a parent");
+    let path = root.join("BENCH_engine.json");
+    std::fs::write(&path, json.to_string_compact() + "\n")
+        .expect("write BENCH_engine.json");
+    println!("wrote {}", path.display());
+    match teda_fpga::util::benchkit::append_trend(root, "engine", &json) {
+        Ok(true) => println!("appended run to BENCH_trend.json"),
+        Ok(false) => println!("BENCH_trend.json already has this run"),
+        Err(e) => eprintln!("warning: trend append failed: {e}"),
+    }
+}

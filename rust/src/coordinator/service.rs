@@ -1311,490 +1311,6 @@ impl Service {
     }
 }
 
-/// One worker's loop state: engine-adjacent bookkeeping plus the shard
-/// sets driving the migration protocol. Ownership changes strictly in
-/// queue order (`Seal` removes, `Adopt` adds), which is what makes the
-/// protocol race-free without any cross-thread locking.
-struct Worker {
-    widx: usize,
-    virtual_shards: u32,
-    policy: CheckpointPolicy,
-    res_tx: Sender<Vec<Classified>>,
-    stray_tx: Sender<Stray>,
-    metrics: Arc<ServiceMetrics>,
-    shard_metrics: Arc<ShardMetrics>,
-    state_mgr: Arc<StateManager>,
-    /// Shards this worker currently owns.
-    owned: HashSet<u32>,
-    /// Shards announced by `Expect` whose state has not arrived yet.
-    pending: HashSet<u32>,
-    /// Samples for pending shards, replayed in (stream, seq) order at
-    /// `Adopt`.
-    stash: Vec<(Sample, Instant)>,
-    /// submit-time of every in-flight sample, for latency accounting.
-    inflight: HashMap<(u64, u64), Instant>,
-    /// Streams this worker has fed to its engine (restore-on-resume
-    /// runs once, before a stream's first sample).
-    seen: HashSet<u64>,
-    /// Watermark each stream was restored at: re-fed samples at or
-    /// below it are already folded into the snapshot and must be
-    /// dropped, so an upstream that replays from the watermark
-    /// *inclusively* stays exactly-once instead of double-counting.
-    restored_at: HashMap<u64, u64>,
-    /// Idle-stream eviction bookkeeping: tick each stream last
-    /// appeared at.
-    last_seen: HashMap<u64, u64>,
-    /// Last sequence number folded into the engine per stream — the
-    /// exact watermark a migration seals the stream at.
-    last_seq: HashMap<u64, u64>,
-    /// Samples processed by this worker (eviction clock).
-    tick: u64,
-}
-
-/// What the worker loop does after handling one job.
-enum Flow {
-    Continue,
-    Exit,
-}
-
-impl Worker {
-    /// Two-plane consumption discipline: exhaust the CONTROL channel
-    /// before each single ring pop. Control items (migration protocol,
-    /// diverted data from non-claimant producers, stray Replays) are
-    /// always at least as old as anything on the ring — the ring
-    /// claimant is a single thread, and a stream's samples switch
-    /// planes only across a claim change — so channel-first preserves
-    /// the per-stream order the protocol depends on. Residual
-    /// cross-thread same-stream handoffs fall to the watermark guard,
-    /// counted in `stale_drops` (documented contract: one submitting
-    /// thread per stream).
-    fn run(
-        &mut self,
-        rx: Receiver<Job>,
-        slot: &WorkerSlot<Job>,
-        engine: &mut dyn Engine,
-    ) -> Result<()> {
-        'live: loop {
-            loop {
-                match rx.try_recv() {
-                    Ok(Some(job)) => {
-                        if let Flow::Exit = self.handle(engine, slot, job)? {
-                            slot.close_ring();
-                            return Ok(());
-                        }
-                    }
-                    Ok(None) => break,
-                    Err(_) => break 'live,
-                }
-            }
-            if let Some(job) = slot.pop_ring() {
-                if let Flow::Exit = self.handle(engine, slot, job)? {
-                    slot.close_ring();
-                    return Ok(());
-                }
-                continue;
-            }
-            // Both planes empty: park on the doorbell (re-checks
-            // emptiness under the lock; producers notify after every
-            // publish).
-            record(EventKind::Park, 0, 0, self.widx as u32);
-            slot.park(&rx);
-        }
-        // Control channel closed (the service's explicit close): stop
-        // accepting ring pushes, then drain what already landed —
-        // producers racing the closure must not lose samples.
-        slot.close_ring();
-        while let Some(job) = slot.pop_ring() {
-            self.handle(engine, slot, job)?;
-        }
-        // Final flush for whatever is still buffered.
-        let verdicts = engine.flush()?;
-        self.emit(verdicts, true)?;
-        Ok(())
-    }
-
-    /// Dispatch one job. Returns whether the loop continues.
-    fn handle(
-        &mut self,
-        engine: &mut dyn Engine,
-        slot: &WorkerSlot<Job>,
-        job: Job,
-    ) -> Result<Flow> {
-        match job {
-            Job::Sample(sample, t0) => {
-                // Single-sample hot path: one extra clock read for the
-                // queue-wait split; engine/emit stage timing stays on
-                // the batched path only (the < 20% bench-gate budget).
-                let t_dq = Instant::now();
-                self.metrics
-                    .queue_wait
-                    .record(t_dq.saturating_duration_since(t0).as_nanos()
-                        as u64);
-                let mut verdicts = Vec::new();
-                self.process(engine, sample, t0, &mut verdicts)?;
-                self.evict_idle(engine);
-                self.emit(verdicts, false)?;
-            }
-            Job::Batch(samples, t0) => {
-                // Accumulate the whole burst's verdicts, emit once.
-                // Stage split: the burst shares one submit time, so one
-                // queue-wait record covers it; engine time spans the
-                // whole process loop (per-burst, amortized like the
-                // queue synchronization itself).
-                let t_dq = Instant::now();
-                self.metrics
-                    .queue_wait
-                    .record(t_dq.saturating_duration_since(t0).as_nanos()
-                        as u64);
-                record(
-                    EventKind::Dequeue,
-                    samples.len() as u64,
-                    0,
-                    self.widx as u32,
-                );
-                let mut all = Vec::with_capacity(samples.len());
-                for sample in samples {
-                    self.process(engine, sample, t0, &mut all)?;
-                    self.evict_idle(engine);
-                }
-                self.metrics
-                    .engine_time
-                    .record(t_dq.elapsed().as_nanos() as u64);
-                self.emit(all, true)?;
-            }
-            Job::Replay(strays) => {
-                // Batched stray re-delivery: same as Batch, but every
-                // stray carries its ORIGINAL submit time (one
-                // queue-wait record per stray — their waits differ).
-                let t_dq = Instant::now();
-                record(
-                    EventKind::Dequeue,
-                    strays.len() as u64,
-                    0,
-                    self.widx as u32,
-                );
-                let mut all = Vec::with_capacity(strays.len());
-                for (sample, t0) in strays {
-                    self.metrics.queue_wait.record(
-                        t_dq.saturating_duration_since(t0).as_nanos() as u64,
-                    );
-                    self.process(engine, sample, t0, &mut all)?;
-                    self.evict_idle(engine);
-                }
-                self.metrics
-                    .engine_time
-                    .record(t_dq.elapsed().as_nanos() as u64);
-                self.emit(all, true)?;
-            }
-            Job::Seal { shards, reply } => {
-                // The seal's backlog barrier spans BOTH queue planes:
-                // drain the ring first so "the Seal answered" keeps
-                // meaning "everything enqueued before it is processed
-                // or stray-forwarded". Only data jobs can be on the
-                // ring, so this cannot recurse into another Seal.
-                while let Some(data) = slot.pop_ring() {
-                    self.handle(engine, slot, data)?;
-                }
-                self.seal(engine, &shards, &reply)?;
-            }
-            Job::Expect { shards } => {
-                self.pending.extend(shards);
-            }
-            Job::Adopt { shards, records } => {
-                self.adopt(engine, &shards, records)?;
-            }
-            Job::Retire => {
-                // All shards were migrated off before retirement, so
-                // the flush is a formality for a strictly-empty
-                // engine. Do NOT exit yet: a submitter may still land
-                // a last sample on either plane, which must be stray-
-                // forwarded, not dropped — the loop ends when the
-                // service explicitly closes this worker's queues.
-                debug_assert!(self.owned.is_empty());
-                let verdicts = engine.flush()?;
-                self.emit(verdicts, true)?;
-            }
-            Job::Flush => {
-                let verdicts = engine.flush()?;
-                self.emit(verdicts, true)?;
-            }
-            // Crash simulation: abandon engine state without flushing.
-            // The backlog already delivered to this worker (its ring)
-            // is still processed first — identical to the single-queue
-            // semantics where Abort queued strictly behind it — so
-            // only un-flushed engine state dies with the worker.
-            Job::Abort => {
-                while let Some(data) = slot.pop_ring() {
-                    self.handle(engine, slot, data)?;
-                }
-                return Ok(Flow::Exit);
-            }
-        }
-        Ok(Flow::Continue)
-    }
-
-    /// One sample through the engine: ownership check (stash or
-    /// forward when the shard is in motion), restore-on-resume before
-    /// a stream's first sample, replay-window dedup, ingest, then
-    /// periodic engine-agnostic checkpointing — identical on the
-    /// single-sample, batch, and stash-replay paths.
-    fn process(
-        &mut self,
-        engine: &mut dyn Engine,
-        sample: Sample,
-        t0: Instant,
-        out: &mut Vec<EngineVerdict>,
-    ) -> Result<()> {
-        let (sid, seq) = (sample.stream_id, sample.seq);
-        let shard = shard_of(sid, self.virtual_shards);
-        if !self.owned.contains(&shard) {
-            if self.pending.contains(&shard) {
-                // State is on its way (Expect seen, Adopt not yet).
-                self.stash.push((sample, t0));
-            } else {
-                // Routed under a stale table — hand it back for
-                // re-routing. Never processed here, never lost.
-                self.metrics.stray_reroutes.inc();
-                record(EventKind::Stray, sid, shard, self.widx as u32);
-                let _ = self.stray_tx.send((sample, t0));
-            }
-            return Ok(());
-        }
-        self.tick += 1;
-        self.shard_metrics.shard(shard).samples.inc();
-        self.last_seen.insert(sid, self.tick);
-        if self.seen.insert(sid) && self.policy.restore_on_resume && seq > 0
-        {
-            // First sample of a mid-stream resume: adopt the newest
-            // checkpoint. The upstream replays at-least-once from the
-            // watermark (inclusively or after it); either way the
-            // watermark filter below keeps processing exactly-once.
-            if let Some(cp) = self.state_mgr.latest(sid) {
-                engine.restore(sid, cp.snapshot)?;
-                self.metrics.stream_restores.inc();
-                record(EventKind::Restore, sid, shard, self.widx as u32);
-                self.restored_at.insert(sid, cp.seq);
-                self.last_seq.insert(sid, cp.seq);
-            }
-        }
-        if let Some(&wm) = self.restored_at.get(&sid) {
-            if seq <= wm {
-                // Already folded into the restored snapshot: dropping
-                // it (instead of re-ingesting) is what keeps the
-                // detector state exactly-once under an inclusive
-                // replay window.
-                self.metrics.replay_skipped.inc();
-                return Ok(());
-            }
-        }
-        if self.last_seq.get(&sid).is_some_and(|&last| seq <= last) {
-            // Watermark guard: a sample at or below the stream's last
-            // ingested seq can only be a duplicate or a pathologically
-            // late stray (a submitter stalled across an entire
-            // migration). Ingesting it would corrupt the order-
-            // dependent TEDA recurrence AND regress the seal
-            // watermark; dropping it keeps every other verdict exact.
-            self.metrics.stale_drops.inc();
-            return Ok(());
-        }
-        self.inflight.insert((sid, seq), t0);
-        self.last_seq.insert(sid, seq);
-        out.extend(engine.ingest(&sample)?);
-        if self.policy.every > 0 && (seq + 1) % self.policy.every == 0 {
-            if let Some(snapshot) = engine.snapshot(sid) {
-                self.state_mgr.publish(StateCheckpoint {
-                    stream_id: sid,
-                    seq,
-                    snapshot,
-                });
-            }
-        }
-        Ok(())
-    }
-
-    /// Migration, old-worker side: snapshot every resident stream of
-    /// the sealed shards at its exact watermark, publish the
-    /// checkpoints (failover sees the same watermark), encode them as
-    /// the wire bundle, evict the streams, and disown the shards.
-    fn seal(
-        &mut self,
-        engine: &mut dyn Engine,
-        shards: &[u32],
-        reply: &Sender<SealBundle>,
-    ) -> Result<()> {
-        let sealed: HashSet<u32> = shards.iter().copied().collect();
-        let vs = self.virtual_shards;
-        let mut sids: Vec<u64> = self
-            .last_seq
-            .keys()
-            .copied()
-            .filter(|&sid| sealed.contains(&shard_of(sid, vs)))
-            .collect();
-        sids.sort_unstable();
-        let mut records = Vec::with_capacity(sids.len());
-        for sid in sids {
-            let Some(snapshot) = engine.snapshot(sid) else { continue };
-            let cp = StateCheckpoint {
-                stream_id: sid,
-                seq: self.last_seq[&sid],
-                snapshot,
-            };
-            records.push(codec::encode(&cp));
-            self.state_mgr.publish(cp);
-            engine.evict(sid);
-            self.seen.remove(&sid);
-            self.restored_at.remove(&sid);
-            self.last_seen.remove(&sid);
-            self.last_seq.remove(&sid);
-            // In-flight verdicts migrate inside the snapshot; the new
-            // worker re-emits them (latency unknown there, reported as
-            // 0 and kept out of the histogram).
-            self.inflight.retain(|(s, _), _| *s != sid);
-        }
-        for shard in shards {
-            self.owned.remove(shard);
-        }
-        record(
-            EventKind::Seal,
-            records.len() as u64,
-            shards.len() as u32,
-            self.widx as u32,
-        );
-        // Rebalancer gone mid-protocol (service torn down): nothing to
-        // do — the checkpoints above are already published.
-        let _ = reply.send(SealBundle { records });
-        Ok(())
-    }
-
-    /// Migration, new-worker side: decode + restore every stream of the
-    /// bundle, take ownership, then replay stashed samples in
-    /// (stream, seq) order through the inclusive-watermark dedup.
-    fn adopt(
-        &mut self,
-        engine: &mut dyn Engine,
-        shards: &[u32],
-        records: Vec<Vec<u8>>,
-    ) -> Result<()> {
-        record(
-            EventKind::Adopt,
-            records.len() as u64,
-            shards.len() as u32,
-            self.widx as u32,
-        );
-        for rec in records {
-            let cp = codec::decode(&rec)?;
-            let sid = cp.stream_id;
-            engine.restore(sid, cp.snapshot)?;
-            self.seen.insert(sid);
-            self.restored_at.insert(sid, cp.seq);
-            self.last_seq.insert(sid, cp.seq);
-            self.last_seen.insert(sid, self.tick);
-        }
-        for &shard in shards {
-            self.pending.remove(&shard);
-            self.owned.insert(shard);
-        }
-        // Replay whatever outran its state. Stash order is arrival
-        // order across two paths (direct post-swap submissions and
-        // re-routed strays), so sort back into per-stream seq order;
-        // the dedup drops anything the snapshots already cover.
-        let vs = self.virtual_shards;
-        let owned = &self.owned;
-        let (ready, keep): (Vec<_>, Vec<_>) = std::mem::take(&mut self.stash)
-            .into_iter()
-            .partition(|(s, _)| owned.contains(&shard_of(s.stream_id, vs)));
-        self.stash = keep;
-        let mut ready = ready;
-        ready.sort_by_key(|(s, _)| (s.stream_id, s.seq));
-        let mut verdicts = Vec::new();
-        for (sample, t0) in ready {
-            self.process(engine, sample, t0, &mut verdicts)?;
-        }
-        self.evict_idle(engine);
-        self.emit(verdicts, true)?;
-        Ok(())
-    }
-
-    /// Drop every stream idle for ≥ `evict_after` worker samples:
-    /// engine state, in-memory checkpoint, durable checkpoints, and the
-    /// worker's bookkeeping go together, so a re-appearing stream id
-    /// starts fresh instead of resurrecting stale state. Scans once per
-    /// `evict_after` ticks to keep the hot path O(1).
-    fn evict_idle(&mut self, engine: &mut dyn Engine) {
-        let after = self.policy.evict_after;
-        if after == 0 || self.tick == 0 || self.tick % after != 0 {
-            return;
-        }
-        let idle: Vec<u64> = self
-            .last_seen
-            .iter()
-            .filter(|(_, &at)| self.tick - at >= after)
-            .map(|(&sid, _)| sid)
-            .collect();
-        for sid in idle {
-            engine.evict(sid);
-            self.state_mgr.evict(sid);
-            record(EventKind::Evict, sid, 0, self.widx as u32);
-            self.seen.remove(&sid);
-            self.restored_at.remove(&sid);
-            self.last_seen.remove(&sid);
-            self.last_seq.remove(&sid);
-            // The engine discarded the stream's in-flight verdicts;
-            // their latency records would otherwise leak forever.
-            self.inflight.retain(|(s, _), _| *s != sid);
-            self.metrics.stream_evictions.inc();
-        }
-    }
-
-    /// One burst send per engine call: metrics are batched too (counter
-    /// adds are cheap but the channel lock is not). `timed` records the
-    /// emit-stage duration (one clock-read pair per burst) — disabled
-    /// on the single-sample hot path by the caller.
-    fn emit(&mut self, verdicts: Vec<EngineVerdict>, timed: bool) -> Result<()> {
-        if verdicts.is_empty() {
-            return Ok(());
-        }
-        let t_emit = timed.then(Instant::now);
-        let mut burst = Vec::with_capacity(verdicts.len());
-        let mut outliers = 0u64;
-        for v in verdicts {
-            // Verdicts without a submit record (re-emitted in-flight
-            // work after a restore or migration) report 0 but are NOT
-            // recorded into the histograms — fabricated 0 ns entries
-            // would drag every post-failover quantile toward zero.
-            let latency_ns = match self.inflight.remove(&(v.stream_id, v.seq))
-            {
-                Some(t) => {
-                    let ns = t.elapsed().as_nanos() as u64;
-                    self.metrics.latency.record(ns);
-                    self.shard_metrics
-                        .shard(shard_of(v.stream_id, self.virtual_shards))
-                        .latency
-                        .record(ns);
-                    ns
-                }
-                None => 0,
-            };
-            if v.outlier {
-                outliers += 1;
-            }
-            burst.push(Classified { verdict: v, latency_ns });
-        }
-        self.metrics.verdicts_out.add(burst.len() as u64);
-        self.metrics.outliers.add(outliers);
-        self.res_tx.send(burst).map_err(|_| {
-            Error::Stream(format!(
-                "worker {}: results channel closed",
-                self.widx
-            ))
-        })?;
-        if let Some(t) = t_emit {
-            self.metrics.emit_time.record(t.elapsed().as_nanos() as u64);
-        }
-        Ok(())
-    }
-}
-
 /// Should the serve loop add a worker *now*? Keyed off the live
 /// signals the observability plane exposes (ROADMAP item 2, first
 /// half): any data ring ≥ 3/4 full, any backpressure events in the

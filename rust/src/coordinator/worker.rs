@@ -19,7 +19,7 @@ use crate::config::{EngineKind, ServiceConfig};
 use crate::coordinator::senders::WorkerSlot;
 use crate::coordinator::{shard_of, StateCheckpoint, StateManager};
 use crate::engine::{
-    Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine,
+    runs, Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine,
 };
 use crate::ensemble::EnsembleEngine;
 use crate::metrics::{EnsembleMetrics, ServiceMetrics, ShardMetrics};
@@ -198,6 +198,9 @@ pub(crate) fn spawn_worker(
                     last_seen: HashMap::new(),
                     last_seq: HashMap::new(),
                     tick: 0,
+                    verdict_buf: Vec::new(),
+                    sample_buf: Vec::new(),
+                    t0_buf: Vec::new(),
                 };
                 worker.run(rx, &slot, engine.as_mut())
             }));
@@ -274,6 +277,32 @@ struct Worker {
     last_seq: HashMap<u64, u64>,
     /// Samples processed by this worker (eviction clock).
     tick: u64,
+    /// Reusable verdict accumulator: bursts drain it into the results
+    /// channel through [`Worker::emit`], keeping its capacity across
+    /// jobs instead of allocating per `Job::Batch`.
+    verdict_buf: Vec<EngineVerdict>,
+    /// Coalescing scratch for `Job::Replay`: strays unzip into these so
+    /// the run core borrows plain slices (no per-burst allocation).
+    sample_buf: Vec<Sample>,
+    t0_buf: Vec<Instant>,
+}
+
+/// Per-sample submit times for one burst: a direct `Job::Batch` shares
+/// one submit instant across the burst, a `Job::Replay` keeps each
+/// stray's original time (latency accounting stays honest across
+/// re-routes).
+enum RunT0<'a> {
+    Uniform(Instant),
+    Per(&'a [Instant]),
+}
+
+impl RunT0<'_> {
+    fn at(&self, i: usize) -> Instant {
+        match self {
+            RunT0::Uniform(t) => *t,
+            RunT0::Per(ts) => ts[i],
+        }
+    }
 }
 
 /// What the worker loop does after handling one job.
@@ -333,8 +362,8 @@ impl Worker {
             self.handle(engine, slot, job)?;
         }
         // Final flush for whatever is still buffered.
-        let verdicts = engine.flush()?;
-        self.emit(verdicts, true)?;
+        let mut verdicts = engine.flush()?;
+        self.emit(&mut verdicts, true)?;
         Ok(())
     }
 
@@ -355,17 +384,20 @@ impl Worker {
                     .queue_wait
                     .record(t_dq.saturating_duration_since(t0).as_nanos()
                         as u64);
-                let mut verdicts = Vec::new();
+                let mut verdicts = std::mem::take(&mut self.verdict_buf);
+                verdicts.clear();
                 self.process(engine, sample, t0, &mut verdicts)?;
                 self.evict_idle(engine);
-                self.emit(verdicts, false)?;
+                self.emit(&mut verdicts, false)?;
+                self.verdict_buf = verdicts;
             }
             Job::Batch(samples, t0) => {
-                // Accumulate the whole burst's verdicts, emit once.
-                // Stage split: the burst shares one submit time, so one
+                // Run-coalesced burst: accumulate the whole burst's
+                // verdicts in the reusable buffer, emit once. Stage
+                // split: the burst shares one submit time, so one
                 // queue-wait record covers it; engine time spans the
-                // whole process loop (per-burst, amortized like the
-                // queue synchronization itself).
+                // whole run loop (per-burst, amortized like the queue
+                // synchronization itself).
                 let t_dq = Instant::now();
                 self.metrics
                     .queue_wait
@@ -377,20 +409,21 @@ impl Worker {
                     0,
                     self.widx as u32,
                 );
-                let mut all = Vec::with_capacity(samples.len());
-                for sample in samples {
-                    self.process(engine, sample, t0, &mut all)?;
-                    self.evict_idle(engine);
-                }
+                let mut all = std::mem::take(&mut self.verdict_buf);
+                all.clear();
+                self.burst(engine, &samples, RunT0::Uniform(t0), &mut all)?;
                 self.metrics
                     .engine_time
                     .record(t_dq.elapsed().as_nanos() as u64);
-                self.emit(all, true)?;
+                self.emit(&mut all, true)?;
+                self.verdict_buf = all;
             }
             Job::Replay(strays) => {
-                // Batched stray re-delivery: same as Batch, but every
-                // stray carries its ORIGINAL submit time (one
-                // queue-wait record per stray — their waits differ).
+                // Batched stray re-delivery: the same run-coalesced
+                // core as Batch, but every stray carries its ORIGINAL
+                // submit time (one queue-wait record per stray — their
+                // waits differ). Strays unzip into the worker's
+                // coalescing scratch so no per-burst Vec is allocated.
                 let t_dq = Instant::now();
                 record(
                     EventKind::Dequeue,
@@ -398,18 +431,29 @@ impl Worker {
                     0,
                     self.widx as u32,
                 );
-                let mut all = Vec::with_capacity(strays.len());
+                let mut samples = std::mem::take(&mut self.sample_buf);
+                let mut t0s = std::mem::take(&mut self.t0_buf);
+                samples.clear();
+                t0s.clear();
                 for (sample, t0) in strays {
                     self.metrics.queue_wait.record(
                         t_dq.saturating_duration_since(t0).as_nanos() as u64,
                     );
-                    self.process(engine, sample, t0, &mut all)?;
-                    self.evict_idle(engine);
+                    samples.push(sample);
+                    t0s.push(t0);
                 }
+                let mut all = std::mem::take(&mut self.verdict_buf);
+                all.clear();
+                self.burst(engine, &samples, RunT0::Per(&t0s), &mut all)?;
                 self.metrics
                     .engine_time
                     .record(t_dq.elapsed().as_nanos() as u64);
-                self.emit(all, true)?;
+                self.emit(&mut all, true)?;
+                self.verdict_buf = all;
+                samples.clear();
+                t0s.clear();
+                self.sample_buf = samples;
+                self.t0_buf = t0s;
             }
             Job::Seal { shards, reply } => {
                 // The seal's backlog barrier spans BOTH queue planes:
@@ -461,12 +505,12 @@ impl Worker {
                 // forwarded, not dropped — the loop ends when the
                 // service explicitly closes this worker's queues.
                 debug_assert!(self.owned.is_empty());
-                let verdicts = engine.flush()?;
-                self.emit(verdicts, true)?;
+                let mut verdicts = engine.flush()?;
+                self.emit(&mut verdicts, true)?;
             }
             Job::Flush => {
-                let verdicts = engine.flush()?;
-                self.emit(verdicts, true)?;
+                let mut verdicts = engine.flush()?;
+                self.emit(&mut verdicts, true)?;
             }
             // Crash simulation: abandon engine state without flushing.
             // The backlog already delivered to this worker (its ring)
@@ -558,6 +602,152 @@ impl Worker {
                     snapshot,
                 });
             }
+        }
+        Ok(())
+    }
+
+    /// Run-coalesced burst core, shared by `Job::Batch` and
+    /// `Job::Replay`: split the burst into maximal runs of consecutive
+    /// same-stream samples and push each through [`Worker::process_run`].
+    /// Bursts arrive grouped by routed worker, so runs are long in
+    /// steady state (`run_len` histogram).
+    fn burst(
+        &mut self,
+        engine: &mut dyn Engine,
+        samples: &[Sample],
+        t0s: RunT0,
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        let mut off = 0;
+        for run in runs(samples) {
+            let run_t0 = match t0s {
+                RunT0::Uniform(t) => RunT0::Uniform(t),
+                RunT0::Per(ts) => RunT0::Per(&ts[off..off + run.len()]),
+            };
+            off += run.len();
+            self.process_run(engine, run, run_t0, out)?;
+        }
+        Ok(())
+    }
+
+    /// One run of same-stream samples through the engine. Byte-identical
+    /// to calling [`Worker::process`] + [`Worker::evict_idle`] per
+    /// sample — the ownership check, restore-on-resume, dedup
+    /// watermarks, checkpoint cadence, and eviction clock all fire at
+    /// the same per-sample points — but the per-stream map lookups
+    /// happen once per run and the engine sees contiguous kept spans
+    /// through [`Engine::process_batch`] instead of one `ingest` per
+    /// sample.
+    fn process_run(
+        &mut self,
+        engine: &mut dyn Engine,
+        run: &[Sample],
+        t0s: RunT0,
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        let sid = run[0].stream_id;
+        let shard = shard_of(sid, self.virtual_shards);
+        self.metrics.run_len.record(run.len() as u64);
+        if !self.owned.contains(&shard) {
+            // Ownership changes only between jobs (Seal removes, Adopt
+            // adds, both strictly in queue order), never mid-burst: one
+            // check covers the whole run. Strays never tick the
+            // eviction clock, exactly like the per-sample path.
+            if self.pending.contains(&shard) {
+                for (i, s) in run.iter().enumerate() {
+                    self.stash.push((s.clone(), t0s.at(i)));
+                }
+            } else {
+                for (i, s) in run.iter().enumerate() {
+                    self.metrics.stray_reroutes.inc();
+                    record(EventKind::Stray, sid, shard, self.widx as u32);
+                    let _ = self.stray_tx.send((s.clone(), t0s.at(i)));
+                }
+            }
+            return Ok(());
+        }
+        self.shard_metrics.shard(shard).samples.add(run.len() as u64);
+        if self.seen.insert(sid)
+            && self.policy.restore_on_resume
+            && run[0].seq > 0
+        {
+            // First sample of a mid-stream resume (see
+            // [`Worker::process`]): adopt the newest checkpoint before
+            // anything in the run reaches the engine.
+            if let Some(cp) = self.state_mgr.latest(sid) {
+                engine.restore(sid, cp.snapshot)?;
+                self.metrics.stream_restores.inc();
+                record(EventKind::Restore, sid, shard, self.widx as u32);
+                self.restored_at.insert(sid, cp.seq);
+                self.last_seq.insert(sid, cp.seq);
+            }
+        }
+        // Per-run hoists: the restore watermark is fixed for the run
+        // (restores only happen above), the dedup watermark evolves in
+        // a local, and the policy knobs become loop constants.
+        let wm = self.restored_at.get(&sid).copied();
+        let mut last = self.last_seq.get(&sid).copied();
+        let every = self.policy.every;
+        let after = self.policy.evict_after;
+        // Start of the contiguous span of kept samples not yet fed to
+        // the engine; dropped samples and checkpoint boundaries cut it.
+        let mut span = 0usize;
+        for (i, s) in run.iter().enumerate() {
+            self.tick += 1;
+            if after > 0 && self.tick % after == 0 {
+                // The eviction clock ticks once per SAMPLE, exactly as
+                // the per-sample path. Publish this stream's recency
+                // before scanning so the scan never evicts the run it
+                // is inside (the per-sample path orders it the same
+                // way: `last_seen` before `evict_idle`).
+                self.last_seen.insert(sid, self.tick);
+                self.evict_scan(engine);
+            }
+            let seq = s.seq;
+            if wm.is_some_and(|w| seq <= w) {
+                // Inside the inclusive replay window (see
+                // [`Worker::process`]): drop, and cut the span so the
+                // engine never sees the duplicate.
+                self.metrics.replay_skipped.inc();
+                if span < i {
+                    engine.process_batch(&run[span..i], out)?;
+                }
+                span = i + 1;
+                continue;
+            }
+            if last.is_some_and(|l| seq <= l) {
+                // Watermark guard, same contract as the per-sample
+                // path: stale duplicates are dropped, counted.
+                self.metrics.stale_drops.inc();
+                if span < i {
+                    engine.process_batch(&run[span..i], out)?;
+                }
+                span = i + 1;
+                continue;
+            }
+            self.inflight.insert((sid, seq), t0s.at(i));
+            last = Some(seq);
+            if every > 0 && (seq + 1) % every == 0 {
+                // Checkpoint cadence: the snapshot must capture the
+                // engine exactly after this sample, so the span ends
+                // here.
+                engine.process_batch(&run[span..=i], out)?;
+                span = i + 1;
+                if let Some(snapshot) = engine.snapshot(sid) {
+                    self.state_mgr.publish(StateCheckpoint {
+                        stream_id: sid,
+                        seq,
+                        snapshot,
+                    });
+                }
+            }
+        }
+        if span < run.len() {
+            engine.process_batch(&run[span..], out)?;
+        }
+        self.last_seen.insert(sid, self.tick);
+        if let Some(l) = last {
+            self.last_seq.insert(sid, l);
         }
         Ok(())
     }
@@ -661,7 +851,7 @@ impl Worker {
             self.process(engine, sample, t0, &mut verdicts)?;
         }
         self.evict_idle(engine);
-        self.emit(verdicts, true)?;
+        self.emit(&mut verdicts, true)?;
         Ok(())
     }
 
@@ -675,6 +865,15 @@ impl Worker {
         if after == 0 || self.tick == 0 || self.tick % after != 0 {
             return;
         }
+        self.evict_scan(engine);
+    }
+
+    /// The scan body behind [`Worker::evict_idle`], also called at the
+    /// exact per-sample tick points inside [`Worker::process_run`] so
+    /// the batched path's eviction clock is byte-identical to the
+    /// per-sample path's.
+    fn evict_scan(&mut self, engine: &mut dyn Engine) {
+        let after = self.policy.evict_after;
         let idle: Vec<u64> = self
             .last_seen
             .iter()
@@ -699,15 +898,22 @@ impl Worker {
     /// One burst send per engine call: metrics are batched too (counter
     /// adds are cheap but the channel lock is not). `timed` records the
     /// emit-stage duration (one clock-read pair per burst) — disabled
-    /// on the single-sample hot path by the caller.
-    fn emit(&mut self, verdicts: Vec<EngineVerdict>, timed: bool) -> Result<()> {
+    /// on the single-sample hot path by the caller. Drains `verdicts`
+    /// in place so callers can keep the buffer's capacity across bursts
+    /// (the `Classified` burst itself must be owned — it crosses the
+    /// results channel).
+    fn emit(
+        &mut self,
+        verdicts: &mut Vec<EngineVerdict>,
+        timed: bool,
+    ) -> Result<()> {
         if verdicts.is_empty() {
             return Ok(());
         }
         let t_emit = timed.then(Instant::now);
         let mut burst = Vec::with_capacity(verdicts.len());
         let mut outliers = 0u64;
-        for v in verdicts {
+        for v in verdicts.drain(..) {
             // Verdicts without a submit record (re-emitted in-flight
             // work after a restore or migration) report 0 but are NOT
             // recorded into the histograms — fabricated 0 ns entries

@@ -107,6 +107,27 @@ pub trait Engine {
     /// this or other streams — batching engines emit in bursts).
     fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>>;
 
+    /// Batch-native processing: absorb a whole burst, appending every
+    /// verdict that became ready to `out` instead of allocating a
+    /// return `Vec` per sample.
+    ///
+    /// Contract: bit-identical to calling [`Engine::ingest`] on each
+    /// sample in order — same verdicts, same float bit patterns, same
+    /// errors at the same sample — differing only in cost. Backends
+    /// override the default per-sample fallback to resolve per-stream
+    /// state once per *run* of consecutive same-stream samples (see
+    /// [`runs`]) and keep the recurrence in a tight loop.
+    fn process_batch(
+        &mut self,
+        samples: &[Sample],
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        for sample in samples {
+            out.extend(self.ingest(sample)?);
+        }
+        Ok(())
+    }
+
     /// Force out every pending verdict (end of stream / shutdown).
     fn flush(&mut self) -> Result<Vec<EngineVerdict>>;
 
@@ -131,6 +152,27 @@ pub trait Engine {
     /// only streams they consider finished. If the same stream id
     /// reappears later it starts fresh at `k = 1`.
     fn evict(&mut self, stream_id: u64);
+}
+
+/// Iterate the maximal runs of consecutive same-stream samples in a
+/// burst — the unit every batch-native kernel resolves per-stream
+/// state for exactly once. Bursts arrive grouped by routed worker, so
+/// runs are long in steady state (see EXPERIMENTS.md §Perf).
+pub fn runs(samples: &[Sample]) -> impl Iterator<Item = &[Sample]> {
+    let mut i = 0;
+    std::iter::from_fn(move || {
+        if i >= samples.len() {
+            return None;
+        }
+        let sid = samples[i].stream_id;
+        let mut j = i + 1;
+        while j < samples.len() && samples[j].stream_id == sid {
+            j += 1;
+        }
+        let run = &samples[i..j];
+        i = j;
+        Some(run)
+    })
 }
 
 #[cfg(test)]

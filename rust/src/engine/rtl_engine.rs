@@ -6,7 +6,7 @@ use crate::rtl::TedaRtl;
 use crate::stream::Sample;
 use crate::Result;
 
-use super::{Engine, EngineVerdict, Snapshot};
+use super::{runs, Engine, EngineVerdict, Snapshot};
 
 /// Per-stream pipeline instance (the "multiple TEDA modules in
 /// parallel" deployment of §5.2.1, one module per stream).
@@ -14,11 +14,19 @@ pub struct RtlEngine {
     n_features: usize,
     m: f32,
     streams: HashMap<u64, TedaRtl>,
+    /// Reusable f64 → f32 input latch: one conversion buffer for every
+    /// clock instead of a fresh `Vec<f32>` per sample.
+    x32: Vec<f32>,
 }
 
 impl RtlEngine {
     pub fn new(n_features: usize, m: f64) -> Self {
-        RtlEngine { n_features, m: m as f32, streams: HashMap::new() }
+        RtlEngine {
+            n_features,
+            m: m as f32,
+            streams: HashMap::new(),
+            x32: Vec::new(),
+        }
     }
 }
 
@@ -29,16 +37,18 @@ impl Engine for RtlEngine {
 
     fn ingest(&mut self, sample: &Sample) -> Result<Vec<EngineVerdict>> {
         let (n, m) = (self.n_features, self.m);
+        let x32 = &mut self.x32;
         let rtl = match self.streams.entry(sample.stream_id) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(e) => {
                 e.insert(TedaRtl::new(n, m)?)
             }
         };
-        let x32: Vec<f32> = sample.values.iter().map(|&v| v as f32).collect();
+        x32.clear();
+        x32.extend(sample.values.iter().map(|&v| v as f32));
         // The pipeline emits the verdict for sample k−2; its k identifies
         // the seq (streams start at seq 0 ⇒ seq = k − 1).
-        Ok(match rtl.clock(&x32)? {
+        Ok(match rtl.clock(x32)? {
             Some(v) => vec![EngineVerdict {
                 stream_id: sample.stream_id,
                 seq: v.k - 1,
@@ -50,6 +60,44 @@ impl Engine for RtlEngine {
             }],
             None => Vec::new(),
         })
+    }
+
+    fn process_batch(
+        &mut self,
+        samples: &[Sample],
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        let (n, m) = (self.n_features, self.m);
+        let x32 = &mut self.x32;
+        for run in runs(samples) {
+            let sid = run[0].stream_id;
+            // One pipeline resolution per run, then clock the whole run
+            // through without re-dispatching per sample.
+            let rtl = match self.streams.entry(sid) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    e.into_mut()
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(TedaRtl::new(n, m)?)
+                }
+            };
+            for sample in run {
+                x32.clear();
+                x32.extend(sample.values.iter().map(|&v| v as f32));
+                if let Some(v) = rtl.clock(x32)? {
+                    out.push(EngineVerdict {
+                        stream_id: sid,
+                        seq: v.k - 1,
+                        k: v.k,
+                        eccentricity: v.eccentricity as f64,
+                        zeta: v.zeta as f64,
+                        threshold: v.threshold as f64,
+                        outlier: v.outlier,
+                    });
+                }
+            }
+        }
+        Ok(())
     }
 
     fn flush(&mut self) -> Result<Vec<EngineVerdict>> {

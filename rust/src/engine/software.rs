@@ -6,7 +6,7 @@ use crate::stream::Sample;
 use crate::teda::TedaDetector;
 use crate::{Error, Result};
 
-use super::{Engine, EngineVerdict, Snapshot};
+use super::{runs, Engine, EngineVerdict, Snapshot};
 
 /// One f64 `TedaDetector` per stream; verdicts are immediate.
 pub struct SoftwareEngine {
@@ -46,6 +46,34 @@ impl Engine for SoftwareEngine {
             threshold: v.threshold,
             outlier: v.outlier,
         }])
+    }
+
+    fn process_batch(
+        &mut self,
+        samples: &[Sample],
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        out.reserve(samples.len());
+        for run in runs(samples) {
+            let sid = run[0].stream_id;
+            let det = self
+                .streams
+                .entry(sid)
+                .or_insert_with(|| TedaDetector::new(self.n_features, self.m));
+            let mut seqs = run.iter().map(|s| s.seq);
+            det.run_with(run.iter().map(|s| s.values.as_slice()), |v| {
+                out.push(EngineVerdict {
+                    stream_id: sid,
+                    seq: seqs.next().expect("one verdict per sample"),
+                    k: v.k,
+                    eccentricity: v.eccentricity,
+                    zeta: v.zeta,
+                    threshold: v.threshold,
+                    outlier: v.outlier,
+                });
+            });
+        }
+        Ok(())
     }
 
     fn flush(&mut self) -> Result<Vec<EngineVerdict>> {

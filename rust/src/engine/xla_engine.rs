@@ -17,7 +17,7 @@ use crate::stream::Sample;
 use crate::teda::TedaState;
 use crate::{Error, Result};
 
-use super::{Engine, EngineVerdict, Snapshot};
+use super::{runs, Engine, EngineVerdict, Snapshot};
 
 /// Checkpoint of one stream inside the [`XlaEngine`]: the f32 carry
 /// tensors (exactly the artifact's VMEM state) plus every buffered
@@ -265,6 +265,76 @@ impl Engine for XlaEngine {
             return self.execute_batch(&ids);
         }
         Ok(Vec::new())
+    }
+
+    fn process_batch(
+        &mut self,
+        samples: &[Sample],
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        let (n, t) = (self.n, self.t);
+        let chunk_len = t * n;
+        for run in runs(samples) {
+            let sid = run[0].stream_id;
+            // Dim-check the head before touching the map, exactly like
+            // the per-sample path: a bad first sample must not create
+            // stream state.
+            if run[0].values.len() != n {
+                return Err(Error::Stream(format!(
+                    "stream {sid}: sample dim {} != engine dim {n}",
+                    run[0].values.len(),
+                )));
+            }
+            // One stream resolution per run; the run fills (S, T, N)
+            // chunks directly instead of buffering sample-by-sample.
+            let st = self.streams.entry(sid).or_insert_with(|| StreamState {
+                mu: vec![0.0; n],
+                var: 0.0,
+                k: 0.0,
+                chunks: std::collections::VecDeque::new(),
+                buf: Vec::with_capacity(chunk_len),
+                seq_base: run[0].seq,
+            });
+            let mut queued = 0usize;
+            for sample in run {
+                if sample.values.len() != n {
+                    // Keep the chunks already completed so engine state
+                    // matches the per-sample path, which buffers
+                    // everything up to the offending sample.
+                    self.ready
+                        .extend(std::iter::repeat(sid).take(queued));
+                    return Err(Error::Stream(format!(
+                        "stream {}: sample dim {} != engine dim {}",
+                        sample.stream_id,
+                        sample.values.len(),
+                        n
+                    )));
+                }
+                for &v in &sample.values {
+                    st.buf.push(v as f32);
+                }
+                if st.buf.len() == chunk_len {
+                    let chunk = std::mem::replace(
+                        &mut st.buf,
+                        Vec::with_capacity(chunk_len),
+                    );
+                    st.chunks.push_back((st.seq_base, chunk));
+                    st.seq_base += t as u64;
+                    queued += 1;
+                }
+            }
+            self.ready.extend(std::iter::repeat(sid).take(queued));
+        }
+        // Drain every full batch the burst produced. Lanes are
+        // independent and a stream's chunks execute strictly in order,
+        // so deferring execution to the end of the burst changes only
+        // which streams co-batch, never any verdict value.
+        while self.ready.len() >= self.min_ready.min(self.s) {
+            let ids = self.take_batch_ids();
+            let verdicts = self.execute_batch(&ids)?;
+            out.extend(verdicts);
+        }
+        Ok(())
     }
 
     fn flush(&mut self) -> Result<Vec<EngineVerdict>> {

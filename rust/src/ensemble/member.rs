@@ -148,6 +148,43 @@ impl EnsembleMember {
         Ok(votes)
     }
 
+    /// Batch-native ingest: one pass over a whole burst, resolving each
+    /// stream's detector once per run of consecutive same-stream
+    /// samples. Votes are bit-identical to calling
+    /// [`EnsembleMember::ingest`] per sample in order; only the
+    /// accounting granularity changes (`busy_ns` accrues one elapsed
+    /// interval per burst instead of one per sample).
+    pub fn ingest_batch(
+        &mut self,
+        samples: &[Sample],
+    ) -> Result<Vec<MemberVote>> {
+        let t0 = Instant::now();
+        let n = self.n_features;
+        let spec = &self.spec;
+        let mut votes = Vec::with_capacity(samples.len());
+        match &mut self.imp {
+            MemberImpl::Engine(eng) => {
+                let mut verdicts = Vec::with_capacity(samples.len());
+                eng.process_batch(samples, &mut verdicts)?;
+                votes.extend(verdicts.into_iter().map(vote_from_verdict));
+            }
+            MemberImpl::MSigma(streams) => baseline_batch(
+                streams,
+                samples,
+                || MSigmaDetector::new(n, spec.m),
+                &mut votes,
+            ),
+            MemberImpl::ZScore(streams) => baseline_batch(
+                streams,
+                samples,
+                || SlidingZScore::new(n, spec.m, spec.window),
+                &mut votes,
+            ),
+        }
+        self.account(t0, &votes);
+        Ok(votes)
+    }
+
     /// Force out everything pending (end of stream).
     pub fn flush(&mut self) -> Result<Vec<MemberVote>> {
         let t0 = Instant::now();
@@ -235,6 +272,24 @@ impl EnsembleMember {
         self.stats.votes += votes.len() as u64;
         self.stats.outliers +=
             votes.iter().filter(|v| v.outlier).count() as u64;
+    }
+}
+
+/// Run-coalesced batch kernel for the per-stream baseline maps: one
+/// map resolution per run of consecutive same-stream samples.
+fn baseline_batch<D: AnomalyDetector>(
+    streams: &mut HashMap<u64, D>,
+    samples: &[Sample],
+    mut make: impl FnMut() -> D,
+    votes: &mut Vec<MemberVote>,
+) {
+    for run in crate::engine::runs(samples) {
+        let det = streams
+            .entry(run[0].stream_id)
+            .or_insert_with(&mut make);
+        for sample in run {
+            votes.push(baseline_vote(sample, det.step(&sample.values)));
+        }
     }
 }
 

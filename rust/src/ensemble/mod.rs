@@ -337,6 +337,36 @@ impl Engine for EnsembleEngine {
         Ok(self.drain_ready())
     }
 
+    fn process_batch(
+        &mut self,
+        samples: &[Sample],
+        out: &mut Vec<EngineVerdict>,
+    ) -> Result<()> {
+        if samples.is_empty() {
+            return Ok(());
+        }
+        for sample in samples {
+            self.seen.insert(sample.stream_id);
+        }
+        // One batch pass per member, then ONE quorum drain for the whole
+        // burst. Fusion stays bit-identical to the per-sample path:
+        // `drain_ready` fuses in (stream, seq) order and the stateful
+        // combiners key their weights per stream, so each stream's
+        // fusion sequence — and therefore every adaptive weight update —
+        // is unchanged; only the drain granularity moves.
+        for i in 0..self.members.len() {
+            let t_vote = self.metrics.is_some().then(Instant::now);
+            let votes = self.members[i].ingest_batch(samples)?;
+            if let (Some(m), Some(t)) = (&self.metrics, t_vote) {
+                m.members[i].vote_time.record(t.elapsed().as_nanos() as u64);
+            }
+            self.stage_votes(i, votes)?;
+        }
+        self.sync_busy_ns();
+        out.extend(self.drain_ready());
+        Ok(())
+    }
+
     fn flush(&mut self) -> Result<Vec<EngineVerdict>> {
         for i in 0..self.members.len() {
             let votes = self.members[i].flush()?;

@@ -900,7 +900,7 @@ struct GateSeries {
     required: bool,
 }
 
-const GATE_SERIES: [GateSeries; 2] = [
+const GATE_SERIES: [GateSeries; 3] = [
     GateSeries {
         key: "shard",
         lower_better: &[
@@ -925,6 +925,22 @@ const GATE_SERIES: [GateSeries; 2] = [
         ],
         higher_better: &[],
         required: false,
+    },
+    // Batch-native engine kernels: the coalesced path must stay ahead
+    // of (or at least not regress against) its committed baseline, and
+    // the single-submit baseline guards the per-sample path the batch
+    // kernels share state with. XLA rows are artifact-gated and so not
+    // listed — a missing metric skips with a notice.
+    GateSeries {
+        key: "engine",
+        lower_better: &[],
+        higher_better: &[
+            "software_single_sps",
+            "software_batch_rl64_sps",
+            "rtl_batch_rl64_sps",
+            "ensemble_batch_rl64_sps",
+        ],
+        required: true,
     },
 ];
 

@@ -431,6 +431,10 @@ service_metrics! {
         /// Per-worker burst sizes seen by the batched submit core (how
         /// well routing+wakeup costs amortize).
         pub batch_sizes: Histogram,
+        /// Lengths of the runs of consecutive same-stream samples the
+        /// batched worker path coalesces (one record per run; long runs
+        /// mean the per-run hoists amortize well).
+        pub run_len: Histogram,
     }
 }
 
@@ -795,6 +799,7 @@ mod tests {
         m.ring_full_events.add(2);
         m.parked_retries.add(4);
         m.batch_sizes.record(8);
+        m.run_len.record(16);
         let s = m.render();
         assert!(s.contains("samples_in          10"));
         assert!(s.contains("latency"));
@@ -808,6 +813,7 @@ mod tests {
         assert!(s.contains("ring_full_events    2"));
         assert!(s.contains("parked_retries      4"));
         assert!(s.contains("batch_sizes"));
+        assert!(s.contains("run_len"));
     }
 
     #[test]

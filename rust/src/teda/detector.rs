@@ -86,6 +86,23 @@ impl TedaDetector {
         samples.iter().map(|s| self.step(s)).collect()
     }
 
+    /// Run the recurrence over a run of samples in one tight loop,
+    /// handing each verdict to `sink` as it is produced — the
+    /// batch-native kernel behind [`crate::engine::Engine::process_batch`].
+    /// The caller resolves this detector once per run of consecutive
+    /// same-stream samples, so the loop body touches no map and
+    /// allocates nothing; verdicts are bit-identical to calling
+    /// [`TedaDetector::step`] per sample.
+    pub fn run_with<'a, I, F>(&mut self, samples: I, mut sink: F)
+    where
+        I: IntoIterator<Item = &'a [f64]>,
+        F: FnMut(Verdict),
+    {
+        for x in samples {
+            sink(self.step(x));
+        }
+    }
+
     /// Samples absorbed so far.
     pub fn k(&self) -> u64 {
         self.state.k
@@ -203,6 +220,24 @@ mod tests {
     #[should_panic(expected = "m > 0")]
     fn zero_m_rejected() {
         TedaDetector::new(1, 0.0);
+    }
+
+    #[test]
+    fn run_with_matches_step() {
+        let samples: Vec<Vec<f64>> =
+            (0..48).map(|i| vec![(i % 9) as f64 * 0.3]).collect();
+        let mut a = TedaDetector::new(1, 3.0);
+        let mut got = Vec::new();
+        a.run_with(samples.iter().map(|s| s.as_slice()), |v| got.push(v));
+        let mut b = TedaDetector::new(1, 3.0);
+        for (s, v) in samples.iter().zip(got) {
+            let w = b.step(s);
+            assert_eq!(w.zeta.to_bits(), v.zeta.to_bits());
+            assert_eq!(w.threshold.to_bits(), v.threshold.to_bits());
+            assert_eq!(w, v);
+        }
+        assert_eq!(a.k(), b.k());
+        assert_eq!(a.n_outliers(), b.n_outliers());
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Batch-native engine kernels: `Engine::process_batch` must be
+//! BIT-identical to per-sample `Engine::ingest` — same verdicts, same
+//! float bit patterns (ζ, threshold, eccentricity compared via
+//! `to_bits`, which also pins the RTL pipeline's NaN ζ₁) — for every
+//! backend, under every burst split.
+//!
+//! Also pins the worker-level eviction clock: the run-coalesced batched
+//! submit path must tick the idle-eviction clock once per SAMPLE (not
+//! once per burst), evicting the same streams at the same points as
+//! per-sample submission.
+
+use std::collections::BTreeMap;
+
+use teda_fpga::config::{EngineKind, EnsembleConfig, ServiceConfig};
+use teda_fpga::coordinator::Service;
+use teda_fpga::engine::{
+    Engine, EngineVerdict, RtlEngine, SoftwareEngine, XlaEngine,
+};
+use teda_fpga::ensemble::EnsembleEngine;
+use teda_fpga::runtime::XlaRuntime;
+use teda_fpga::stream::Sample;
+use teda_fpga::util::prng::SplitMix64;
+
+type VerdictMap = BTreeMap<(u64, u64), EngineVerdict>;
+
+/// Everything a verdict asserts, bit-exact (floats compared by bits,
+/// NaN-safe).
+fn key_fields(v: &EngineVerdict) -> (u64, bool, u64, u64, u64) {
+    (
+        v.k,
+        v.outlier,
+        v.zeta.to_bits(),
+        v.threshold.to_bits(),
+        v.eccentricity.to_bits(),
+    )
+}
+
+fn index(verdicts: Vec<EngineVerdict>) -> VerdictMap {
+    let mut map = VerdictMap::new();
+    for v in verdicts {
+        let key = (v.stream_id, v.seq);
+        assert!(map.insert(key, v).is_none(), "duplicate verdict {key:?}");
+    }
+    map
+}
+
+/// A burst with randomized run structure: runs of 1..=24 consecutive
+/// samples per stream, streams revisited in random order, per-stream
+/// seqs monotone — the shape the worker's coalescer actually sees.
+fn ragged_burst(streams: u64, total: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = SplitMix64::new(seed);
+    let mut seqs = vec![0u64; streams as usize];
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        let sid = rng.below(streams);
+        let run_len = (1 + rng.below(24)) as usize;
+        for _ in 0..run_len.min(total - out.len()) {
+            let seq = &mut seqs[sid as usize];
+            out.push(Sample {
+                stream_id: sid,
+                seq: *seq,
+                values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+            });
+            *seq += 1;
+        }
+    }
+    out
+}
+
+/// Oracle: the per-sample path, one `ingest` per sample, then flush.
+fn run_single(eng: &mut dyn Engine, samples: &[Sample]) -> VerdictMap {
+    let mut out = Vec::new();
+    for s in samples {
+        out.extend(eng.ingest(s).unwrap());
+    }
+    out.extend(eng.flush().unwrap());
+    index(out)
+}
+
+/// Subject: the same samples through `process_batch`, split at random
+/// points (split sizes 1..=full burst — runs land split across calls).
+fn run_batched(
+    eng: &mut dyn Engine,
+    samples: &[Sample],
+    split_seed: u64,
+) -> VerdictMap {
+    let mut rng = SplitMix64::new(split_seed);
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < samples.len() {
+        let len = (1 + rng.below(97)) as usize;
+        let end = (off + len).min(samples.len());
+        eng.process_batch(&samples[off..end], &mut out).unwrap();
+        off = end;
+    }
+    out.extend(eng.flush().unwrap());
+    index(out)
+}
+
+fn assert_bit_identical(single: &VerdictMap, batched: &VerdictMap) {
+    assert_eq!(single.len(), batched.len(), "verdict count diverged");
+    for (key, a) in single {
+        let b = batched
+            .get(key)
+            .unwrap_or_else(|| panic!("verdict missing at {key:?}"));
+        assert_eq!(key_fields(a), key_fields(b), "bits diverged at {key:?}");
+    }
+}
+
+/// Property: for several random workloads and several random burst
+/// splits, batch ≡ single bit-exactly.
+fn check_engine(mut make: impl FnMut() -> Box<dyn Engine>) {
+    for workload_seed in [1u64, 42, 0xBEEF] {
+        let samples = ragged_burst(6, 600, workload_seed);
+        let single = run_single(make().as_mut(), &samples);
+        assert_eq!(single.len(), samples.len(), "oracle lost verdicts");
+        for split_seed in [7u64, 1000003, u64::MAX / 3] {
+            let batched = run_batched(make().as_mut(), &samples, split_seed);
+            assert_bit_identical(&single, &batched);
+        }
+        // Degenerate splits: the whole burst at once, and one
+        // maximal-length run per stream (pure coalesced case).
+        let mut out = Vec::new();
+        let mut eng = make();
+        eng.process_batch(&samples, &mut out).unwrap();
+        out.extend(eng.flush().unwrap());
+        assert_bit_identical(&single, &index(out));
+    }
+}
+
+#[test]
+fn software_batch_is_bit_identical() {
+    check_engine(|| Box::new(SoftwareEngine::new(2, 3.0)));
+}
+
+#[test]
+fn rtl_batch_is_bit_identical() {
+    check_engine(|| Box::new(RtlEngine::new(2, 3.0)));
+}
+
+#[test]
+fn ensemble_batch_is_bit_identical() {
+    let cfg = EnsembleConfig::default();
+    check_engine(|| Box::new(EnsembleEngine::new(&cfg, 2).unwrap()));
+}
+
+#[test]
+fn xla_batch_is_bit_identical() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("artifacts missing; skipping XLA batch identity test");
+        return;
+    }
+    let rt = XlaRuntime::new(dir).unwrap();
+    check_engine(|| Box::new(XlaEngine::new(&rt, 2, 1).unwrap()));
+}
+
+/// The batched path must surface the same error at the same sample as
+/// the per-sample path, with the same verdicts already emitted: samples
+/// before the bad one are folded in, samples after it are not. (The RTL
+/// pipeline dim-checks every clock; the software engine never errors.)
+#[test]
+fn batch_errors_match_per_sample_errors() {
+    let good = |seq: u64| Sample {
+        stream_id: 3,
+        seq,
+        values: vec![0.5, 0.25 * seq as f64],
+    };
+    let bad = Sample { stream_id: 3, seq: 5, values: vec![1.0] }; // dim 1
+    let feed =
+        vec![good(0), good(1), good(2), good(3), good(4), bad, good(6)];
+    let mut single = RtlEngine::new(2, 3.0);
+    let mut got_single = Vec::new();
+    let mut err_at = None;
+    for (i, s) in feed.iter().enumerate() {
+        match single.ingest(s) {
+            Ok(v) => got_single.extend(v),
+            Err(_) => {
+                err_at = Some(i);
+                break;
+            }
+        }
+    }
+    assert_eq!(err_at, Some(5), "oracle must hit the dim error");
+    let mut batched = RtlEngine::new(2, 3.0);
+    let mut got_batched = Vec::new();
+    assert!(
+        batched.process_batch(&feed, &mut got_batched).is_err(),
+        "batched path must surface the dim error"
+    );
+    assert_eq!(got_single.len(), got_batched.len());
+    for (a, b) in got_single.iter().zip(&got_batched) {
+        assert_eq!(key_fields(a), key_fields(b), "pre-error verdicts");
+    }
+}
+
+/// Worker-level regression: the run-coalesced batched path ticks the
+/// idle-eviction clock once per sample, so streams are evicted at the
+/// SAME points as per-sample submission — same eviction count, and the
+/// re-appearing stream restarts at k = 1 with bit-identical verdicts.
+#[test]
+fn batched_eviction_clock_matches_single() {
+    const EVICT_AFTER: u64 = 40;
+    let sample = |sid: u64, seq: u64| {
+        let mut rng = SplitMix64::new(sid.wrapping_mul(0x9E37) ^ seq);
+        Sample {
+            stream_id: sid,
+            seq,
+            values: vec![rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)],
+        }
+    };
+    // Phase A: streams 0 and 1 interleave. Phase B: stream 0 alone long
+    // enough that stream 1 goes idle past the eviction horizon inside a
+    // burst. Phase C: stream 1 returns and must restart fresh at k = 1.
+    let mut feed = Vec::new();
+    for seq in 0..20u64 {
+        feed.push(sample(0, seq));
+        feed.push(sample(1, seq));
+    }
+    for seq in 20..120u64 {
+        feed.push(sample(0, seq));
+    }
+    for seq in 20..40u64 {
+        feed.push(sample(1, seq));
+    }
+    let run = |batched: bool| {
+        let svc = Service::start(ServiceConfig {
+            engine: EngineKind::Software,
+            workers: 1,
+            n_features: 2,
+            evict_after: EVICT_AFTER,
+            ..Default::default()
+        })
+        .unwrap();
+        if batched {
+            // Bursts of 17 misalign with the eviction horizon, so scans
+            // must fire mid-burst, mid-run, exactly at tick multiples.
+            for chunk in feed.chunks(17) {
+                svc.submit_batch(chunk.to_vec()).unwrap();
+            }
+        } else {
+            for s in &feed {
+                svc.submit(s.clone()).unwrap();
+            }
+        }
+        let m = svc.metrics();
+        let out = svc.finish().unwrap();
+        (m.stream_evictions.get(), out)
+    };
+    let (evict_single, out_single) = run(false);
+    let (evict_batched, out_batched) = run(true);
+    assert!(evict_single >= 1, "workload must trigger at least one eviction");
+    assert_eq!(
+        evict_single, evict_batched,
+        "eviction clock diverged between batched and single paths"
+    );
+    assert_eq!(out_single.len(), out_batched.len());
+    let map_single: VerdictMap =
+        index(out_single.into_iter().map(|c| c.verdict).collect());
+    let map_batched: VerdictMap =
+        index(out_batched.into_iter().map(|c| c.verdict).collect());
+    assert_bit_identical(&map_single, &map_batched);
+    // The evicted stream really did restart: its first post-idle
+    // verdict is k = 1 despite seq = 20.
+    assert_eq!(map_single[&(1, 20)].k, 1, "stream 1 was not evicted");
+}
